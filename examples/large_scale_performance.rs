@@ -1,0 +1,73 @@
+//! Large-scale performance autotuning (paper §VI, Figs 7-14).
+//!
+//! ```bash
+//! cargo run --release --example large_scale_performance -- \
+//!     --app sw4lite --platform theta --nodes 1024 --evals 30
+//! ```
+//!
+//! Reproduces any of the at-scale experiments: SW4lite on 1,024 Theta
+//! nodes (the 91.59% headline), AMG/SWFFT/XSBench on 4,096 nodes on
+//! either system, etc.
+
+use ytopt::apps::AppKind;
+use ytopt::cliargs::{Args, CliSpec};
+use ytopt::coordinator::{autotune, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+
+fn parse_platform(s: &str) -> Option<PlatformKind> {
+    match s.to_ascii_lowercase().as_str() {
+        "theta" => Some(PlatformKind::Theta),
+        "summit" => Some(PlatformKind::Summit),
+        _ => None,
+    }
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    let app = AppKind::parse(args.get_or("app", "sw4lite"))
+        .ok_or_else(|| anyhow::anyhow!("unknown app"))?;
+    let platform = parse_platform(args.get_or("platform", "theta"))
+        .ok_or_else(|| anyhow::anyhow!("unknown platform"))?;
+    let nodes = args.int("nodes").unwrap_or(1024) as u64;
+    let metric = Metric::parse(args.get_or("metric", "runtime"))
+        .ok_or_else(|| anyhow::anyhow!("unknown metric"))?;
+
+    let mut setup = TuneSetup::new(app, platform, nodes, metric);
+    setup.max_evals = args.int("evals").unwrap_or(30) as usize;
+    setup.wallclock_budget_s = args.float("budget").unwrap_or(1800.0);
+    setup.seed = args.int("seed").unwrap_or(2023) as u64;
+    if let Some(t) = args.float("timeout") {
+        setup.eval_timeout_s = Some(t);
+    }
+    setup.parallel_evals = args.int("parallel").unwrap_or(1) as usize;
+
+    let result = autotune(&setup)?;
+    println!("{}", result.summary());
+    println!("{}", result.trace());
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let spec = CliSpec::new("large_scale_performance", "paper §VI at-scale autotuning")
+        .opt("app", Some("sw4lite"), "xsbench|xsbench-event|xsbench-mixed|xsbench-offload|swfft|amg|sw4lite")
+        .opt("platform", Some("theta"), "theta|summit")
+        .opt("nodes", Some("1024"), "node count (paper: 1024/4096)")
+        .opt("metric", Some("runtime"), "runtime|energy|edp")
+        .opt("evals", Some("30"), "max evaluations")
+        .opt("budget", Some("1800"), "wall-clock budget (s)")
+        .opt("seed", Some("2023"), "RNG seed")
+        .opt("timeout", None, "evaluation timeout (s, §VIII extension)")
+        .opt("parallel", Some("1"), "concurrent evaluations (§VIII extension)");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match spec.parse(&argv) {
+        Ok(args) => run(&args),
+        Err(ytopt::cliargs::CliError::HelpRequested) => {
+            println!("{}", spec.usage());
+            Ok(())
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", spec.usage());
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Quickstart: autotune XSBench on a single (simulated) Theta node.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! This is the paper's Fig. 5 setting in miniature: the Bayesian-
+//! optimization loop proposes configurations from the 51,840-point
+//! XSBench space, each evaluation walks the five-step pipeline
+//! (select -> codegen -> aprun line -> compile -> run), and the best
+//! runtime is reported against the 3.31 s baseline.
+
+use ytopt::apps::AppKind;
+use ytopt::coordinator::{autotune, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+
+fn main() -> anyhow::Result<()> {
+    let mut setup = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+    setup.max_evals = 24;
+    setup.wallclock_budget_s = 1800.0; // the paper's half-hour budget
+    setup.seed = 2023;
+
+    let result = autotune(&setup)?;
+    println!("{}", result.summary());
+    println!("--- evaluation trace (Fig. 5a style) ---");
+    println!("{}", result.trace());
+
+    // the five-step pipeline artifacts for the best evaluation
+    if let Some(best) = result.db.best() {
+        println!("launch command of the best configuration:\n  {}", best.command);
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Transfer learning across scales (paper §VIII future work): tune at a
+//! small node count, then warm-start the large-scale search with the
+//! small-scale observations rescaled by the baseline ratio.
+//!
+//! ```bash
+//! cargo run --release --example transfer_learning
+//! ```
+//!
+//! Prints cold-start vs warm-start convergence on AMG@Summit
+//! (64 -> 4,096 nodes): the warm-started run skips most of its random
+//! initialization because the surrogate already knows the landscape's
+//! ordering structure.
+
+use std::sync::Arc;
+
+use ytopt::apps::AppKind;
+use ytopt::coordinator::{autotune_with_scorer, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+use ytopt::search::warm_start;
+use ytopt::space::Configuration;
+
+fn main() -> anyhow::Result<()> {
+    let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
+    let evals = 20usize;
+
+    // 1) small-scale run (cheap: 64 nodes)
+    let mut small = TuneSetup::new(AppKind::Amg, PlatformKind::Summit, 64, Metric::Runtime);
+    small.max_evals = evals;
+    small.wallclock_budget_s = 1e9;
+    small.seed = 11;
+    let r_small = autotune_with_scorer(&small, scorer.clone())?;
+    println!("--- small scale (64 nodes) ---\n{}", r_small.summary());
+
+    // 2) lift its observations to the large scale
+    let prior: Vec<(Configuration, f64)> = r_small
+        .db
+        .records
+        .iter()
+        .filter(|r| !r.timed_out)
+        .map(|r| {
+            let idx: Vec<u32> = r.config_key.split(',').filter_map(|s| s.parse().ok()).collect();
+            (Configuration::from_indices(idx), r.objective)
+        })
+        .collect();
+
+    let run_large = |warm: bool| -> anyhow::Result<_> {
+        let mut large = TuneSetup::new(AppKind::Amg, PlatformKind::Summit, 4096, Metric::Runtime);
+        large.max_evals = evals;
+        large.wallclock_budget_s = 1e9;
+        large.seed = 12;
+        if warm {
+            // estimate the target baseline from one probe run
+            let (_, target_baseline) =
+                ytopt::coordinator::measure_baseline(&large, &scorer)?;
+            large.warm_start =
+                Some(warm_start(&prior, r_small.baseline_objective, target_baseline));
+            large.n_init = 2; // the prior replaces most of the random init
+        }
+        autotune_with_scorer(&large, scorer.clone())
+    };
+
+    let cold = run_large(false)?;
+    let warm = run_large(true)?;
+    println!("--- large scale (4,096 nodes), cold start ---\n{}", cold.summary());
+    println!("--- large scale (4,096 nodes), warm start ---\n{}", warm.summary());
+
+    // convergence comparison: best-so-far after k evaluations
+    println!("best-so-far by evaluation (cold vs warm):");
+    for k in [4usize, 8, 12, 16, evals] {
+        let at = |r: &ytopt::coordinator::TuneResult| {
+            r.db.records
+                .iter()
+                .take(k)
+                .filter(|x| !x.timed_out)
+                .map(|x| x.objective)
+                .fold(f64::INFINITY, f64::min)
+        };
+        println!("  after {k:2} evals: cold {:.3} s | warm {:.3} s", at(&cold), at(&warm));
+    }
+    Ok(())
+}

@@ -1,0 +1,130 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Python runs ONLY here (and in pytest); the Rust binary is self-contained
+once artifacts exist.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forest_scorer() -> str:
+    lowered = jax.jit(model.forest_scorer).lower(*model.forest_scorer_specs())
+    return to_hlo_text(lowered)
+
+
+def lower_energy_reduce() -> str:
+    lowered = jax.jit(model.energy_reduce).lower(*model.energy_reduce_specs())
+    return to_hlo_text(lowered)
+
+
+def cost_analysis(lowered) -> dict:
+    """L2 profile: XLA's cost analysis of the compiled module (flops /
+    bytes accessed), recorded into the manifest for the Rust perf bench
+    and EXPERIMENTS.md §Perf."""
+    try:
+        ca = lowered.compile().cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+    except Exception as e:  # pragma: no cover — jaxlib API drift
+        return {"error": str(e)}
+
+
+def manifest(costs: dict | None = None) -> dict:
+    """Shape/constant contract consumed by rust/src/runtime/manifest.rs.
+
+    `costs` optionally maps artifact name -> cost_analysis() output.
+    """
+    costs = costs or {}
+    return {
+        "format": "hlo-text",
+        "forest_scorer": {
+            "file": "forest_scorer.hlo.txt",
+            "candidates": model.CANDIDATES,
+            "features": model.FEATURES,
+            "trees": model.TREES,
+            "nodes_per_tree": model.NODES_PER_TREE,
+            "depth": model.DEPTH,
+            "inputs": [
+                "features f32[C,F]",
+                "feat i32[T,N]",
+                "thresh f32[T,N]",
+                "left i32[T,N]",
+                "right i32[T,N]",
+                "leaf f32[T,N]",
+                "kappa f32[1]",
+            ],
+            "outputs": ["mean f32[C]", "std f32[C]", "lcb f32[C]"],
+            "cost_analysis": costs.get("forest_scorer", {}),
+        },
+        "energy_reduce": {
+            "file": "energy_reduce.hlo.txt",
+            "max_nodes": model.MAX_NODES,
+            "max_samples": model.MAX_SAMPLES,
+            "inputs": [
+                "pkg f32[NODES,S]",
+                "dram f32[NODES,S]",
+                "active f32[NODES]",
+                "n_samples f32[1]",
+                "dt f32[1]",
+                "runtime f32[1]",
+            ],
+            "outputs": ["node_energy f32[NODES]", "avg f32[1]", "edp f32[1]"],
+            "cost_analysis": costs.get("energy_reduce", {}),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    costs = {}
+    for name, fn, specs in (
+        ("forest_scorer", model.forest_scorer, model.forest_scorer_specs()),
+        ("energy_reduce", model.energy_reduce, model.energy_reduce_specs()),
+    ):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        costs[name] = cost_analysis(lowered)
+        print(f"wrote {len(text)} chars to {path} (cost: {costs[name]})")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(costs), f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

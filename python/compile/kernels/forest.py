@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: batched Random-Forest ensemble scoring + LCB.
+
+This is the acquisition-function hot spot of the ytopt BO loop: every
+iteration scores a batch of candidate configurations against the surrogate
+(ensemble mean, std, and ``LCB = mean - kappa * std``, Eq. 1 of the paper).
+
+TPU adaptation of a classically-divergent workload (see DESIGN.md
+§Hardware-Adaptation): instead of one thread walking one tree (GPU style),
+we descend *all trees for a block of candidates in lockstep* — a
+depth-bounded loop of gathers + selects, branch-free, so it vectorizes on
+the VPU. Candidates are tiled into VMEM-sized blocks via BlockSpec; the
+padded forest tensors ride along whole (they are the reused operand, the
+analogue of keeping weights stationary).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated against kernels.ref and the same HLO
+runs under the Rust PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidate block per kernel invocation. VMEM estimate per block (f32):
+#   x block        128 * 32 * 4            =  16 KiB
+#   forest tensors 5 * 64 * 512 * 4        = 640 KiB   (resident, reused)
+#   idx/pred       2 * 128 * 64 * 4        =  64 KiB
+# well under a ~16 MiB VMEM budget; block height chosen so the gather
+# working set stays cache/VMEM friendly rather than maximizing occupancy.
+BLOCK_C = 128
+
+
+def _forest_kernel(
+    x_ref,
+    feat_ref,
+    thresh_ref,
+    left_ref,
+    right_ref,
+    leaf_ref,
+    kappa_ref,
+    mean_ref,
+    std_ref,
+    lcb_ref,
+    *,
+    depth,
+):
+    x = x_ref[...]  # [B, F]
+    feat = feat_ref[...]  # [T, N] i32, -1 == leaf
+    thresh = thresh_ref[...]  # [T, N]
+    left = left_ref[...]  # [T, N] i32
+    right = right_ref[...]  # [T, N] i32
+    leaf = leaf_ref[...]  # [T, N]
+    kappa = kappa_ref[0]
+
+    b = x.shape[0]
+    t = feat.shape[0]
+    tree_ix = jnp.arange(t)[None, :]  # [1, T] broadcast index
+    cand_ix = jnp.arange(b)[:, None]  # [B, 1]
+
+    def body(_, idx):
+        nf = feat[tree_ix, idx]  # [B, T] feature tested at current node
+        is_leaf = nf < 0
+        xv = x[cand_ix, jnp.maximum(nf, 0)]  # [B, T] gathered feature value
+        go_left = xv <= thresh[tree_ix, idx]
+        nxt = jnp.where(go_left, left[tree_ix, idx], right[tree_ix, idx])
+        return jnp.where(is_leaf, idx, nxt)
+
+    idx0 = jnp.zeros((b, t), jnp.int32)
+    idx = jax.lax.fori_loop(0, depth, body, idx0, unroll=True)
+    pred = leaf[tree_ix, idx]  # [B, T]
+
+    mean = jnp.mean(pred, axis=1)
+    # E[p^2] - E[p]^2, clamped: numerically this can dip epsilon-negative.
+    var = jnp.maximum(jnp.mean(pred * pred, axis=1) - mean * mean, 0.0)
+    std = jnp.sqrt(var)
+    mean_ref[...] = mean
+    std_ref[...] = std
+    lcb_ref[...] = mean - kappa * std
+
+
+def forest_score(features, feat, thresh, left, right, leaf, kappa, *, depth):
+    """Score a padded candidate batch against a padded forest.
+
+    features : f32[C, F]   (C divisible by BLOCK_C)
+    feat     : i32[T, N]; thresh/leaf f32[T, N]; left/right i32[T, N]
+    kappa    : f32[1]
+    Returns (mean, std, lcb), each f32[C].
+    """
+    c, f = features.shape
+    t, n = feat.shape
+    if c % BLOCK_C != 0:
+        raise ValueError(f"candidate count {c} not a multiple of {BLOCK_C}")
+    grid = (c // BLOCK_C,)
+    full = lambda i: (0, 0)  # noqa: E731 — forest tensors ride along whole
+    out = jax.ShapeDtypeStruct((c,), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_forest_kernel, depth=depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_C, f), lambda i: (i, 0)),
+            pl.BlockSpec((t, n), full),
+            pl.BlockSpec((t, n), full),
+            pl.BlockSpec((t, n), full),
+            pl.BlockSpec((t, n), full),
+            pl.BlockSpec((t, n), full),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_C,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_C,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_C,), lambda i: (i,)),
+        ],
+        out_shape=[out, out, out],
+        interpret=True,
+    )(features, feat, thresh, left, right, leaf, kappa)

@@ -1,0 +1,81 @@
+"""Pure-jnp reference oracles for the two Pallas kernels.
+
+These are the correctness ground truth: ``forest.py`` and ``energy.py`` must
+match these bit-for-bit-ish (allclose) under pytest, and the Rust fallback
+scorer (rust/src/runtime/fallback.rs) mirrors the same semantics.
+
+Forest representation (padded, fixed shapes — see aot.py):
+  feat[t, n]   : i32 feature index tested at node ``n`` of tree ``t``;
+                 ``-1`` marks a leaf node.
+  thresh[t, n] : f32 split threshold (``x[feat] <= thresh`` goes left).
+  left/right   : i32 child node indices within the same tree.
+  leaf[t, n]   : f32 prediction value stored at the node (only read at
+                 leaves, but defined everywhere).
+Every root is node 0. Trees are depth-bounded so that ``DEPTH`` lockstep
+descent steps always land on a leaf (descending from a leaf is the
+identity).
+"""
+
+import jax.numpy as jnp
+
+
+def forest_predict_ref(features, feat, thresh, left, right, leaf, depth):
+    """Per-(candidate, tree) prediction. Returns f32[C, T]."""
+    c = features.shape[0]
+    t = feat.shape[0]
+    tree_ix = jnp.arange(t)[None, :]  # [1, T]
+    cand_ix = jnp.arange(c)[:, None]  # [C, 1]
+    idx = jnp.zeros((c, t), jnp.int32)
+    for _ in range(depth):
+        nf = feat[tree_ix, idx]  # [C, T]
+        is_leaf = nf < 0
+        xv = features[cand_ix, jnp.maximum(nf, 0)]
+        go_left = xv <= thresh[tree_ix, idx]
+        nxt = jnp.where(go_left, left[tree_ix, idx], right[tree_ix, idx])
+        idx = jnp.where(is_leaf, idx, nxt)
+    return leaf[tree_ix, idx]
+
+
+def forest_score_ref(features, feat, thresh, left, right, leaf, kappa, depth):
+    """Ensemble mean/std and LCB = mean - kappa * std. Each f32[C]."""
+    pred = forest_predict_ref(features, feat, thresh, left, right, leaf, depth)
+    mean = jnp.mean(pred, axis=1)
+    var = jnp.maximum(jnp.mean(pred * pred, axis=1) - mean * mean, 0.0)
+    std = jnp.sqrt(var)
+    kappa = jnp.asarray(kappa, jnp.float32).reshape(())
+    return mean, std, mean - kappa * std
+
+
+def node_energy_ref(pkg, dram, n_samples, dt):
+    """Trapezoidal integration of the summed power trace.
+
+    pkg, dram : f32[NODES, S] power samples (W), zero-padded past
+                ``n_samples``.
+    n_samples : number of *valid* samples per node (scalar; GEOPM samples
+                all nodes of a job for the same wall interval).
+    dt        : sampling period (s).
+    Returns f32[NODES] node energy in joules.
+    """
+    p = pkg + dram
+    s = p.shape[1]
+    j = jnp.arange(s - 1, dtype=jnp.float32)
+    ns = jnp.asarray(n_samples, jnp.float32).reshape(())
+    mask = (j < (ns - 1.0)).astype(p.dtype)
+    trap = 0.5 * (p[:, :-1] + p[:, 1:])
+    return jnp.asarray(dt, jnp.float32).reshape(()) * jnp.sum(
+        trap * mask[None, :], axis=1
+    )
+
+
+def energy_reduce_ref(pkg, dram, active, n_samples, dt, runtime):
+    """Full GEOPM-report reduction: per-node energy, masked average, EDP.
+
+    active : f32[NODES] 1.0 for nodes that belong to the job, 0.0 padding.
+    Returns (node_energy f32[NODES], avg f32[1], edp f32[1]).
+    """
+    node_energy = node_energy_ref(pkg, dram, n_samples, dt)
+    total = jnp.sum(node_energy * active)
+    cnt = jnp.maximum(jnp.sum(active), 1.0)
+    avg = total / cnt
+    rt = jnp.asarray(runtime, jnp.float32).reshape(())
+    return node_energy, avg.reshape((1,)), (avg * rt).reshape((1,))

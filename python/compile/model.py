@@ -1,0 +1,90 @@
+"""L2: the jax compute graphs AOT-lowered for the Rust coordinator.
+
+Two graphs, each wrapping an L1 Pallas kernel (kernels/forest.py,
+kernels/energy.py) plus the fusable epilogue XLA is good at:
+
+  forest_scorer(features, feat, thresh, left, right, leaf, kappa)
+      -> (mean, std, lcb)                 # the BO acquisition hot path
+  energy_reduce(pkg, dram, active, n_samples, dt, runtime)
+      -> (node_energy, avg, edp)          # the GEOPM report reduction
+
+Shapes are FIXED at AOT time (constants below); the Rust side pads/masks.
+Padding contracts:
+  * candidates: zero rows are scored like any other row; Rust applies its
+    own validity mask when argmin-ing, so garbage scores on pad rows are
+    harmless.
+  * forest: Rust always exports exactly TREES trees with node arrays padded
+    to NODES_PER_TREE (leaf-marked, self-looping pads), tree depth bounded
+    by DEPTH so lockstep descent terminates on a leaf.
+  * energy: power traces are zero-padded past ``n_samples`` and inactive
+    nodes carry ``active == 0`` so they drop out of the average.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import energy as energy_k
+from .kernels import forest as forest_k
+
+# --- forest_scorer fixed shapes --------------------------------------------
+CANDIDATES = 1024  # candidate configurations scored per call
+FEATURES = 32  # encoded parameter-space dimension (padded)
+TREES = 64  # RF ensemble size (Rust always fits exactly this)
+NODES_PER_TREE = 512  # node-array budget per tree
+DEPTH = 16  # lockstep descent steps (tree depth <= DEPTH - 1)
+
+# --- energy_reduce fixed shapes ---------------------------------------------
+MAX_NODES = 4096  # largest job in the paper (Theta/Summit runs)
+MAX_SAMPLES = 256  # 2 Hz x up to ~128 s app runtime per evaluation
+
+
+def forest_scorer(features, feat, thresh, left, right, leaf, kappa):
+    """Surrogate ensemble inference + LCB acquisition (Eq. 1)."""
+    return forest_k.forest_score(
+        features, feat, thresh, left, right, leaf, kappa, depth=DEPTH
+    )
+
+
+def energy_reduce(pkg, dram, active, n_samples, dt, runtime):
+    """GEOPM reduction: per-node energy, masked average node energy, EDP.
+
+    The kernel integrates per node; the masked mean over active nodes and
+    the EDP product are epilogue ops XLA fuses into the same executable.
+    """
+    node = energy_k.node_energy(pkg, dram, n_samples, dt)
+    total = jnp.sum(node * active)
+    cnt = jnp.maximum(jnp.sum(active), 1.0)
+    avg = total / cnt
+    edp = avg * runtime[0]
+    return node, avg.reshape((1,)), edp.reshape((1,))
+
+
+def forest_scorer_specs():
+    """jax.ShapeDtypeStruct argument specs for AOT lowering."""
+    import jax
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    tn = (TREES, NODES_PER_TREE)
+    return (
+        jax.ShapeDtypeStruct((CANDIDATES, FEATURES), f32),
+        jax.ShapeDtypeStruct(tn, i32),
+        jax.ShapeDtypeStruct(tn, f32),
+        jax.ShapeDtypeStruct(tn, i32),
+        jax.ShapeDtypeStruct(tn, i32),
+        jax.ShapeDtypeStruct(tn, f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+
+
+def energy_reduce_specs():
+    import jax
+
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((MAX_NODES, MAX_SAMPLES), f32),
+        jax.ShapeDtypeStruct((MAX_NODES, MAX_SAMPLES), f32),
+        jax.ShapeDtypeStruct((MAX_NODES,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )

@@ -1,0 +1,35 @@
+"""Shared fixtures/generators for the kernel test suite."""
+
+import numpy as np
+
+
+def random_forest_arrays(trees, nodes, features, depth_cap, rng, p_split=0.7):
+    """Generate a random padded forest in the kernel's tensor encoding.
+
+    Trees are grown breadth-first with random splits; every pad/leaf node
+    has feat == -1 and self-looping children so lockstep descent is the
+    identity on it. Depth is bounded by ``depth_cap - 1`` splits, matching
+    the Rust exporter's contract.
+    """
+    feat = np.full((trees, nodes), -1, np.int32)
+    thresh = np.zeros((trees, nodes), np.float32)
+    left = np.zeros((trees, nodes), np.int32)
+    right = np.zeros((trees, nodes), np.int32)
+    leaf = np.zeros((trees, nodes), np.float32)
+    for t in range(trees):
+        next_free = 1
+        frontier = [(0, 0)]
+        while frontier:
+            node, d = frontier.pop()
+            can_split = d < depth_cap - 1 and next_free + 1 < nodes
+            if can_split and rng.random() < p_split:
+                feat[t, node] = rng.integers(0, features)
+                thresh[t, node] = rng.normal()
+                left[t, node] = next_free
+                right[t, node] = next_free + 1
+                frontier.append((next_free, d + 1))
+                frontier.append((next_free + 1, d + 1))
+                next_free += 2
+            else:
+                leaf[t, node] = rng.normal()
+    return feat, thresh, left, right, leaf

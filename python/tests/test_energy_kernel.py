@@ -1,0 +1,72 @@
+"""L1 energy kernel vs pure-jnp oracle and numpy trapezoid."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import energy, ref
+
+
+def run_kernel(pkg, dram, ns, dt):
+    return np.asarray(
+        energy.node_energy(
+            jnp.array(pkg), jnp.array(dram),
+            jnp.array([float(ns)], jnp.float32), jnp.array([dt], jnp.float32),
+        )
+    )
+
+
+def test_matches_numpy_trapezoid():
+    rng = np.random.default_rng(0)
+    nodes, s, ns, dt = 128, 64, 41, 0.5
+    pkg = np.zeros((nodes, s), np.float32)
+    dram = np.zeros((nodes, s), np.float32)
+    pkg[:, :ns] = rng.uniform(80, 250, (nodes, ns))
+    dram[:, :ns] = rng.uniform(4, 40, (nodes, ns))
+    got = run_kernel(pkg, dram, ns, dt)
+    want = np.trapezoid((pkg + dram)[:, :ns], dx=dt, axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_constant_power_energy_is_p_times_t():
+    nodes, s, ns, dt = 64, 32, 21, 0.5
+    pkg = np.zeros((nodes, s), np.float32)
+    pkg[:, :ns] = 200.0
+    dram = np.zeros((nodes, s), np.float32)
+    got = run_kernel(pkg, dram, ns, dt)
+    # 20 trapezoids of width 0.5 at 200 W => 2000 J
+    np.testing.assert_allclose(got, 200.0 * (ns - 1) * dt, rtol=1e-6)
+
+
+def test_single_sample_zero_energy():
+    pkg = np.full((64, 16), 123.0, np.float32)
+    dram = np.zeros((64, 16), np.float32)
+    got = run_kernel(pkg, dram, 1, 0.5)
+    np.testing.assert_allclose(got, 0.0, atol=1e-6)
+
+
+def test_rejects_non_block_multiple():
+    with pytest.raises(ValueError):
+        run_kernel(np.zeros((100, 8), np.float32), np.zeros((100, 8), np.float32), 4, 0.5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    blocks=st.integers(1, 4),
+    s=st.sampled_from([8, 64, 256]),
+    dt=st.floats(0.1, 2.0),
+)
+def test_matches_ref_property(seed, blocks, s, dt):
+    rng = np.random.default_rng(seed)
+    nodes = energy.BLOCK_N * blocks
+    ns = int(rng.integers(1, s + 1))
+    pkg = np.zeros((nodes, s), np.float32)
+    dram = np.zeros((nodes, s), np.float32)
+    pkg[:, :ns] = rng.uniform(50, 300, (nodes, ns))
+    dram[:, :ns] = rng.uniform(0, 50, (nodes, ns))
+    got = run_kernel(pkg, dram, ns, dt)
+    want = np.asarray(ref.node_energy_ref(jnp.array(pkg), jnp.array(dram), float(ns), dt))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,132 @@
+"""L1 forest kernel vs pure-jnp oracle — the core correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import forest, ref
+from tests.conftest import random_forest_arrays
+
+
+def score_both(x, arrays, kappa, depth):
+    feat, thresh, left, right, leaf = (jnp.array(a) for a in arrays)
+    x = jnp.array(x)
+    got = forest.forest_score(
+        x, feat, thresh, left, right, leaf, jnp.array([kappa], jnp.float32), depth=depth
+    )
+    want = ref.forest_score_ref(x, feat, thresh, left, right, leaf, kappa, depth)
+    return got, want
+
+
+def assert_scores_close(got, want, atol=1e-5):
+    for g, w, name in zip(got, want, ("mean", "std", "lcb")):
+        np.testing.assert_allclose(g, w, atol=atol, rtol=1e-5, err_msg=name)
+
+
+def test_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    arrays = random_forest_arrays(8, 64, 8, 16, rng)
+    x = rng.normal(size=(256, 8)).astype(np.float32)
+    got, want = score_both(x, arrays, 1.96, 16)
+    assert_scores_close(got, want)
+
+
+def test_single_leaf_trees_zero_std():
+    """All-pad forest (every tree one leaf at node 0) => mean=leaf, std=0."""
+    trees, nodes, f = 4, 16, 4
+    feat = np.full((trees, nodes), -1, np.int32)
+    thresh = np.zeros((trees, nodes), np.float32)
+    left = np.zeros((trees, nodes), np.int32)
+    right = np.zeros((trees, nodes), np.int32)
+    leaf = np.zeros((trees, nodes), np.float32)
+    leaf[:, 0] = 3.5
+    x = np.zeros((128, f), np.float32)
+    mean, std, lcb = forest.forest_score(
+        jnp.array(x), jnp.array(feat), jnp.array(thresh), jnp.array(left),
+        jnp.array(right), jnp.array(leaf), jnp.array([1.96], jnp.float32), depth=16,
+    )
+    np.testing.assert_allclose(mean, 3.5, atol=1e-6)
+    np.testing.assert_allclose(std, 0.0, atol=1e-6)
+    np.testing.assert_allclose(lcb, 3.5, atol=1e-6)
+
+
+def test_kappa_zero_lcb_equals_mean():
+    rng = np.random.default_rng(3)
+    arrays = random_forest_arrays(8, 64, 6, 16, rng)
+    x = rng.normal(size=(128, 6)).astype(np.float32)
+    (mean, _, lcb), _ = score_both(x, arrays, 0.0, 16)
+    np.testing.assert_allclose(mean, lcb, atol=1e-6)
+
+
+def test_lcb_monotone_in_kappa():
+    rng = np.random.default_rng(4)
+    arrays = random_forest_arrays(8, 64, 6, 16, rng)
+    x = rng.normal(size=(128, 6)).astype(np.float32)
+    (_, _, lcb1), _ = score_both(x, arrays, 0.5, 16)
+    (_, _, lcb2), _ = score_both(x, arrays, 4.0, 16)
+    assert np.all(lcb2 <= lcb1 + 1e-6)
+
+
+def test_threshold_boundary_goes_left():
+    """x[feat] == thresh must take the left child (<=), not the right."""
+    trees, nodes = 1, 8
+    feat = np.full((trees, nodes), -1, np.int32)
+    thresh = np.zeros((trees, nodes), np.float32)
+    left = np.zeros((trees, nodes), np.int32)
+    right = np.zeros((trees, nodes), np.int32)
+    leaf = np.zeros((trees, nodes), np.float32)
+    feat[0, 0] = 0
+    thresh[0, 0] = 1.0
+    left[0, 0], right[0, 0] = 1, 2
+    leaf[0, 1], leaf[0, 2] = -1.0, +1.0
+    x = np.array([[1.0], [np.nextafter(np.float32(1.0), np.float32(2.0))]], np.float32)
+    x = np.repeat(x, 64, axis=0)  # pad candidates to a block multiple
+    mean, _, _ = forest.forest_score(
+        jnp.array(x), jnp.array(feat), jnp.array(thresh), jnp.array(left),
+        jnp.array(right), jnp.array(leaf), jnp.array([0.0], jnp.float32), depth=16,
+    )
+    assert mean[0] == -1.0  # boundary: left
+    assert mean[64] == 1.0  # just above: right
+
+
+def test_rejects_non_block_multiple():
+    rng = np.random.default_rng(5)
+    arrays = random_forest_arrays(2, 16, 4, 8, rng)
+    x = rng.normal(size=(100, 4)).astype(np.float32)  # not % 128
+    with pytest.raises(ValueError):
+        score_both(x, arrays, 1.0, 8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    trees=st.integers(1, 16),
+    features=st.integers(1, 16),
+    depth=st.sampled_from([4, 8, 16]),
+    blocks=st.integers(1, 3),
+    kappa=st.floats(0.0, 8.0),
+)
+def test_matches_ref_property(seed, trees, features, depth, blocks, kappa):
+    """Hypothesis sweep over forest shapes/depths/kappa vs the oracle."""
+    rng = np.random.default_rng(seed)
+    nodes = 2**depth  # enough room for depth-1 splits
+    arrays = random_forest_arrays(trees, nodes, features, depth, rng)
+    x = rng.normal(size=(forest.BLOCK_C * blocks, features)).astype(np.float32)
+    got, want = score_both(x, arrays, kappa, depth)
+    assert_scores_close(got, want, atol=2e-5)
+
+
+def test_aot_shapes_match_ref():
+    """Full production shapes (the exact AOT contract) against the oracle."""
+    from compile import model
+
+    rng = np.random.default_rng(7)
+    arrays = random_forest_arrays(
+        model.TREES, model.NODES_PER_TREE, model.FEATURES, model.DEPTH, rng,
+        p_split=0.85,
+    )
+    x = rng.normal(size=(model.CANDIDATES, model.FEATURES)).astype(np.float32)
+    got, want = score_both(x, arrays, 1.96, model.DEPTH)
+    assert_scores_close(got, want)

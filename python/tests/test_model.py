@@ -1,0 +1,101 @@
+"""L2 graphs: energy_reduce epilogue semantics + forest_scorer shapes."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import ref
+from tests.conftest import random_forest_arrays
+
+
+def make_energy_inputs(rng, active_nodes, ns, s=model.MAX_SAMPLES):
+    pkg = np.zeros((model.MAX_NODES, s), np.float32)
+    dram = np.zeros((model.MAX_NODES, s), np.float32)
+    pkg[:active_nodes, :ns] = rng.uniform(100, 250, (active_nodes, ns))
+    dram[:active_nodes, :ns] = rng.uniform(5, 30, (active_nodes, ns))
+    active = np.zeros((model.MAX_NODES,), np.float32)
+    active[:active_nodes] = 1.0
+    return pkg, dram, active
+
+
+def test_energy_reduce_matches_ref():
+    rng = np.random.default_rng(0)
+    pkg, dram, active = make_energy_inputs(rng, active_nodes=100, ns=50)
+    args = (
+        jnp.array(pkg), jnp.array(dram), jnp.array(active),
+        jnp.array([50.0], jnp.float32), jnp.array([0.5], jnp.float32),
+        jnp.array([24.5], jnp.float32),
+    )
+    node, avg, edp = model.energy_reduce(*args)
+    node_r, avg_r, edp_r = ref.energy_reduce_ref(
+        jnp.array(pkg), jnp.array(dram), jnp.array(active), 50.0, 0.5, 24.5
+    )
+    np.testing.assert_allclose(node, node_r, rtol=1e-5)
+    np.testing.assert_allclose(avg, avg_r, rtol=1e-5)
+    np.testing.assert_allclose(edp, edp_r, rtol=1e-5)
+
+
+def test_energy_reduce_ignores_inactive_nodes():
+    """Garbage power on inactive (pad) nodes must not move avg/EDP."""
+    rng = np.random.default_rng(1)
+    pkg, dram, active = make_energy_inputs(rng, active_nodes=64, ns=30)
+    base = model.energy_reduce(
+        jnp.array(pkg), jnp.array(dram), jnp.array(active),
+        jnp.array([30.0], jnp.float32), jnp.array([0.5], jnp.float32),
+        jnp.array([10.0], jnp.float32),
+    )
+    pkg2 = pkg.copy()
+    pkg2[64:, :30] = 1e6  # garbage on pad nodes
+    poisoned = model.energy_reduce(
+        jnp.array(pkg2), jnp.array(dram), jnp.array(active),
+        jnp.array([30.0], jnp.float32), jnp.array([0.5], jnp.float32),
+        jnp.array([10.0], jnp.float32),
+    )
+    np.testing.assert_allclose(base[1], poisoned[1], rtol=1e-6)
+    np.testing.assert_allclose(base[2], poisoned[2], rtol=1e-6)
+
+
+def test_edp_is_avg_times_runtime():
+    rng = np.random.default_rng(2)
+    pkg, dram, active = make_energy_inputs(rng, active_nodes=32, ns=20)
+    _, avg, edp = model.energy_reduce(
+        jnp.array(pkg), jnp.array(dram), jnp.array(active),
+        jnp.array([20.0], jnp.float32), jnp.array([0.5], jnp.float32),
+        jnp.array([7.25], jnp.float32),
+    )
+    np.testing.assert_allclose(np.asarray(edp), np.asarray(avg) * 7.25, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    active_nodes=st.sampled_from([1, 64, 1024, 4096]),
+    ns=st.integers(2, model.MAX_SAMPLES),
+)
+def test_energy_reduce_property(seed, active_nodes, ns):
+    rng = np.random.default_rng(seed)
+    pkg, dram, active = make_energy_inputs(rng, active_nodes, ns)
+    _, avg, _ = model.energy_reduce(
+        jnp.array(pkg), jnp.array(dram), jnp.array(active),
+        jnp.array([float(ns)], jnp.float32), jnp.array([0.5], jnp.float32),
+        jnp.array([1.0], jnp.float32),
+    )
+    per_node = np.trapezoid((pkg + dram)[:active_nodes, :ns], dx=0.5, axis=1)
+    np.testing.assert_allclose(np.asarray(avg)[0], per_node.mean(), rtol=1e-3)
+
+
+def test_forest_scorer_production_shapes():
+    rng = np.random.default_rng(3)
+    arrays = random_forest_arrays(
+        model.TREES, model.NODES_PER_TREE, model.FEATURES, model.DEPTH, rng
+    )
+    x = rng.normal(size=(model.CANDIDATES, model.FEATURES)).astype(np.float32)
+    out = model.forest_scorer(
+        jnp.array(x), *(jnp.array(a) for a in arrays),
+        jnp.array([1.96], jnp.float32),
+    )
+    assert all(o.shape == (model.CANDIDATES,) for o in out)
+    mean, std, lcb = (np.asarray(o) for o in out)
+    np.testing.assert_allclose(lcb, mean - 1.96 * std, atol=1e-5)

@@ -1,0 +1,122 @@
+//! Regenerates the ENERGY figures of the paper: Fig 15 (energy
+//! autotuning on Theta), Fig 16 (EDP autotuning on Theta) and Table V
+//! (improvement percentages), through the full GEOPM pipeline and the
+//! AOT `energy_reduce` artifact.
+//!
+//! `cargo bench --bench figures_energy`
+
+use std::sync::Arc;
+
+use ytopt::apps::AppKind;
+use ytopt::bench_support::section;
+use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+use ytopt::util::{Json, Table};
+
+const CASES: [(&str, AppKind, u64, f64, f64); 4] = [
+    // (figure label, app, nodes, paper baseline J, paper best J)
+    ("15a XSBench", AppKind::XSBenchEvent, 4096, 2494.905, 2280.806),
+    ("15b SWFFT", AppKind::Swfft, 4096, 3185.027, 3118.604),
+    ("15c AMG", AppKind::Amg, 4096, 5642.568, 4566.747),
+    ("15d SW4lite", AppKind::Sw4lite, 1024, 8384.034, 6606.233),
+];
+
+const PAPER_TABLE5: [(&str, f64, f64); 4] = [
+    ("XSBench", 8.58, 37.84),
+    ("SWFFT", 2.09, 5.24),
+    ("AMG", 20.88, 24.13),
+    ("SW4lite", 21.20, 23.70),
+];
+
+fn run_case(
+    app: AppKind,
+    nodes: u64,
+    metric: Metric,
+    scorer: Arc<Scorer>,
+    evals: usize,
+) -> TuneResult {
+    let mut setup = TuneSetup::new(app, PlatformKind::Theta, nodes, metric);
+    setup.max_evals = evals;
+    setup.seed = 2023;
+    setup.wallclock_budget_s = 1800.0;
+    autotune_with_scorer(&setup, scorer).expect("autotune failed")
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let evals = if quick { 10 } else { 26 };
+    let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
+    println!(
+        "energy_reduce backend: {}",
+        if scorer.is_accelerated() { "AOT/XLA" } else { "pure-Rust fallback" }
+    );
+
+    let mut energy_pct = Vec::new();
+    let mut edp_pct = Vec::new();
+    let mut dumps = Vec::new();
+
+    for (label, app, nodes, paper_base, paper_best) in CASES {
+        section(&format!("Fig {label}: autotuning ENERGY at {nodes} nodes on Theta"));
+        let r = run_case(app, nodes, Metric::Energy, scorer.clone(), evals);
+        println!(
+            "baseline {:.1} J | best {:.1} J | saving {:.2}%   (paper: {:.1} -> {:.1} J, {:.2}%)",
+            r.baseline_objective,
+            r.best_objective,
+            r.improvement_pct,
+            paper_base,
+            paper_best,
+            100.0 * (paper_base - paper_best) / paper_base,
+        );
+        println!("{}", r.trace());
+        energy_pct.push(r.improvement_pct);
+        dumps.push(Json::obj(vec![
+            ("figure", format!("Fig {label} energy").into()),
+            ("baseline_j", r.baseline_objective.into()),
+            ("best_j", r.best_objective.into()),
+            ("improvement_pct", r.improvement_pct.into()),
+        ]));
+    }
+
+    for (label, app, nodes, _, _) in CASES {
+        let label = label.replace("15", "16");
+        section(&format!("Fig {label}: autotuning EDP at {nodes} nodes on Theta"));
+        let r = run_case(app, nodes, Metric::Edp, scorer.clone(), evals);
+        println!(
+            "baseline {:.1} J*s | best {:.1} J*s | improvement {:.2}%",
+            r.baseline_objective, r.best_objective, r.improvement_pct,
+        );
+        println!("{}", r.trace());
+        edp_pct.push(r.improvement_pct);
+        dumps.push(Json::obj(vec![
+            ("figure", format!("Fig {label} EDP").into()),
+            ("baseline_js", r.baseline_objective.into()),
+            ("best_js", r.best_objective.into()),
+            ("improvement_pct", r.improvement_pct.into()),
+        ]));
+    }
+
+    section("Table V: improvement percentage (%) for each application on Theta");
+    let mut t = Table::new("", &["Theta", "XSBench", "SWFFT", "AMG", "SW4lite"]);
+    t.row(&std::iter::once("Energy".to_string())
+        .chain(energy_pct.iter().map(|p| format!("{p:.2}")))
+        .collect::<Vec<_>>());
+    t.row(&std::iter::once("EDP".to_string())
+        .chain(edp_pct.iter().map(|p| format!("{p:.2}")))
+        .collect::<Vec<_>>());
+    println!("{}", t.render());
+    let mut p = Table::new("(paper values)", &["Theta", "XSBench", "SWFFT", "AMG", "SW4lite"]);
+    p.row(&std::iter::once("Energy".to_string())
+        .chain(PAPER_TABLE5.iter().map(|(_, e, _)| format!("{e:.2}")))
+        .collect::<Vec<_>>());
+    p.row(&std::iter::once("EDP".to_string())
+        .chain(PAPER_TABLE5.iter().map(|(_, _, e)| format!("{e:.2}")))
+        .collect::<Vec<_>>());
+    println!("{}", p.render());
+
+    std::fs::create_dir_all("bench_results").ok();
+    let path = "bench_results/figures_energy.json";
+    std::fs::write(path, Json::Arr(dumps).to_string()).expect("write json");
+    println!("series dumped to {path}");
+}

@@ -1,0 +1,118 @@
+//! Regenerates the PERFORMANCE figures of the paper (Figs 5-14): the
+//! runtime-vs-wallclock autotuning traces and the per-evaluation ytopt
+//! overhead series, for each application/platform/scale.
+//!
+//! `cargo bench --bench figures_perf`
+//! Also dumps the series as JSON to `bench_results/figures_perf.json` so
+//! plots can be regenerated offline.
+
+use std::sync::Arc;
+
+use ytopt::apps::AppKind;
+use ytopt::bench_support::section;
+use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+use ytopt::util::Json;
+
+struct Fig {
+    id: &'static str,
+    title: &'static str,
+    app: AppKind,
+    platform: PlatformKind,
+    nodes: u64,
+    event_transport: bool,
+    max_evals: usize,
+    /// Paper-reported (baseline, best) runtimes when stated.
+    paper: Option<(f64, f64)>,
+}
+
+fn run_fig(fig: &Fig, scorer: Arc<Scorer>, seed: u64) -> TuneResult {
+    let mut setup = TuneSetup::new(fig.app, fig.platform, fig.nodes, Metric::Runtime);
+    setup.max_evals = fig.max_evals;
+    setup.seed = seed;
+    setup.event_transport = fig.event_transport;
+    setup.wallclock_budget_s = 1800.0; // the paper's half-hour budget
+    autotune_with_scorer(&setup, scorer).expect("autotune failed")
+}
+
+fn print_fig(fig: &Fig, r: &TuneResult) {
+    section(&format!("{}: {}", fig.id, fig.title));
+    println!(
+        "baseline {:.3} s | best {:.3} s | improvement {:.2}% | evals {} | max overhead {:.0} s",
+        r.baseline_objective,
+        r.best_objective,
+        r.improvement_pct,
+        r.evaluations,
+        r.db.max_overhead_s()
+    );
+    if let Some((pb, pbest)) = fig.paper {
+        println!(
+            "paper:    {pb:.3} s -> {pbest:.3} s ({:.2}%)",
+            100.0 * (pb - pbest) / pb
+        );
+    }
+    println!("{}", r.trace());
+}
+
+fn to_json(fig: &Fig, r: &TuneResult) -> Json {
+    Json::obj(vec![
+        ("id", fig.id.into()),
+        ("title", fig.title.into()),
+        ("baseline", r.baseline_objective.into()),
+        ("best", r.best_objective.into()),
+        ("improvement_pct", r.improvement_pct.into()),
+        (
+            "wallclock_s",
+            Json::Arr(r.db.records.iter().map(|x| Json::from(x.wallclock_s)).collect()),
+        ),
+        (
+            "objective",
+            Json::Arr(r.db.records.iter().map(|x| Json::from(x.objective)).collect()),
+        ),
+        (
+            "overhead_s",
+            Json::Arr(r.db.records.iter().map(|x| Json::from(x.overhead_s)).collect()),
+        ),
+    ])
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let evals = |n: usize| if quick { n.min(10) } else { n };
+    use AppKind::*;
+    use PlatformKind::*;
+    let figs = [
+        Fig { id: "Fig 5a/5c", title: "XSBench-mixed (history) on a Theta node", app: XSBenchMixed, platform: Theta, nodes: 1, event_transport: false, max_evals: evals(26), paper: Some((3.31, 3.262)) },
+        Fig { id: "Fig 5b/5d", title: "XSBench-mixed (event) on a Theta node", app: XSBenchMixed, platform: Theta, nodes: 1, event_transport: true, max_evals: evals(26), paper: Some((3.395, 3.339)) },
+        Fig { id: "Fig 6", title: "XSBench-offload (event) on a Summit node", app: XSBenchOffload, platform: Summit, nodes: 1, event_transport: false, max_evals: evals(26), paper: Some((2.20, 2.138)) },
+        Fig { id: "Fig 7a", title: "XSBench at 1,024 nodes on Theta", app: XSBenchEvent, platform: Theta, nodes: 1024, event_transport: false, max_evals: evals(24), paper: None },
+        Fig { id: "Fig 7b", title: "XSBench at 4,096 nodes on Theta", app: XSBenchEvent, platform: Theta, nodes: 4096, event_transport: false, max_evals: evals(24), paper: None },
+        Fig { id: "Fig 8", title: "XSBench-offload at 4,096 nodes on Summit", app: XSBenchOffload, platform: Summit, nodes: 4096, event_transport: false, max_evals: evals(20), paper: None },
+        Fig { id: "Fig 9", title: "SWFFT at 4,096 nodes on Summit", app: Swfft, platform: Summit, nodes: 4096, event_transport: false, max_evals: evals(26), paper: Some((8.93, 7.797)) },
+        Fig { id: "Fig 10", title: "SWFFT at 4,096 nodes on Theta", app: Swfft, platform: Theta, nodes: 4096, event_transport: false, max_evals: evals(26), paper: None },
+        Fig { id: "Fig 11", title: "AMG at 4,096 nodes on Summit", app: Amg, platform: Summit, nodes: 4096, event_transport: false, max_evals: evals(26), paper: Some((8.694, 6.734)) },
+        Fig { id: "Fig 12", title: "AMG at 4,096 nodes on Theta", app: Amg, platform: Theta, nodes: 4096, event_transport: false, max_evals: evals(26), paper: None },
+        Fig { id: "Fig 13", title: "SW4lite at 1,024 nodes on Summit", app: Sw4lite, platform: Summit, nodes: 1024, event_transport: false, max_evals: evals(26), paper: Some((11.067, 7.661)) },
+        Fig { id: "Fig 14", title: "SW4lite at 1,024 nodes on Theta", app: Sw4lite, platform: Theta, nodes: 1024, event_transport: false, max_evals: evals(26), paper: Some((171.595, 14.427)) },
+    ];
+
+    let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
+    println!(
+        "scorer backend: {}",
+        if scorer.is_accelerated() { "AOT/XLA" } else { "pure-Rust fallback" }
+    );
+
+    let mut dumps = Vec::new();
+    for fig in &figs {
+        let r = run_fig(fig, scorer.clone(), 2023);
+        print_fig(fig, &r);
+        dumps.push(to_json(fig, &r));
+    }
+
+    std::fs::create_dir_all("bench_results").ok();
+    let path = "bench_results/figures_perf.json";
+    std::fs::write(path, Json::Arr(dumps).to_string()).expect("write json");
+    println!("\nseries dumped to {path}");
+}

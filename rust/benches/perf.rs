@@ -1,0 +1,231 @@
+//! Performance microbenches + design ablations.
+//!
+//! `cargo bench --bench perf`
+//!
+//! Sections:
+//!   hot-path   — the per-iteration BO costs: RF fit, tensor export, AOT
+//!                scoring vs pure-Rust scoring, energy reduction
+//!   substrate  — space sampling/encoding throughput
+//!   ablations  — kappa sweep, surrogate family, sequential vs parallel
+//!                evaluation, BO vs random vs grid
+
+use std::sync::Arc;
+
+use ytopt::apps::AppKind;
+use ytopt::bench_support::{run, section};
+use ytopt::coordinator::{autotune_with_scorer, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+use ytopt::search::{StrategyKind, SurrogateKind};
+use ytopt::space::paper;
+use ytopt::surrogate::{export_forest, ForestConfig, RandomForest};
+use ytopt::util::Pcg32;
+
+fn make_training(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg32::seeded(seed);
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+        y.push(row[0] * 3.0 + (row[1] * 7.0).sin() + 0.2 * row[dim - 1]);
+        x.extend(row);
+    }
+    (x, y)
+}
+
+/// L2 profile: XLA cost analysis recorded by aot.py into the manifest.
+fn l2_cost_analysis() {
+    section("L2: XLA cost analysis of the AOT modules (from manifest.json)");
+    let path = ytopt::runtime::default_artifacts_dir().join("manifest.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        println!("(no artifacts; run `make artifacts`)");
+        return;
+    };
+    let Ok(v) = ytopt::util::Json::parse(&text) else { return };
+    for name in ["forest_scorer", "energy_reduce"] {
+        if let Some(ca) = v.get(name).and_then(|a| a.get("cost_analysis")) {
+            let g = |k: &str| ca.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+            println!(
+                "{name:<14} flops {:>12.0} | bytes accessed {:>12.0} | arithmetic intensity {:.3} flop/B",
+                g("flops"),
+                g("bytes_accessed"),
+                g("flops") / g("bytes_accessed").max(1.0)
+            );
+        }
+    }
+}
+
+fn hot_path(scorer: &Arc<Scorer>, quick: bool) {
+    section("hot path: per-BO-iteration costs");
+    let m = scorer.manifest().forest.clone();
+    let dim = 17; // SW4lite-sized space
+    let samples = if quick { 10 } else { 30 };
+
+    for n_obs in [50usize, 200] {
+        let (x, y) = make_training(n_obs, dim, 1);
+        let mut rng = Pcg32::seeded(2);
+        let cfg = ForestConfig { n_trees: m.trees, ..Default::default() };
+        run(&format!("RF fit ({n_obs} obs, {} trees)", m.trees), 2, samples, || {
+            let f = RandomForest::fit(&x, &y, dim, &cfg, &mut rng);
+            std::hint::black_box(&f);
+        });
+    }
+
+    let (x, y) = make_training(200, dim, 1);
+    let mut rng = Pcg32::seeded(3);
+    let forest =
+        RandomForest::fit(&x, &y, dim, &ForestConfig { n_trees: m.trees, ..Default::default() }, &mut rng);
+    run("tensor export (64 trees x 512 nodes)", 2, samples, || {
+        let t = export_forest(&forest, m.trees, m.nodes_per_tree, m.features, m.depth).unwrap();
+        std::hint::black_box(&t);
+    });
+
+    let tensors = export_forest(&forest, m.trees, m.nodes_per_tree, m.features, m.depth).unwrap();
+    let mut rows = vec![0.0f32; m.candidates * m.features];
+    for v in rows.iter_mut() {
+        *v = rng.f32();
+    }
+
+    let cpu = Scorer::fallback();
+    let rcpu = run(&format!("score {} candidates: pure-Rust", m.candidates), 2, samples, || {
+        let o = cpu.score_candidates(&rows, m.candidates, &tensors, 1.96).unwrap();
+        std::hint::black_box(&o);
+    });
+    println!("    -> {:.1}k candidates/s", rcpu.throughput(m.candidates) / 1e3);
+    if scorer.is_accelerated() {
+        let rxla = run(&format!("score {} candidates: AOT/XLA", m.candidates), 2, samples, || {
+            let o = scorer.score_candidates(&rows, m.candidates, &tensors, 1.96).unwrap();
+            std::hint::black_box(&o);
+        });
+        println!(
+            "    -> {:.1}k candidates/s ({:.2}x vs pure-Rust)",
+            rxla.throughput(m.candidates) / 1e3,
+            rcpu.mean_s / rxla.mean_s
+        );
+    }
+
+    // energy reduction at full Fig-15 shape
+    let es = scorer.manifest().energy.clone();
+    let nodes = es.max_nodes;
+    let s = es.max_samples;
+    let mut pkg = vec![0.0f32; nodes * s];
+    let mut dram = vec![0.0f32; nodes * s];
+    for i in 0..pkg.len() {
+        pkg[i] = 100.0 + rng.f32() * 140.0;
+        dram[i] = 5.0 + rng.f32() * 25.0;
+    }
+    let rcpu = run(&format!("energy reduce {nodes}x{s}: pure-Rust"), 1, samples, || {
+        let o = cpu.reduce_energy(&pkg, &dram, nodes, s, s as f32, 0.5, 12.0).unwrap();
+        std::hint::black_box(&o);
+    });
+    if scorer.is_accelerated() {
+        let rxla = run(&format!("energy reduce {nodes}x{s}: AOT/XLA"), 1, samples, || {
+            let o = scorer.reduce_energy(&pkg, &dram, nodes, s, s as f32, 0.5, 12.0).unwrap();
+            std::hint::black_box(&o);
+        });
+        println!("    -> {:.2}x vs pure-Rust", rcpu.mean_s / rxla.mean_s);
+    }
+}
+
+fn substrate(quick: bool) {
+    section("substrate: space sampling / encoding");
+    let samples = if quick { 10 } else { 30 };
+    let space = paper::build_space(AppKind::Sw4lite, PlatformKind::Theta);
+    let mut rng = Pcg32::seeded(4);
+    let r = run("sample 1024 valid configs (SW4lite space)", 2, samples, || {
+        for _ in 0..1024 {
+            std::hint::black_box(space.sample(&mut rng));
+        }
+    });
+    println!("    -> {:.1}k configs/s", r.throughput(1024) / 1e3);
+    let cfg = space.sample(&mut rng);
+    let mut row = vec![0.0f32; 32];
+    let r = run("encode 1024 configs to f32[32]", 2, samples, || {
+        for _ in 0..1024 {
+            space.encode_into(&cfg, &mut row);
+            std::hint::black_box(&row);
+        }
+    });
+    println!("    -> {:.1}k encodes/s", r.throughput(1024) / 1e3);
+}
+
+fn ablations(scorer: &Arc<Scorer>, quick: bool) {
+    let evals = if quick { 10 } else { 24 };
+    let repeats: u64 = if quick { 1 } else { 3 };
+
+    section("ablation: kappa (exploration/exploitation, Eq. 1)");
+    for kappa in [0.0, 0.5, 1.96, 4.0] {
+        let mut sum = 0.0;
+        for seed in 0..repeats {
+            let mut s = TuneSetup::new(AppKind::Amg, PlatformKind::Summit, 4096, Metric::Runtime);
+            s.max_evals = evals;
+            s.kappa = kappa;
+            s.seed = 100 + seed;
+            sum += autotune_with_scorer(&s, scorer.clone()).unwrap().improvement_pct;
+        }
+        println!("kappa {kappa:<5} -> mean improvement {:.2}% over {repeats} seeds", sum / repeats as f64);
+    }
+
+    section("ablation: surrogate family (paper found RF best)");
+    for (name, kind) in [
+        ("RandomForest", SurrogateKind::RandomForest),
+        ("ExtraTrees", SurrogateKind::ExtraTrees),
+        ("GBRT-lite", SurrogateKind::Gbrt),
+    ] {
+        let mut sum = 0.0;
+        for seed in 0..repeats {
+            let mut s = TuneSetup::new(AppKind::Amg, PlatformKind::Summit, 4096, Metric::Runtime);
+            s.max_evals = evals;
+            s.surrogate = kind;
+            s.seed = 200 + seed;
+            sum += autotune_with_scorer(&s, scorer.clone()).unwrap().improvement_pct;
+        }
+        println!("{name:<14} -> mean improvement {:.2}%", sum / repeats as f64);
+    }
+
+    section("ablation: search strategy");
+    for (name, kind) in [
+        ("BO (ytopt)", StrategyKind::Bo),
+        ("Random", StrategyKind::Random),
+        ("Grid", StrategyKind::Grid),
+        ("MCTS (mctree)", StrategyKind::Mctree),
+    ] {
+        let mut sum = 0.0;
+        for seed in 0..repeats {
+            let mut s = TuneSetup::new(AppKind::Sw4lite, PlatformKind::Summit, 1024, Metric::Runtime);
+            s.max_evals = evals;
+            s.strategy = kind;
+            s.seed = 300 + seed;
+            sum += autotune_with_scorer(&s, scorer.clone()).unwrap().improvement_pct;
+        }
+        println!("{name:<12} -> mean improvement {:.2}%", sum / repeats as f64);
+    }
+
+    section("ablation: sequential (Ray-like) vs parallel (libensemble-like)");
+    for par in [1usize, 2, 4, 8] {
+        let mut s = TuneSetup::new(AppKind::Amg, PlatformKind::Summit, 4096, Metric::Runtime);
+        s.max_evals = evals;
+        s.parallel_evals = par;
+        s.seed = 400;
+        s.wallclock_budget_s = 1e9;
+        let r = autotune_with_scorer(&s, scorer.clone()).unwrap();
+        println!(
+            "parallel {par} -> simulated wallclock {:>8.0} s for {} evals, improvement {:.2}%",
+            r.wallclock_s, r.evaluations, r.improvement_pct
+        );
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
+    println!(
+        "scorer backend: {}",
+        if scorer.is_accelerated() { "AOT/XLA" } else { "pure-Rust fallback" }
+    );
+    l2_cost_analysis();
+    hot_path(&scorer, quick);
+    substrate(quick);
+    ablations(&scorer, quick);
+}

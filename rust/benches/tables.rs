@@ -1,0 +1,149 @@
+//! Regenerates every TABLE of the paper: I (system specs), II (compile
+//! times), III (parameter spaces), IV (max ytopt overhead).
+//!
+//! `cargo bench --bench tables`
+
+use std::sync::Arc;
+
+use ytopt::apps::AppKind;
+use ytopt::bench_support::section;
+use ytopt::coordinator::{autotune_with_scorer, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::{compile_time, PlatformKind};
+use ytopt::runtime::Scorer;
+use ytopt::space::paper;
+use ytopt::util::{Pcg32, Table};
+
+fn table1() {
+    section("Table I: System Platform Specifications and Tools");
+    let a = PlatformKind::Theta.spec();
+    let b = PlatformKind::Summit.spec();
+    let mut t = Table::new("", &["field", a.name, b.name]);
+    let rows: Vec<(&str, String, String)> = vec![
+        ("Location", a.location.into(), b.location.into()),
+        ("Architecture", a.architecture.into(), b.architecture.into()),
+        ("Number of nodes", a.nodes.to_string(), b.nodes.to_string()),
+        ("CPU cores per node", a.cpu_cores_per_node.to_string(), b.cpu_cores_per_node.to_string()),
+        ("Sockets per node", a.sockets_per_node.into(), b.sockets_per_node.into()),
+        ("CPU type and speed", a.cpu_type.into(), b.cpu_type.into()),
+        ("GPUs per node", a.gpus_per_node.to_string(), b.gpus_per_node.to_string()),
+        ("L1 cache per core", a.l1_cache.into(), b.l1_cache.into()),
+        ("L2 cache per socket", a.l2_cache.into(), b.l2_cache.into()),
+        ("L3 cache per socket", a.l3_cache.into(), b.l3_cache.into()),
+        ("Threads per core", a.threads_per_core.to_string(), b.threads_per_core.to_string()),
+        ("Memory per node", a.memory_per_node.into(), b.memory_per_node.into()),
+        ("Network", a.network.into(), b.network.into()),
+        ("Power tools", a.power_tools.into(), b.power_tools.into()),
+        (
+            "TDP per socket",
+            format!("{}W", a.tdp_per_socket_w),
+            format!("{}W/Power9; {}W/GPU", b.tdp_per_socket_w, b.gpu_tdp_w),
+        ),
+        ("File system", a.file_system.into(), b.file_system.into()),
+    ];
+    for (f, x, y) in rows {
+        t.row(&[f.to_string(), x, y]);
+    }
+    println!("{}", t.render());
+}
+
+fn table2() {
+    section("Table II: Compiling time (s) on Theta and Summit (avg of 5)");
+    let mut t = Table::new("", &["System", "XSBench", "SWFFT", "AMG", "SW4lite"]);
+    let mut rng = Pcg32::seeded(5);
+    for pf in [PlatformKind::Theta, PlatformKind::Summit] {
+        let mut row = vec![pf.name().to_string()];
+        for app in [AppKind::XSBenchEvent, AppKind::Swfft, AppKind::Amg, AppKind::Sw4lite] {
+            // the paper's methodology: compile five times, average
+            let avg: f64 = (0..5)
+                .map(|_| compile_time::sample_compile_s(app, pf, &mut rng))
+                .sum::<f64>()
+                / 5.0;
+            row.push(format!("{avg:.3}"));
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+    println!("(paper: Theta 2.021/3.494/2.825/162.066; Summit 4.645/3.781/2.757/58.000)");
+}
+
+fn table3() {
+    section("Table III: Parameter Space for Each Application");
+    let mut t = Table::new(
+        "",
+        &["ECP Proxy Apps", "System param.", "Application param.", "Space size", "paper size"],
+    );
+    let cases: [(AppKind, u128); 6] = [
+        (AppKind::XSBenchEvent, 51_840),
+        (AppKind::XSBenchMixed, 6_272_640),
+        (AppKind::XSBenchOffload, 181_440),
+        (AppKind::Swfft, 1_080),
+        (AppKind::Amg, 552_960),
+        (AppKind::Sw4lite, 2_211_840),
+    ];
+    for (app, paper_size) in cases {
+        let platform = if app.uses_gpus() { PlatformKind::Summit } else { PlatformKind::Theta };
+        let space = paper::build_space(app, platform);
+        let env = space.params().iter().filter(|p| p.name.starts_with("OMP_")).count();
+        t.row(&[
+            app.name().to_string(),
+            format!("{env} env. variables"),
+            format!("{}", space.dim() - env),
+            space.size().to_string(),
+            paper_size.to_string(),
+        ]);
+        assert_eq!(space.size(), paper_size, "{app:?} space size drifted from Table III");
+    }
+    println!("{}", t.render());
+}
+
+fn table4(scorer: Arc<Scorer>, evals: usize) {
+    section("Table IV: maximum ytopt overhead (s) per application and system");
+    // run the paper's experiment grid briefly; report observed maxima
+    let cases: [(AppKind, PlatformKind, u64); 10] = [
+        (AppKind::XSBenchMixed, PlatformKind::Theta, 1),
+        (AppKind::XSBenchEvent, PlatformKind::Theta, 4096),
+        (AppKind::Swfft, PlatformKind::Theta, 4096),
+        (AppKind::Amg, PlatformKind::Theta, 4096),
+        (AppKind::Sw4lite, PlatformKind::Theta, 1024),
+        (AppKind::XSBenchOffload, PlatformKind::Summit, 1),
+        (AppKind::XSBenchOffload, PlatformKind::Summit, 4096),
+        (AppKind::Swfft, PlatformKind::Summit, 4096),
+        (AppKind::Amg, PlatformKind::Summit, 4096),
+        (AppKind::Sw4lite, PlatformKind::Summit, 1024),
+    ];
+    let mut theta: Vec<String> = vec!["Theta".into()];
+    let mut summit: Vec<String> = vec!["Summit".into()];
+    for (app, pf, nodes) in cases {
+        let mut setup = TuneSetup::new(app, pf, nodes, Metric::Runtime);
+        setup.max_evals = evals;
+        setup.seed = 7;
+        let r = autotune_with_scorer(&setup, scorer.clone()).expect("tune failed");
+        let cell = format!("{:.0}", r.db.max_overhead_s());
+        if pf == PlatformKind::Theta {
+            theta.push(cell);
+        } else {
+            summit.push(cell);
+        }
+    }
+    let mut t =
+        Table::new("", &["System", "XSBench-Mixed", "XSBench", "SWFFT", "AMG", "SW4lite"]);
+    t.row(&theta);
+    t.row(&summit);
+    println!("{}", t.render());
+    println!("(paper maxima: Theta 70/69/30/34/46; Summit 24/111/50/45/46)");
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let evals = if quick { 8 } else { 20 };
+    table1();
+    table2();
+    table3();
+    let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
+    println!(
+        "\nscorer backend: {}",
+        if scorer.is_accelerated() { "AOT/XLA" } else { "pure-Rust fallback" }
+    );
+    table4(scorer, evals);
+}

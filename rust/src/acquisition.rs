@@ -1,0 +1,130 @@
+//! Acquisition functions over surrogate (mean, std) predictions.
+//!
+//! The paper uses the lower confidence bound (Eq. 1):
+//! `a_LCB(x) = mu(x) - kappa * sigma(x)`, kappa >= 0, default 1.96;
+//! kappa = 0 is pure exploitation, large kappa (> 1.96) pure exploration.
+//! EI is included for the ablation benches.
+
+/// Default exploration/exploitation tradeoff (paper §IV-A).
+pub const DEFAULT_KAPPA: f64 = 1.96;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Acquisition {
+    /// Lower confidence bound with tradeoff parameter kappa.
+    Lcb { kappa: f64 },
+    /// Expected improvement below the incumbent best.
+    Ei,
+}
+
+impl Acquisition {
+    pub fn lcb_default() -> Self {
+        Acquisition::Lcb { kappa: DEFAULT_KAPPA }
+    }
+
+    /// Score candidates: LOWER is better (we minimize runtime/energy/EDP,
+    /// and EI is negated so both variants argmin).
+    ///
+    /// `fmin` is the incumbent best observation (used by EI only).
+    pub fn score(&self, mean: &[f32], std: &[f32], fmin: f64) -> Vec<f64> {
+        assert_eq!(mean.len(), std.len());
+        match *self {
+            Acquisition::Lcb { kappa } => mean
+                .iter()
+                .zip(std.iter())
+                .map(|(&m, &s)| m as f64 - kappa * s as f64)
+                .collect(),
+            Acquisition::Ei => mean
+                .iter()
+                .zip(std.iter())
+                .map(|(&m, &s)| -expected_improvement(m as f64, s as f64, fmin))
+                .collect(),
+        }
+    }
+}
+
+/// EI for minimization: E[max(fmin - Y, 0)], Y ~ N(mean, std^2).
+fn expected_improvement(mean: f64, std: f64, fmin: f64) -> f64 {
+    if std <= 1e-12 {
+        return (fmin - mean).max(0.0);
+    }
+    let z = (fmin - mean) / std;
+    (fmin - mean) * norm_cdf(z) + std * norm_pdf(z)
+}
+
+fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Abramowitz–Stegun 7.1.26 based erf approximation (|err| < 1.5e-7).
+fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lcb_matches_equation_1() {
+        let a = Acquisition::Lcb { kappa: 1.96 };
+        let s = a.score(&[5.0, 3.0], &[1.0, 0.5], 0.0);
+        assert!((s[0] - (5.0 - 1.96)).abs() < 1e-9);
+        assert!((s[1] - (3.0 - 0.98)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kappa_zero_is_pure_exploitation() {
+        let a = Acquisition::Lcb { kappa: 0.0 };
+        let s = a.score(&[5.0, 3.0], &[10.0, 0.0], 0.0);
+        assert_eq!(s, vec![5.0, 3.0]);
+    }
+
+    #[test]
+    fn large_kappa_prefers_high_variance() {
+        let a = Acquisition::Lcb { kappa: 10.0 };
+        let s = a.score(&[5.0, 3.0], &[1.0, 0.01], 0.0);
+        assert!(s[0] < s[1], "high-variance point must win under exploration");
+    }
+
+    #[test]
+    fn ei_prefers_likely_improvers() {
+        let a = Acquisition::Ei;
+        // candidate below fmin with some variance beats one far above
+        let s = a.score(&[1.0, 9.0], &[0.5, 0.5], 2.0);
+        assert!(s[0] < s[1]);
+    }
+
+    #[test]
+    fn ei_zero_variance_below_fmin() {
+        let s = Acquisition::Ei.score(&[1.0], &[0.0], 2.0);
+        assert!((s[0] - (-1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn erf_accuracy() {
+        // reference values
+        for (x, want) in [(0.0, 0.0), (0.5, 0.5204998778), (1.0, 0.8427007929), (2.0, 0.9953222650)]
+        {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x})");
+            assert!((erf(-x) + want).abs() < 2e-7);
+        }
+    }
+
+    #[test]
+    fn norm_cdf_symmetry() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((norm_cdf(1.96) - 0.975).abs() < 1e-3);
+    }
+}

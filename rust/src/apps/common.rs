@@ -1,0 +1,216 @@
+//! Shared landscape ingredients for the application models.
+//!
+//! Each helper encodes one effect the paper's tuning knobs exercise;
+//! individual app models combine them with app-specific sensitivities.
+
+use crate::platform::PlatformKind;
+use crate::space::{ConfigSpace, Configuration};
+use crate::util::Pcg32;
+
+/// The four OpenMP runtime env vars every Table III space carries.
+#[derive(Debug, Clone)]
+pub struct OmpEnv {
+    pub threads: i64,
+    pub places: String,
+    pub bind: String,
+    pub schedule: String,
+}
+
+pub fn omp_env(space: &ConfigSpace, cfg: &Configuration) -> OmpEnv {
+    OmpEnv {
+        threads: space.int_value(cfg, "OMP_NUM_THREADS"),
+        places: space.str_value(cfg, "OMP_PLACES"),
+        bind: space.str_value(cfg, "OMP_PROC_BIND"),
+        schedule: space.str_value(cfg, "OMP_SCHEDULE"),
+    }
+}
+
+/// Parallel speedup of `n` threads on `cores` physical cores.
+///
+/// Amdahl with serial fraction `serial`; hyperthreads past the physical
+/// core count contribute with `smt_yield` effectiveness that saturates as
+/// oversubscription grows (KNL/Power9 4-way SMT gives small, diminishing
+/// returns on these memory-bound kernels).
+pub fn thread_speedup(n: f64, cores: f64, serial: f64, smt_yield: f64) -> f64 {
+    assert!(n >= 1.0);
+    let phys = n.min(cores);
+    let extra = (n - cores).max(0.0);
+    let eff = phys + smt_yield * extra / (1.0 + extra / cores);
+    1.0 / (serial + (1.0 - serial) / eff)
+}
+
+/// Affinity (OMP_PLACES x OMP_PROC_BIND) runtime multiplier, >= ~1.
+///
+/// `sensitivity` in [0, 1] scales how strongly the app reacts.
+/// The pathological corner the paper hits on AMG (Fig. 12): with
+/// `places=threads` + `bind=master` every thread is bound into the master
+/// place partition; past a handful of threads they serialize on a few
+/// cores sharing L2 — the observed ~40x blowup at 48 threads.
+pub fn affinity_factor(env: &OmpEnv, cores: f64, sensitivity: f64) -> f64 {
+    let n = env.threads as f64;
+    let raw = match (env.places.as_str(), env.bind.as_str()) {
+        ("threads", "master") => {
+            if n <= 8.0 {
+                1.0 + 0.05 * n
+            } else {
+                // threads pile onto the master place: progressive
+                // serialization, saturating around ~44x
+                1.0 + 44.0 * (1.0 - (-(n - 8.0) / 24.0).exp())
+            }
+        }
+        ("cores", "master") => 1.12,
+        ("sockets", "master") => 1.06,
+        ("threads", "close") => 1.02, // packs SMT siblings first
+        ("threads", "spread") => 1.0,
+        ("cores", "close") => 1.0, // the sane default
+        ("cores", "spread") => 0.995,
+        ("sockets", "close") => 1.01,
+        ("sockets", "spread") => 0.99, // best for bandwidth-bound kernels
+        _ => 1.0,
+    };
+    // interpolate between "insensitive" (1.0) and the raw factor
+    1.0 + sensitivity * (raw - 1.0) * (n / cores).clamp(0.25, 1.5)
+}
+
+/// OMP_SCHEDULE multiplier for a loop with `trips` iterations per thread,
+/// intrinsic load `imbalance` (fractional runtime cost under static), and
+/// per-dispatch `dispatch_cost` (fractional cost of one dynamic dispatch).
+pub fn schedule_factor(
+    schedule: &str,
+    chunk: f64,
+    trips: f64,
+    imbalance: f64,
+    dispatch_cost: f64,
+) -> f64 {
+    match schedule {
+        "static" => 1.0 + imbalance,
+        "dynamic" => {
+            let dispatches = (trips / chunk.max(1.0)).max(1.0);
+            // residual imbalance grows again once chunks get too coarse
+            let residual = imbalance * (chunk / trips).clamp(0.0, 1.0);
+            1.0 + dispatch_cost * dispatches + residual
+        }
+        "auto" => 1.0 + 0.35 * imbalance,
+        _ => 1.0,
+    }
+}
+
+/// Count how many of the `base_<i>` toggle sites are enabled.
+pub fn toggles_on(space: &ConfigSpace, cfg: &Configuration, base: &str, sites: usize) -> usize {
+    (0..sites)
+        .filter(|i| space.int_value(cfg, &format!("{base}_{i}")) == 1)
+        .count()
+}
+
+/// Deterministic multiplicative run-to-run noise (~lognormal, sigma).
+///
+/// Keyed by the configuration identity and the evaluation seed so a
+/// repeated evaluation of the same point jitters like a real re-run.
+pub fn run_noise(cfg: &Configuration, seed: u64, sigma: f64) -> f64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &i in cfg.indices() {
+        h ^= i as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^= seed.wrapping_mul(0x9e3779b97f4a7c15);
+    let mut rng = Pcg32::seeded(h);
+    (sigma * rng.normal()).exp()
+}
+
+/// Package+DRAM power for a CPU phase.
+///
+/// `active_frac` = busy logical share of the node, `intensity` in [0,1]
+/// (compute vs stall mix), `mem_frac` in [0,1] DRAM traffic share.
+/// KNL idles near ~68 W package; Power9 nodes (2 sockets) near ~120 W.
+pub fn cpu_power(
+    platform: PlatformKind,
+    active_frac: f64,
+    intensity: f64,
+    mem_frac: f64,
+) -> (f64, f64) {
+    let (idle, dynamic_max, dram_idle, dram_max) = match platform {
+        PlatformKind::Theta => (68.0, 150.0, 6.0, 24.0),
+        PlatformKind::Summit => (120.0, 265.0, 10.0, 34.0),
+    };
+    let a = active_frac.clamp(0.0, 1.0);
+    let pkg = idle + dynamic_max * a.powf(0.85) * intensity.clamp(0.1, 1.0);
+    let dram = dram_idle + dram_max * a * mem_frac.clamp(0.0, 1.0);
+    (pkg, dram)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Param, ParamDomain};
+
+    #[test]
+    fn speedup_monotone_up_to_cores() {
+        let mut prev = 0.0;
+        for n in [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0] {
+            let s = thread_speedup(n, 64.0, 0.002, 0.05);
+            assert!(s > prev);
+            prev = s;
+        }
+        // SMT yields a little more, but far less than linear
+        let s64 = thread_speedup(64.0, 64.0, 0.002, 0.05);
+        let s256 = thread_speedup(256.0, 64.0, 0.002, 0.05);
+        assert!(s256 > s64);
+        assert!(s256 < s64 * 1.12);
+    }
+
+    #[test]
+    fn master_threads_corner_is_pathological() {
+        let env = OmpEnv {
+            threads: 48,
+            places: "threads".into(),
+            bind: "master".into(),
+            schedule: "dynamic".into(),
+        };
+        let f = affinity_factor(&env, 64.0, 1.0);
+        assert!(f > 20.0, "expected pathological blowup, got {f}");
+        let sane = OmpEnv { places: "cores".into(), bind: "close".into(), ..env };
+        assert!(affinity_factor(&sane, 64.0, 1.0) < 1.05);
+    }
+
+    #[test]
+    fn dynamic_schedule_has_chunk_sweet_spot() {
+        // tiny chunks pay dispatch, huge chunks pay imbalance
+        let f10 = schedule_factor("dynamic", 10.0, 10_000.0, 0.04, 3e-5);
+        let f150 = schedule_factor("dynamic", 150.0, 10_000.0, 0.04, 3e-5);
+        let f5000 = schedule_factor("dynamic", 5_000.0, 10_000.0, 0.04, 3e-5);
+        assert!(f150 < f10, "{f150} !< {f10}");
+        assert!(f150 < f5000, "{f150} !< {f5000}");
+        // static pays the full imbalance
+        assert!(schedule_factor("static", 0.0, 10_000.0, 0.04, 3e-5) > f150);
+    }
+
+    #[test]
+    fn noise_is_deterministic_and_small() {
+        let cfg = Configuration::from_indices(vec![1, 2, 3]);
+        let a = run_noise(&cfg, 7, 0.008);
+        let b = run_noise(&cfg, 7, 0.008);
+        assert_eq!(a, b);
+        assert!((a - 1.0).abs() < 0.05);
+        let c = run_noise(&cfg, 8, 0.008);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn cpu_power_within_tdp_envelope() {
+        let (pkg, dram) = cpu_power(PlatformKind::Theta, 1.0, 1.0, 1.0);
+        assert!(pkg <= 218.0 + 1e-9, "KNL package {pkg} exceeds TDP");
+        assert!(dram <= 30.0);
+        let (idle_pkg, _) = cpu_power(PlatformKind::Theta, 0.0, 1.0, 0.0);
+        assert!((55.0..80.0).contains(&idle_pkg));
+    }
+
+    #[test]
+    fn toggles_counted() {
+        let mut s = ConfigSpace::new("t");
+        s.add(Param::new("u_0", ParamDomain::Toggle));
+        s.add(Param::new("u_1", ParamDomain::Toggle));
+        s.add(Param::new("u_2", ParamDomain::Toggle));
+        let cfg = Configuration::from_indices(vec![1, 0, 1]);
+        assert_eq!(toggles_on(&s, &cfg, "u", 3), 2);
+    }
+}

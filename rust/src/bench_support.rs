@@ -1,0 +1,109 @@
+//! Mini-criterion: timing harness for the `harness = false` bench
+//! binaries (criterion is not in the offline crate set).
+//!
+//! Provides warmup + sampled timing with mean/median/p95 statistics and
+//! aligned reporting, plus a tiny `section` helper the paper-table
+//! benches use for their output structure.
+
+use crate::util::stats;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>12} | median {:>12} | p95 {:>12} | min {:>12} ({} samples)",
+            self.name,
+            crate::util::table::fmt_secs(self.mean_s),
+            crate::util::table::fmt_secs(self.median_s),
+            crate::util::table::fmt_secs(self.p95_s),
+            crate::util::table::fmt_secs(self.min_s),
+            self.samples
+        )
+    }
+
+    /// Throughput helper: items per second at the mean time.
+    pub fn throughput(&self, items: usize) -> f64 {
+        items as f64 / self.mean_s
+    }
+}
+
+/// Benchmark a closure: warm up for `warmup_iters`, then time `samples`
+/// runs. The closure should perform one complete unit of work.
+pub fn bench<F: FnMut()>(name: &str, warmup_iters: usize, samples: usize, mut f: F) -> BenchResult {
+    assert!(samples >= 1);
+    for _ in 0..warmup_iters {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples,
+        mean_s: stats::mean(&times),
+        median_s: stats::median(&times),
+        p95_s: stats::percentile(&times, 95.0),
+        stddev_s: stats::stddev(&times),
+        min_s: stats::min(&times),
+    }
+}
+
+/// Convenience: bench and print.
+pub fn run<F: FnMut()>(name: &str, warmup: usize, samples: usize, f: F) -> BenchResult {
+    let r = bench(name, warmup, samples, f);
+    println!("{}", r.report());
+    r
+}
+
+/// Section banner for bench output.
+pub fn section(title: &str) {
+    println!("\n===== {title} =====");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_are_positive_and_ordered() {
+        let r = bench("spin", 2, 20, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.min_s > 0.0);
+        assert!(r.min_s <= r.median_s);
+        assert!(r.median_s <= r.p95_s + 1e-12);
+        assert_eq!(r.samples, 20);
+    }
+
+    #[test]
+    fn throughput_scales_with_items() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: 1,
+            mean_s: 0.5,
+            median_s: 0.5,
+            p95_s: 0.5,
+            stddev_s: 0.0,
+            min_s: 0.5,
+        };
+        assert_eq!(r.throughput(1000), 2000.0);
+    }
+}

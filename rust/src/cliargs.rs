@@ -1,0 +1,236 @@
+//! Declarative CLI argument parser (no clap in the offline crate set).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated `--help` text. Used by
+//! `rust/src/main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    takes_value: bool,
+    default: Option<String>,
+    help: String,
+}
+
+/// A declarative command-line specification.
+#[derive(Debug, Clone)]
+pub struct CliSpec {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("unexpected positional argument `{0}`")]
+    UnexpectedPositional(String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl CliSpec {
+    pub fn new(program: &str, about: &str) -> Self {
+        CliSpec {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            takes_value: true,
+            default: default.map(|s| s.to_string()),
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            takes_value: false,
+            default: None,
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// Declare a positional argument (in order).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let head = if o.takes_value {
+                format!("--{} <value>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o.default.as_ref().map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {head:<26} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                     print this help\n");
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or(CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    args.flags.push(name);
+                }
+            } else {
+                if args.positionals.len() >= self.positionals.len() {
+                    return Err(CliError::UnexpectedPositional(a.clone()));
+                }
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn int(&self, name: &str) -> Option<i64> {
+        self.get(name)?.parse().ok()
+    }
+
+    pub fn float(&self, name: &str) -> Option<f64> {
+        self.get(name)?.parse().ok()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CliSpec {
+        CliSpec::new("ytopt-rs", "autotuner")
+            .positional("command", "subcommand")
+            .opt("app", Some("xsbench"), "application")
+            .opt("nodes", Some("1"), "node count")
+            .flag("parallel", "parallel evaluation")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = spec().parse(&sv(&["tune", "--app=amg", "--nodes", "4096", "--parallel"])).unwrap();
+        assert_eq!(a.positional(0), Some("tune"));
+        assert_eq!(a.get("app"), Some("amg"));
+        assert_eq!(a.int("nodes"), Some(4096));
+        assert!(a.has_flag("parallel"));
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let a = spec().parse(&sv(&["tune"])).unwrap();
+        assert_eq!(a.get("app"), Some("xsbench"));
+        assert_eq!(a.int("nodes"), Some(1));
+        assert!(!a.has_flag("parallel"));
+    }
+
+    #[test]
+    fn errors_are_specific() {
+        assert!(matches!(spec().parse(&sv(&["--bogus"])), Err(CliError::Unknown(_))));
+        assert!(matches!(spec().parse(&sv(&["--app"])), Err(CliError::MissingValue(_))));
+        assert!(matches!(
+            spec().parse(&sv(&["a", "b"])),
+            Err(CliError::UnexpectedPositional(_))
+        ));
+        assert!(matches!(spec().parse(&sv(&["--help"])), Err(CliError::HelpRequested)));
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = spec().usage();
+        assert!(u.contains("--app"));
+        assert!(u.contains("--parallel"));
+        assert!(u.contains("<command>"));
+        assert!(u.contains("[default: xsbench]"));
+    }
+}

@@ -1,0 +1,412 @@
+//! Code-mold instantiation (Step 2 of the framework, Fig. 1).
+//!
+//! ytopt parameterizes an application source into a "code mold": pragma
+//! sites, clauses, and numeric constants become `/*@param@*/` markers that
+//! each evaluation replaces with the selected configuration's values. The
+//! molds below are faithful miniatures of the tuned regions of each proxy
+//! app (the lookup loop of XSBench, SWFFT's pencil exchange, AMG's
+//! relax/matvec kernels, SW4lite's RHS stencil + halo exchange); the
+//! generated source is what the simulated compile step (platform::
+//! compile_time) "builds".
+
+use crate::apps::AppKind;
+use crate::space::{ConfigSpace, Configuration, ParamValue};
+
+/// The plain XSBench mold (Table III row "XSBench": block size + the
+/// parallel-for pragma applied at 4 loop sites).
+const XSBENCH_MOLD: &str = r#"
+// XSBench macroscopic cross-section lookup kernel (code mold)
+unsigned long long run_event_based_simulation(Inputs in, SimulationData SD) {
+    unsigned long long verification = 0;
+    /*@parallel_for_0@*/
+    for (int i = 0; i < in.lookups; i++) {
+        init_particle(SD, i);
+    }
+    #pragma omp parallel for schedule(dynamic, /*@block_size@*/) reduction(+:verification)
+    for (int i = 0; i < in.lookups; i++) {
+        double macro_xs[5];
+        calculate_macro_xs(macro_xs, SD, i);
+        verification += (unsigned long long) (macro_xs[0] * 1e6);
+    }
+    /*@parallel_for_1@*/
+    for (int g = 0; g < SD.n_gridpoints; g++) prefetch_grid_row(SD, g);
+    /*@parallel_for_2@*/
+    for (int i = 0; i < SD.n_nuclides; i++) sort_nuclide_grid(SD, i);
+    /*@parallel_for_3@*/
+    for (int i = 0; i < SD.n_mats; i++) build_material_index(SD, i);
+    return verification;
+}
+"#;
+
+/// The mixed-pragma XSBench mold (§V-A: Clang loop pragmas — full unroll
+/// and 2D tiling — composed with the OpenMP pragmas).
+const XSBENCH_MIXED_MOLD: &str = r#"
+// XSBench mixed Clang-loop + OpenMP pragma kernel (code mold)
+unsigned long long run_event_based_simulation(Inputs in, SimulationData SD) {
+    unsigned long long verification = 0;
+    /*@parallel_for_0@*/
+    for (int i = 0; i < in.lookups; i++) {
+        init_particle(SD, i);
+    }
+    #pragma omp parallel for schedule(dynamic, /*@block_size@*/) reduction(+:verification)
+    for (int i = 0; i < in.lookups; i++) {
+        double macro_xs[5];
+        /*@unroll_full@*/
+        for (int j = 0; j < 5; j++) macro_xs[j] = 0.0;
+        calculate_macro_xs(macro_xs, SD, i);
+        verification += (unsigned long long) (macro_xs[0] * 1e6);
+    }
+    // the 2D grid-walk loop fails to parallelize in OpenMP (paper §V-A);
+    // Clang loop tiling is applied instead
+    #pragma clang loop(g, e) tile sizes(/*@tile_x@*/, /*@tile_y@*/)
+    for (int g = 0; g < SD.n_gridpoints; g++)
+        for (int e = 0; e < SD.n_energy; e++)
+            prefetch_grid_block(SD, g, e);
+    /*@parallel_for_1@*/
+    for (int i = 0; i < SD.n_nuclides; i++) sort_nuclide_grid(SD, i);
+    /*@parallel_for_2@*/
+    for (int i = 0; i < SD.n_mats; i++) build_material_index(SD, i);
+    return verification;
+}
+"#;
+
+const XSBENCH_OFFLOAD_MOLD: &str = r#"
+// XSBench OpenMP-offload event kernel (code mold)
+unsigned long long run_event_based_simulation(Inputs in, SimulationData SD) {
+    unsigned long long verification = 0;
+    #pragma omp target teams distribute parallel for /*@simd@*/ /*@device@*/ /*@sched_chunk@*/ \
+        map(to: SD) reduction(+:verification)
+    for (int i = 0; i < in.lookups; i++) {
+        double macro_xs[5];
+        calculate_macro_xs(macro_xs, SD, i);
+        verification += (unsigned long long) (macro_xs[0] * 1e6);
+    }
+    /*@parallel_for_0@*/
+    for (int i = 0; i < SD.n_nuclides; i++) sort_nuclide_grid(SD, i);
+    /*@parallel_for_1@*/
+    for (int i = 0; i < SD.n_mats; i++) build_material_index(SD, i);
+    return verification;
+}
+"#;
+
+const SWFFT_MOLD: &str = r#"
+// SWFFT pencil redistribution (code mold)
+void redistribute_3_to_2(Dfft &dfft, complex_t *buf, int axis) {
+    /*@mpi_barrier_0@*/
+    MPI_Alltoallv(buf, dfft.scounts, dfft.sdispls, MPI_DOUBLE_COMPLEX,
+                  dfft.rbuf, dfft.rcounts, dfft.rdispls, MPI_DOUBLE_COMPLEX,
+                  dfft.CartComm);
+    fftw_execute(dfft.plan_axis[axis]);
+    /*@mpi_barrier_1@*/
+    MPI_Alltoallv(dfft.rbuf, dfft.rcounts, dfft.rdispls, MPI_DOUBLE_COMPLEX,
+                  buf, dfft.scounts, dfft.sdispls, MPI_DOUBLE_COMPLEX,
+                  dfft.CartComm);
+}
+"#;
+
+const AMG_MOLD: &str = r#"
+// AMG relax / matvec kernels (code mold)
+int hypre_BoomerAMGRelax(hypre_ParCSRMatrix *A, hypre_ParVector *f, hypre_ParVector *u) {
+    /*@parallel_for_0@*/
+    for (int i = 0; i < n_rows; i++) {
+        double res = f_data[i];
+        /*@unroll3_0@*/
+        for (int jj = A_i[i]; jj < A_i[i+1]; jj++) res -= A_data[jj] * u_data[A_j[jj]];
+        u_data[i] += w * res / A_diag[i];
+    }
+    /*@parallel_for_1@*/
+    for (int i = 0; i < n_rows; i++) {
+        /*@unroll6_0@*/
+        for (int jj = 0; jj < stencil; jj++) y[i] += coef[jj] * x[i + off[jj]];
+    }
+    /*@parallel_for_2@*/
+    for (int i = 0; i < n_coarse; i++) {
+        /*@unroll3_1@*/
+        for (int jj = P_i[i]; jj < P_i[i+1]; jj++) c[i] += P_data[jj] * fine[P_j[jj]];
+    }
+    /*@parallel_for_3@*/
+    for (int i = 0; i < n_rows; i++) {
+        /*@unroll6_1@*/
+        for (int jj = 0; jj < nnz_row; jj++) norm += A_data[i*nnz_row+jj] * A_data[i*nnz_row+jj];
+    }
+    /*@parallel_for_4@*/
+    for (int i = 0; i < n_rows; i++) {
+        /*@unroll3_2@*/
+        for (int d = 0; d < 3; d++) grid[i].x[d] = grid[i].x[d] * scale[d];
+        /*@unroll6_2@*/
+        for (int jj = 0; jj < 6; jj++) flux[i] += face[jj];
+    }
+    return 0;
+}
+"#;
+
+const SW4LITE_MOLD: &str = r#"
+// SW4lite RHS stencil + timestep loop (code mold)
+void rhs4_and_step(Sarray &u, Sarray &lu, float_sw4 *cof, MPI_Comm comm) {
+    #pragma omp parallel
+    {
+        /*@for_nowait_0@*/
+        for (int k = kfirst; k <= klast; k++)
+        /*@for_nowait_1@*/
+        for (int j = jfirst; j <= jlast; j++) {
+            /*@unroll6_0@*/
+            for (int i = ifirst; i <= ilast; i++)
+                lu(1,i,j,k) = cof[0]*u(1,i-2,j,k) + cof[1]*u(1,i-1,j,k)
+                            + cof[2]*u(1,i,j,k) + cof[3]*u(1,i+1,j,k) + cof[4]*u(1,i+2,j,k);
+        }
+        /*@for_nowait_2@*/
+        for (int k = kfirst; k <= klast; k++) {
+            /*@unroll6_1@*/
+            for (int i = ifirst; i <= ilast; i++) predictor(i, k);
+        }
+        /*@for_nowait_3@*/
+        for (int k = kfirst; k <= klast; k++) {
+            /*@unroll6_2@*/
+            for (int i = ifirst; i <= ilast; i++) corrector(i, k);
+        }
+    }
+    /*@parallel_for_0@*/
+    for (int s = 0; s < n_sources; s++) apply_source(s);
+    /*@parallel_for_1@*/
+    for (int b = 0; b < n_blocks; b++) material_block(b);
+    /*@parallel_for_2@*/
+    for (int g = 0; g < n_grids; g++) supergrid_damping(g);
+    /*@parallel_for_3@*/
+    for (int p = 0; p < n_points; p++) record_receiver(p);
+    /*@parallel_for_4@*/
+    for (int f = 0; f < n_faces; f++) free_surface_bc(f);
+    communicate_array(u, comm);
+    /*@mpi_barrier_0@*/
+}
+"#;
+
+/// The raw mold for an application.
+pub fn mold_for(app: AppKind) -> &'static str {
+    match app {
+        AppKind::XSBenchHistory | AppKind::XSBenchEvent => XSBENCH_MOLD,
+        AppKind::XSBenchMixed => XSBENCH_MIXED_MOLD,
+        AppKind::XSBenchOffload => XSBENCH_OFFLOAD_MOLD,
+        AppKind::Swfft => SWFFT_MOLD,
+        AppKind::Amg => AMG_MOLD,
+        AppKind::Sw4lite => SW4LITE_MOLD,
+    }
+}
+
+/// Text substituted for one parameter marker.
+fn param_text(name: &str, value: &ParamValue) -> String {
+    let on = matches!(value, ParamValue::Int(1));
+    if let Some(rest) = name.strip_prefix("parallel_for_") {
+        let _ = rest;
+        return if on { "#pragma omp parallel for".into() } else { String::new() };
+    }
+    if name.starts_with("for_nowait_") {
+        return if on { "#pragma omp for nowait".into() } else { "#pragma omp for".into() };
+    }
+    if name.starts_with("unroll3_") {
+        return if on { "#pragma unroll(3)".into() } else { String::new() };
+    }
+    if name.starts_with("unroll6_") {
+        return if on { "#pragma unroll(6)".into() } else { String::new() };
+    }
+    if name.starts_with("mpi_barrier_") {
+        return if on { "MPI_Barrier(MPI_COMM_WORLD);".into() } else { String::new() };
+    }
+    match name {
+        "unroll_full" => {
+            if on {
+                "#pragma clang loop unroll(full)".into()
+            } else {
+                String::new()
+            }
+        }
+        "simd" => {
+            if on {
+                "simd".into()
+            } else {
+                String::new()
+            }
+        }
+        "device" => match value {
+            ParamValue::Int(d) if *d >= 0 => format!("device({d})"),
+            _ => String::new(),
+        },
+        "sched_chunk" => match value {
+            ParamValue::Int(c) if *c > 0 => format!("schedule(static,{c})"),
+            _ => String::new(),
+        },
+        // numeric constants substitute verbatim
+        _ => value.to_string(),
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CodegenError {
+    #[error("mold references parameter `{0}` missing from the space")]
+    UnknownParam(String),
+    #[error("unterminated marker at byte {0}")]
+    Unterminated(usize),
+}
+
+/// Instantiate the mold for `app` with `cfg` (Step 2). The result is the
+/// "new code" handed to the compile step; every marker must resolve.
+pub fn instantiate(
+    app: AppKind,
+    space: &ConfigSpace,
+    cfg: &Configuration,
+) -> Result<String, CodegenError> {
+    let mold = mold_for(app);
+    let mut out = String::with_capacity(mold.len());
+    let mut rest = mold;
+    while let Some(start) = rest.find("/*@") {
+        out.push_str(&rest[..start]);
+        let after = &rest[start + 3..];
+        let end = after
+            .find("@*/")
+            .ok_or(CodegenError::Unterminated(mold.len() - rest.len() + start))?;
+        let name = &after[..end];
+        let value = space
+            .value(cfg, name)
+            .ok_or_else(|| CodegenError::UnknownParam(name.to_string()))?;
+        out.push_str(&param_text(name, &value));
+        rest = &after[end + 3..];
+    }
+    out.push_str(rest);
+    Ok(out)
+}
+
+/// Verify an instantiated source: no markers left, balanced braces.
+pub fn verify(source: &str) -> bool {
+    !source.contains("/*@")
+        && !source.contains("@*/")
+        && source.matches('{').count() == source.matches('}').count()
+}
+
+/// Shell environment prefix (Step 3 pairs this with the launch line).
+pub fn env_prefix(space: &ConfigSpace, cfg: &Configuration) -> String {
+    let mut parts = Vec::new();
+    for p in space.params() {
+        if p.name.starts_with("OMP_") {
+            parts.push(format!("{}={}", p.name, space.value(cfg, &p.name).unwrap()));
+        }
+    }
+    parts.join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformKind;
+    use crate::space::paper::build_space;
+    use crate::util::Pcg32;
+
+    const ALL: [AppKind; 7] = [
+        AppKind::XSBenchHistory,
+        AppKind::XSBenchEvent,
+        AppKind::XSBenchMixed,
+        AppKind::XSBenchOffload,
+        AppKind::Swfft,
+        AppKind::Amg,
+        AppKind::Sw4lite,
+    ];
+
+    #[test]
+    fn mixed_space_resolves_every_marker() {
+        let space = build_space(AppKind::XSBenchMixed, PlatformKind::Theta);
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..20 {
+            let cfg = space.sample(&mut rng);
+            let src = instantiate(AppKind::XSBenchMixed, &space, &cfg).unwrap();
+            assert!(verify(&src), "unresolved markers:\n{src}");
+        }
+    }
+
+    #[test]
+    fn all_non_xsbench_cpu_apps_resolve() {
+        let mut rng = Pcg32::seeded(2);
+        for app in [AppKind::XSBenchOffload, AppKind::Swfft, AppKind::Amg, AppKind::Sw4lite] {
+            let platform =
+                if app == AppKind::XSBenchOffload { PlatformKind::Summit } else { PlatformKind::Theta };
+            let space = build_space(app, platform);
+            for _ in 0..10 {
+                let cfg = space.sample(&mut rng);
+                let src = instantiate(app, &space, &cfg).unwrap();
+                assert!(verify(&src), "{app:?} left markers:\n{src}");
+            }
+        }
+    }
+
+    #[test]
+    fn plain_xsbench_space_resolves_its_own_mold() {
+        let space = build_space(AppKind::XSBenchHistory, PlatformKind::Theta);
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..10 {
+            let cfg = space.sample(&mut rng);
+            let src = instantiate(AppKind::XSBenchHistory, &space, &cfg).unwrap();
+            assert!(verify(&src));
+        }
+    }
+
+    #[test]
+    fn mismatched_space_and_mold_is_reported() {
+        // the mixed mold needs tile_x, absent from the plain space
+        let space = build_space(AppKind::XSBenchHistory, PlatformKind::Theta);
+        let mut rng = Pcg32::seeded(6);
+        let cfg = space.sample(&mut rng);
+        match instantiate(AppKind::XSBenchMixed, &space, &cfg) {
+            Err(CodegenError::UnknownParam(p)) => {
+                assert!(p == "unroll_full" || p.starts_with("tile_"), "{p}")
+            }
+            other => panic!("expected UnknownParam, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn toggles_control_pragma_presence() {
+        let space = build_space(AppKind::Amg, PlatformKind::Theta);
+        let mut on = vec![0u32; space.dim()];
+        for (i, p) in space.params().iter().enumerate() {
+            if p.name.starts_with("parallel_for") || p.name.starts_with("unroll") {
+                on[i] = 1;
+            }
+        }
+        let all_on = instantiate(AppKind::Amg, &space, &Configuration::from_indices(on)).unwrap();
+        assert_eq!(all_on.matches("#pragma omp parallel for").count(), 5);
+        assert_eq!(all_on.matches("#pragma unroll(3)").count(), 3);
+        assert_eq!(all_on.matches("#pragma unroll(6)").count(), 3);
+
+        let off = Configuration::from_indices(vec![0u32; space.dim()]);
+        let all_off = instantiate(AppKind::Amg, &space, &off).unwrap();
+        assert_eq!(all_off.matches("#pragma omp parallel for").count(), 0);
+        assert_eq!(all_off.matches("#pragma unroll").count(), 0);
+    }
+
+    #[test]
+    fn numeric_params_substitute_values() {
+        let space = build_space(AppKind::XSBenchMixed, PlatformKind::Theta);
+        let mut rng = Pcg32::seeded(4);
+        let cfg = space.sample(&mut rng);
+        let src = instantiate(AppKind::XSBenchMixed, &space, &cfg).unwrap();
+        let block = space.int_value(&cfg, "block_size");
+        assert!(src.contains(&format!("schedule(dynamic, {block})")));
+    }
+
+    #[test]
+    fn env_prefix_lists_omp_vars() {
+        let space = build_space(AppKind::Swfft, PlatformKind::Theta);
+        let mut rng = Pcg32::seeded(5);
+        let cfg = space.sample(&mut rng);
+        let env = env_prefix(&space, &cfg);
+        for v in ["OMP_NUM_THREADS=", "OMP_PLACES=", "OMP_PROC_BIND=", "OMP_SCHEDULE="] {
+            assert!(env.contains(v), "missing {v} in {env}");
+        }
+    }
+
+    #[test]
+    fn molds_exist_for_all_apps() {
+        for app in ALL {
+            assert!(!mold_for(app).is_empty());
+        }
+    }
+
+    use crate::space::Configuration;
+}

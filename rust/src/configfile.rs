@@ -1,0 +1,251 @@
+//! TOML-subset experiment-configuration parser (no serde/toml offline).
+//!
+//! Supports the subset the launcher needs: `[section]` headers, `key =
+//! value` with string/int/float/bool/array-of-scalar values, `#` comments.
+//! Used by `ytopt-rs tune --config <file>` and the examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config document: `section.key -> value`; keys before any
+/// section header live in the "" (root) section.
+#[derive(Debug, Default, Clone)]
+pub struct ConfigDoc {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<ConfigDoc, ConfigError> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ConfigError { line: ln + 1, msg: msg.to_string() };
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                doc.sections.entry(section.clone()).or_default();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim().to_string();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+                doc.sections.entry(section.clone()).or_default().insert(key, value);
+            } else {
+                return Err(err("expected `key = value` or `[section]`"));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ConfigDoc> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a double-quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+/// Split a flat array body on commas (strings may contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# experiment config
+title = "xsbench large scale"
+
+[tune]
+app = "xsbench"          # which proxy app
+platform = "Theta"
+nodes = 4096
+max_evals = 128
+wallclock_s = 1800.0
+parallel = false
+seeds = [1, 2, 3]
+"#;
+
+    #[test]
+    fn parses_typed_values() {
+        let doc = ConfigDoc::parse(DOC).unwrap();
+        assert_eq!(doc.str_or("", "title", ""), "xsbench large scale");
+        assert_eq!(doc.str_or("tune", "app", ""), "xsbench");
+        assert_eq!(doc.int_or("tune", "nodes", 0), 4096);
+        assert!((doc.float_or("tune", "wallclock_s", 0.0) - 1800.0).abs() < 1e-12);
+        assert!(!doc.bool_or("tune", "parallel", true));
+        match doc.get("tune", "seeds") {
+            Some(Value::Array(a)) => assert_eq!(a.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = ConfigDoc::parse(DOC).unwrap();
+        assert_eq!(doc.int_or("tune", "missing", 7), 7);
+        assert_eq!(doc.str_or("nope", "x", "d"), "d");
+    }
+
+    #[test]
+    fn comments_and_strings_interact() {
+        let doc = ConfigDoc::parse(r##"k = "a # not comment" # real comment"##).unwrap();
+        assert_eq!(doc.str_or("", "k", ""), "a # not comment");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ConfigDoc::parse("[unterminated").is_err());
+        assert!(ConfigDoc::parse("novalue").is_err());
+        assert!(ConfigDoc::parse("k = ").is_err());
+        assert!(ConfigDoc::parse("k = \"open").is_err());
+        assert!(ConfigDoc::parse("= v").is_err());
+    }
+
+    #[test]
+    fn float_and_int_distinction() {
+        let doc = ConfigDoc::parse("a = 2\nb = 2.5").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Int(2)));
+        assert_eq!(doc.get("", "b"), Some(&Value::Float(2.5)));
+        // ints coerce to float on request
+        assert_eq!(doc.float_or("", "a", 0.0), 2.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! The performance database (paper Fig. 1/4, Step 5): every evaluated
+//! configuration with its metrics, timing breakdown, and launch command.
+
+use crate::metrics::{Measured, Metric};
+use crate::util::Json;
+
+/// One evaluation's record.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub id: usize,
+    /// Configuration key (value indices) and human-readable description.
+    pub config_key: String,
+    pub config_desc: String,
+    /// The generated aprun/jsrun (possibly geopmlaunch-wrapped) line.
+    pub command: String,
+    pub measured: Measured,
+    /// The scalar objective minimized in this run.
+    pub objective: f64,
+    /// Timing breakdown (ytopt definitions; see coordinator::overhead).
+    pub compile_s: f64,
+    pub processing_s: f64,
+    pub overhead_s: f64,
+    /// Simulated wall-clock time at which this evaluation finished.
+    pub wallclock_s: f64,
+    /// Best objective seen up to and including this evaluation.
+    pub best_so_far: f64,
+    /// Evaluation hit the timeout (extension feature, §VIII).
+    pub timed_out: bool,
+}
+
+/// Append-only store of evaluations for one autotuning run.
+#[derive(Debug, Clone, Default)]
+pub struct PerfDatabase {
+    pub records: Vec<EvalRecord>,
+}
+
+impl PerfDatabase {
+    pub fn new() -> Self {
+        PerfDatabase { records: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: EvalRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Best (lowest-objective) record, ignoring timed-out evaluations.
+    pub fn best(&self) -> Option<&EvalRecord> {
+        self.records
+            .iter()
+            .filter(|r| !r.timed_out && r.objective.is_finite())
+            .min_by(|a, b| a.objective.partial_cmp(&b.objective).unwrap())
+    }
+
+    /// Maximum per-evaluation overhead (Table IV row entries).
+    pub fn max_overhead_s(&self) -> f64 {
+        self.records.iter().map(|r| r.overhead_s).fold(0.0, f64::max)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "id,objective,runtime_s,energy_j,edp_js,compile_s,processing_s,overhead_s,wallclock_s,best_so_far,timed_out,config\n",
+        );
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{},{},{:.3},{:.3},{:.3},{:.3},{:.6},{},\"{}\"\n",
+                r.id,
+                r.objective,
+                r.measured.runtime_s,
+                r.measured.avg_node_energy_j.map(|e| format!("{e:.3}")).unwrap_or_default(),
+                r.measured.edp_js.map(|e| format!("{e:.3}")).unwrap_or_default(),
+                r.compile_s,
+                r.processing_s,
+                r.overhead_s,
+                r.wallclock_s,
+                r.best_so_far,
+                r.timed_out,
+                r.config_desc.replace('"', "'"),
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self, metric: Metric) -> Json {
+        Json::obj(vec![
+            ("metric", metric.name().into()),
+            (
+                "records",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", r.id.into()),
+                                ("objective", r.objective.into()),
+                                ("runtime_s", r.measured.runtime_s.into()),
+                                (
+                                    "energy_j",
+                                    r.measured
+                                        .avg_node_energy_j
+                                        .map(Json::from)
+                                        .unwrap_or(Json::Null),
+                                ),
+                                ("overhead_s", r.overhead_s.into()),
+                                ("wallclock_s", r.wallclock_s.into()),
+                                ("best_so_far", r.best_so_far.into()),
+                                ("timed_out", r.timed_out.into()),
+                                ("config", r.config_desc.as_str().into()),
+                                ("command", r.command.as_str().into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, objective: f64, overhead: f64, timed_out: bool) -> EvalRecord {
+        EvalRecord {
+            id,
+            config_key: format!("k{id}"),
+            config_desc: format!("threads={id}"),
+            command: "aprun ...".into(),
+            measured: Measured::runtime_only(objective),
+            objective,
+            compile_s: 2.0,
+            processing_s: 50.0,
+            overhead_s: overhead,
+            wallclock_s: id as f64 * 60.0,
+            best_so_far: objective,
+            timed_out,
+        }
+    }
+
+    #[test]
+    fn best_ignores_timeouts() {
+        let mut db = PerfDatabase::new();
+        db.push(rec(0, 5.0, 40.0, false));
+        db.push(rec(1, 1.0, 45.0, true)); // timed out: excluded
+        db.push(rec(2, 3.0, 42.0, false));
+        assert_eq!(db.best().unwrap().id, 2);
+        assert_eq!(db.max_overhead_s(), 45.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut db = PerfDatabase::new();
+        db.push(rec(0, 5.0, 40.0, false));
+        let csv = db.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("id,objective"));
+        assert!(csv.contains("threads=0"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let mut db = PerfDatabase::new();
+        db.push(rec(0, 5.0, 40.0, false));
+        db.push(rec(1, 4.0, 41.0, false));
+        let j = db.to_json(Metric::Runtime).to_string();
+        let v = crate::util::Json::parse(&j).unwrap();
+        assert_eq!(v.get("records").and_then(|r| r.as_arr()).map(|a| a.len()), Some(2));
+    }
+}

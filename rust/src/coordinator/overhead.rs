@@ -1,0 +1,162 @@
+//! ytopt processing-time / overhead accounting (paper §IV-A definition,
+//! Table IV calibration).
+//!
+//! * **ytopt processing time** = parameter-space search + surrogate fit +
+//!   code generation + launch-line generation + compile + application
+//!   launch + database record (everything except the application run).
+//! * **ytopt overhead** = processing time − compile time.
+//!
+//! Per-evaluation orchestration cost (Ray task setup, python interpreter
+//! + file staging on the login node) is the dominant term the paper
+//! observes (tens of seconds even though compiles take ~2 s); the first
+//! evaluation additionally pays environment setup (conda; plus the nvhpc
+//! module for the offload build). Constants are calibrated so the maxima
+//! land on Table IV.
+
+use crate::apps::AppKind;
+use crate::platform::PlatformKind;
+use crate::util::Pcg32;
+
+/// Mean per-evaluation orchestration seconds (excluding launch/compile).
+pub fn orchestration_s(app: AppKind, platform: PlatformKind, nodes: u64) -> f64 {
+    use AppKind::*;
+    use PlatformKind::*;
+    match (app, platform) {
+        (XSBenchMixed, Theta) => 44.0,
+        (XSBenchHistory | XSBenchEvent, Theta) => 30.0,
+        (XSBenchOffload, Theta) => 30.0,
+        (Swfft, Theta) => 2.0,
+        (Amg, Theta) => 6.0,
+        (Sw4lite, Theta) => 16.0,
+        // offload orchestration swells at scale (jsrun + GPU plumbing)
+        (XSBenchOffload, Summit) => {
+            if nodes >= 64 {
+                40.0
+            } else {
+                10.0
+            }
+        }
+        (XSBenchHistory | XSBenchEvent | XSBenchMixed, Summit) => 12.0,
+        (Swfft, Summit) => 3.0,
+        (Amg, Summit) => 2.0,
+        (Sw4lite, Summit) => 5.0,
+    }
+}
+
+/// Orchestration jitter half-width (seconds).
+pub fn orchestration_jitter_s(app: AppKind, platform: PlatformKind) -> f64 {
+    match (app, platform) {
+        (AppKind::XSBenchMixed, PlatformKind::Theta) => 5.0,
+        (AppKind::Swfft, PlatformKind::Theta) => 1.5,
+        (AppKind::Amg, PlatformKind::Theta) => 3.0,
+        (_, PlatformKind::Theta) => 4.0,
+        (AppKind::XSBenchOffload, PlatformKind::Summit) => 3.0,
+        (_, PlatformKind::Summit) => 2.0,
+    }
+}
+
+/// One-time first-evaluation environment setup (conda env; nvhpc module
+/// for the at-scale offload runs — paper Fig 5d / Fig 8b).
+pub fn first_eval_setup_s(app: AppKind, platform: PlatformKind, nodes: u64) -> f64 {
+    match (app, platform) {
+        (AppKind::XSBenchOffload, PlatformKind::Summit) => {
+            if nodes >= 64 {
+                45.0
+            } else {
+                4.0
+            }
+        }
+        (_, PlatformKind::Summit) => 22.0,
+        (_, PlatformKind::Theta) => 8.0,
+    }
+}
+
+/// One evaluation's orchestration sample.
+pub fn sample_orchestration_s(
+    app: AppKind,
+    platform: PlatformKind,
+    nodes: u64,
+    rng: &mut Pcg32,
+) -> f64 {
+    let mean = orchestration_s(app, platform, nodes);
+    let jitter = orchestration_jitter_s(app, platform);
+    (mean + jitter * (2.0 * rng.f64() - 1.0)).max(0.5)
+}
+
+/// Table IV: expected maximum ytopt overhead (s) per app and system.
+pub fn table4_max_overhead_s(app: AppKind, platform: PlatformKind) -> f64 {
+    use AppKind::*;
+    use PlatformKind::*;
+    match (app, platform) {
+        (XSBenchMixed, Theta) => 70.0,
+        (XSBenchHistory | XSBenchEvent, Theta) => 69.0,
+        (XSBenchOffload, Theta) => 69.0,
+        (Swfft, Theta) => 30.0,
+        (Amg, Theta) => 34.0,
+        (Sw4lite, Theta) => 46.0,
+        (XSBenchMixed, Summit) => 24.0, // Fig 6b (offload, single node)
+        (XSBenchHistory | XSBenchEvent | XSBenchOffload, Summit) => 111.0, // Fig 8b
+        (Swfft, Summit) => 50.0,
+        (Amg, Summit) => 45.0,
+        (Sw4lite, Summit) => 46.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::launch::launch_overhead_s;
+
+    /// The calibrated components must keep the per-evaluation overhead
+    /// under the Table IV maxima at the scales the paper ran.
+    #[test]
+    fn calibration_respects_table4_maxima() {
+        let cases: [(AppKind, PlatformKind, u64); 9] = [
+            (AppKind::XSBenchMixed, PlatformKind::Theta, 1),
+            (AppKind::XSBenchEvent, PlatformKind::Theta, 4096),
+            (AppKind::Swfft, PlatformKind::Theta, 4096),
+            (AppKind::Amg, PlatformKind::Theta, 4096),
+            (AppKind::Sw4lite, PlatformKind::Theta, 1024),
+            (AppKind::XSBenchOffload, PlatformKind::Summit, 4096),
+            (AppKind::Swfft, PlatformKind::Summit, 4096),
+            (AppKind::Amg, PlatformKind::Summit, 4096),
+            (AppKind::Sw4lite, PlatformKind::Summit, 1024),
+        ];
+        for (app, pf, nodes) in cases {
+            let worst = orchestration_s(app, pf, nodes)
+                + orchestration_jitter_s(app, pf)
+                + launch_overhead_s(pf, nodes)
+                + first_eval_setup_s(app, pf, nodes)
+                + 1.5; // search + codegen + record slack
+            let cap = table4_max_overhead_s(app, pf);
+            assert!(worst <= cap + 0.5, "{app:?}@{pf:?}/{nodes}: worst {worst:.1} > cap {cap}");
+        }
+        // Fig 6b: offload on ONE Summit node stays under 24 s
+        let worst = orchestration_s(AppKind::XSBenchOffload, PlatformKind::Summit, 1)
+            + orchestration_jitter_s(AppKind::XSBenchOffload, PlatformKind::Summit)
+            + launch_overhead_s(PlatformKind::Summit, 1)
+            + first_eval_setup_s(AppKind::XSBenchOffload, PlatformKind::Summit, 1)
+            + 1.5;
+        assert!(worst <= 24.5, "single-node offload worst {worst:.1}");
+    }
+
+    #[test]
+    fn overhead_scales_weakly_with_nodes() {
+        // the paper's "low overhead and good scalability" claim: going
+        // 1 -> 4096 nodes must not blow up the overhead
+        for pf in [PlatformKind::Theta, PlatformKind::Summit] {
+            let small = launch_overhead_s(pf, 1);
+            let large = launch_overhead_s(pf, 4096);
+            assert!(large - small < 15.0, "{pf:?}: {small} -> {large}");
+        }
+    }
+
+    #[test]
+    fn sampling_stays_in_band() {
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..200 {
+            let s = sample_orchestration_s(AppKind::Amg, PlatformKind::Theta, 4096, &mut rng);
+            assert!((2.5..=9.5).contains(&s), "{s}");
+        }
+    }
+}

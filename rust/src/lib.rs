@@ -1,0 +1,29 @@
+//! ytopt-rs: reproduction of "ytopt: Autotuning Scientific Applications
+//! for Energy Efficiency at Large Scales" (Wu et al., 2023) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! Layer 3 (this crate) is the coordinator: search-space expression,
+//! Bayesian-optimization search with a Random-Forest surrogate, the
+//! five-step evaluation pipeline, and the simulated substrate (platforms,
+//! ECP proxy applications, GEOPM power stack). Layers 2/1 are the
+//! AOT-compiled JAX/Pallas artifacts in `artifacts/` executed through the
+//! PJRT runtime in [`runtime`]; Python never runs on the tuning path.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod acquisition;
+pub mod apps;
+pub mod bench_support;
+pub mod cliargs;
+pub mod codegen;
+pub mod coordinator;
+pub mod search;
+pub mod configfile;
+pub mod metrics;
+pub mod platform;
+pub mod power;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod space;
+pub mod surrogate;
+pub mod util;

@@ -1,0 +1,203 @@
+//! ytopt-rs CLI — the framework launcher.
+//!
+//! ```text
+//! ytopt-rs tune   --app amg --platform summit --nodes 4096 [--metric runtime]
+//! ytopt-rs tune   --config configs/sw4lite_theta.toml
+//! ytopt-rs spaces                 # Table III parameter spaces
+//! ytopt-rs platforms              # Table I system specs
+//! ```
+
+use std::sync::Arc;
+
+use ytopt::apps::AppKind;
+use ytopt::cliargs::{Args, CliError, CliSpec};
+use ytopt::configfile::ConfigDoc;
+use ytopt::coordinator::{autotune_with_scorer, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+use ytopt::search::{StrategyKind, SurrogateKind};
+use ytopt::space::paper;
+use ytopt::util::Table;
+
+const ALL_APPS: [AppKind; 7] = [
+    AppKind::XSBenchHistory,
+    AppKind::XSBenchEvent,
+    AppKind::XSBenchMixed,
+    AppKind::XSBenchOffload,
+    AppKind::Swfft,
+    AppKind::Amg,
+    AppKind::Sw4lite,
+];
+
+fn spec() -> CliSpec {
+    CliSpec::new("ytopt-rs", "autotuning framework (paper reproduction)")
+        .positional("command", "tune | spaces | platforms")
+        .opt("config", None, "TOML config file (section [tune])")
+        .opt("app", Some("xsbench"), "application to tune")
+        .opt("platform", Some("theta"), "theta | summit")
+        .opt("nodes", Some("1"), "node count")
+        .opt("metric", Some("runtime"), "runtime | energy | edp")
+        .opt("evals", Some("64"), "max evaluations")
+        .opt("budget", Some("1800"), "wall-clock budget (s)")
+        .opt("seed", Some("42"), "RNG seed")
+        .opt("strategy", Some("bo"), "bo | random | grid | mctree")
+        .opt("surrogate", Some("rf"), "rf | et | gbrt")
+        .opt("kappa", Some("1.96"), "LCB exploration parameter")
+        .opt("timeout", None, "evaluation timeout (s)")
+        .opt("parallel", Some("1"), "concurrent evaluations")
+        .opt("out", None, "write the performance database CSV here")
+        .flag("trace", "print the per-evaluation trace")
+}
+
+fn parse_platform(s: &str) -> anyhow::Result<PlatformKind> {
+    match s.to_ascii_lowercase().as_str() {
+        "theta" => Ok(PlatformKind::Theta),
+        "summit" => Ok(PlatformKind::Summit),
+        other => anyhow::bail!("unknown platform `{other}`"),
+    }
+}
+
+fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
+    // config file first, CLI overrides
+    let mut app = args.get_or("app", "xsbench").to_string();
+    let mut platform = args.get_or("platform", "theta").to_string();
+    let mut nodes = args.int("nodes").unwrap_or(1);
+    let mut metric = args.get_or("metric", "runtime").to_string();
+    let mut evals = args.int("evals").unwrap_or(64);
+    let mut budget = args.float("budget").unwrap_or(1800.0);
+    let mut seed = args.int("seed").unwrap_or(42);
+    if let Some(path) = args.get("config") {
+        let doc = ConfigDoc::load(std::path::Path::new(path))?;
+        app = doc.str_or("tune", "app", &app).to_string();
+        platform = doc.str_or("tune", "platform", &platform).to_string();
+        nodes = doc.int_or("tune", "nodes", nodes);
+        metric = doc.str_or("tune", "metric", &metric).to_string();
+        evals = doc.int_or("tune", "max_evals", evals);
+        budget = doc.float_or("tune", "wallclock_s", budget);
+        seed = doc.int_or("tune", "seed", seed);
+    }
+    let app = AppKind::parse(&app).ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?;
+    let platform = parse_platform(&platform)?;
+    let metric =
+        Metric::parse(&metric).ok_or_else(|| anyhow::anyhow!("unknown metric `{metric}`"))?;
+    let mut setup = TuneSetup::new(app, platform, nodes as u64, metric);
+    setup.max_evals = evals as usize;
+    setup.wallclock_budget_s = budget;
+    setup.seed = seed as u64;
+    setup.strategy = StrategyKind::parse(args.get_or("strategy", "bo"))
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy"))?;
+    setup.surrogate = SurrogateKind::parse(args.get_or("surrogate", "rf"))
+        .ok_or_else(|| anyhow::anyhow!("unknown surrogate"))?;
+    setup.kappa = args.float("kappa").unwrap_or(1.96);
+    setup.eval_timeout_s = args.float("timeout");
+    setup.parallel_evals = args.int("parallel").unwrap_or(1) as usize;
+    Ok(setup)
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let setup = setup_from_args(args)?;
+    let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
+    let result = autotune_with_scorer(&setup, scorer)?;
+    println!("{}", result.summary());
+    if args.has_flag("trace") {
+        println!("{}", result.trace());
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, result.db.to_csv())?;
+        println!("performance database written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_spaces() {
+    let mut t = Table::new(
+        "Table III: parameter space for each application",
+        &["ECP proxy app", "system param.", "application param.", "space size"],
+    );
+    for app in ALL_APPS {
+        if matches!(app, AppKind::XSBenchHistory) {
+            // one row for XSBench like the paper
+        }
+        let platform = if app.uses_gpus() { PlatformKind::Summit } else { PlatformKind::Theta };
+        let space = paper::build_space(app, platform);
+        let env = space.params().iter().filter(|p| p.name.starts_with("OMP_")).count();
+        let app_params = space.dim() - env;
+        t.row(&[
+            app.name().to_string(),
+            format!("{env} env. variables"),
+            format!("{app_params}"),
+            format!("{}", space.size()),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn cmd_platforms() {
+    let mut t = Table::new(
+        "Table I: system platform specifications and tools",
+        &["field", "Cray XC40 Theta", "IBM Power9 Summit"],
+    );
+    let a = PlatformKind::Theta.spec();
+    let b = PlatformKind::Summit.spec();
+    let rows: Vec<(&str, String, String)> = vec![
+        ("Location", a.location.into(), b.location.into()),
+        ("Architecture", a.architecture.into(), b.architecture.into()),
+        ("Number of nodes", a.nodes.to_string(), b.nodes.to_string()),
+        ("CPU cores per node", a.cpu_cores_per_node.to_string(), b.cpu_cores_per_node.to_string()),
+        ("CPU type and speed", a.cpu_type.into(), b.cpu_type.into()),
+        ("GPUs per node", a.gpus_per_node.to_string(), b.gpus_per_node.to_string()),
+        ("Threads per core", a.threads_per_core.to_string(), b.threads_per_core.to_string()),
+        ("Memory per node", a.memory_per_node.into(), b.memory_per_node.into()),
+        ("Network", a.network.into(), b.network.into()),
+        ("Power tools", a.power_tools.into(), b.power_tools.into()),
+        (
+            "TDP per socket",
+            format!("{}W", a.tdp_per_socket_w),
+            format!("{}W/Power9; {}W/GPU", b.tdp_per_socket_w, b.gpu_tdp_w),
+        ),
+        ("File system", a.file_system.into(), b.file_system.into()),
+    ];
+    for (f, x, y) in rows {
+        t.row(&[f.to_string(), x, y]);
+    }
+    println!("{}", t.render());
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = spec();
+    let args = match spec.parse(&argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            println!("{}", spec.usage());
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", spec.usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match args.positional(0).unwrap_or("help") {
+        "tune" => cmd_tune(&args),
+        "spaces" => {
+            cmd_spaces();
+            Ok(())
+        }
+        "platforms" => {
+            cmd_platforms();
+            Ok(())
+        }
+        other => {
+            if other != "help" {
+                eprintln!("unknown command `{other}`\n");
+            }
+            println!("{}", spec.usage());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

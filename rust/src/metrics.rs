@@ -1,0 +1,119 @@
+//! Tuning objectives: runtime, average node energy, EDP (paper §IV/§VII).
+
+/// The metric the autotuner minimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Application runtime in seconds — the primary performance metric.
+    Runtime,
+    /// Average node energy in joules (runtime x power tradeoff).
+    Energy,
+    /// Energy-delay product in joule-seconds (runtime x energy tradeoff).
+    Edp,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Runtime => "runtime",
+            Metric::Energy => "energy",
+            Metric::Edp => "EDP",
+        }
+    }
+
+    pub fn unit(&self) -> &'static str {
+        match self {
+            Metric::Runtime => "s",
+            Metric::Energy => "J",
+            Metric::Edp => "J*s",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s.to_ascii_lowercase().as_str() {
+            "runtime" | "perf" | "performance" => Some(Metric::Runtime),
+            "energy" => Some(Metric::Energy),
+            "edp" => Some(Metric::Edp),
+            _ => None,
+        }
+    }
+
+    /// Whether measuring this metric requires the GEOPM pipeline.
+    pub fn needs_power(&self) -> bool {
+        !matches!(self, Metric::Runtime)
+    }
+}
+
+/// One evaluated objective bundle (all three metrics of a run, so the
+/// database can report tradeoffs regardless of which one was tuned).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measured {
+    pub runtime_s: f64,
+    pub avg_node_energy_j: Option<f64>,
+    pub edp_js: Option<f64>,
+}
+
+impl Measured {
+    pub fn runtime_only(runtime_s: f64) -> Measured {
+        Measured { runtime_s, avg_node_energy_j: None, edp_js: None }
+    }
+
+    pub fn with_energy(runtime_s: f64, energy_j: f64) -> Measured {
+        Measured {
+            runtime_s,
+            avg_node_energy_j: Some(energy_j),
+            edp_js: Some(energy_j * runtime_s),
+        }
+    }
+
+    /// The scalar the search minimizes for `metric`.
+    pub fn objective(&self, metric: Metric) -> f64 {
+        match metric {
+            Metric::Runtime => self.runtime_s,
+            Metric::Energy => self.avg_node_energy_j.unwrap_or(f64::INFINITY),
+            Metric::Edp => self.edp_js.unwrap_or(f64::INFINITY),
+        }
+    }
+}
+
+/// Percent improvement of `best` over `baseline` (paper Tables IV/V).
+pub fn improvement_pct(baseline: f64, best: f64) -> f64 {
+    if baseline <= 0.0 {
+        return 0.0;
+    }
+    100.0 * (baseline - best) / baseline
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(Metric::parse("runtime"), Some(Metric::Runtime));
+        assert_eq!(Metric::parse("EDP"), Some(Metric::Edp));
+        assert_eq!(Metric::parse("Energy"), Some(Metric::Energy));
+        assert_eq!(Metric::parse("x"), None);
+        assert!(Metric::Energy.needs_power());
+        assert!(!Metric::Runtime.needs_power());
+    }
+
+    #[test]
+    fn objective_selection() {
+        let m = Measured::with_energy(10.0, 2000.0);
+        assert_eq!(m.objective(Metric::Runtime), 10.0);
+        assert_eq!(m.objective(Metric::Energy), 2000.0);
+        assert_eq!(m.objective(Metric::Edp), 20000.0);
+        let r = Measured::runtime_only(5.0);
+        assert_eq!(r.objective(Metric::Energy), f64::INFINITY);
+    }
+
+    #[test]
+    fn improvement_matches_paper_arithmetic() {
+        // paper: 171.595 -> 14.427 is 91.59%
+        let pct = improvement_pct(171.595, 14.427);
+        assert!((pct - 91.59).abs() < 0.01, "{pct}");
+        // paper: 2494.905 -> 2280.806 is 8.58%
+        let pct = improvement_pct(2494.905, 2280.806);
+        assert!((pct - 8.58).abs() < 0.01, "{pct}");
+    }
+}

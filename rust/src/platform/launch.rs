@@ -1,0 +1,212 @@
+//! Launch-command generation (Step 3 of the framework, Fig. 1).
+//!
+//! Implements the paper's §VI algorithms verbatim: on Theta an `aprun`
+//! line whose `-d` depth and `-j` SMT level are derived from the selected
+//! OMP_NUM_THREADS; on Summit a `jsrun` line for the 6-GPU offload case
+//! (one MPI rank per GPU) and the CPU-only case (one rank per node).
+
+use super::PlatformKind;
+
+/// A generated launch plan: the command line plus the placement facts the
+/// simulator needs (ranks, threads, SMT level).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaunchPlan {
+    pub command: String,
+    pub nodes: u64,
+    pub ranks_per_node: u64,
+    pub threads_per_rank: u64,
+    pub smt_level: u64,
+    pub uses_gpus: bool,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum LaunchError {
+    #[error("OMP_NUM_THREADS={threads} exceeds node capacity {max} on {platform}")]
+    TooManyThreads { threads: u64, max: u64, platform: &'static str },
+    #[error("OMP_NUM_THREADS={threads} not divisible for SMT level {smt} (paper launch algorithm)")]
+    NotDivisible { threads: u64, smt: u64 },
+    #[error("GPU launch requested on {0} which has no GPUs")]
+    NoGpus(&'static str),
+}
+
+/// Theta §VI algorithm:
+/// ```text
+/// if n <= 64  : aprun -n <ranks> -N 1 -cc depth -d n   -j 1 app
+/// elif n <=128: aprun -n <ranks> -N 1 -cc depth -d n/2 -j 2 app
+/// elif n <=192: aprun -n <ranks> -N 1 -cc depth -d n/3 -j 3 app
+/// else        : aprun -n <ranks> -N 1 -cc depth -d n/4 -j 4 app
+/// ```
+pub fn aprun(nodes: u64, omp_num_threads: u64, app: &str) -> Result<LaunchPlan, LaunchError> {
+    let spec = PlatformKind::Theta.spec();
+    let n = omp_num_threads;
+    if n > spec.max_threads() {
+        return Err(LaunchError::TooManyThreads {
+            threads: n,
+            max: spec.max_threads(),
+            platform: "Theta",
+        });
+    }
+    let (depth, j) = if n <= 64 {
+        (n, 1)
+    } else if n <= 128 {
+        if n % 2 != 0 {
+            return Err(LaunchError::NotDivisible { threads: n, smt: 2 });
+        }
+        (n / 2, 2)
+    } else if n <= 192 {
+        if n % 3 != 0 {
+            return Err(LaunchError::NotDivisible { threads: n, smt: 3 });
+        }
+        (n / 3, 3)
+    } else {
+        if n % 4 != 0 {
+            return Err(LaunchError::NotDivisible { threads: n, smt: 4 });
+        }
+        (n / 4, 4)
+    };
+    Ok(LaunchPlan {
+        command: format!("aprun -n {nodes} -N 1 -cc depth -d {depth} -j {j} {app}"),
+        nodes,
+        ranks_per_node: 1,
+        threads_per_rank: n,
+        smt_level: j,
+        uses_gpus: false,
+    })
+}
+
+/// Summit §VI algorithm, 6-GPU case (XSBench offload): one rank per GPU.
+/// `jsrun -n<nodes> -a6 -g6 -c42 -bpacked:n/4 -dpacked app`
+pub fn jsrun_gpu(nodes: u64, omp_num_threads: u64, app: &str) -> Result<LaunchPlan, LaunchError> {
+    let spec = PlatformKind::Summit.spec();
+    if spec.gpus_per_node == 0 {
+        return Err(LaunchError::NoGpus("Summit"));
+    }
+    let n = omp_num_threads;
+    if n > spec.max_threads() {
+        return Err(LaunchError::TooManyThreads {
+            threads: n,
+            max: spec.max_threads(),
+            platform: "Summit",
+        });
+    }
+    if n % 4 != 0 {
+        return Err(LaunchError::NotDivisible { threads: n, smt: 4 });
+    }
+    Ok(LaunchPlan {
+        command: format!("jsrun -n{nodes} -a6 -g6 -c42 -bpacked:{} -dpacked {app}", n / 4),
+        nodes,
+        ranks_per_node: 6,
+        threads_per_rank: n,
+        smt_level: 4,
+        uses_gpus: true,
+    })
+}
+
+/// Summit §VI algorithm, CPU-only case (AMG, SWFFT, SW4lite): one rank per
+/// node. `jsrun -n<nodes> -a1 -g0 -c42 -bpacked:n/4 -dpacked app`
+pub fn jsrun_cpu(nodes: u64, omp_num_threads: u64, app: &str) -> Result<LaunchPlan, LaunchError> {
+    let spec = PlatformKind::Summit.spec();
+    let n = omp_num_threads;
+    if n > spec.max_threads() {
+        return Err(LaunchError::TooManyThreads {
+            threads: n,
+            max: spec.max_threads(),
+            platform: "Summit",
+        });
+    }
+    if n % 4 != 0 {
+        return Err(LaunchError::NotDivisible { threads: n, smt: 4 });
+    }
+    Ok(LaunchPlan {
+        command: format!("jsrun -n{nodes} -a1 -g0 -c42 -bpacked:{} -dpacked {app}", n / 4),
+        nodes,
+        ranks_per_node: 1,
+        threads_per_rank: n,
+        smt_level: 4,
+        uses_gpus: false,
+    })
+}
+
+/// geopmlaunch wrapper (paper Fig. 4 Step 5): wraps an aprun line with the
+/// GEOPM controller options. Only valid on Theta (GEOPM 1.x unavailable on
+/// Summit — msr access + Power9 power not public).
+pub fn geopmlaunch(plan: &LaunchPlan, report: &str) -> String {
+    format!(
+        "geopmlaunch aprun --geopm-ctl=pthread --geopm-report={report} -- {}",
+        plan.command.trim_start_matches("aprun ")
+    )
+}
+
+/// Launch (ALPS / JSM) startup+teardown overhead model, seconds.
+///
+/// Calibrated so the end-to-end ytopt overheads land in the Table IV
+/// bands: tens of seconds, growing only logarithmically with node count —
+/// the paper's "low overhead and good scalability" claim.
+pub fn launch_overhead_s(platform: PlatformKind, nodes: u64) -> f64 {
+    let n = nodes.max(1) as f64;
+    match platform {
+        // ALPS startup: small base + slow log growth in node count
+        PlatformKind::Theta => 4.8 + 0.8 * n.log2(),
+        // JSM/jsrun startup is slightly heavier at scale
+        PlatformKind::Summit => 5.0 + 1.0 * n.log2(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aprun_matches_paper_examples() {
+        let p = aprun(4096, 64, "XSBench").unwrap();
+        assert_eq!(p.command, "aprun -n 4096 -N 1 -cc depth -d 64 -j 1 XSBench");
+        let p = aprun(4096, 128, "XSBench").unwrap();
+        assert_eq!(p.command, "aprun -n 4096 -N 1 -cc depth -d 64 -j 2 XSBench");
+        let p = aprun(4096, 192, "XSBench").unwrap();
+        assert_eq!(p.command, "aprun -n 4096 -N 1 -cc depth -d 64 -j 3 XSBench");
+        let p = aprun(4096, 256, "XSBench").unwrap();
+        assert_eq!(p.command, "aprun -n 4096 -N 1 -cc depth -d 64 -j 4 XSBench");
+    }
+
+    #[test]
+    fn aprun_rejects_bad_thread_counts() {
+        assert!(matches!(aprun(16, 257, "x"), Err(LaunchError::TooManyThreads { .. })));
+        assert!(matches!(aprun(16, 130, "x"), Err(LaunchError::NotDivisible { .. }))); // 130 <= 192, n/3 != int
+        assert!(matches!(aprun(16, 97, "x"), Err(LaunchError::NotDivisible { .. })));
+    }
+
+    #[test]
+    fn jsrun_matches_paper_examples() {
+        let p = jsrun_gpu(4096, 168, "XSBench").unwrap();
+        assert_eq!(p.command, "jsrun -n4096 -a6 -g6 -c42 -bpacked:42 -dpacked XSBench");
+        assert_eq!(p.ranks_per_node, 6);
+        assert!(p.uses_gpus);
+        let p = jsrun_cpu(4096, 84, "amg").unwrap();
+        assert_eq!(p.command, "jsrun -n4096 -a1 -g0 -c42 -bpacked:21 -dpacked amg");
+        assert_eq!(p.ranks_per_node, 1);
+    }
+
+    #[test]
+    fn jsrun_requires_divisible_by_4() {
+        assert!(matches!(jsrun_cpu(8, 42, "amg"), Err(LaunchError::NotDivisible { .. })));
+        assert!(matches!(jsrun_gpu(8, 170, "x"), Err(LaunchError::TooManyThreads { .. })));
+    }
+
+    #[test]
+    fn geopmlaunch_wraps_aprun() {
+        let p = aprun(1024, 32, "sw4lite").unwrap();
+        let g = geopmlaunch(&p, "gm.report");
+        assert!(g.starts_with("geopmlaunch aprun --geopm-ctl=pthread --geopm-report=gm.report"));
+        assert!(g.contains("-d 32"));
+    }
+
+    #[test]
+    fn launch_overhead_grows_slowly() {
+        for pf in [PlatformKind::Theta, PlatformKind::Summit] {
+            let one = launch_overhead_s(pf, 1);
+            let big = launch_overhead_s(pf, 4096);
+            assert!(big > one);
+            assert!(big < 35.0, "overhead must stay in Table IV band, got {big}");
+        }
+    }
+}

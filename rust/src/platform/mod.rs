@@ -1,0 +1,140 @@
+//! Simulated HPC platforms: ANL Theta (Cray XC40 / KNL) and ORNL Summit
+//! (IBM AC922 / Power9 + V100), per Table I of the paper.
+//!
+//! The real systems are substituted by calibrated models (see DESIGN.md
+//! §Substitutions): the coordinator exercises the identical code paths —
+//! launch-command generation, compile-time accounting, node/power
+//! envelopes — against these specs.
+
+pub mod compile_time;
+pub mod launch;
+pub mod network;
+pub mod scheduler;
+
+/// Which production system an experiment targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlatformKind {
+    Theta,
+    Summit,
+}
+
+impl PlatformKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlatformKind::Theta => "Theta",
+            PlatformKind::Summit => "Summit",
+        }
+    }
+
+    pub fn spec(&self) -> &'static SystemSpec {
+        match self {
+            PlatformKind::Theta => &THETA,
+            PlatformKind::Summit => &SUMMIT,
+        }
+    }
+}
+
+/// Table I: system platform specifications and tools.
+#[derive(Debug, Clone)]
+pub struct SystemSpec {
+    pub name: &'static str,
+    pub location: &'static str,
+    pub architecture: &'static str,
+    pub nodes: u64,
+    pub cpu_cores_per_node: u64,
+    pub sockets_per_node: &'static str,
+    pub cpu_type: &'static str,
+    pub gpus_per_node: u64,
+    pub l1_cache: &'static str,
+    pub l2_cache: &'static str,
+    pub l3_cache: &'static str,
+    pub threads_per_core: u64,
+    pub memory_per_node: &'static str,
+    pub network: &'static str,
+    pub power_tools: &'static str,
+    pub tdp_per_socket_w: f64,
+    pub gpu_tdp_w: f64,
+    pub file_system: &'static str,
+    /// Peak machine performance, petaflops (paper §III).
+    pub peak_pflops: f64,
+    /// GEOPM-style node power sampling period in seconds (~2 samples/s).
+    pub power_sample_period_s: f64,
+}
+
+impl SystemSpec {
+    /// Max hardware threads per node (SMT level 4 on both systems).
+    pub fn max_threads(&self) -> u64 {
+        self.cpu_cores_per_node * self.threads_per_core
+    }
+}
+
+pub static THETA: SystemSpec = SystemSpec {
+    name: "Cray XC40 Theta",
+    location: "Argonne National Lab",
+    architecture: "Intel KNL",
+    nodes: 4392,
+    cpu_cores_per_node: 64,
+    sockets_per_node: "1",
+    cpu_type: "Xeon Phi KNL 7230 1.30GHz",
+    gpus_per_node: 0,
+    l1_cache: "D:32KB, I:32KB",
+    l2_cache: "32MB (two cores shared 1MB)",
+    l3_cache: "None",
+    threads_per_core: 4,
+    memory_per_node: "16GB MCDRAM, 192GB DDR4",
+    network: "Cray Aries Dragonfly",
+    power_tools: "GEOPM, CapMC, RAPL",
+    tdp_per_socket_w: 215.0,
+    gpu_tdp_w: 0.0,
+    file_system: "Lustre PFS (210GB/s)",
+    peak_pflops: 12.0,
+    power_sample_period_s: 0.5,
+};
+
+pub static SUMMIT: SystemSpec = SystemSpec {
+    name: "IBM Power9 Summit",
+    location: "Oak Ridge National Lab",
+    architecture: "IBM Power9 + Nvidia GPU",
+    nodes: 4608,
+    cpu_cores_per_node: 42,
+    sockets_per_node: "2 for Power9; 2 for GPU sockets",
+    cpu_type: "IBM Power9 4GHz",
+    gpus_per_node: 6,
+    l1_cache: "D:32KB, I:32KB",
+    l2_cache: "21MB (two cores shared 512KB)",
+    l3_cache: "120MB (shared)",
+    threads_per_core: 4,
+    memory_per_node: "96GB HBM2, 512GB DDR4",
+    network: "dual-rail EDR InfiniBand",
+    power_tools: "Nvidia-smi, NVML",
+    tdp_per_socket_w: 190.0,
+    gpu_tdp_w: 300.0,
+    file_system: "IBM GPFS (2.5TB/s)",
+    peak_pflops: 200.0,
+    power_sample_period_s: 0.5,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_core_facts() {
+        let t = PlatformKind::Theta.spec();
+        assert_eq!(t.nodes, 4392);
+        assert_eq!(t.cpu_cores_per_node, 64);
+        assert_eq!(t.max_threads(), 256);
+        assert_eq!(t.tdp_per_socket_w, 215.0);
+        let s = PlatformKind::Summit.spec();
+        assert_eq!(s.cpu_cores_per_node, 42);
+        assert_eq!(s.gpus_per_node, 6);
+        assert_eq!(s.max_threads(), 168);
+        assert_eq!(s.gpu_tdp_w, 300.0);
+    }
+
+    #[test]
+    fn sampling_rate_is_about_2hz() {
+        // GEOPM default sampling ~2 samples/s (paper §III).
+        assert!((1.0 / PlatformKind::Theta.spec().power_sample_period_s - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,152 @@
+//! Interconnect models: Cray Aries dragonfly (Theta) and dual-rail EDR
+//! InfiniBand (Summit).
+//!
+//! The application models express their communication through these
+//! primitives so the platform asymmetries the paper observes live in one
+//! place:
+//!
+//! * **collective scaling** — alltoall/allreduce grow ~log2(p) with the
+//!   per-hop latency of the fabric;
+//! * **desynchronization** — when ranks drift (no barrier before a
+//!   tightly-coupled exchange), a busy fabric serves the exchange at
+//!   straggler pace. Aries' adaptive routing absorbs desynchronized
+//!   *alltoall* traffic well but the dragonfly's shared global links
+//!   collapse under drifting neighbour (halo) exchanges — SW4lite's
+//!   168 s on Theta (Fig 14) — while Summit's fat-tree-ish EDR fabric
+//!   keeps neighbour exchanges orderly and instead rewards pre-alltoall
+//!   barriers (SWFFT's 12.69% on Summit, Fig 9);
+//! * **overlap** — `nowait` compute/comm overlap effectiveness.
+
+use super::PlatformKind;
+
+/// Interconnect model attached to a platform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Network {
+    AriesDragonfly,
+    EdrInfiniband,
+}
+
+impl Network {
+    pub fn of(platform: PlatformKind) -> Network {
+        match platform {
+            PlatformKind::Theta => Network::AriesDragonfly,
+            PlatformKind::Summit => Network::EdrInfiniband,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Network::AriesDragonfly => "Cray Aries Dragonfly",
+            Network::EdrInfiniband => "dual-rail EDR InfiniBand",
+        }
+    }
+
+    /// Scale factor for alltoall-style collectives at `nodes`, normalized
+    /// to 1.0 at `ref_nodes` (pencil redistributions, coarse-grid talk).
+    pub fn collective_scale(&self, nodes: u64, ref_nodes: u64) -> f64 {
+        let f = |n: u64| ((n.max(2) as f64).log2() / 12.0).max(0.15);
+        f(nodes) / f(ref_nodes)
+    }
+
+    /// Scale factor for neighbour (halo) exchanges at `nodes`, normalized
+    /// to 1.0 at `ref_nodes`: weak growth — the exchange is local but the
+    /// tail of stragglers widens slowly with job size.
+    pub fn halo_scale(&self, nodes: u64, ref_nodes: u64) -> f64 {
+        let p = match self {
+            Network::AriesDragonfly => 0.35,
+            Network::EdrInfiniband => 0.35,
+        };
+        (nodes.max(2) as f64 / ref_nodes as f64).powf(p)
+    }
+
+    /// Comm-time multiplier per barrier inserted before an alltoall
+    /// (< 1: pre-synchronizing the exchange helps; the SWFFT knob).
+    pub fn alltoall_barrier_gain(&self) -> f64 {
+        match self {
+            // adaptive routing already absorbs the drift
+            Network::AriesDragonfly => 0.985,
+            // drifting ranks inject into busy switches: barriers help a lot
+            Network::EdrInfiniband => 0.83,
+        }
+    }
+
+    /// Multiplier on alltoall time when entered *desynchronized* relative
+    /// to fully barriered (2 exchange sites).
+    pub fn alltoall_desync_penalty(&self) -> f64 {
+        1.0 / self.alltoall_barrier_gain().powi(2)
+    }
+
+    /// Extra *seconds per reference job* of desynchronized halo exchange
+    /// (scaled by `desync_scale`), i.e. the catastrophic term a barrier
+    /// removes. Zero on fabrics whose neighbour traffic stays orderly.
+    pub fn halo_desync_catastrophe(&self) -> bool {
+        matches!(self, Network::AriesDragonfly)
+    }
+
+    /// How strongly desynchronized halo cost grows with node count
+    /// (super-linear on the dragonfly's shared global links).
+    pub fn desync_scale(&self, nodes: u64, ref_nodes: u64) -> f64 {
+        (nodes.max(2) as f64 / ref_nodes as f64).powf(1.1)
+    }
+
+    /// Barrier cost multiplier on an otherwise healthy exchange.
+    pub fn barrier_cost(&self) -> f64 {
+        match self {
+            Network::AriesDragonfly => 1.0,
+            Network::EdrInfiniband => 1.02,
+        }
+    }
+
+    /// Comm-time multiplier per enabled `nowait` overlap site.
+    pub fn overlap_gain(&self) -> f64 {
+        match self {
+            Network::AriesDragonfly => 0.995, // little headroom: drift dominates
+            Network::EdrInfiniband => 0.865,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn platforms_map_to_their_fabrics() {
+        assert_eq!(Network::of(PlatformKind::Theta), Network::AriesDragonfly);
+        assert_eq!(Network::of(PlatformKind::Summit), Network::EdrInfiniband);
+    }
+
+    #[test]
+    fn collective_scale_is_logarithmic_and_normalized() {
+        let n = Network::EdrInfiniband;
+        assert!((n.collective_scale(4096, 4096) - 1.0).abs() < 1e-12);
+        let quarter = n.collective_scale(64, 4096);
+        assert!(quarter < 1.0 && quarter > 0.3, "{quarter}");
+        // doubling nodes adds one hop level, not a doubling of time
+        let r = n.collective_scale(8192, 4096);
+        assert!(r > 1.0 && r < 1.15);
+    }
+
+    #[test]
+    fn desync_asymmetry_matches_the_paper() {
+        // Summit punishes desynchronized alltoall (SWFFT barrier helps);
+        // Theta does not
+        assert!(Network::EdrInfiniband.alltoall_desync_penalty() > 1.3);
+        assert!(Network::AriesDragonfly.alltoall_desync_penalty() < 1.05);
+        // Theta's dragonfly collapses under desynchronized halo traffic
+        // (SW4lite); Summit's fabric does not
+        assert!(Network::AriesDragonfly.halo_desync_catastrophe());
+        assert!(!Network::EdrInfiniband.halo_desync_catastrophe());
+    }
+
+    #[test]
+    fn overlap_helps_summit_more() {
+        assert!(Network::EdrInfiniband.overlap_gain() < Network::AriesDragonfly.overlap_gain());
+    }
+
+    #[test]
+    fn desync_scale_superlinear() {
+        let n = Network::AriesDragonfly;
+        assert!(n.desync_scale(2048, 1024) > 2.0);
+    }
+}

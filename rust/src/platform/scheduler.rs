@@ -1,0 +1,166 @@
+//! Batch-scheduler / allocation substrate (Cobalt on Theta, LSF on
+//! Summit).
+//!
+//! The paper's autotuning runs live inside batch allocations: "because of
+//! the limited node-hour allocations on Theta and Summit for our
+//! projects, we had to set most of the wall-clock times for autotuning
+//! runs at half an hour". This module models exactly that economy: a
+//! project allocation with a node-hour budget, job submission with a
+//! queue-wait model, and per-job accounting the coordinator charges as
+//! its simulated wall clock advances.
+
+use super::PlatformKind;
+use crate::util::Pcg32;
+
+/// A project allocation on one system.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub platform: PlatformKind,
+    pub project: String,
+    pub node_hours_budget: f64,
+    pub node_hours_used: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum SchedulerError {
+    #[error("allocation `{project}` exhausted: {used:.1} of {budget:.1} node-hours used")]
+    Exhausted { project: String, used: f64, budget: f64 },
+    #[error("job requests {nodes} nodes but {platform} has only {max}")]
+    TooManyNodes { nodes: u64, max: u64, platform: &'static str },
+}
+
+impl Allocation {
+    pub fn new(platform: PlatformKind, project: &str, node_hours: f64) -> Self {
+        Allocation {
+            platform,
+            project: project.to_string(),
+            node_hours_budget: node_hours,
+            node_hours_used: 0.0,
+        }
+    }
+
+    pub fn remaining_node_hours(&self) -> f64 {
+        (self.node_hours_budget - self.node_hours_used).max(0.0)
+    }
+
+    /// Can a job of `nodes` x `wallclock_s` still be charged?
+    pub fn can_afford(&self, nodes: u64, wallclock_s: f64) -> bool {
+        self.remaining_node_hours() >= nodes as f64 * wallclock_s / 3600.0
+    }
+
+    /// Charge consumed time (the coordinator calls this as its simulated
+    /// clock advances).
+    pub fn charge(&mut self, nodes: u64, wallclock_s: f64) -> Result<(), SchedulerError> {
+        let cost = nodes as f64 * wallclock_s / 3600.0;
+        if self.node_hours_used + cost > self.node_hours_budget + 1e-9 {
+            return Err(SchedulerError::Exhausted {
+                project: self.project.clone(),
+                used: self.node_hours_used + cost,
+                budget: self.node_hours_budget,
+            });
+        }
+        self.node_hours_used += cost;
+        Ok(())
+    }
+}
+
+/// A submitted batch job.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub nodes: u64,
+    pub wallclock_limit_s: f64,
+    pub queue_wait_s: f64,
+}
+
+/// Queue-wait model: bigger jobs wait longer; both machines run capacity
+/// schedulers where full-machine jobs queue for hours.
+pub fn queue_wait_s(platform: PlatformKind, nodes: u64, rng: &mut Pcg32) -> f64 {
+    let spec = platform.spec();
+    let frac = nodes as f64 / spec.nodes as f64;
+    // minutes for small jobs, hours toward full-machine
+    let base = 120.0 + 14_000.0 * frac.powf(1.3);
+    base * (0.7 + 0.6 * rng.f64())
+}
+
+/// Validate + submit a job against an allocation.
+pub fn submit(
+    alloc: &Allocation,
+    nodes: u64,
+    wallclock_limit_s: f64,
+    rng: &mut Pcg32,
+) -> Result<Job, SchedulerError> {
+    let spec = alloc.platform.spec();
+    if nodes > spec.nodes {
+        return Err(SchedulerError::TooManyNodes {
+            nodes,
+            max: spec.nodes,
+            platform: spec.name,
+        });
+    }
+    if !alloc.can_afford(nodes, wallclock_limit_s) {
+        return Err(SchedulerError::Exhausted {
+            project: alloc.project.clone(),
+            used: alloc.node_hours_used,
+            budget: alloc.node_hours_budget,
+        });
+    }
+    Ok(Job { nodes, wallclock_limit_s, queue_wait_s: queue_wait_s(alloc.platform, nodes, rng) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charging_tracks_node_hours() {
+        let mut a = Allocation::new(PlatformKind::Theta, "EE-ECP", 10_000.0);
+        // 4096 nodes x 1800 s = 2048 node-hours
+        a.charge(4096, 1800.0).unwrap();
+        assert!((a.node_hours_used - 2048.0).abs() < 1e-9);
+        assert!((a.remaining_node_hours() - 7952.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exhaustion_is_detected() {
+        let mut a = Allocation::new(PlatformKind::Theta, "tiny", 100.0);
+        assert!(a.can_afford(64, 1800.0)); // 32 nh
+        a.charge(64, 1800.0).unwrap();
+        a.charge(64, 1800.0).unwrap();
+        a.charge(64, 1800.0).unwrap();
+        assert!(!a.can_afford(64, 1800.0)); // only 4 nh left
+        assert!(matches!(a.charge(64, 1800.0), Err(SchedulerError::Exhausted { .. })));
+    }
+
+    #[test]
+    fn submit_validates_machine_size() {
+        let a = Allocation::new(PlatformKind::Theta, "p", 1e9);
+        let mut rng = Pcg32::seeded(1);
+        assert!(matches!(
+            submit(&a, 5000, 1800.0, &mut rng),
+            Err(SchedulerError::TooManyNodes { .. })
+        ));
+        let job = submit(&a, 4096, 1800.0, &mut rng).unwrap();
+        assert_eq!(job.nodes, 4096);
+        assert!(job.queue_wait_s > 0.0);
+    }
+
+    #[test]
+    fn queue_wait_grows_with_job_size() {
+        let mut rng = Pcg32::seeded(2);
+        let small: f64 =
+            (0..20).map(|_| queue_wait_s(PlatformKind::Summit, 16, &mut rng)).sum::<f64>() / 20.0;
+        let large: f64 =
+            (0..20).map(|_| queue_wait_s(PlatformKind::Summit, 4096, &mut rng)).sum::<f64>()
+                / 20.0;
+        assert!(large > 4.0 * small, "small {small} large {large}");
+    }
+
+    #[test]
+    fn half_hour_at_4096_nodes_is_the_paper_economy() {
+        // one Fig-7-style run costs 2048 node-hours; a 50k-nh project
+        // affords only ~24 such runs — the paper's stated constraint
+        let a = Allocation::new(PlatformKind::Theta, "EE-ECP", 50_000.0);
+        let runs = (a.node_hours_budget / (4096.0 * 1800.0 / 3600.0)).floor() as u64;
+        assert_eq!(runs, 24);
+    }
+}

@@ -1,0 +1,9 @@
+//! Power-measurement substrate: the GEOPM simulator (sampler + report)
+//! and RAPL-style counters it abstracts.
+
+pub mod geopm;
+pub mod powercap;
+pub mod rapl;
+
+pub use geopm::{sample_traces, GeopmReport, NodeReport, PowerTrace};
+pub use powercap::apply_cap;

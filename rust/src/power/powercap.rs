@@ -1,0 +1,105 @@
+//! Node power capping (RAPL package limit / CapMC / GEOPM governor).
+//!
+//! The paper situates ytopt inside the HPC PowerStack (§IV-B): the
+//! system/job layers impose power caps that the application layer must
+//! tune under. This module applies a package-power cap to an
+//! application run: phases whose draw exceeds the cap are throttled —
+//! power clips to the cap and the phase dilates (DVFS slowdown is
+//! sublinear because memory-bound time does not stretch with frequency).
+//! The coordinator exposes this as `TuneSetup::power_cap_w`, enabling
+//! tune-under-cap experiments (bench ablation).
+
+use crate::apps::{AppRun, PowerPhase};
+
+/// Apply a package power cap (W) to a run. Returns the throttled run.
+///
+/// Dilation model: cutting package power by factor `r < 1` raises phase
+/// time by `r^-alpha` with `alpha = 0.6` (frequency scaling hits compute
+/// but not memory/communication stalls).
+pub fn apply_cap(run: &AppRun, cap_pkg_w: f64) -> AppRun {
+    assert!(cap_pkg_w > 0.0);
+    const ALPHA: f64 = 0.6;
+    let phases: Vec<PowerPhase> = run
+        .phases
+        .iter()
+        .map(|p| {
+            if p.pkg_w <= cap_pkg_w {
+                p.clone()
+            } else {
+                let r = cap_pkg_w / p.pkg_w;
+                PowerPhase {
+                    label: p.label,
+                    duration_s: p.duration_s * r.powf(-ALPHA),
+                    pkg_w: cap_pkg_w,
+                    // DRAM power follows activity, which stretches out
+                    dram_w: p.dram_w * r.powf(ALPHA * 0.5),
+                }
+            }
+        })
+        .collect();
+    AppRun::from_phases(phases)
+}
+
+/// Energy under a sweep of caps — the classic cap/energy tradeoff curve.
+pub fn cap_sweep(run: &AppRun, caps_w: &[f64]) -> Vec<(f64, f64, f64)> {
+    caps_w
+        .iter()
+        .map(|&c| {
+            let capped = apply_cap(run, c);
+            (c, capped.runtime_s, capped.node_energy_j())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run() -> AppRun {
+        AppRun::from_phases(vec![
+            PowerPhase { label: "compute", duration_s: 10.0, pkg_w: 200.0, dram_w: 25.0 },
+            PowerPhase { label: "comm", duration_s: 5.0, pkg_w: 60.0, dram_w: 8.0 },
+        ])
+    }
+
+    #[test]
+    fn cap_above_peak_is_identity() {
+        let r = apply_cap(&run(), 250.0);
+        assert!((r.runtime_s - 15.0).abs() < 1e-12);
+        assert!((r.node_energy_j() - run().node_energy_j()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cap_throttles_only_hot_phases() {
+        let r = apply_cap(&run(), 150.0);
+        let compute = &r.phases[0];
+        let comm = &r.phases[1];
+        assert_eq!(compute.pkg_w, 150.0);
+        assert!(compute.duration_s > 10.0);
+        assert_eq!(comm.pkg_w, 60.0); // untouched
+        assert_eq!(comm.duration_s, 5.0);
+    }
+
+    #[test]
+    fn deep_caps_trade_runtime_for_power() {
+        let base = run();
+        let sweep = cap_sweep(&base, &[220.0, 180.0, 140.0, 100.0]);
+        // runtime monotonically increases as the cap tightens
+        for w in sweep.windows(2) {
+            assert!(w[1].1 >= w[0].1, "{sweep:?}");
+        }
+        // a moderate cap SAVES energy (power drops faster than time grows,
+        // alpha < 1)...
+        let e0 = base.node_energy_j();
+        let moderate = apply_cap(&base, 160.0).node_energy_j();
+        assert!(moderate < e0, "moderate cap should save energy: {moderate} vs {e0}");
+    }
+
+    #[test]
+    fn dilation_exponent_is_sublinear() {
+        let base = run();
+        let capped = apply_cap(&base, 100.0); // r = 0.5 on the compute phase
+        let dilation = capped.phases[0].duration_s / base.phases[0].duration_s;
+        assert!(dilation > 1.3 && dilation < 2.0, "dilation {dilation}");
+    }
+}

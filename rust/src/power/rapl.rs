@@ -1,0 +1,75 @@
+//! RAPL-style energy counters (the msr-level substrate GEOPM reads).
+//!
+//! Real RAPL exposes monotonically increasing package/DRAM energy
+//! counters with fixed-point energy units and wraparound; GEOPM samples
+//! and differences them. The simulator reproduces that interface so the
+//! GEOPM layer consumes counters rather than ground-truth floats — the
+//! same indirection (and the same wraparound hazard) a real deployment
+//! has.
+
+/// Energy-status counter units: 15.3 uJ per LSB (Intel SDM default,
+/// 2^-16 J).
+pub const ENERGY_UNIT_J: f64 = 1.0 / 65536.0;
+
+/// 32-bit wrapping energy counter.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RaplCounter {
+    raw: u32,
+}
+
+impl RaplCounter {
+    pub fn new() -> Self {
+        RaplCounter { raw: 0 }
+    }
+
+    /// Accumulate `joules`; the hardware register wraps at 2^32 units.
+    pub fn add_joules(&mut self, joules: f64) {
+        let units = (joules / ENERGY_UNIT_J).round() as u64;
+        self.raw = self.raw.wrapping_add(units as u32);
+    }
+
+    pub fn raw(&self) -> u32 {
+        self.raw
+    }
+}
+
+/// Difference two counter reads, handling a single wraparound — exactly
+/// what GEOPM's sampling loop must do.
+pub fn delta_joules(before: u32, after: u32) -> f64 {
+    after.wrapping_sub(before) as f64 * ENERGY_UNIT_J
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_energy() {
+        let mut c = RaplCounter::new();
+        let b = c.raw();
+        c.add_joules(100.0);
+        let d = delta_joules(b, c.raw());
+        assert!((d - 100.0).abs() < 0.001, "{d}");
+    }
+
+    #[test]
+    fn handles_wraparound() {
+        // 2^32 units = 65536 J per wrap; position the counter near the top
+        let mut c = RaplCounter { raw: u32::MAX - 100 };
+        let before = c.raw();
+        c.add_joules(1.0);
+        let d = delta_joules(before, c.raw());
+        assert!((d - 1.0).abs() < 0.001, "wraparound delta {d}");
+    }
+
+    #[test]
+    fn small_increments_resolve() {
+        let mut c = RaplCounter::new();
+        let b = c.raw();
+        for _ in 0..1000 {
+            c.add_joules(0.001); // 1 mJ steps
+        }
+        let d = delta_joules(b, c.raw());
+        assert!((d - 1.0).abs() < 0.01, "{d}");
+    }
+}

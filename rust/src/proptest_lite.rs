@@ -1,0 +1,100 @@
+//! Minimal property-testing helper (proptest is not in the offline crate
+//! set): seeded case generation with reproducible failure reports and
+//! halving-based shrinking for integer-vector inputs.
+
+use crate::util::Pcg32;
+
+/// Run `prop` on `cases` generated inputs; panic with the seed of the
+/// first failing case so it can be replayed deterministically.
+pub fn for_all<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    base_seed: u64,
+    generate: impl Fn(&mut Pcg32) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64);
+        let mut rng = Pcg32::seeded(seed);
+        let input = generate(&mut rng);
+        if !prop(&input) {
+            panic!("property `{name}` failed at case {i} (seed {seed}): input {input:?}");
+        }
+    }
+}
+
+/// Shrink a failing `Vec<u32>` input by halving chunks: returns the
+/// smallest prefix-modified variant that still fails `prop` (false =
+/// failing). A pragmatic subset of proptest's shrinking.
+pub fn shrink_vec_u32(mut input: Vec<u32>, prop: impl Fn(&[u32]) -> bool) -> Vec<u32> {
+    debug_assert!(!prop(&input), "shrink_vec_u32 needs a failing input");
+    loop {
+        let mut improved = false;
+        // try removing halves
+        let mut len = input.len() / 2;
+        while len >= 1 {
+            let mut start = 0;
+            while start + len <= input.len() {
+                let mut candidate = input.clone();
+                candidate.drain(start..start + len);
+                if !candidate.is_empty() && !prop(&candidate) {
+                    input = candidate;
+                    improved = true;
+                    break;
+                }
+                start += len;
+            }
+            if improved {
+                break;
+            }
+            len /= 2;
+        }
+        if improved {
+            continue;
+        }
+        // try halving individual values
+        for i in 0..input.len() {
+            if input[i] > 0 {
+                let mut candidate = input.clone();
+                candidate[i] /= 2;
+                if !prop(&candidate) {
+                    input = candidate;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        if !improved {
+            return input;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        for_all("sum-commutes", 100, 1, |rng| (rng.index(100), rng.index(100)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false` failed")]
+    fn failing_property_reports_seed() {
+        for_all("always-false", 10, 2, |rng| rng.index(10), |_| false);
+    }
+
+    #[test]
+    fn shrinking_minimizes_a_failing_vector() {
+        // property: "no element >= 10" — fails whenever some element >= 10
+        let prop = |v: &[u32]| v.iter().all(|&x| x < 10);
+        let failing = vec![1, 3, 200, 4, 5, 6, 7];
+        let shrunk = shrink_vec_u32(failing, prop);
+        // minimal failing case: a single element in [10, ...]
+        assert_eq!(shrunk.len(), 1);
+        assert!(shrunk[0] >= 10 && shrunk[0] <= 200);
+    }
+}

@@ -1,0 +1,180 @@
+//! Pure-Rust reference implementations of both AOT computations.
+//!
+//! Exactly the semantics of `python/compile/kernels/{forest,energy}.py`:
+//! used (a) as the no-artifacts execution path, (b) to cross-check the
+//! PJRT executables in rust/tests/, and (c) as the perf baseline the AOT
+//! scorer is benchmarked against.
+
+use crate::surrogate::ForestTensors;
+
+/// Forest scoring output triple.
+#[derive(Debug, Clone)]
+pub struct ScoreOut {
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+    pub lcb: Vec<f32>,
+}
+
+/// Lockstep-equivalent forest scoring on the CPU.
+///
+/// `features` is row-major `[n, dim]`; tensors are the padded export.
+pub fn forest_score_cpu(
+    features: &[f32],
+    dim: usize,
+    tensors: &ForestTensors,
+    kappa: f32,
+) -> ScoreOut {
+    assert_eq!(features.len() % dim, 0);
+    let n = features.len() / dim;
+    let t = tensors.trees;
+    let npt = tensors.nodes_per_tree;
+    let mut mean = Vec::with_capacity(n);
+    let mut std = Vec::with_capacity(n);
+    let mut lcb = Vec::with_capacity(n);
+    for c in 0..n {
+        let row = &features[c * dim..(c + 1) * dim];
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for ti in 0..t {
+            let base = ti * npt;
+            let mut idx = 0usize;
+            loop {
+                let f = tensors.feat[base + idx];
+                if f < 0 {
+                    break;
+                }
+                let x = row.get(f as usize).copied().unwrap_or(0.0);
+                idx = if x <= tensors.thresh[base + idx] {
+                    tensors.left[base + idx] as usize
+                } else {
+                    tensors.right[base + idx] as usize
+                };
+            }
+            let p = tensors.leaf[base + idx] as f64;
+            sum += p;
+            sq += p * p;
+        }
+        let k = t as f64;
+        let m = sum / k;
+        let var = (sq / k - m * m).max(0.0);
+        let s = var.sqrt();
+        mean.push(m as f32);
+        std.push(s as f32);
+        lcb.push((m - kappa as f64 * s) as f32);
+    }
+    ScoreOut { mean, std, lcb }
+}
+
+/// Energy reduction on the CPU: per-node trapezoid integration of the
+/// summed power trace, masked average over active nodes, EDP.
+pub fn energy_reduce_cpu(
+    pkg: &[f32],
+    dram: &[f32],
+    active: &[f32],
+    samples: usize,
+    n_samples: f32,
+    dt: f32,
+    runtime: f32,
+) -> (Vec<f32>, f32, f32) {
+    assert_eq!(pkg.len(), dram.len());
+    assert_eq!(pkg.len() % samples, 0);
+    let nodes = pkg.len() / samples;
+    assert_eq!(active.len(), nodes);
+    let valid = (n_samples as usize).min(samples);
+    let mut node_energy = Vec::with_capacity(nodes);
+    for i in 0..nodes {
+        let row = i * samples;
+        let mut e = 0.0f64;
+        if valid >= 2 {
+            for j in 0..valid - 1 {
+                let p0 = (pkg[row + j] + dram[row + j]) as f64;
+                let p1 = (pkg[row + j + 1] + dram[row + j + 1]) as f64;
+                e += 0.5 * (p0 + p1);
+            }
+        }
+        node_energy.push((e * dt as f64) as f32);
+    }
+    let mut total = 0.0f64;
+    let mut cnt = 0.0f64;
+    for i in 0..nodes {
+        total += (node_energy[i] * active[i]) as f64;
+        cnt += active[i] as f64;
+    }
+    let avg = (total / cnt.max(1.0)) as f32;
+    (node_energy, avg, avg * runtime)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::{export_forest, ForestConfig, RandomForest};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn cpu_scorer_matches_forest_predict() {
+        let mut rng = Pcg32::seeded(1);
+        let dim = 5;
+        let n = 150;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let row: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+            y.push(row.iter().sum::<f32>());
+            x.extend(row);
+        }
+        let rf = RandomForest::fit(&x, &y, dim, &ForestConfig::default(), &mut rng);
+        let tensors = export_forest(&rf, 64, 512, 32, 16).unwrap();
+        let probe: Vec<f32> = (0..20 * dim).map(|_| rng.f32()).collect();
+        let out = forest_score_cpu(&probe, dim, &tensors, 1.96);
+        let (mean, std) = rf.predict(&probe);
+        for i in 0..20 {
+            assert!((out.mean[i] - mean[i]).abs() < 1e-5);
+            assert!((out.std[i] - std[i]).abs() < 1e-4);
+            assert!((out.lcb[i] - (mean[i] - 1.96 * std[i])).abs() < 2e-4);
+        }
+    }
+
+    #[test]
+    fn energy_matches_manual_trapezoid() {
+        let nodes = 3;
+        let samples = 8;
+        let mut pkg = vec![0.0f32; nodes * samples];
+        let dram = vec![1.0f32; nodes * samples];
+        for i in 0..nodes {
+            for j in 0..5 {
+                pkg[i * samples + j] = 100.0 + (i * 10 + j) as f32;
+            }
+        }
+        let active = vec![1.0, 1.0, 0.0];
+        let (ne, avg, edp) = energy_reduce_cpu(&pkg, &dram, &active, samples, 5.0, 0.5, 2.0);
+        // node 0: trace 101..105 (+1 dram applied to all 8 samples, but
+        // only first 4 trapezoids count)
+        let t0: f64 = (0..4).map(|j| 0.5 * ((101 + j) as f64 + (101 + j + 1) as f64)).sum();
+        // careful: dram=1 everywhere, valid window includes it
+        let want0 = 0.5 * t0 + 0.0; // dt * sum(trap)
+        assert!((ne[0] as f64 - want0).abs() < 1e-3, "{} vs {}", ne[0], want0);
+        assert!((avg - (ne[0] + ne[1]) / 2.0).abs() < 1e-3);
+        assert!((edp - avg * 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn single_sample_yields_zero_energy() {
+        let (ne, avg, _) =
+            energy_reduce_cpu(&[5.0; 8], &[0.0; 8], &[1.0, 1.0], 4, 1.0, 0.5, 1.0);
+        assert!(ne.iter().all(|&e| e == 0.0));
+        assert_eq!(avg, 0.0);
+    }
+
+    #[test]
+    fn inactive_nodes_do_not_bias_average() {
+        let pkg = vec![100.0f32; 2 * 4];
+        let dram = vec![0.0f32; 2 * 4];
+        let (_, avg_all, _) = energy_reduce_cpu(&pkg, &dram, &[1.0, 1.0], 4, 4.0, 0.5, 1.0);
+        let mut pkg2 = pkg.clone();
+        for v in pkg2[4..].iter_mut() {
+            *v = 9e6; // garbage on inactive node
+        }
+        let (_, avg_masked, _) = energy_reduce_cpu(&pkg2, &dram, &[1.0, 0.0], 4, 4.0, 0.5, 1.0);
+        assert_eq!(avg_all, avg_masked);
+    }
+}

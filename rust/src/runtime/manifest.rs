@@ -1,0 +1,127 @@
+//! The AOT artifact manifest: the shape contract between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use crate::util::Json;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ForestShape {
+    pub candidates: usize,
+    pub features: usize,
+    pub trees: usize,
+    pub nodes_per_tree: usize,
+    pub depth: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EnergyShape {
+    pub max_nodes: usize,
+    pub max_samples: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub forest: ForestShape,
+    pub energy: EnergyShape,
+}
+
+impl Manifest {
+    /// The shapes `aot.py` currently emits; used by the pure-Rust
+    /// fallback when no artifacts directory is present.
+    pub fn default_shapes() -> Manifest {
+        Manifest {
+            forest: ForestShape {
+                candidates: 1024,
+                features: 32,
+                trees: 64,
+                nodes_per_tree: 512,
+                depth: 16,
+                file: "forest_scorer.hlo.txt".into(),
+            },
+            energy: EnergyShape {
+                max_nodes: 4096,
+                max_samples: 256,
+                file: "energy_reduce.hlo.txt".into(),
+            },
+        }
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let v = Json::parse(text)?;
+        let need = |obj: &Json, key: &str| -> anyhow::Result<u64> {
+            obj.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing numeric field `{key}`"))
+        };
+        let file = |obj: &Json| -> anyhow::Result<String> {
+            Ok(obj
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing `file`"))?
+                .to_string())
+        };
+        let fs = v
+            .get("forest_scorer")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing `forest_scorer`"))?;
+        let er = v
+            .get("energy_reduce")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing `energy_reduce`"))?;
+        Ok(Manifest {
+            forest: ForestShape {
+                candidates: need(fs, "candidates")? as usize,
+                features: need(fs, "features")? as usize,
+                trees: need(fs, "trees")? as usize,
+                nodes_per_tree: need(fs, "nodes_per_tree")? as usize,
+                depth: need(fs, "depth")? as usize,
+                file: file(fs)?,
+            },
+            energy: EnergyShape {
+                max_nodes: need(er, "max_nodes")? as usize,
+                max_samples: need(er, "max_samples")? as usize,
+                file: file(er)?,
+            },
+        })
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "format": "hlo-text",
+      "forest_scorer": {"file": "forest_scorer.hlo.txt", "candidates": 1024,
+        "features": 32, "trees": 64, "nodes_per_tree": 512, "depth": 16,
+        "inputs": [], "outputs": []},
+      "energy_reduce": {"file": "energy_reduce.hlo.txt", "max_nodes": 4096,
+        "max_samples": 256, "inputs": [], "outputs": []}
+    }"#;
+
+    #[test]
+    fn parses_generated_manifest() {
+        let m = Manifest::parse(DOC).unwrap();
+        assert_eq!(m, Manifest::default_shapes());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"forest_scorer": {}, "energy_reduce": {}}"#).is_err());
+    }
+
+    #[test]
+    fn loads_repo_artifacts_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m, Manifest::default_shapes(), "artifacts drifted from aot.py contract");
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
+//! the L3 hot path (the `xla` crate over xla_extension's PJRT CPU client).
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py and DESIGN.md).
+//!
+//! [`Scorer`] is the dispatch point the search loop uses: the XLA path
+//! when artifacts are present, the bit-compatible pure-Rust [`fallback`]
+//! otherwise (also used for cross-checking in rust/tests/).
+
+pub mod fallback;
+pub mod manifest;
+
+pub use fallback::{energy_reduce_cpu, forest_score_cpu, ScoreOut};
+pub use manifest::{EnergyShape, ForestShape, Manifest};
+
+use crate::surrogate::ForestTensors;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Build a shaped f32 literal with a single copy (perf: `vec1` followed
+/// by `reshape` copies the buffer twice through the FFI; this goes
+/// straight to the shaped constructor — see EXPERIMENTS.md §Perf).
+fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)?)
+}
+
+/// Shaped i32 literal, single copy.
+fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)?)
+}
+
+/// Compiled AOT executables on the PJRT CPU client.
+pub struct XlaRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    forest_exe: xla::PjRtLoadedExecutable,
+    energy_exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+impl XlaRuntime {
+    /// Load + compile both artifacts from `dir` (once, at startup).
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir).context("loading artifacts/manifest.json")?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {file}"))
+        };
+        let forest_exe = compile(&manifest.forest.file)?;
+        let energy_exe = compile(&manifest.energy.file)?;
+        Ok(XlaRuntime { client, forest_exe, energy_exe, manifest })
+    }
+
+    /// Score exactly `candidates x features` rows (caller pads).
+    pub fn forest_score(
+        &self,
+        features: &[f32],
+        tensors: &ForestTensors,
+        kappa: f32,
+    ) -> Result<ScoreOut> {
+        let fs = &self.manifest.forest;
+        anyhow::ensure!(
+            features.len() == fs.candidates * fs.features,
+            "features buffer {} != {}x{}",
+            features.len(),
+            fs.candidates,
+            fs.features
+        );
+        anyhow::ensure!(
+            tensors.trees == fs.trees && tensors.nodes_per_tree == fs.nodes_per_tree,
+            "forest tensors shape mismatch with artifact"
+        );
+        let tn = [fs.trees, fs.nodes_per_tree];
+        let inputs = [
+            lit_f32(features, &[fs.candidates, fs.features])?,
+            lit_i32(&tensors.feat, &tn)?,
+            lit_f32(&tensors.thresh, &tn)?,
+            lit_i32(&tensors.left, &tn)?,
+            lit_i32(&tensors.right, &tn)?,
+            lit_f32(&tensors.leaf, &tn)?,
+            lit_f32(&[kappa], &[1])?,
+        ];
+        let result = self.forest_exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let (mean, std, lcb) = result.to_tuple3()?;
+        Ok(ScoreOut {
+            mean: mean.to_vec::<f32>()?,
+            std: std.to_vec::<f32>()?,
+            lcb: lcb.to_vec::<f32>()?,
+        })
+    }
+
+    /// Reduce padded `[max_nodes, max_samples]` power traces.
+    #[allow(clippy::too_many_arguments)]
+    pub fn energy_reduce(
+        &self,
+        pkg: &[f32],
+        dram: &[f32],
+        active: &[f32],
+        n_samples: f32,
+        dt: f32,
+        runtime: f32,
+    ) -> Result<(Vec<f32>, f32, f32)> {
+        let es = &self.manifest.energy;
+        let len = es.max_nodes * es.max_samples;
+        anyhow::ensure!(pkg.len() == len && dram.len() == len, "power trace shape mismatch");
+        anyhow::ensure!(active.len() == es.max_nodes, "active mask shape mismatch");
+        let dims = [es.max_nodes, es.max_samples];
+        let inputs = [
+            lit_f32(pkg, &dims)?,
+            lit_f32(dram, &dims)?,
+            lit_f32(active, &[es.max_nodes])?,
+            lit_f32(&[n_samples], &[1])?,
+            lit_f32(&[dt], &[1])?,
+            lit_f32(&[runtime], &[1])?,
+        ];
+        let result = self.energy_exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let (node, avg, edp) = result.to_tuple3()?;
+        Ok((node.to_vec::<f32>()?, avg.to_vec::<f32>()?[0], edp.to_vec::<f32>()?[0]))
+    }
+}
+
+/// Execution backend for the search loop: AOT XLA artifacts when
+/// available, the pure-Rust reference otherwise.
+pub enum Scorer {
+    Xla(Box<XlaRuntime>),
+    Fallback(Manifest),
+}
+
+impl Scorer {
+    /// Load the XLA runtime from `dir`, falling back to pure Rust.
+    pub fn auto(dir: &Path) -> Scorer {
+        match XlaRuntime::load(dir) {
+            Ok(rt) => Scorer::Xla(Box::new(rt)),
+            Err(e) => {
+                log::warn!("AOT artifacts unavailable ({e:#}); using pure-Rust scorer");
+                Scorer::Fallback(Manifest::default_shapes())
+            }
+        }
+    }
+
+    pub fn fallback() -> Scorer {
+        Scorer::Fallback(Manifest::default_shapes())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match self {
+            Scorer::Xla(rt) => &rt.manifest,
+            Scorer::Fallback(m) => m,
+        }
+    }
+
+    pub fn is_accelerated(&self) -> bool {
+        matches!(self, Scorer::Xla(_))
+    }
+
+    /// Score `n` encoded candidates (row-major, `dim` == manifest feature
+    /// width required from the caller via padding) — handles batching to
+    /// the artifact's fixed candidate count and trims the padded tail.
+    pub fn score_candidates(
+        &self,
+        rows: &[f32],
+        n: usize,
+        tensors: &ForestTensors,
+        kappa: f32,
+    ) -> Result<ScoreOut> {
+        let f = self.manifest().forest.features;
+        anyhow::ensure!(rows.len() == n * f, "rows buffer mismatch: {} != {n}*{f}", rows.len());
+        match self {
+            Scorer::Fallback(_) => Ok(forest_score_cpu(rows, f, tensors, kappa)),
+            Scorer::Xla(rt) => {
+                let c = rt.manifest.forest.candidates;
+                let mut out =
+                    ScoreOut { mean: Vec::with_capacity(n), std: Vec::with_capacity(n), lcb: Vec::with_capacity(n) };
+                let mut batch = vec![0.0f32; c * f];
+                let mut i = 0;
+                while i < n {
+                    let take = (n - i).min(c);
+                    batch[..take * f].copy_from_slice(&rows[i * f..(i + take) * f]);
+                    for x in batch[take * f..].iter_mut() {
+                        *x = 0.0;
+                    }
+                    let s = rt.forest_score(&batch, tensors, kappa)?;
+                    out.mean.extend_from_slice(&s.mean[..take]);
+                    out.std.extend_from_slice(&s.std[..take]);
+                    out.lcb.extend_from_slice(&s.lcb[..take]);
+                    i += take;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Reduce a (possibly smaller) `[nodes, samples]` trace pair: pads to
+    /// the artifact shape on the XLA path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn reduce_energy(
+        &self,
+        pkg: &[f32],
+        dram: &[f32],
+        nodes: usize,
+        samples: usize,
+        n_samples: f32,
+        dt: f32,
+        runtime: f32,
+    ) -> Result<(Vec<f32>, f32, f32)> {
+        anyhow::ensure!(pkg.len() == nodes * samples && dram.len() == nodes * samples);
+        match self {
+            Scorer::Fallback(_) => {
+                let active = vec![1.0f32; nodes];
+                Ok(energy_reduce_cpu(pkg, dram, &active, samples, n_samples, dt, runtime))
+            }
+            Scorer::Xla(rt) => {
+                let es = rt.manifest.energy.clone();
+                anyhow::ensure!(
+                    nodes <= es.max_nodes && samples <= es.max_samples,
+                    "trace {nodes}x{samples} exceeds artifact {}x{}",
+                    es.max_nodes,
+                    es.max_samples
+                );
+                let mut p = vec![0.0f32; es.max_nodes * es.max_samples];
+                let mut d = vec![0.0f32; es.max_nodes * es.max_samples];
+                for i in 0..nodes {
+                    p[i * es.max_samples..i * es.max_samples + samples]
+                        .copy_from_slice(&pkg[i * samples..(i + 1) * samples]);
+                    d[i * es.max_samples..i * es.max_samples + samples]
+                        .copy_from_slice(&dram[i * samples..(i + 1) * samples]);
+                }
+                let mut active = vec![0.0f32; es.max_nodes];
+                for a in active[..nodes].iter_mut() {
+                    *a = 1.0;
+                }
+                let (node, avg, edp) =
+                    rt.energy_reduce(&p, &d, &active, n_samples, dt, runtime)?;
+                Ok((node[..nodes].to_vec(), avg, edp))
+            }
+        }
+    }
+}
+
+/// Default artifacts directory (repo-root relative).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,213 @@
+//! Monte-Carlo tree search over the parameter space.
+//!
+//! The paper's background (§II) contrasts vector-space search (ytopt)
+//! with tree-space search (mctree [47][48], ProTuner [45], Telamon
+//! [51]): every level of the tree fixes one parameter, leaves are
+//! complete configurations, and UCT balances exploration/exploitation
+//! down the tree. Implemented here as an alternative strategy so the
+//! paper's framing can be tested empirically (benches/perf.rs ablation).
+//!
+//! Minimization: rewards are negated objectives normalized online.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::SearchStrategy;
+use crate::space::{ConfigSpace, Configuration};
+use crate::util::Pcg32;
+
+#[derive(Debug, Default, Clone)]
+struct NodeStats {
+    visits: u64,
+    total_reward: f64,
+}
+
+pub struct McTreeSearch {
+    space: Arc<ConfigSpace>,
+    /// UCT exploration constant.
+    c: f64,
+    /// Stats per (depth, partial-assignment-key, value-index).
+    stats: HashMap<(usize, String, u32), NodeStats>,
+    /// Online objective normalization.
+    obs_min: f64,
+    obs_max: f64,
+    /// Pending proposal path (filled by propose, consumed by observe).
+    last_path: Option<Configuration>,
+}
+
+impl McTreeSearch {
+    pub fn new(space: Arc<ConfigSpace>) -> Self {
+        McTreeSearch {
+            space,
+            c: std::f64::consts::SQRT_2,
+            stats: HashMap::new(),
+            obs_min: f64::INFINITY,
+            obs_max: f64::NEG_INFINITY,
+            last_path: None,
+        }
+    }
+
+    fn key(prefix: &[u32]) -> String {
+        prefix.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+    }
+
+    /// UCT selection down the parameter levels; unvisited values win ties
+    /// (forced exploration), the rest of the path is a random rollout.
+    fn select_path(&self, rng: &mut Pcg32) -> Configuration {
+        let mut prefix: Vec<u32> = Vec::with_capacity(self.space.dim());
+        for (depth, p) in self.space.params().iter().enumerate() {
+            let key = Self::key(&prefix);
+            let card = p.domain.cardinality();
+            let parent_visits: u64 = (0..card)
+                .map(|v| {
+                    self.stats
+                        .get(&(depth, key.clone(), v as u32))
+                        .map(|s| s.visits)
+                        .unwrap_or(0)
+                })
+                .sum();
+            if parent_visits == 0 {
+                // untouched subtree: random rollout from here
+                prefix.push(rng.index(card) as u32);
+                continue;
+            }
+            let mut best_v = 0u32;
+            let mut best_score = f64::NEG_INFINITY;
+            for v in 0..card {
+                let s = self.stats.get(&(depth, key.clone(), v as u32));
+                let score = match s {
+                    None | Some(NodeStats { visits: 0, .. }) => {
+                        // unvisited arm: infinite UCT, randomized tiebreak
+                        f64::INFINITY - rng.f64()
+                    }
+                    Some(s) => {
+                        s.total_reward / s.visits as f64
+                            + self.c
+                                * ((parent_visits as f64).ln() / s.visits as f64).sqrt()
+                    }
+                };
+                if score > best_score {
+                    best_score = score;
+                    best_v = v as u32;
+                }
+            }
+            prefix.push(best_v);
+        }
+        Configuration::from_indices(prefix)
+    }
+
+    fn backprop(&mut self, cfg: &Configuration, reward: f64) {
+        let idx = cfg.indices();
+        for depth in 0..idx.len() {
+            let key = Self::key(&idx[..depth]);
+            let e = self.stats.entry((depth, key, idx[depth])).or_default();
+            e.visits += 1;
+            e.total_reward += reward;
+        }
+    }
+}
+
+impl SearchStrategy for McTreeSearch {
+    fn propose(&mut self, rng: &mut Pcg32) -> Configuration {
+        // re-sample until valid (constraints are rare in the paper spaces)
+        for _ in 0..100 {
+            let c = self.select_path(rng);
+            if self.space.is_valid(&c) {
+                self.last_path = Some(c.clone());
+                return c;
+            }
+        }
+        self.space.sample(rng)
+    }
+
+    fn observe(&mut self, cfg: &Configuration, objective: f64) {
+        self.obs_min = self.obs_min.min(objective);
+        self.obs_max = self.obs_max.max(objective);
+        let span = (self.obs_max - self.obs_min).max(1e-12);
+        // reward in [0, 1], higher = better (lower objective)
+        let reward = (self.obs_max - objective) / span;
+        self.backprop(cfg, reward);
+        self.last_path = None;
+    }
+
+    fn name(&self) -> &'static str {
+        "mctree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Param, ParamDomain};
+
+    fn toy_space() -> Arc<ConfigSpace> {
+        let mut s = ConfigSpace::new("toy");
+        for name in ["a", "b", "c"] {
+            s.add(Param::new(name, ParamDomain::ordinal(&[0, 1, 2, 3, 4, 5])));
+        }
+        Arc::new(s)
+    }
+
+    fn objective(space: &ConfigSpace, c: &Configuration) -> f64 {
+        let t = [4.0, 1.0, 3.0];
+        ["a", "b", "c"]
+            .iter()
+            .zip(t.iter())
+            .map(|(n, t)| {
+                let v = space.int_value(c, n) as f64;
+                (v - t) * (v - t)
+            })
+            .sum()
+    }
+
+    #[test]
+    fn converges_on_toy_bowl() {
+        let space = toy_space();
+        let mut mcts = McTreeSearch::new(space.clone());
+        let mut rng = Pcg32::seeded(1);
+        let mut best = f64::INFINITY;
+        for _ in 0..120 {
+            let c = mcts.propose(&mut rng);
+            let y = objective(&space, &c);
+            best = best.min(y);
+            mcts.observe(&c, y);
+        }
+        assert!(best <= 1.0, "MCTS best {best} after 120/216 evals");
+    }
+
+    #[test]
+    fn beats_pure_random_on_average() {
+        let space = toy_space();
+        let mut wins = 0;
+        for seed in 0..5 {
+            let run = |mut s: Box<dyn SearchStrategy>| {
+                let mut rng = Pcg32::seeded(seed);
+                let mut best = f64::INFINITY;
+                for _ in 0..60 {
+                    let c = s.propose(&mut rng);
+                    let y = objective(&space, &c);
+                    best = best.min(y);
+                    s.observe(&c, y);
+                }
+                best
+            };
+            let m = run(Box::new(McTreeSearch::new(space.clone())));
+            let r = run(Box::new(crate::search::RandomSearch::new(space.clone())));
+            if m <= r {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 3, "MCTS won {wins}/5");
+    }
+
+    #[test]
+    fn stats_accumulate_along_paths() {
+        let space = toy_space();
+        let mut mcts = McTreeSearch::new(space.clone());
+        let cfg = Configuration::from_indices(vec![1, 2, 3]);
+        mcts.observe(&cfg, 5.0);
+        mcts.observe(&cfg, 3.0);
+        let root = mcts.stats.get(&(0, String::new(), 1)).unwrap();
+        assert_eq!(root.visits, 2);
+    }
+}

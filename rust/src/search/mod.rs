@@ -1,0 +1,53 @@
+//! Search strategies over a [`ConfigSpace`]: the Bayesian-optimization
+//! loop (the paper's method) plus random and grid baselines and the
+//! transfer-learning warm start (paper §VIII future work).
+
+pub mod bo;
+pub mod grid;
+pub mod mctree;
+pub mod random;
+pub mod transfer;
+
+pub use bo::{BoConfig, BayesianOptimizer, SurrogateKind};
+pub use grid::GridSearch;
+pub use mctree::McTreeSearch;
+pub use random::RandomSearch;
+pub use transfer::warm_start;
+
+use crate::space::Configuration;
+use crate::util::Pcg32;
+
+/// A sequential search strategy: propose, evaluate (externally), observe.
+pub trait SearchStrategy {
+    /// Next configuration to evaluate. Strategies avoid re-proposing
+    /// already-observed points while the space allows it.
+    fn propose(&mut self, rng: &mut Pcg32) -> Configuration;
+
+    /// Feed back the measured objective (lower is better).
+    fn observe(&mut self, cfg: &Configuration, objective: f64);
+
+    /// Strategy name (database/bench labels).
+    fn name(&self) -> &'static str;
+}
+
+/// Which strategy to construct (CLI / config selection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    Bo,
+    Random,
+    Grid,
+    /// Monte-Carlo tree search (the mctree/ProTuner family, §II).
+    Mctree,
+}
+
+impl StrategyKind {
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "bo" | "bayesian" | "ytopt" => Some(StrategyKind::Bo),
+            "random" => Some(StrategyKind::Random),
+            "grid" => Some(StrategyKind::Grid),
+            "mctree" | "mcts" => Some(StrategyKind::Mctree),
+            _ => None,
+        }
+    }
+}

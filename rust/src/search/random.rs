@@ -1,0 +1,62 @@
+//! Random-search baseline (uniform valid sampling without repetition).
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use super::SearchStrategy;
+use crate::space::{ConfigSpace, Configuration};
+use crate::util::Pcg32;
+
+pub struct RandomSearch {
+    space: Arc<ConfigSpace>,
+    seen: HashSet<Configuration>,
+}
+
+impl RandomSearch {
+    pub fn new(space: Arc<ConfigSpace>) -> Self {
+        RandomSearch { space, seen: HashSet::new() }
+    }
+}
+
+impl SearchStrategy for RandomSearch {
+    fn propose(&mut self, rng: &mut Pcg32) -> Configuration {
+        for _ in 0..2000 {
+            let c = self.space.sample(rng);
+            if !self.seen.contains(&c) {
+                return c;
+            }
+        }
+        self.space.sample(rng)
+    }
+
+    fn observe(&mut self, cfg: &Configuration, _objective: f64) {
+        self.seen.insert(cfg.clone());
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Param, ParamDomain};
+
+    #[test]
+    fn avoids_repeats_until_exhaustion() {
+        let mut s = ConfigSpace::new("t");
+        s.add(Param::new("a", ParamDomain::ordinal(&[0, 1, 2])));
+        s.add(Param::new("b", ParamDomain::Toggle));
+        let mut rs = RandomSearch::new(Arc::new(s));
+        let mut rng = Pcg32::seeded(1);
+        let mut seen = HashSet::new();
+        for _ in 0..6 {
+            let c = rs.propose(&mut rng);
+            assert!(seen.insert(c.clone()));
+            rs.observe(&c, 0.0);
+        }
+        // space exhausted: repeats now allowed rather than an infinite loop
+        let _ = rs.propose(&mut rng);
+    }
+}

@@ -1,0 +1,46 @@
+//! Transfer-learning warm start (paper §VIII future work): seed the
+//! target-scale search with observations from a small-scale run.
+//!
+//! Objectives measured at the source scale are rescaled by the ratio of
+//! target/source baselines so the surrogate sees values in the target's
+//! range; the *ordering structure* of the landscape is what transfers.
+
+use crate::space::Configuration;
+
+/// Rescale source-scale observations into the target scale's range.
+///
+/// `source_baseline` / `target_baseline` are the default-configuration
+/// objectives at each scale.
+pub fn warm_start(
+    source_obs: &[(Configuration, f64)],
+    source_baseline: f64,
+    target_baseline: f64,
+) -> Vec<(Configuration, f64)> {
+    assert!(source_baseline > 0.0 && target_baseline > 0.0);
+    let ratio = target_baseline / source_baseline;
+    source_obs.iter().map(|(c, y)| (c.clone(), y * ratio)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rescales_by_baseline_ratio() {
+        let obs = vec![
+            (Configuration::from_indices(vec![0]), 2.0),
+            (Configuration::from_indices(vec![1]), 4.0),
+        ];
+        let out = warm_start(&obs, 2.0, 20.0);
+        assert_eq!(out[0].1, 20.0);
+        assert_eq!(out[1].1, 40.0);
+        // ordering preserved
+        assert!(out[0].1 < out[1].1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive_baselines() {
+        warm_start(&[], 0.0, 1.0);
+    }
+}

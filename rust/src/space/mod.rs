@@ -1,0 +1,10 @@
+//! Search-space expression and sampling: the ConfigSpace substrate
+//! (paper §II requirement 1, §IV-A) plus the exact Table III spaces.
+
+pub mod paper;
+mod param;
+#[allow(clippy::module_inception)]
+mod space;
+
+pub use param::{Param, ParamDomain, ParamValue};
+pub use space::{ConfigSpace, Configuration, Constraint};

@@ -1,0 +1,207 @@
+//! The six parameter spaces of Table III, reconstructed exactly.
+//!
+//! The paper gives, per application: the system parameters (OpenMP runtime
+//! environment variables), the count of *unique* application parameters
+//! ("some of them are used repeatedly in the application code"), and the
+//! total space size. We reconstruct factorizations that (a) match the
+//! stated unique-parameter counts, (b) respect the described ranges, and
+//! (c) hit the exact Table III sizes:
+//!
+//! | space            | factorization                                          | size      |
+//! |------------------|---------------------------------------------------------|-----------|
+//! | XSBench          | 270 env x block(12) x parallel-for at 4 sites (2^4)      | 51,840    |
+//! | XSBench-mixed    | 270 env x block(12) x unroll(2) x tile_x(11) x tile_y(11)|           |
+//! |                  |   x parallel-for at 3 sites (2^3)                        | 6,272,640 |
+//! | XSBench-offload  | 810 env x sched-chunk(7) x simd(2) x device(4)           |           |
+//! |                  |   x parallel-for at 2 sites (2^2)                        | 181,440   |
+//! | SWFFT            | 270 env x MPI_Barrier at 2 sites (2^2)                   | 1,080     |
+//! | AMG              | 270 env x unroll3 at 3 + unroll6 at 3 + pf at 5 (2^11)   | 552,960   |
+//! | SW4lite          | 270 env x unroll6 at 3 + pf at 5 + nowait at 4           |           |
+//! |                  |   + MPI_Barrier(1) (2^13)                                | 2,211,840 |
+//!
+//! 270 env = 10 thread choices x 3 OMP_PLACES x 3 OMP_PROC_BIND x
+//! 3 OMP_SCHEDULE; the offload space adds OMP_TARGET_OFFLOAD (x3 = 810).
+//! Thread choices honour the paper's launch-algorithm divisibility rules
+//! (§VI): on Theta n/2, n/3 or n/4 integer past 64; on Summit n/4 integer.
+
+use super::param::{Param, ParamDomain};
+use super::space::ConfigSpace;
+use crate::apps::AppKind;
+use crate::platform::PlatformKind;
+
+/// Thread-count choices (10 per system, paper §V-A / §V-B).
+pub fn thread_choices(platform: PlatformKind) -> &'static [i64] {
+    match platform {
+        // 64 cores x 4 SMT = up to 256; >64 must divide evenly per -j level
+        PlatformKind::Theta => &[4, 8, 16, 32, 64, 96, 128, 144, 192, 256],
+        // 42 cores x 4 SMT = up to 168; jsrun -bpacked:n/4 needs n % 4 == 0
+        PlatformKind::Summit => &[4, 8, 16, 24, 32, 48, 64, 84, 128, 168],
+    }
+}
+
+/// XSBench block-size choices (12, range 10..400, default 100; §V-A).
+pub const BLOCK_SIZES: [i64; 12] = [10, 20, 40, 60, 80, 100, 130, 160, 200, 250, 300, 400];
+
+/// 2D tile sizes for the mixed-pragma loop tiling (11, range 2..1024).
+pub const TILE_SIZES: [i64; 11] = [2, 4, 8, 16, 32, 64, 128, 256, 512, 768, 1024];
+
+/// OpenMP target schedule chunk sizes (7 = six chunks in 1..32 or absent).
+pub const OFFLOAD_CHUNKS: [i64; 7] = [0, 1, 2, 4, 8, 16, 32];
+
+/// Device clause choices for the offload version (4 incl. "unset" = -1).
+pub const OFFLOAD_DEVICES: [i64; 4] = [-1, 0, 2, 4];
+
+fn add_omp_env(s: &mut ConfigSpace, platform: PlatformKind) {
+    s.add(Param::new("OMP_NUM_THREADS", ParamDomain::ordinal(thread_choices(platform))));
+    s.add(Param::new("OMP_PLACES", ParamDomain::categorical(&["cores", "threads", "sockets"])));
+    s.add(Param::new("OMP_PROC_BIND", ParamDomain::categorical(&["close", "spread", "master"])));
+    s.add(Param::new("OMP_SCHEDULE", ParamDomain::categorical(&["static", "dynamic", "auto"])));
+}
+
+fn add_toggles(s: &mut ConfigSpace, base: &str, sites: usize) {
+    for i in 0..sites {
+        s.add(Param::new(&format!("{base}_{i}"), ParamDomain::Toggle));
+    }
+}
+
+/// Build the Table III space for an application on a platform.
+pub fn build_space(app: AppKind, platform: PlatformKind) -> ConfigSpace {
+    let mut s = ConfigSpace::new(&format!("{}@{}", app.name(), platform.name()));
+    match app {
+        AppKind::XSBenchHistory | AppKind::XSBenchEvent => {
+            add_omp_env(&mut s, platform);
+            s.add(Param::new("block_size", ParamDomain::ordinal(&BLOCK_SIZES)));
+            add_toggles(&mut s, "parallel_for", 4);
+        }
+        AppKind::XSBenchMixed => {
+            add_omp_env(&mut s, platform);
+            s.add(Param::new("block_size", ParamDomain::ordinal(&BLOCK_SIZES)));
+            s.add(Param::new("unroll_full", ParamDomain::Toggle));
+            s.add(Param::new("tile_x", ParamDomain::ordinal(&TILE_SIZES)));
+            s.add(Param::new("tile_y", ParamDomain::ordinal(&TILE_SIZES)));
+            add_toggles(&mut s, "parallel_for", 3);
+        }
+        AppKind::XSBenchOffload => {
+            add_omp_env(&mut s, platform);
+            s.add(Param::new(
+                "OMP_TARGET_OFFLOAD",
+                ParamDomain::categorical(&["DEFAULT", "DISABLED", "MANDATORY"]),
+            ));
+            s.add(Param::new("sched_chunk", ParamDomain::ordinal(&OFFLOAD_CHUNKS)));
+            s.add(Param::new("simd", ParamDomain::Toggle));
+            s.add(Param::new("device", ParamDomain::ordinal(&OFFLOAD_DEVICES)));
+            add_toggles(&mut s, "parallel_for", 2);
+        }
+        AppKind::Swfft => {
+            add_omp_env(&mut s, platform);
+            add_toggles(&mut s, "mpi_barrier", 2);
+        }
+        AppKind::Amg => {
+            add_omp_env(&mut s, platform);
+            add_toggles(&mut s, "unroll3", 3);
+            add_toggles(&mut s, "unroll6", 3);
+            add_toggles(&mut s, "parallel_for", 5);
+        }
+        AppKind::Sw4lite => {
+            add_omp_env(&mut s, platform);
+            add_toggles(&mut s, "unroll6", 3);
+            add_toggles(&mut s, "parallel_for", 5);
+            add_toggles(&mut s, "for_nowait", 4);
+            add_toggles(&mut s, "mpi_barrier", 1);
+        }
+    }
+    s
+}
+
+/// Expected Table III size for an app space (platform-independent).
+pub fn table3_size(app: AppKind) -> u128 {
+    match app {
+        AppKind::XSBenchHistory | AppKind::XSBenchEvent => 51_840,
+        AppKind::XSBenchMixed => 6_272_640,
+        AppKind::XSBenchOffload => 181_440,
+        AppKind::Swfft => 1_080,
+        AppKind::Amg => 552_960,
+        AppKind::Sw4lite => 2_211_840,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    const ALL: [AppKind; 7] = [
+        AppKind::XSBenchHistory,
+        AppKind::XSBenchEvent,
+        AppKind::XSBenchMixed,
+        AppKind::XSBenchOffload,
+        AppKind::Swfft,
+        AppKind::Amg,
+        AppKind::Sw4lite,
+    ];
+
+    #[test]
+    fn sizes_match_table3_exactly() {
+        for app in ALL {
+            for platform in [PlatformKind::Theta, PlatformKind::Summit] {
+                let s = build_space(app, platform);
+                assert_eq!(s.size(), table3_size(app), "{app:?} on {platform:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn system_param_counts_match_table3() {
+        // 4 env vars for all spaces; 5 for the offload space.
+        for app in ALL {
+            let s = build_space(app, PlatformKind::Theta);
+            let env = s
+                .params()
+                .iter()
+                .filter(|p| p.name.starts_with("OMP_"))
+                .count();
+            let want = if matches!(app, AppKind::XSBenchOffload) { 5 } else { 4 };
+            assert_eq!(env, want, "{app:?}");
+        }
+    }
+
+    #[test]
+    fn thread_choices_satisfy_launch_divisibility() {
+        for &n in thread_choices(PlatformKind::Theta) {
+            if n > 64 && n <= 128 {
+                assert_eq!(n % 2, 0);
+            } else if n > 128 && n <= 192 {
+                assert_eq!(n % 3, 0);
+            } else if n > 192 {
+                assert_eq!(n % 4, 0);
+            }
+            assert!(n <= 256);
+        }
+        for &n in thread_choices(PlatformKind::Summit) {
+            assert_eq!(n % 4, 0, "Summit thread count {n} must divide by SMT 4");
+            assert!(n <= 168);
+        }
+    }
+
+    #[test]
+    fn sampling_each_space_is_valid() {
+        let mut rng = Pcg32::seeded(1);
+        for app in ALL {
+            let s = build_space(app, PlatformKind::Summit);
+            for _ in 0..50 {
+                let c = s.sample(&mut rng);
+                assert!(s.is_valid(&c));
+            }
+        }
+    }
+
+    #[test]
+    fn encode_fits_aot_feature_budget() {
+        // The AOT forest scorer has FEATURES=32 axes; every paper space
+        // must fit.
+        for app in ALL {
+            let s = build_space(app, PlatformKind::Theta);
+            assert!(s.dim() <= 32, "{app:?} has {} params", s.dim());
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Tunable-parameter domains and values (the ConfigSpace substrate).
+//!
+//! The paper (§IV-A) expresses a search space as a fixed vector of
+//! parameter "knobs" — OpenMP runtime environment variables plus
+//! application parameters (pragmas, clauses, block/tile sizes). Every knob
+//! here is a finite domain so the cartesian size (Table III) is exact.
+
+use std::fmt;
+
+/// A concrete value taken by one parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Str(String),
+    Int(i64),
+}
+
+impl ParamValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ParamValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            ParamValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParamValue::Str(s) => write!(f, "{s}"),
+            ParamValue::Int(i) => write!(f, "{i}"),
+        }
+    }
+}
+
+/// The finite domain of one parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamDomain {
+    /// Unordered string choices (e.g. OMP_PLACES = cores|threads|sockets).
+    Categorical(Vec<String>),
+    /// Ordered numeric choices (e.g. thread counts, block/tile sizes).
+    Ordinal(Vec<i64>),
+    /// On/off pragma toggle — categorical {off, on} but encoded ordinally.
+    Toggle,
+}
+
+impl ParamDomain {
+    pub fn categorical(choices: &[&str]) -> Self {
+        ParamDomain::Categorical(choices.iter().map(|s| s.to_string()).collect())
+    }
+
+    pub fn ordinal(choices: &[i64]) -> Self {
+        assert!(choices.windows(2).all(|w| w[0] < w[1]), "ordinal choices must be sorted");
+        ParamDomain::Ordinal(choices.to_vec())
+    }
+
+    /// Number of distinct values.
+    pub fn cardinality(&self) -> usize {
+        match self {
+            ParamDomain::Categorical(c) => c.len(),
+            ParamDomain::Ordinal(c) => c.len(),
+            ParamDomain::Toggle => 2,
+        }
+    }
+
+    /// The `i`-th value of the domain (i < cardinality).
+    pub fn value_at(&self, i: usize) -> ParamValue {
+        match self {
+            ParamDomain::Categorical(c) => ParamValue::Str(c[i].clone()),
+            ParamDomain::Ordinal(c) => ParamValue::Int(c[i]),
+            ParamDomain::Toggle => ParamValue::Int(i as i64),
+        }
+    }
+
+    /// Inverse of `value_at`.
+    pub fn index_of(&self, v: &ParamValue) -> Option<usize> {
+        match (self, v) {
+            (ParamDomain::Categorical(c), ParamValue::Str(s)) => c.iter().position(|x| x == s),
+            (ParamDomain::Ordinal(c), ParamValue::Int(i)) => c.iter().position(|x| x == i),
+            (ParamDomain::Toggle, ParamValue::Int(i)) if *i == 0 || *i == 1 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    /// True if the surrogate should treat the encoded axis as ordered.
+    pub fn is_ordered(&self) -> bool {
+        !matches!(self, ParamDomain::Categorical(_))
+    }
+}
+
+/// A named tunable parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub domain: ParamDomain,
+}
+
+impl Param {
+    pub fn new(name: &str, domain: ParamDomain) -> Self {
+        Param { name: name.to_string(), domain }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cardinality_and_values() {
+        let d = ParamDomain::categorical(&["static", "dynamic", "auto"]);
+        assert_eq!(d.cardinality(), 3);
+        assert_eq!(d.value_at(1), ParamValue::Str("dynamic".into()));
+        assert_eq!(d.index_of(&ParamValue::Str("auto".into())), Some(2));
+        assert_eq!(d.index_of(&ParamValue::Str("guided".into())), None);
+    }
+
+    #[test]
+    fn ordinal_roundtrip() {
+        let d = ParamDomain::ordinal(&[4, 8, 16, 32]);
+        for i in 0..d.cardinality() {
+            let v = d.value_at(i);
+            assert_eq!(d.index_of(&v), Some(i));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn ordinal_must_be_sorted() {
+        ParamDomain::ordinal(&[8, 4]);
+    }
+
+    #[test]
+    fn toggle() {
+        let d = ParamDomain::Toggle;
+        assert_eq!(d.cardinality(), 2);
+        assert_eq!(d.value_at(1), ParamValue::Int(1));
+        assert!(d.is_ordered());
+    }
+}

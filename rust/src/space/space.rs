@@ -1,0 +1,355 @@
+//! `ConfigSpace`: the search-space expression + valid-only sampling
+//! (Category 4 in the paper's taxonomy, §II).
+
+use super::param::{Param, ParamValue};
+use crate::util::Pcg32;
+
+/// A point in the space: one value index per parameter.
+///
+/// Storing *indices* (not values) makes hashing, encoding, and neighbour
+/// moves O(1) per axis; values are materialized through the space.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Configuration {
+    idx: Vec<u32>,
+}
+
+impl Configuration {
+    pub fn from_indices(idx: Vec<u32>) -> Self {
+        Configuration { idx }
+    }
+
+    pub fn indices(&self) -> &[u32] {
+        &self.idx
+    }
+
+    pub fn key(&self) -> String {
+        let parts: Vec<String> = self.idx.iter().map(|i| i.to_string()).collect();
+        parts.join(",")
+    }
+}
+
+/// Validity predicate: Category-4 frameworks sample only valid points.
+pub type Constraint = fn(&ConfigSpace, &Configuration) -> bool;
+
+/// A fixed vector space of tunable parameters (paper §IV-A, Table III).
+///
+/// Debug shows name/dim/size (constraints are fn pointers).
+pub struct ConfigSpace {
+    name: String,
+    params: Vec<Param>,
+    constraints: Vec<(String, Constraint)>,
+}
+
+impl std::fmt::Debug for ConfigSpace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ConfigSpace")
+            .field("name", &self.name)
+            .field("dim", &self.params.len())
+            .field("size", &self.size())
+            .field("constraints", &self.constraints.len())
+            .finish()
+    }
+}
+
+impl ConfigSpace {
+    pub fn new(name: &str) -> Self {
+        ConfigSpace { name: name.to_string(), params: Vec::new(), constraints: Vec::new() }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn add(&mut self, param: Param) -> &mut Self {
+        assert!(
+            self.params.iter().all(|p| p.name != param.name),
+            "duplicate parameter {}",
+            param.name
+        );
+        self.params.push(param);
+        self
+    }
+
+    /// Declare a validity constraint (named, for diagnostics).
+    pub fn constrain(&mut self, name: &str, c: Constraint) -> &mut Self {
+        self.constraints.push((name.to_string(), c));
+        self
+    }
+
+    pub fn params(&self) -> &[Param] {
+        &self.params
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+
+    /// Cartesian size of the space (Table III "space size"); constraints
+    /// are not discounted (the paper reports raw cartesian sizes too).
+    pub fn size(&self) -> u128 {
+        self.params.iter().map(|p| p.domain.cardinality() as u128).product()
+    }
+
+    /// Value of `config` for the named parameter.
+    pub fn value(&self, config: &Configuration, name: &str) -> Option<ParamValue> {
+        let i = self.param_index(name)?;
+        Some(self.params[i].domain.value_at(config.idx[i] as usize))
+    }
+
+    /// Integer value accessor (panics on type mismatch — programmer error).
+    pub fn int_value(&self, config: &Configuration, name: &str) -> i64 {
+        self.value(config, name)
+            .and_then(|v| v.as_int())
+            .unwrap_or_else(|| panic!("no int param {name}"))
+    }
+
+    /// String value accessor.
+    pub fn str_value(&self, config: &Configuration, name: &str) -> String {
+        match self.value(config, name) {
+            Some(ParamValue::Str(s)) => s,
+            other => panic!("no str param {name}: {other:?}"),
+        }
+    }
+
+    /// Render `config` as `name=value` pairs (database / log lines).
+    pub fn describe(&self, config: &Configuration) -> String {
+        let parts: Vec<String> = self
+            .params
+            .iter()
+            .zip(config.idx.iter())
+            .map(|(p, &i)| format!("{}={}", p.name, p.domain.value_at(i as usize)))
+            .collect();
+        parts.join(" ")
+    }
+
+    pub fn is_valid(&self, config: &Configuration) -> bool {
+        config.idx.len() == self.dim()
+            && config
+                .idx
+                .iter()
+                .zip(self.params.iter())
+                .all(|(&i, p)| (i as usize) < p.domain.cardinality())
+            && self.constraints.iter().all(|(_, c)| c(self, config))
+    }
+
+    /// Sample a *valid* configuration (Category 4: constraints are applied
+    /// during generation via bounded resampling of the violating axes).
+    pub fn sample(&self, rng: &mut Pcg32) -> Configuration {
+        for _ in 0..10_000 {
+            let idx = self
+                .params
+                .iter()
+                .map(|p| rng.index(p.domain.cardinality()) as u32)
+                .collect();
+            let c = Configuration::from_indices(idx);
+            if self.constraints.iter().all(|(_, f)| f(self, &c)) {
+                return c;
+            }
+        }
+        panic!("space '{}': constraints too tight — no valid sample in 10k draws", self.name);
+    }
+
+    /// Sample `n` distinct valid configurations (best effort on small
+    /// spaces: gives up on distinctness after enough collisions).
+    pub fn sample_distinct(&self, n: usize, rng: &mut Pcg32) -> Vec<Configuration> {
+        let mut out: Vec<Configuration> = Vec::with_capacity(n);
+        let mut misses = 0usize;
+        while out.len() < n && misses < 100 * n + 1000 {
+            let c = self.sample(rng);
+            if out.contains(&c) {
+                misses += 1;
+            } else {
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    /// Enumerate the `i`-th point of the cartesian product (mixed radix,
+    /// first parameter fastest). Used by the grid baseline and tests.
+    pub fn config_at(&self, mut i: u128) -> Configuration {
+        assert!(i < self.size());
+        let mut idx = Vec::with_capacity(self.dim());
+        for p in &self.params {
+            let card = p.domain.cardinality() as u128;
+            idx.push((i % card) as u32);
+            i /= card;
+        }
+        Configuration::from_indices(idx)
+    }
+
+    /// Inverse of `config_at`.
+    pub fn index_of(&self, config: &Configuration) -> u128 {
+        let mut mult = 1u128;
+        let mut acc = 0u128;
+        for (p, &i) in self.params.iter().zip(config.idx.iter()) {
+            acc += i as u128 * mult;
+            mult *= p.domain.cardinality() as u128;
+        }
+        acc
+    }
+
+    /// Encode for the surrogate: each axis → normalized index in [0, 1].
+    ///
+    /// Ordinal axes preserve order (RF split semantics match the numeric
+    /// ordering); categorical axes still get index positions — fine for
+    /// tree models, which only ever threshold, and identical to how the
+    /// skopt/ConfigSpace stack feeds RF surrogates.
+    pub fn encode_into(&self, config: &Configuration, out: &mut [f32]) {
+        assert!(out.len() >= self.dim());
+        for (j, (p, &i)) in self.params.iter().zip(config.idx.iter()).enumerate() {
+            let card = p.domain.cardinality();
+            out[j] = if card <= 1 { 0.0 } else { i as f32 / (card - 1) as f32 };
+        }
+        for slot in out.iter_mut().skip(self.dim()) {
+            *slot = 0.0;
+        }
+    }
+
+    pub fn encode(&self, config: &Configuration, feature_dim: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; feature_dim.max(self.dim())];
+        self.encode_into(config, &mut v);
+        v.truncate(feature_dim.max(self.dim()));
+        v
+    }
+
+    /// One-axis neighbour move (used to densify candidates near incumbents).
+    /// Ordinal axes step ±1; categorical axes resample the axis. Returns a
+    /// valid configuration.
+    pub fn neighbor(&self, config: &Configuration, rng: &mut Pcg32) -> Configuration {
+        for _ in 0..1000 {
+            let mut idx = config.idx.clone();
+            let j = rng.index(self.dim());
+            let card = self.params[j].domain.cardinality();
+            if card > 1 {
+                if self.params[j].domain.is_ordered() {
+                    let step: i64 = if rng.bool(0.5) { 1 } else { -1 };
+                    let ni = (idx[j] as i64 + step).clamp(0, card as i64 - 1);
+                    if ni as u32 == idx[j] {
+                        continue;
+                    }
+                    idx[j] = ni as u32;
+                } else {
+                    let mut ni = rng.index(card) as u32;
+                    if ni == idx[j] {
+                        ni = (ni + 1) % card as u32;
+                    }
+                    idx[j] = ni;
+                }
+            }
+            let c = Configuration::from_indices(idx);
+            if self.is_valid(&c) {
+                return c;
+            }
+        }
+        config.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::param::ParamDomain;
+
+    fn toy_space() -> ConfigSpace {
+        let mut s = ConfigSpace::new("toy");
+        s.add(Param::new("threads", ParamDomain::ordinal(&[4, 8, 16])));
+        s.add(Param::new("places", ParamDomain::categorical(&["cores", "threads"])));
+        s.add(Param::new("unroll", ParamDomain::Toggle));
+        s
+    }
+
+    #[test]
+    fn size_is_cartesian_product() {
+        assert_eq!(toy_space().size(), 3 * 2 * 2);
+    }
+
+    #[test]
+    fn config_at_roundtrip_full_enumeration() {
+        let s = toy_space();
+        for i in 0..s.size() {
+            let c = s.config_at(i);
+            assert!(s.is_valid(&c));
+            assert_eq!(s.index_of(&c), i);
+        }
+    }
+
+    #[test]
+    fn sample_valid_and_deterministic() {
+        let s = toy_space();
+        let mut r1 = Pcg32::seeded(3);
+        let mut r2 = Pcg32::seeded(3);
+        for _ in 0..50 {
+            let a = s.sample(&mut r1);
+            let b = s.sample(&mut r2);
+            assert_eq!(a, b);
+            assert!(s.is_valid(&a));
+        }
+    }
+
+    #[test]
+    fn constraint_respected_by_sampling() {
+        let mut s = toy_space();
+        // forbid threads=16 with places=threads
+        s.constrain("no-16-threads-place", |sp, c| {
+            !(sp.int_value(c, "threads") == 16 && sp.str_value(c, "places") == "threads")
+        });
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..200 {
+            let c = s.sample(&mut rng);
+            assert!(!(s.int_value(&c, "threads") == 16 && s.str_value(&c, "places") == "threads"));
+        }
+    }
+
+    #[test]
+    fn encode_normalizes_indices() {
+        let s = toy_space();
+        let c = s.config_at(0);
+        let e = s.encode(&c, 8);
+        assert_eq!(e.len(), 8);
+        assert!(e.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        let last = s.config_at(s.size() - 1);
+        let e2 = s.encode(&last, 8);
+        assert_eq!(&e2[..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(&e2[3..], &[0.0; 5]);
+    }
+
+    #[test]
+    fn neighbor_changes_at_most_one_axis_and_stays_valid() {
+        let s = toy_space();
+        let mut rng = Pcg32::seeded(8);
+        let c = s.sample(&mut rng);
+        for _ in 0..100 {
+            let n = s.neighbor(&c, &mut rng);
+            assert!(s.is_valid(&n));
+            let diff = c.indices().iter().zip(n.indices()).filter(|(a, b)| a != b).count();
+            assert!(diff <= 1);
+        }
+    }
+
+    #[test]
+    fn sample_distinct_unique() {
+        let s = toy_space();
+        let mut rng = Pcg32::seeded(9);
+        let v = s.sample_distinct(10, &mut rng);
+        assert_eq!(v.len(), 10);
+        for i in 0..v.len() {
+            for j in i + 1..v.len() {
+                assert_ne!(v[i], v[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn describe_lists_values() {
+        let s = toy_space();
+        let c = s.config_at(0);
+        let d = s.describe(&c);
+        assert!(d.contains("threads=4"));
+        assert!(d.contains("places=cores"));
+    }
+}

@@ -1,0 +1,178 @@
+//! Export a fitted forest into the AOT forest-scorer tensor encoding.
+//!
+//! The Pallas kernel consumes five padded `[TREES, NODES_PER_TREE]`
+//! tensors (feature index / threshold / left / right / leaf value); pad
+//! nodes are single leaves that self-loop, so lockstep descent is the
+//! identity on them and padding never changes predictions.
+
+use super::forest::RandomForest;
+
+/// Flat tensor bundle matching `artifacts/manifest.json`'s forest shapes.
+#[derive(Debug, Clone)]
+pub struct ForestTensors {
+    pub trees: usize,
+    pub nodes_per_tree: usize,
+    pub feat: Vec<i32>,    // [T*N]
+    pub thresh: Vec<f32>,  // [T*N]
+    pub left: Vec<i32>,    // [T*N]
+    pub right: Vec<i32>,   // [T*N]
+    pub leaf: Vec<f32>,    // [T*N]
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ExportError {
+    #[error("forest has {got} trees but the artifact expects {want}")]
+    TreeCount { got: usize, want: usize },
+    #[error("tree {tree} has {got} nodes, exceeding the artifact budget {want}")]
+    NodeBudget { tree: usize, got: usize, want: usize },
+    #[error("tree {tree} depth {got} exceeds artifact depth {want}")]
+    Depth { tree: usize, got: usize, want: usize },
+    #[error("forest dim {got} exceeds artifact feature budget {want}")]
+    FeatureDim { got: usize, want: usize },
+}
+
+/// Lower `forest` into padded tensors for the AOT scorer.
+///
+/// `depth` is the kernel's lockstep step count: trees must be at most
+/// `depth - 1` deep so every descent terminates on a leaf.
+pub fn export_forest(
+    forest: &RandomForest,
+    trees: usize,
+    nodes_per_tree: usize,
+    features: usize,
+    depth: usize,
+) -> Result<ForestTensors, ExportError> {
+    if forest.trees.len() != trees {
+        return Err(ExportError::TreeCount { got: forest.trees.len(), want: trees });
+    }
+    if forest.dim > features {
+        return Err(ExportError::FeatureDim { got: forest.dim, want: features });
+    }
+    let tn = trees * nodes_per_tree;
+    let mut out = ForestTensors {
+        trees,
+        nodes_per_tree,
+        feat: vec![-1; tn],
+        thresh: vec![0.0; tn],
+        left: vec![0; tn],
+        right: vec![0; tn],
+        leaf: vec![0.0; tn],
+    };
+    for (t, tree) in forest.trees.iter().enumerate() {
+        if tree.n_nodes() > nodes_per_tree {
+            return Err(ExportError::NodeBudget {
+                tree: t,
+                got: tree.n_nodes(),
+                want: nodes_per_tree,
+            });
+        }
+        let d = tree.depth();
+        if d + 1 > depth {
+            return Err(ExportError::Depth { tree: t, got: d, want: depth - 1 });
+        }
+        let base = t * nodes_per_tree;
+        for (i, n) in tree.nodes.iter().enumerate() {
+            out.feat[base + i] = n.feature;
+            out.thresh[base + i] = n.threshold;
+            out.left[base + i] = n.left as i32;
+            out.right[base + i] = n.right as i32;
+            out.leaf[base + i] = n.value;
+        }
+        // pad nodes: leaves that self-loop (feat already -1, value 0)
+        for i in tree.n_nodes()..nodes_per_tree {
+            out.left[base + i] = i as i32;
+            out.right[base + i] = i as i32;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::forest::ForestConfig;
+    use crate::util::Pcg32;
+
+    fn small_forest(n_trees: usize) -> RandomForest {
+        let mut rng = Pcg32::seeded(1);
+        let n = 120;
+        let dim = 4;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let row: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+            y.push(row[0] * 2.0 - row[2]);
+            x.extend(row);
+        }
+        let cfg = ForestConfig { n_trees, ..Default::default() };
+        RandomForest::fit(&x, &y, dim, &cfg, &mut rng)
+    }
+
+    #[test]
+    fn export_shapes_and_padding() {
+        let f = small_forest(8);
+        let t = export_forest(&f, 8, 512, 32, 16).unwrap();
+        assert_eq!(t.feat.len(), 8 * 512);
+        // padded region of tree 0 must be self-looping leaves
+        let n0 = f.trees[0].n_nodes();
+        for i in n0..512 {
+            assert_eq!(t.feat[i], -1);
+            assert_eq!(t.left[i], i as i32);
+            assert_eq!(t.right[i], i as i32);
+            assert_eq!(t.leaf[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn tensor_descent_matches_tree_predict() {
+        // emulate the kernel's lockstep descent in plain rust
+        let f = small_forest(4);
+        let t = export_forest(&f, 4, 512, 32, 16).unwrap();
+        let mut rng = Pcg32::seeded(2);
+        for _ in 0..50 {
+            let row: Vec<f32> = (0..4).map(|_| rng.f32()).collect();
+            let mut padded = vec![0.0f32; 32];
+            padded[..4].copy_from_slice(&row);
+            for (ti, tree) in f.trees.iter().enumerate() {
+                let base = ti * 512;
+                let mut idx = 0usize;
+                for _ in 0..16 {
+                    let nf = t.feat[base + idx];
+                    if nf >= 0 {
+                        idx = if padded[nf as usize] <= t.thresh[base + idx] {
+                            t.left[base + idx] as usize
+                        } else {
+                            t.right[base + idx] as usize
+                        };
+                    }
+                }
+                assert_eq!(t.leaf[base + idx], tree.predict_one(&row));
+            }
+        }
+    }
+
+    #[test]
+    fn errors_on_wrong_tree_count() {
+        let f = small_forest(4);
+        assert!(matches!(
+            export_forest(&f, 8, 512, 32, 16),
+            Err(ExportError::TreeCount { got: 4, want: 8 })
+        ));
+    }
+
+    #[test]
+    fn errors_on_feature_overflow() {
+        let f = small_forest(2);
+        assert!(matches!(
+            export_forest(&f, 2, 512, 3, 16),
+            Err(ExportError::FeatureDim { got: 4, want: 3 })
+        ));
+    }
+
+    #[test]
+    fn errors_on_depth_overflow() {
+        let f = small_forest(2);
+        // depth budget 1 => only stumps allowed; the fitted trees are deeper
+        assert!(matches!(export_forest(&f, 2, 512, 32, 2), Err(ExportError::Depth { .. })));
+    }
+}

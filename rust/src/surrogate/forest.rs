@@ -1,0 +1,260 @@
+//! Random-Forest regression surrogate (the paper's choice: their prior
+//! work compared RF / GP / Extra-Trees / GBRT and found RF best; §IV-A).
+//!
+//! Fitting runs in Rust every BO iteration (tens–hundreds of samples,
+//! control-flow heavy); *inference over candidate batches* is the AOT
+//! Pallas artifact — `export.rs` lowers the fitted ensemble into the
+//! kernel's tensor encoding.
+
+use super::tree::{SplitMode, Tree, TreeConfig};
+use crate::util::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct ForestConfig {
+    /// Ensemble size. MUST equal the AOT manifest's `trees` (64) when the
+    /// XLA scorer is used; the exporter checks.
+    pub n_trees: usize,
+    pub tree: TreeConfig,
+    pub bootstrap: bool,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        ForestConfig {
+            n_trees: 64,
+            tree: TreeConfig {
+                // sqrt-features is the RF classic; our spaces have <= 17
+                // axes so this keeps trees decorrelated
+                max_features: None, // set per fit from dim
+                ..TreeConfig::default()
+            },
+            bootstrap: true,
+        }
+    }
+}
+
+impl ForestConfig {
+    /// Extra-Trees variant (ablation).
+    pub fn extra_trees() -> Self {
+        let mut c = ForestConfig::default();
+        c.tree.split_mode = SplitMode::Random;
+        c.bootstrap = false;
+        c
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    pub trees: Vec<Tree>,
+    pub dim: usize,
+}
+
+impl RandomForest {
+    /// Fit on `n` rows of `dim` features (row-major x).
+    pub fn fit(x: &[f32], y: &[f32], dim: usize, cfg: &ForestConfig, rng: &mut Pcg32) -> Self {
+        assert!(!y.is_empty());
+        assert_eq!(x.len(), y.len() * dim);
+        let n = y.len();
+        let mut tree_cfg = cfg.tree.clone();
+        if tree_cfg.max_features.is_none() {
+            // ceil(sqrt(d)), the regression-RF default in the skopt stack
+            tree_cfg.max_features = Some(((dim as f64).sqrt().ceil() as usize).clamp(1, dim));
+        }
+        let trees = (0..cfg.n_trees)
+            .map(|t| {
+                let mut trng = rng.split(t as u64);
+                let rows: Vec<usize> = if cfg.bootstrap {
+                    (0..n).map(|_| trng.index(n)).collect()
+                } else {
+                    (0..n).collect()
+                };
+                Tree::fit_indices(x, y, dim, &rows, &tree_cfg, &mut trng)
+            })
+            .collect();
+        RandomForest { trees, dim }
+    }
+
+    /// Ensemble mean and population std for one row.
+    pub fn predict_one(&self, row: &[f32]) -> (f32, f32) {
+        debug_assert_eq!(row.len(), self.dim);
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for t in &self.trees {
+            let p = t.predict_one(row) as f64;
+            sum += p;
+            sq += p * p;
+        }
+        let k = self.trees.len() as f64;
+        let mean = sum / k;
+        let var = (sq / k - mean * mean).max(0.0);
+        (mean as f32, var.sqrt() as f32)
+    }
+
+    /// Batch prediction (pure-Rust path; the hot path goes through the
+    /// AOT scorer instead — see runtime::fallback for the shared shape).
+    pub fn predict(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let n = x.len() / self.dim;
+        let mut mean = Vec::with_capacity(n);
+        let mut std = Vec::with_capacity(n);
+        for i in 0..n {
+            let (m, s) = self.predict_one(&x[i * self.dim..(i + 1) * self.dim]);
+            mean.push(m);
+            std.push(s);
+        }
+        (mean, std)
+    }
+}
+
+/// Gradient-boosted trees, minimal variant for the surrogate ablation
+/// (constant-σ uncertainty from training residuals).
+#[derive(Debug, Clone)]
+pub struct GbrtLite {
+    trees: Vec<Tree>,
+    base: f32,
+    lr: f32,
+    resid_std: f32,
+    pub dim: usize,
+}
+
+impl GbrtLite {
+    pub fn fit(x: &[f32], y: &[f32], dim: usize, n_stages: usize, rng: &mut Pcg32) -> Self {
+        let n = y.len();
+        let base = y.iter().sum::<f32>() / n as f32;
+        let lr = 0.15f32;
+        let cfg = TreeConfig { max_depth: 4, min_samples_leaf: 2, ..TreeConfig::default() };
+        let mut pred = vec![base; n];
+        let mut trees = Vec::with_capacity(n_stages);
+        let mut resid: Vec<f32> = Vec::with_capacity(n);
+        for s in 0..n_stages {
+            resid.clear();
+            resid.extend(y.iter().zip(pred.iter()).map(|(yy, pp)| yy - pp));
+            let mut trng = rng.split(1000 + s as u64);
+            let t = Tree::fit(x, &resid, dim, &cfg, &mut trng);
+            for (i, p) in pred.iter_mut().enumerate() {
+                *p += lr * t.predict_one(&x[i * dim..(i + 1) * dim]);
+            }
+            trees.push(t);
+        }
+        let resid_std = {
+            let m = pred.iter().zip(y.iter()).map(|(p, yy)| (yy - p) as f64).sum::<f64>()
+                / n as f64;
+            let v = pred
+                .iter()
+                .zip(y.iter())
+                .map(|(p, yy)| {
+                    let d = (yy - p) as f64 - m;
+                    d * d
+                })
+                .sum::<f64>()
+                / n as f64;
+            v.sqrt() as f32
+        };
+        GbrtLite { trees, base, lr, resid_std, dim }
+    }
+
+    pub fn predict_one(&self, row: &[f32]) -> (f32, f32) {
+        let mut p = self.base;
+        for t in &self.trees {
+            p += self.lr * t.predict_one(row);
+        }
+        (p, self.resid_std.max(1e-6))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_data(n: usize, dim: usize, seed: u64, f: impl Fn(&[f32]) -> f32) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+            y.push(f(&row));
+            x.extend(row);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn learns_smooth_function() {
+        let (x, y) = make_data(300, 3, 1, |r| r[0] * 2.0 + r[1] * r[1] - 0.5 * r[2]);
+        let mut rng = Pcg32::seeded(2);
+        let rf = RandomForest::fit(&x, &y, 3, &ForestConfig::default(), &mut rng);
+        let (xt, yt) = make_data(100, 3, 99, |r| r[0] * 2.0 + r[1] * r[1] - 0.5 * r[2]);
+        let mut mse = 0.0f64;
+        for i in 0..yt.len() {
+            let (m, _) = rf.predict_one(&xt[i * 3..(i + 1) * 3]);
+            mse += ((m - yt[i]) as f64).powi(2);
+        }
+        mse /= yt.len() as f64;
+        assert!(mse < 0.02, "rf test mse {mse}");
+    }
+
+    #[test]
+    fn std_shrinks_near_training_data() {
+        // on training points the ensemble should mostly agree
+        let (x, y) = make_data(200, 2, 3, |r| (r[0] * 6.0).sin());
+        let mut rng = Pcg32::seeded(4);
+        let rf = RandomForest::fit(&x, &y, 2, &ForestConfig::default(), &mut rng);
+        let (_, s_train) = rf.predict_one(&x[0..2]);
+        // a far-out point (outside [0,1]^2) must be more uncertain
+        let (_, s_far) = rf.predict_one(&[3.0, -2.0]);
+        assert!(s_train <= s_far + 0.3, "train {s_train} far {s_far}");
+    }
+
+    #[test]
+    fn ensemble_size_matches_config() {
+        let (x, y) = make_data(50, 2, 5, |r| r[0]);
+        let mut rng = Pcg32::seeded(6);
+        let rf = RandomForest::fit(&x, &y, 2, &ForestConfig::default(), &mut rng);
+        assert_eq!(rf.trees.len(), 64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = make_data(80, 2, 7, |r| r[0] - r[1]);
+        let mut r1 = Pcg32::seeded(8);
+        let mut r2 = Pcg32::seeded(8);
+        let a = RandomForest::fit(&x, &y, 2, &ForestConfig::default(), &mut r1);
+        let b = RandomForest::fit(&x, &y, 2, &ForestConfig::default(), &mut r2);
+        let (ma, sa) = a.predict_one(&[0.3, 0.6]);
+        let (mb, sb) = b.predict_one(&[0.3, 0.6]);
+        assert_eq!(ma, mb);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn predict_batch_matches_predict_one() {
+        let (x, y) = make_data(60, 2, 9, |r| r[0] * r[1]);
+        let mut rng = Pcg32::seeded(10);
+        let rf = RandomForest::fit(&x, &y, 2, &ForestConfig::default(), &mut rng);
+        let probe: Vec<f32> = vec![0.1, 0.9, 0.5, 0.5, 0.9, 0.2];
+        let (mean, std) = rf.predict(&probe);
+        for i in 0..3 {
+            let (m, s) = rf.predict_one(&probe[i * 2..(i + 1) * 2]);
+            assert_eq!(mean[i], m);
+            assert_eq!(std[i], s);
+        }
+    }
+
+    #[test]
+    fn extra_trees_variant_fits() {
+        let (x, y) = make_data(200, 2, 11, |r| r[0] + r[1]);
+        let mut rng = Pcg32::seeded(12);
+        let rf = RandomForest::fit(&x, &y, 2, &ForestConfig::extra_trees(), &mut rng);
+        let (m, _) = rf.predict_one(&[0.5, 0.5]);
+        assert!((m - 1.0).abs() < 0.15, "extra-trees mean {m}");
+    }
+
+    #[test]
+    fn gbrt_fits_and_reports_uncertainty() {
+        let (x, y) = make_data(200, 2, 13, |r| 3.0 * r[0]);
+        let mut rng = Pcg32::seeded(14);
+        let g = GbrtLite::fit(&x, &y, 2, 50, &mut rng);
+        let (m, s) = g.predict_one(&[0.5, 0.1]);
+        assert!((m - 1.5).abs() < 0.2, "gbrt mean {m}");
+        assert!(s > 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Parameter-importance analysis from the fitted Random Forest.
+//!
+//! Classic split-gain importance: each internal node credits its feature
+//! with the variance reduction it achieved, weighted by the fraction of
+//! (bootstrap) samples flowing through it. Averaged over the ensemble
+//! and normalized to sum to 1, this tells the user *which knobs
+//! mattered* — e.g. that `mpi_barrier_0` dominates the SW4lite/Theta
+//! space — straight from the surrogate the search already fits.
+
+use super::forest::RandomForest;
+use super::tree::Tree;
+
+/// Per-tree split-gain accumulation. Requires replaying the training
+/// data to recover per-node sample counts and variances.
+fn tree_importance(tree: &Tree, x: &[f32], y: &[f32], dim: usize, out: &mut [f64]) {
+    // route every sample, collecting per-node (count, sum, sumsq)
+    let n_nodes = tree.nodes.len();
+    let mut cnt = vec![0.0f64; n_nodes];
+    let mut sum = vec![0.0f64; n_nodes];
+    let mut sq = vec![0.0f64; n_nodes];
+    let n = y.len();
+    for i in 0..n {
+        let row = &x[i * dim..(i + 1) * dim];
+        let mut node = 0usize;
+        loop {
+            cnt[node] += 1.0;
+            sum[node] += y[i] as f64;
+            sq[node] += (y[i] as f64) * (y[i] as f64);
+            let nd = &tree.nodes[node];
+            if nd.feature < 0 {
+                break;
+            }
+            node = if row[nd.feature as usize] <= nd.threshold {
+                nd.left as usize
+            } else {
+                nd.right as usize
+            };
+        }
+    }
+    let var = |i: usize| -> f64 {
+        if cnt[i] < 1.0 {
+            return 0.0;
+        }
+        (sq[i] - sum[i] * sum[i] / cnt[i]).max(0.0)
+    };
+    for (i, nd) in tree.nodes.iter().enumerate() {
+        if nd.feature >= 0 && cnt[i] > 0.0 {
+            let gain = var(i) - var(nd.left as usize) - var(nd.right as usize);
+            if gain > 0.0 {
+                out[nd.feature as usize] += gain / n as f64;
+            }
+        }
+    }
+}
+
+/// Normalized split-gain importance per feature (sums to 1 unless the
+/// forest never split, in which case all zeros).
+pub fn feature_importance(forest: &RandomForest, x: &[f32], y: &[f32]) -> Vec<f64> {
+    let dim = forest.dim;
+    assert_eq!(x.len(), y.len() * dim);
+    let mut acc = vec![0.0f64; dim];
+    for tree in &forest.trees {
+        tree_importance(tree, x, y, dim, &mut acc);
+    }
+    let total: f64 = acc.iter().sum();
+    if total > 0.0 {
+        for a in acc.iter_mut() {
+            *a /= total;
+        }
+    }
+    acc
+}
+
+/// Pair importances with parameter names and sort descending.
+pub fn ranked<'a>(importance: &[f64], names: &[&'a str]) -> Vec<(&'a str, f64)> {
+    let mut v: Vec<(&str, f64)> =
+        names.iter().copied().zip(importance.iter().copied()).collect();
+    v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::ForestConfig;
+    use crate::util::Pcg32;
+
+    fn data(n: usize, f: impl Fn(&[f32]) -> f32, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let dim = 4;
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+            y.push(f(&row));
+            x.extend(row);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn dominant_feature_dominates_importance() {
+        // y depends on x0 with a 10x larger coefficient than x2
+        let (x, y) = data(400, |r| 10.0 * r[0] + r[2], 1);
+        let mut rng = Pcg32::seeded(2);
+        let rf = RandomForest::fit(&x, &y, 4, &ForestConfig::default(), &mut rng);
+        let imp = feature_importance(&rf, &x, &y);
+        assert!(imp[0] > 0.6, "{imp:?}");
+        assert!(imp[0] > 5.0 * imp[2], "{imp:?}");
+        assert!(imp[1] < 0.1 && imp[3] < 0.1, "{imp:?}");
+        let total: f64 = imp.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_target_yields_zero_importance() {
+        let (x, y) = data(100, |_| 3.0, 3);
+        let mut rng = Pcg32::seeded(4);
+        let rf = RandomForest::fit(&x, &y, 4, &ForestConfig::default(), &mut rng);
+        let imp = feature_importance(&rf, &x, &y);
+        assert!(imp.iter().all(|&v| v == 0.0), "{imp:?}");
+    }
+
+    #[test]
+    fn ranked_sorts_descending() {
+        let r = ranked(&[0.1, 0.7, 0.2], &["a", "b", "c"]);
+        assert_eq!(r[0].0, "b");
+        assert_eq!(r[2].0, "a");
+    }
+}

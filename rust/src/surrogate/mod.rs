@@ -1,0 +1,13 @@
+//! Surrogate models: Random Forest (the paper's pick), Extra-Trees and a
+//! GBRT-lite for the ablation, plus the tensor exporter feeding the AOT
+//! Pallas scorer.
+
+pub mod export;
+pub mod forest;
+pub mod importance;
+pub mod tree;
+
+pub use export::{export_forest, ForestTensors};
+pub use forest::{ForestConfig, GbrtLite, RandomForest};
+pub use importance::{feature_importance, ranked};
+pub use tree::{SplitMode, Tree, TreeConfig};

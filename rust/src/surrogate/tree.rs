@@ -1,0 +1,372 @@
+//! CART regression trees (the Random-Forest building block), grown under
+//! the AOT contract: depth <= DEPTH-1 and at most NODES_PER_TREE nodes so
+//! every tree exports losslessly into the Pallas forest-scorer tensors.
+
+use crate::util::Pcg32;
+
+/// How split thresholds are chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitMode {
+    /// Exhaustive best split by variance reduction (Random Forest).
+    Best,
+    /// Uniform-random threshold per candidate feature (Extra-Trees).
+    Random,
+}
+
+#[derive(Debug, Clone)]
+pub struct TreeConfig {
+    /// Max split depth; leaves sit at depth <= max_depth.
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    pub min_samples_split: usize,
+    /// Features considered per split (None = all).
+    pub max_features: Option<usize>,
+    /// Hard cap on the node-array length (AOT NODES_PER_TREE).
+    pub node_budget: usize,
+    pub split_mode: SplitMode,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        TreeConfig {
+            max_depth: 15, // DEPTH(16) lockstep steps always reach a leaf
+            min_samples_leaf: 1,
+            min_samples_split: 2,
+            max_features: None,
+            node_budget: 512,
+            split_mode: SplitMode::Best,
+        }
+    }
+}
+
+/// One node in the flat array encoding shared with the Pallas kernel:
+/// `feature == -1` marks a leaf; children self-loop on leaves.
+#[derive(Debug, Clone, Copy)]
+pub struct Node {
+    pub feature: i32,
+    pub threshold: f32,
+    pub left: u32,
+    pub right: u32,
+    pub value: f32,
+}
+
+impl Node {
+    fn leaf(node_id: u32, value: f32) -> Node {
+        Node { feature: -1, threshold: 0.0, left: node_id, right: node_id, value }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+}
+
+struct Grower<'a> {
+    x: &'a [f32],
+    y: &'a [f32],
+    dim: usize,
+    cfg: &'a TreeConfig,
+    nodes: Vec<Node>,
+}
+
+struct BestSplit {
+    feature: usize,
+    threshold: f32,
+    score: f64, // weighted child variance (lower is better)
+}
+
+impl<'a> Grower<'a> {
+    fn mean(&self, idx: &[usize]) -> f32 {
+        (idx.iter().map(|&i| self.y[i] as f64).sum::<f64>() / idx.len() as f64) as f32
+    }
+
+    /// Find the best (feature, threshold) over a random feature subset.
+    fn find_split(&self, idx: &[usize], rng: &mut Pcg32) -> Option<BestSplit> {
+        let k = self.cfg.max_features.unwrap_or(self.dim).min(self.dim).max(1);
+        let feats = if k == self.dim {
+            (0..self.dim).collect::<Vec<_>>()
+        } else {
+            rng.sample_indices(self.dim, k)
+        };
+        let mut best: Option<BestSplit> = None;
+        let n = idx.len();
+        // node-level totals are feature-independent: hoist out of the loop
+        let (total, total_sq) = idx.iter().fold((0.0f64, 0.0f64), |(s, q), &i| {
+            let y = self.y[i] as f64;
+            (s + y, q + y * y)
+        });
+        let mut vals: Vec<(f32, f32)> = Vec::with_capacity(n); // (x_f, y)
+        for &f in &feats {
+            vals.clear();
+            vals.extend(idx.iter().map(|&i| (self.x[i * self.dim + f], self.y[i])));
+            match self.cfg.split_mode {
+                SplitMode::Best => {
+                    vals.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+                    // prefix sums over the sorted order
+                    let mut sum_l = 0.0f64;
+                    let mut sq_l = 0.0f64;
+                    for i in 0..n - 1 {
+                        let yv = vals[i].1 as f64;
+                        sum_l += yv;
+                        sq_l += yv * yv;
+                        if vals[i].0 == vals[i + 1].0 {
+                            continue; // can't split between equal values
+                        }
+                        let nl = (i + 1) as f64;
+                        let nr = (n - i - 1) as f64;
+                        if (nl as usize) < self.cfg.min_samples_leaf
+                            || (nr as usize) < self.cfg.min_samples_leaf
+                        {
+                            continue;
+                        }
+                        let var_l = sq_l - sum_l * sum_l / nl;
+                        let sum_r = total - sum_l;
+                        let var_r = (total_sq - sq_l) - sum_r * sum_r / nr;
+                        let score = var_l + var_r;
+                        let threshold = 0.5 * (vals[i].0 + vals[i + 1].0);
+                        if best.as_ref().map(|b| score < b.score).unwrap_or(true) {
+                            best = Some(BestSplit { feature: f, threshold, score });
+                        }
+                    }
+                }
+                SplitMode::Random => {
+                    let lo = vals.iter().map(|v| v.0).fold(f32::INFINITY, f32::min);
+                    let hi = vals.iter().map(|v| v.0).fold(f32::NEG_INFINITY, f32::max);
+                    if lo == hi {
+                        continue;
+                    }
+                    let threshold = lo + (hi - lo) * rng.f32();
+                    let mut nl = 0usize;
+                    let (mut sum_l, mut sq_l, mut sum_r, mut sq_r) = (0.0f64, 0.0, 0.0f64, 0.0);
+                    for v in &vals {
+                        let yv = v.1 as f64;
+                        if v.0 <= threshold {
+                            nl += 1;
+                            sum_l += yv;
+                            sq_l += yv * yv;
+                        } else {
+                            sum_r += yv;
+                            sq_r += yv * yv;
+                        }
+                    }
+                    let nr = n - nl;
+                    if nl < self.cfg.min_samples_leaf || nr < self.cfg.min_samples_leaf {
+                        continue;
+                    }
+                    let score = (sq_l - sum_l * sum_l / nl as f64)
+                        + (sq_r - sum_r * sum_r / nr as f64);
+                    if best.as_ref().map(|b| score < b.score).unwrap_or(true) {
+                        best = Some(BestSplit { feature: f, threshold, score });
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Grow a subtree. `reserved` counts right-sibling slots that are
+    /// promised but not yet allocated, so the node budget can never be
+    /// overshot by a deep left subtree.
+    fn grow(&mut self, idx: Vec<usize>, depth: usize, reserved: usize, rng: &mut Pcg32) -> u32 {
+        let node_id = self.nodes.len() as u32;
+        self.nodes.push(Node::leaf(node_id, 0.0)); // placeholder
+        let value = self.mean(&idx);
+        let can_split = depth < self.cfg.max_depth
+            && idx.len() >= self.cfg.min_samples_split
+            && self.nodes.len() + 2 + reserved <= self.cfg.node_budget;
+        if can_split {
+            if let Some(split) = self.find_split(&idx, rng) {
+                let (li, ri): (Vec<usize>, Vec<usize>) = idx
+                    .iter()
+                    .partition(|&&i| self.x[i * self.dim + split.feature] <= split.threshold);
+                if !li.is_empty() && !ri.is_empty() {
+                    let left = self.grow(li, depth + 1, reserved + 1, rng);
+                    let right = self.grow(ri, depth + 1, reserved, rng);
+                    self.nodes[node_id as usize] = Node {
+                        feature: split.feature as i32,
+                        threshold: split.threshold,
+                        left,
+                        right,
+                        value,
+                    };
+                    return node_id;
+                }
+            }
+        }
+        self.nodes[node_id as usize] = Node::leaf(node_id, value);
+        node_id
+    }
+}
+
+impl Tree {
+    /// Fit on `n` rows of `dim` features (row-major `x`, len n*dim).
+    pub fn fit(x: &[f32], y: &[f32], dim: usize, cfg: &TreeConfig, rng: &mut Pcg32) -> Tree {
+        Self::fit_indices(x, y, dim, &(0..y.len()).collect::<Vec<_>>(), cfg, rng)
+    }
+
+    /// Fit on a row subset (bootstrap samples may repeat indices).
+    pub fn fit_indices(
+        x: &[f32],
+        y: &[f32],
+        dim: usize,
+        rows: &[usize],
+        cfg: &TreeConfig,
+        rng: &mut Pcg32,
+    ) -> Tree {
+        assert!(!rows.is_empty(), "cannot fit a tree on zero samples");
+        assert_eq!(x.len(), y.len() * dim, "x/y shape mismatch");
+        let mut grower = Grower { x, y, dim, cfg, nodes: Vec::new() };
+        grower.grow(rows.to_vec(), 0, 0, rng);
+        Tree { nodes: grower.nodes }
+    }
+
+    pub fn predict_one(&self, row: &[f32]) -> f32 {
+        let mut i = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.feature < 0 {
+                return n.value;
+            }
+            i = if row[n.feature as usize] <= n.threshold { n.left } else { n.right } as usize;
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        fn rec(nodes: &[Node], i: usize) -> usize {
+            let n = &nodes[i];
+            if n.feature < 0 {
+                0
+            } else {
+                1 + rec(nodes, n.left as usize).max(rec(nodes, n.right as usize))
+            }
+        }
+        rec(&self.nodes, 0)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_xy(f: impl Fn(f32, f32) -> f32, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            for j in 0..n {
+                let (a, b) = (i as f32 / (n - 1) as f32, j as f32 / (n - 1) as f32);
+                x.extend([a, b]);
+                y.push(f(a, b));
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn fits_step_function_exactly() {
+        let (x, y) = grid_xy(|a, _| if a <= 0.5 { 1.0 } else { 3.0 }, 8);
+        let mut rng = Pcg32::seeded(1);
+        let t = Tree::fit(&x, &y, 2, &TreeConfig::default(), &mut rng);
+        assert!((t.predict_one(&[0.2, 0.9]) - 1.0).abs() < 1e-6);
+        assert!((t.predict_one(&[0.9, 0.1]) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn respects_depth_and_budget() {
+        let mut rng = Pcg32::seeded(2);
+        // 512 random samples of a rough function forces deep growth
+        let n = 512;
+        let mut x = Vec::with_capacity(n * 3);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let r: Vec<f32> = (0..3).map(|_| rng.f32()).collect();
+            y.push((r[0] * 17.0).sin() + r[1] * r[2]);
+            x.extend(r);
+        }
+        let cfg = TreeConfig { max_depth: 15, node_budget: 512, ..Default::default() };
+        let t = Tree::fit(&x, &y, 3, &cfg, &mut rng);
+        assert!(t.depth() <= 15, "depth {}", t.depth());
+        assert!(t.n_nodes() <= 512, "nodes {}", t.n_nodes());
+    }
+
+    #[test]
+    fn single_sample_is_constant_leaf() {
+        let mut rng = Pcg32::seeded(3);
+        let t = Tree::fit(&[0.5, 0.5], &[7.0], 2, &TreeConfig::default(), &mut rng);
+        assert_eq!(t.n_nodes(), 1);
+        assert!((t.predict_one(&[0.0, 0.0]) - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_target_never_splits() {
+        let (x, y) = grid_xy(|_, _| 2.5, 6);
+        let mut rng = Pcg32::seeded(4);
+        let t = Tree::fit(&x, &y, 2, &TreeConfig::default(), &mut rng);
+        // variance reduction is 0 everywhere; best-split may still tie at
+        // score 0 but prediction must be exact regardless
+        assert!((t.predict_one(&[0.3, 0.7]) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn min_samples_leaf_respected() {
+        let (x, y) = grid_xy(|a, b| a + b, 6);
+        let mut rng = Pcg32::seeded(5);
+        let cfg = TreeConfig { min_samples_leaf: 5, ..Default::default() };
+        let t = Tree::fit(&x, &y, 2, &cfg, &mut rng);
+        // count samples reaching each leaf
+        let mut counts = vec![0usize; t.n_nodes()];
+        for i in 0..y.len() {
+            let row = &x[i * 2..i * 2 + 2];
+            let mut n = 0usize;
+            loop {
+                let node = &t.nodes[n];
+                if node.feature < 0 {
+                    counts[n] += 1;
+                    break;
+                }
+                n = if row[node.feature as usize] <= node.threshold {
+                    node.left as usize
+                } else {
+                    node.right as usize
+                };
+            }
+        }
+        for (i, c) in counts.iter().enumerate() {
+            if t.nodes[i].feature < 0 && *c > 0 {
+                assert!(*c >= 5, "leaf {i} has {c} samples");
+            }
+        }
+    }
+
+    #[test]
+    fn extra_trees_mode_fits_reasonably() {
+        let (x, y) = grid_xy(|a, b| 2.0 * a - b, 10);
+        let mut rng = Pcg32::seeded(6);
+        let cfg = TreeConfig { split_mode: SplitMode::Random, ..Default::default() };
+        let t = Tree::fit(&x, &y, 2, &cfg, &mut rng);
+        let mse: f32 = (0..y.len())
+            .map(|i| {
+                let p = t.predict_one(&x[i * 2..i * 2 + 2]);
+                (p - y[i]) * (p - y[i])
+            })
+            .sum::<f32>()
+            / y.len() as f32;
+        assert!(mse < 0.01, "extra-trees mse {mse}");
+    }
+
+    #[test]
+    fn leaves_self_loop_for_lockstep_descent() {
+        let (x, y) = grid_xy(|a, b| a * b, 5);
+        let mut rng = Pcg32::seeded(7);
+        let t = Tree::fit(&x, &y, 2, &TreeConfig::default(), &mut rng);
+        for (i, n) in t.nodes.iter().enumerate() {
+            if n.feature < 0 {
+                assert_eq!(n.left as usize, i);
+                assert_eq!(n.right as usize, i);
+            }
+        }
+    }
+}

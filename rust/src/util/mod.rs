@@ -1,0 +1,11 @@
+//! Foundation utilities built from scratch for the offline crate set:
+//! deterministic RNG, statistics, JSON, and text tables.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use rng::Pcg32;
+pub use table::Table;

@@ -1,0 +1,138 @@
+//! Full-stack integration: the complete autotuning pipeline with the AOT
+//! XLA artifacts (when present), reproducing the paper's headline bands.
+//! These are slower tests; each runs a real BO loop end to end.
+
+use std::sync::Arc;
+
+use ytopt::apps::AppKind;
+use ytopt::coordinator::{autotune_with_scorer, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+
+fn scorer() -> Arc<Scorer> {
+    Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()))
+}
+
+#[test]
+fn sw4lite_theta_full_stack_headline() {
+    // paper Fig 14: 171.595 -> 14.427 s (91.59%)
+    let mut setup = TuneSetup::new(AppKind::Sw4lite, PlatformKind::Theta, 1024, Metric::Runtime);
+    setup.max_evals = 30;
+    setup.wallclock_budget_s = 1e9;
+    setup.seed = 1;
+    let r = autotune_with_scorer(&setup, scorer()).unwrap();
+    assert!((r.baseline_objective - 171.595).abs() < 2.0, "baseline {}", r.baseline_objective);
+    assert!(r.improvement_pct > 85.0, "improvement {}", r.improvement_pct);
+    assert!((11.0..18.0).contains(&r.best_objective), "best {}", r.best_objective);
+}
+
+#[test]
+fn amg_summit_full_stack_band() {
+    // paper Fig 11: 8.694 -> 6.734 s (22.54%)
+    let mut setup = TuneSetup::new(AppKind::Amg, PlatformKind::Summit, 4096, Metric::Runtime);
+    setup.max_evals = 40;
+    setup.wallclock_budget_s = 1e9;
+    setup.seed = 2;
+    let r = autotune_with_scorer(&setup, scorer()).unwrap();
+    assert!((r.baseline_objective - 8.694).abs() < 0.05);
+    assert!(r.improvement_pct > 14.0 && r.improvement_pct < 30.0, "{}", r.improvement_pct);
+}
+
+#[test]
+fn swfft_summit_full_stack_band() {
+    // paper Fig 9: 8.93 -> 7.797 s (12.69%)
+    let mut setup = TuneSetup::new(AppKind::Swfft, PlatformKind::Summit, 4096, Metric::Runtime);
+    setup.max_evals = 40;
+    setup.wallclock_budget_s = 1e9;
+    setup.seed = 3;
+    let r = autotune_with_scorer(&setup, scorer()).unwrap();
+    assert!((r.baseline_objective - 8.93).abs() < 0.05);
+    assert!(r.improvement_pct > 8.0 && r.improvement_pct < 18.0, "{}", r.improvement_pct);
+}
+
+#[test]
+fn energy_pipeline_through_aot_artifact() {
+    // paper Fig 15c: AMG energy 5642.6 -> 4566.7 J (20.88%)
+    let mut setup = TuneSetup::new(AppKind::Amg, PlatformKind::Theta, 4096, Metric::Energy);
+    setup.max_evals = 25;
+    setup.wallclock_budget_s = 1e9;
+    setup.seed = 4;
+    let r = autotune_with_scorer(&setup, scorer()).unwrap();
+    assert!(
+        (r.baseline_objective - 5642.6).abs() < 5642.6 * 0.06,
+        "baseline energy {}",
+        r.baseline_objective
+    );
+    assert!(r.improvement_pct > 12.0 && r.improvement_pct < 30.0, "{}", r.improvement_pct);
+    // every record went through geopmlaunch
+    assert!(r.db.records.iter().all(|x| x.command.contains("geopm")));
+}
+
+#[test]
+fn overheads_scale_weakly_from_64_to_4096_nodes() {
+    // the paper's low-overhead/scalability claim, measured end to end
+    let overhead_at = |nodes: u64| {
+        let mut setup = TuneSetup::new(AppKind::Swfft, PlatformKind::Theta, nodes, Metric::Runtime);
+        setup.max_evals = 10;
+        setup.wallclock_budget_s = 1e9;
+        setup.seed = 5;
+        let r = autotune_with_scorer(&setup, scorer()).unwrap();
+        // skip the first-eval setup spike: median-ish via non-first max
+        r.db.records.iter().skip(1).map(|x| x.overhead_s).fold(0.0, f64::max)
+    };
+    let small = overhead_at(64);
+    let large = overhead_at(4096);
+    assert!(large < small + 10.0, "overhead blew up: {small} -> {large}");
+    assert!(large < 30.0, "Table IV band for SWFFT/Theta: {large}");
+}
+
+#[test]
+fn scorer_auto_falls_back_on_missing_artifacts() {
+    let s = Scorer::auto(std::path::Path::new("/nonexistent-artifacts-dir"));
+    assert!(!s.is_accelerated());
+    // and the fallback still drives a full tune
+    let mut setup = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+    setup.max_evals = 10;
+    let r = autotune_with_scorer(&setup, Arc::new(s)).unwrap();
+    assert_eq!(r.evaluations, 10);
+    assert!(!r.scorer_accelerated);
+}
+
+#[test]
+fn xla_and_fallback_scorers_agree_on_proposals_quality() {
+    // not bit-identical paths (fit RNG differs per proposal timing), but
+    // both backends must reach the same quality band on the same problem
+    let run_with = |s: Arc<Scorer>| {
+        let mut setup = TuneSetup::new(AppKind::Amg, PlatformKind::Summit, 4096, Metric::Runtime);
+        setup.max_evals = 30;
+        setup.wallclock_budget_s = 1e9;
+        setup.seed = 6;
+        autotune_with_scorer(&setup, s).unwrap().improvement_pct
+    };
+    let xla = scorer();
+    if !xla.is_accelerated() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let a = run_with(xla);
+    let b = run_with(Arc::new(Scorer::fallback()));
+    assert!((a - b).abs() < 12.0, "XLA {a}% vs fallback {b}%");
+}
+
+#[test]
+fn grid_baseline_is_no_better_than_bo_on_sw4lite() {
+    use ytopt::search::StrategyKind;
+    let run_kind = |kind| {
+        let mut setup =
+            TuneSetup::new(AppKind::Sw4lite, PlatformKind::Theta, 1024, Metric::Runtime);
+        setup.max_evals = 24;
+        setup.wallclock_budget_s = 1e9;
+        setup.strategy = kind;
+        setup.seed = 7;
+        autotune_with_scorer(&setup, Arc::new(Scorer::fallback())).unwrap().best_objective
+    };
+    let bo = run_kind(StrategyKind::Bo);
+    let grid = run_kind(StrategyKind::Grid);
+    assert!(bo <= grid * 1.3, "BO {bo} vs grid {grid}");
+}

@@ -1,0 +1,237 @@
+//! Property tests over the coordinator's core invariants (proptest_lite):
+//! space indexing/encoding, neighbourhood validity, forest export
+//! equivalence, JSON/report round-trips.
+
+use ytopt::apps::AppKind;
+use ytopt::platform::PlatformKind;
+use ytopt::power::GeopmReport;
+use ytopt::proptest_lite::for_all;
+use ytopt::runtime::forest_score_cpu;
+use ytopt::space::{paper, Configuration};
+use ytopt::surrogate::{export_forest, ForestConfig, RandomForest};
+use ytopt::util::{Json, Pcg32};
+
+const APPS: [AppKind; 7] = [
+    AppKind::XSBenchHistory,
+    AppKind::XSBenchEvent,
+    AppKind::XSBenchMixed,
+    AppKind::XSBenchOffload,
+    AppKind::Swfft,
+    AppKind::Amg,
+    AppKind::Sw4lite,
+];
+
+fn random_space(rng: &mut Pcg32) -> ytopt::space::ConfigSpace {
+    let app = APPS[rng.index(APPS.len())];
+    let pf = if rng.bool(0.5) { PlatformKind::Theta } else { PlatformKind::Summit };
+    paper::build_space(app, pf)
+}
+
+#[test]
+fn prop_index_roundtrip_on_paper_spaces() {
+    for_all(
+        "config_at . index_of == id",
+        300,
+        11,
+        |rng| {
+            let space = random_space(rng);
+            let i = rng.gen_range(u64::MAX) as u128 % space.size();
+            (space, i)
+        },
+        |(space, i)| {
+            let c = space.config_at(*i);
+            space.is_valid(&c) && space.index_of(&c) == *i
+        },
+    );
+}
+
+#[test]
+fn prop_encoding_is_unit_interval_and_zero_padded() {
+    for_all(
+        "encode in [0,1], padded with 0",
+        200,
+        13,
+        |rng| {
+            let space = random_space(rng);
+            let c = space.sample(rng);
+            (space, c)
+        },
+        |(space, c)| {
+            let e = space.encode(c, 32);
+            e.len() == 32
+                && e[..space.dim()].iter().all(|&x| (0.0..=1.0).contains(&x))
+                && e[space.dim()..].iter().all(|&x| x == 0.0)
+        },
+    );
+}
+
+#[test]
+fn prop_neighbors_stay_valid_and_close() {
+    for_all(
+        "neighbor valid, hamming <= 1",
+        200,
+        17,
+        |rng| {
+            let space = random_space(rng);
+            let c = space.sample(rng);
+            let mut r = rng.split(9);
+            let n = space.neighbor(&c, &mut r);
+            (space, c, n)
+        },
+        |(space, c, n)| {
+            let diff =
+                c.indices().iter().zip(n.indices()).filter(|(a, b)| a != b).count();
+            space.is_valid(n) && diff <= 1
+        },
+    );
+}
+
+#[test]
+fn prop_forest_export_preserves_predictions() {
+    for_all(
+        "tensor lockstep == tree walk",
+        25,
+        19,
+        |rng| {
+            let dim = 1 + rng.index(16);
+            let n = 20 + rng.index(150);
+            let mut x = Vec::with_capacity(n * dim);
+            let mut y = Vec::with_capacity(n);
+            for _ in 0..n {
+                let row: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+                y.push(row.iter().sum::<f32>() + rng.f32() * 0.1);
+                x.extend(row);
+            }
+            let cfg = ForestConfig { n_trees: 8, ..Default::default() };
+            let mut frng = rng.split(3);
+            let forest = RandomForest::fit(&x, &y, dim, &cfg, &mut frng);
+            let probe: Vec<f32> = (0..8 * dim).map(|_| rng.f32() * 1.5 - 0.25).collect();
+            (forest, probe, dim)
+        },
+        |(forest, probe, dim)| {
+            let tensors = export_forest(forest, 8, 512, 32, 16).unwrap();
+            // pad probe rows to the 32-feature layout
+            let n = probe.len() / dim;
+            let mut rows = vec![0.0f32; n * 32];
+            for i in 0..n {
+                rows[i * 32..i * 32 + dim].copy_from_slice(&probe[i * dim..(i + 1) * dim]);
+            }
+            let out = forest_score_cpu(&rows, 32, &tensors, 1.96);
+            (0..n).all(|i| {
+                let (m, s) = forest.predict_one(&probe[i * dim..(i + 1) * dim]);
+                (out.mean[i] - m).abs() < 1e-4 && (out.std[i] - s).abs() < 1e-3
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.f64() * 2e6).round() / 8.0 - 1e5),
+            3 => {
+                let len = rng.index(12);
+                Json::Str((0..len).map(|_| *rng.choose(&['a', 'Z', '"', '\\', 'é', '\n', ' '])).collect())
+            }
+            4 => Json::Arr((0..rng.index(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.index(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_all(
+        "parse(render(v)) == v",
+        300,
+        23,
+        |rng| random_json(rng, 3),
+        |v| Json::parse(&v.to_string()).map(|b| b == *v).unwrap_or(false),
+    );
+}
+
+#[test]
+fn prop_geopm_report_roundtrip() {
+    for_all(
+        "GEOPM report render/parse",
+        100,
+        29,
+        |rng| {
+            let n = 1 + rng.index(64);
+            let energies: Vec<f32> =
+                (0..n).map(|_| (rng.f64() * 9000.0) as f32).collect();
+            (energies, 0.5 + rng.f64() * 0.5, rng.f64() * 200.0)
+        },
+        |(energies, pkg_frac, runtime)| {
+            let rep = GeopmReport::from_node_energy(energies, *pkg_frac, *runtime);
+            let back = GeopmReport::parse(&rep.render()).unwrap();
+            back.nodes.len() == energies.len()
+                && (back.average_node_energy() - rep.average_node_energy()).abs()
+                    < rep.average_node_energy().abs() * 1e-3 + 1e-2
+        },
+    );
+}
+
+#[test]
+fn prop_codegen_always_verifies_on_matching_spaces() {
+    for_all(
+        "instantiate verifies",
+        150,
+        31,
+        |rng| {
+            let app = APPS[rng.index(APPS.len())];
+            let pf = if app.uses_gpus() { PlatformKind::Summit } else { PlatformKind::Theta };
+            let space = paper::build_space(app, pf);
+            let cfg = space.sample(rng);
+            (app, space, cfg)
+        },
+        |(app, space, cfg)| {
+            ytopt::codegen::instantiate(*app, space, cfg)
+                .map(|src| ytopt::codegen::verify(&src))
+                .unwrap_or(false)
+        },
+    );
+}
+
+#[test]
+fn prop_launch_lines_accept_every_space_thread_choice() {
+    // every OMP_NUM_THREADS value in every paper space must produce a
+    // valid launch line on its platform (the spaces honour §VI rules)
+    for app in APPS {
+        for pf in [PlatformKind::Theta, PlatformKind::Summit] {
+            let space = paper::build_space(app, pf);
+            for &n in paper::thread_choices(pf) {
+                let r = match (pf, app.uses_gpus()) {
+                    (PlatformKind::Theta, _) => {
+                        ytopt::platform::launch::aprun(64, n as u64, "x")
+                    }
+                    (PlatformKind::Summit, true) => {
+                        ytopt::platform::launch::jsrun_gpu(64, n as u64, "x")
+                    }
+                    (PlatformKind::Summit, false) => {
+                        ytopt::platform::launch::jsrun_cpu(64, n as u64, "x")
+                    }
+                };
+                assert!(r.is_ok(), "{app:?}@{pf:?} threads {n}: {r:?}");
+            }
+            let _ = space;
+        }
+    }
+}
+
+#[test]
+fn prop_run_noise_is_bounded_and_centered() {
+    let mut sum = 0.0f64;
+    let n = 2000;
+    for i in 0..n {
+        let cfg = Configuration::from_indices(vec![i as u32, (i * 7) as u32]);
+        let f = ytopt::apps::common::run_noise(&cfg, i as u64, 0.008);
+        assert!((0.9..1.1).contains(&f), "noise {f}");
+        sum += f;
+    }
+    let mean = sum / n as f64;
+    assert!((mean - 1.0).abs() < 0.005, "noise mean {mean}");
+}

@@ -1,0 +1,116 @@
+//! Integration: the AOT HLO artifacts, executed through the PJRT CPU
+//! client, must match the pure-Rust reference semantics and the fitted
+//! forest itself. This is the rust half of the interchange contract
+//! (python/tests/test_aot.py is the python half).
+
+use ytopt::runtime::{energy_reduce_cpu, forest_score_cpu, Scorer};
+use ytopt::surrogate::{export_forest, ForestConfig, RandomForest};
+use ytopt::util::Pcg32;
+
+fn load_scorer() -> Option<Scorer> {
+    let dir = ytopt::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    let s = Scorer::auto(&dir);
+    assert!(s.is_accelerated(), "artifacts exist but XLA runtime failed to load");
+    Some(s)
+}
+
+fn fitted_forest(seed: u64, dim: usize, n: usize) -> RandomForest {
+    let mut rng = Pcg32::seeded(seed);
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+        y.push(row[0] * 3.0 + (row[1] * 9.0).sin() - row[dim - 1]);
+        x.extend(row);
+    }
+    RandomForest::fit(&x, &y, dim, &ForestConfig::default(), &mut rng)
+}
+
+#[test]
+fn forest_scorer_xla_matches_cpu_and_forest() {
+    let Some(scorer) = load_scorer() else { return };
+    let m = scorer.manifest().forest.clone();
+    let dim = 9; // a paper-space-sized dimensionality
+    let rf = fitted_forest(42, dim, 180);
+    let tensors =
+        export_forest(&rf, m.trees, m.nodes_per_tree, m.features, m.depth).unwrap();
+
+    // padded candidate rows
+    let mut rng = Pcg32::seeded(7);
+    let n = 300; // forces a second (partial) batch on the XLA path
+    let mut rows = vec![0.0f32; n * m.features];
+    for i in 0..n {
+        for j in 0..dim {
+            rows[i * m.features + j] = rng.f32();
+        }
+    }
+    let kappa = 1.96f32;
+    let xla = scorer.score_candidates(&rows, n, &tensors, kappa).unwrap();
+    let cpu = forest_score_cpu(&rows, m.features, &tensors, kappa);
+    assert_eq!(xla.mean.len(), n);
+    for i in 0..n {
+        assert!((xla.mean[i] - cpu.mean[i]).abs() < 1e-4, "mean[{i}]");
+        assert!((xla.std[i] - cpu.std[i]).abs() < 1e-4, "std[{i}]");
+        assert!((xla.lcb[i] - cpu.lcb[i]).abs() < 3e-4, "lcb[{i}]");
+    }
+    // ... and the forest itself agrees
+    for i in 0..20 {
+        let row: Vec<f32> = rows[i * m.features..i * m.features + dim].to_vec();
+        let (mean, std) = rf.predict_one(&row);
+        assert!((xla.mean[i] - mean).abs() < 1e-4);
+        assert!((xla.std[i] - std).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn energy_reduce_xla_matches_cpu() {
+    let Some(scorer) = load_scorer() else { return };
+    let nodes = 1024usize;
+    let samples = 96usize;
+    let valid = 61usize;
+    let mut rng = Pcg32::seeded(9);
+    let mut pkg = vec![0.0f32; nodes * samples];
+    let mut dram = vec![0.0f32; nodes * samples];
+    for i in 0..nodes {
+        for j in 0..valid {
+            pkg[i * samples + j] = 80.0 + 160.0 * rng.f32();
+            dram[i * samples + j] = 4.0 + 24.0 * rng.f32();
+        }
+    }
+    let (dt, runtime) = (0.5f32, 30.25f32);
+    let (node_x, avg_x, edp_x) = scorer
+        .reduce_energy(&pkg, &dram, nodes, samples, valid as f32, dt, runtime)
+        .unwrap();
+    let active = vec![1.0f32; nodes];
+    let (node_c, avg_c, edp_c) =
+        energy_reduce_cpu(&pkg, &dram, &active, samples, valid as f32, dt, runtime);
+    assert_eq!(node_x.len(), nodes);
+    for i in 0..nodes {
+        assert!(
+            (node_x[i] - node_c[i]).abs() < node_c[i].abs() * 1e-4 + 1e-2,
+            "node {i}: {} vs {}",
+            node_x[i],
+            node_c[i]
+        );
+    }
+    assert!((avg_x - avg_c).abs() < avg_c * 1e-4 + 1e-2, "{avg_x} vs {avg_c}");
+    assert!((edp_x - edp_c).abs() < edp_c * 1e-4 + 1.0, "{edp_x} vs {edp_c}");
+}
+
+#[test]
+fn kappa_zero_lcb_equals_mean_through_xla() {
+    let Some(scorer) = load_scorer() else { return };
+    let m = scorer.manifest().forest.clone();
+    let rf = fitted_forest(5, 4, 60);
+    let tensors =
+        export_forest(&rf, m.trees, m.nodes_per_tree, m.features, m.depth).unwrap();
+    let rows = vec![0.25f32; 8 * m.features];
+    let out = scorer.score_candidates(&rows, 8, &tensors, 0.0).unwrap();
+    for i in 0..8 {
+        assert!((out.lcb[i] - out.mean[i]).abs() < 1e-6);
+    }
+}
