@@ -1,0 +1,95 @@
+//! Serial vs. ensemble autotuning: wall-clock and tuning-quality parity.
+//!
+//! `cargo bench --bench ensemble`
+//!
+//! For XSBench and AMG, runs the same evaluation budget through the
+//! serial coordinator loop and through the ensemble engine at several
+//! worker counts, reporting the *simulated* campaign wall-clock (what an
+//! operator would wait on the real machine), the best objective found,
+//! and the real host-side time the harness itself took.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ytopt::apps::AppKind;
+use ytopt::bench_support::section;
+use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+use ytopt::util::Table;
+
+const EVALS: usize = 32;
+
+fn base(app: AppKind, nodes: u64, metric: Metric) -> TuneSetup {
+    let mut s = TuneSetup::new(app, PlatformKind::Theta, nodes, metric);
+    s.max_evals = EVALS;
+    s.wallclock_budget_s = 1e9;
+    s.seed = 13;
+    s
+}
+
+fn run(setup: &TuneSetup, scorer: &Arc<Scorer>) -> (TuneResult, f64) {
+    let t = Instant::now();
+    let r = autotune_with_scorer(setup, scorer.clone()).expect("tuning run failed");
+    (r, t.elapsed().as_secs_f64())
+}
+
+fn campaign(app: AppKind, nodes: u64, metric: Metric, scorer: &Arc<Scorer>) {
+    section(&format!(
+        "{} on Theta x{nodes} | metric {} | budget {EVALS} evaluations",
+        app.name(),
+        metric.name()
+    ));
+    let mut t = Table::new(
+        "serial loop vs ensemble engine",
+        &["mode", "sim. wallclock (s)", "speedup", "best objective", "vs serial", "host (s)"],
+    );
+    let (serial, host_s) = run(&base(app, nodes, metric), scorer);
+    t.row(&[
+        "serial".into(),
+        format!("{:.0}", serial.wallclock_s),
+        "1.00x".into(),
+        format!("{:.3}", serial.best_objective),
+        "—".into(),
+        format!("{host_s:.2}"),
+    ]);
+    for workers in [2usize, 4, 8] {
+        let mut s = base(app, nodes, metric);
+        s.ensemble_workers = workers;
+        let (r, host_s) = run(&s, scorer);
+        assert_eq!(r.evaluations, serial.evaluations, "budgets must match");
+        let gap_pct = 100.0 * (r.best_objective - serial.best_objective) / serial.best_objective;
+        t.row(&[
+            format!("ensemble x{workers}"),
+            format!("{:.0}", r.wallclock_s),
+            format!("{:.2}x", serial.wallclock_s / r.wallclock_s),
+            format!("{:.3}", r.best_objective),
+            format!("{gap_pct:+.1}%"),
+            format!("{host_s:.2}"),
+        ]);
+        if workers == 8 {
+            assert!(
+                r.wallclock_s < serial.wallclock_s,
+                "8-worker ensemble must beat the serial wall-clock"
+            );
+            assert!(
+                r.best_objective <= serial.best_objective * 1.05,
+                "8-worker quality {} strayed beyond 5% of serial {}",
+                r.best_objective,
+                serial.best_objective
+            );
+        }
+    }
+    println!("{}", t.render());
+}
+
+fn main() {
+    let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
+    println!(
+        "scorer backend: {}",
+        if scorer.is_accelerated() { "AOT/XLA" } else { "pure-Rust fallback" }
+    );
+    campaign(AppKind::XSBenchHistory, 1, Metric::Runtime, &scorer);
+    campaign(AppKind::Amg, 256, Metric::Energy, &scorer);
+}

@@ -32,17 +32,28 @@ pub struct Args {
     positionals: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("unexpected positional argument `{0}`")]
     UnexpectedPositional(String),
-    #[error("help requested")]
     HelpRequested,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(n) => write!(f, "unknown option --{n}"),
+            CliError::MissingValue(n) => write!(f, "option --{n} requires a value"),
+            CliError::UnexpectedPositional(a) => {
+                write!(f, "unexpected positional argument `{a}`")
+            }
+            CliError::HelpRequested => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl CliSpec {
     pub fn new(program: &str, about: &str) -> Self {
@@ -172,6 +183,11 @@ impl Args {
         self.get(name)?.parse().ok()
     }
 
+    /// Non-negative count option (worker/batch sizes and similar).
+    pub fn usize(&self, name: &str) -> Option<usize> {
+        self.get(name)?.parse().ok()
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -203,7 +219,16 @@ mod tests {
         assert_eq!(a.positional(0), Some("tune"));
         assert_eq!(a.get("app"), Some("amg"));
         assert_eq!(a.int("nodes"), Some(4096));
+        assert_eq!(a.usize("nodes"), Some(4096));
         assert!(a.has_flag("parallel"));
+    }
+
+    #[test]
+    fn usize_rejects_negatives_and_garbage() {
+        let a = spec().parse(&sv(&["tune", "--nodes", "-3"])).unwrap();
+        assert_eq!(a.usize("nodes"), None);
+        let a = spec().parse(&sv(&["tune", "--nodes", "abc"])).unwrap();
+        assert_eq!(a.usize("nodes"), None);
     }
 
     #[test]

@@ -239,13 +239,24 @@ fn param_text(name: &str, value: &ParamValue) -> String {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CodegenError {
-    #[error("mold references parameter `{0}` missing from the space")]
     UnknownParam(String),
-    #[error("unterminated marker at byte {0}")]
     Unterminated(usize),
 }
+
+impl std::fmt::Display for CodegenError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodegenError::UnknownParam(p) => {
+                write!(f, "mold references parameter `{p}` missing from the space")
+            }
+            CodegenError::Unterminated(at) => write!(f, "unterminated marker at byte {at}"),
+        }
+    }
+}
+
+impl std::error::Error for CodegenError {}
 
 /// Instantiate the mold for `app` with `cfg` (Step 2). The result is the
 /// "new code" handed to the compile step; every marker must resolve.

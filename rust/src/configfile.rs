@@ -53,12 +53,19 @@ pub struct ConfigDoc {
     sections: BTreeMap<String, BTreeMap<String, Value>>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ConfigError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl ConfigDoc {
     pub fn parse(text: &str) -> Result<ConfigDoc, ConfigError> {
@@ -110,6 +117,15 @@ impl ConfigDoc {
 
     pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
         self.get(section, key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    /// Non-negative count (worker/batch sizes); negative values fall back
+    /// to the default rather than wrapping.
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        match self.get(section, key).and_then(Value::as_int) {
+            Some(i) if i >= 0 => i as usize,
+            _ => default,
+        }
     }
 
     pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
@@ -223,6 +239,15 @@ seeds = [1, 2, 3]
         let doc = ConfigDoc::parse(DOC).unwrap();
         assert_eq!(doc.int_or("tune", "missing", 7), 7);
         assert_eq!(doc.str_or("nope", "x", "d"), "d");
+    }
+
+    #[test]
+    fn usize_or_clamps_semantics() {
+        let doc = ConfigDoc::parse("[ensemble]\nworkers = 8\nbatch = -2").unwrap();
+        assert_eq!(doc.usize_or("ensemble", "workers", 0), 8);
+        // negative counts fall back to the default instead of wrapping
+        assert_eq!(doc.usize_or("ensemble", "batch", 4), 4);
+        assert_eq!(doc.usize_or("ensemble", "missing", 3), 3);
     }
 
     #[test]

@@ -26,6 +26,71 @@ pub struct EvalRecord {
     pub best_so_far: f64,
     /// Evaluation hit the timeout (extension feature, §VIII).
     pub timed_out: bool,
+    /// Evaluation was cancelled by the ensemble's straggler policy (the
+    /// run exceeded the batch-median multiple; also sets `timed_out`).
+    pub cancelled: bool,
+}
+
+impl EvalRecord {
+    /// Full-fidelity serialization for the ensemble checkpoint (unlike
+    /// [`PerfDatabase::to_json`], which is a report view). Non-finite
+    /// numbers (timed-out runtimes) round-trip through JSON `null`.
+    pub fn to_json_full(&self) -> Json {
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        Json::obj(vec![
+            ("id", self.id.into()),
+            ("config_key", self.config_key.as_str().into()),
+            ("config_desc", self.config_desc.as_str().into()),
+            ("command", self.command.as_str().into()),
+            ("runtime_s", num(self.measured.runtime_s)),
+            ("energy_j", self.measured.avg_node_energy_j.map(Json::from).unwrap_or(Json::Null)),
+            ("edp_js", self.measured.edp_js.map(Json::from).unwrap_or(Json::Null)),
+            ("objective", num(self.objective)),
+            ("compile_s", num(self.compile_s)),
+            ("processing_s", num(self.processing_s)),
+            ("overhead_s", num(self.overhead_s)),
+            ("wallclock_s", num(self.wallclock_s)),
+            ("best_so_far", num(self.best_so_far)),
+            ("timed_out", self.timed_out.into()),
+            ("cancelled", self.cancelled.into()),
+        ])
+    }
+
+    /// Inverse of [`EvalRecord::to_json_full`].
+    pub fn from_json_full(v: &Json) -> anyhow::Result<EvalRecord> {
+        let s = |key: &str| -> anyhow::Result<String> {
+            v.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("record missing string field `{key}`"))
+        };
+        // absent or null numeric fields read back as +inf (timed out)
+        let f = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(f64::INFINITY);
+        let b = |key: &str| v.get(key).and_then(Json::as_bool).unwrap_or(false);
+        let id = v
+            .get("id")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("record missing `id`"))? as usize;
+        Ok(EvalRecord {
+            id,
+            config_key: s("config_key")?,
+            config_desc: s("config_desc")?,
+            command: s("command")?,
+            measured: Measured {
+                runtime_s: f("runtime_s"),
+                avg_node_energy_j: v.get("energy_j").and_then(Json::as_f64),
+                edp_js: v.get("edp_js").and_then(Json::as_f64),
+            },
+            objective: f("objective"),
+            compile_s: f("compile_s"),
+            processing_s: f("processing_s"),
+            overhead_s: f("overhead_s"),
+            wallclock_s: f("wallclock_s"),
+            best_so_far: f("best_so_far"),
+            timed_out: b("timed_out"),
+            cancelled: b("cancelled"),
+        })
+    }
 }
 
 /// Append-only store of evaluations for one autotuning run.
@@ -66,11 +131,11 @@ impl PerfDatabase {
 
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "id,objective,runtime_s,energy_j,edp_js,compile_s,processing_s,overhead_s,wallclock_s,best_so_far,timed_out,config\n",
+            "id,objective,runtime_s,energy_j,edp_js,compile_s,processing_s,overhead_s,wallclock_s,best_so_far,timed_out,cancelled,config\n",
         );
         for r in &self.records {
             s.push_str(&format!(
-                "{},{:.6},{:.6},{},{},{:.3},{:.3},{:.3},{:.3},{:.6},{},\"{}\"\n",
+                "{},{:.6},{:.6},{},{},{:.3},{:.3},{:.3},{:.3},{:.6},{},{},\"{}\"\n",
                 r.id,
                 r.objective,
                 r.measured.runtime_s,
@@ -82,6 +147,7 @@ impl PerfDatabase {
                 r.wallclock_s,
                 r.best_so_far,
                 r.timed_out,
+                r.cancelled,
                 r.config_desc.replace('"', "'"),
             ));
         }
@@ -112,6 +178,7 @@ impl PerfDatabase {
                                 ("wallclock_s", r.wallclock_s.into()),
                                 ("best_so_far", r.best_so_far.into()),
                                 ("timed_out", r.timed_out.into()),
+                                ("cancelled", r.cancelled.into()),
                                 ("config", r.config_desc.as_str().into()),
                                 ("command", r.command.as_str().into()),
                             ])
@@ -141,6 +208,7 @@ mod tests {
             wallclock_s: id as f64 * 60.0,
             best_so_far: objective,
             timed_out,
+            cancelled: false,
         }
     }
 
@@ -162,6 +230,39 @@ mod tests {
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("id,objective"));
         assert!(csv.contains("threads=0"));
+    }
+
+    #[test]
+    fn full_record_json_roundtrips_including_infinities() {
+        let mut r = rec(3, 7.5, 41.0, true);
+        r.measured = Measured::runtime_only(f64::INFINITY); // timed out
+        r.cancelled = true;
+        let j = r.to_json_full().to_string();
+        let v = crate::util::Json::parse(&j).unwrap();
+        let back = EvalRecord::from_json_full(&v).unwrap();
+        assert_eq!(back.id, 3);
+        assert_eq!(back.config_key, r.config_key);
+        assert_eq!(back.command, r.command);
+        assert!(back.measured.runtime_s.is_infinite());
+        assert_eq!(back.objective, 7.5);
+        assert!(back.timed_out);
+        assert!(back.cancelled);
+        // a finite record round-trips exactly
+        let r2 = rec(4, 2.25, 40.0, false);
+        let back2 =
+            EvalRecord::from_json_full(&crate::util::Json::parse(&r2.to_json_full().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back2.measured.runtime_s, 2.25);
+        assert_eq!(back2.best_so_far, r2.best_so_far);
+        assert!(!back2.timed_out);
+    }
+
+    #[test]
+    fn from_json_full_rejects_garbage() {
+        let v = crate::util::Json::parse(r#"{"id": 1}"#).unwrap();
+        assert!(EvalRecord::from_json_full(&v).is_err());
+        let v = crate::util::Json::parse(r#"{"config_key": "1,2"}"#).unwrap();
+        assert!(EvalRecord::from_json_full(&v).is_err());
     }
 
     #[test]

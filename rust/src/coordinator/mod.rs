@@ -68,6 +68,25 @@ pub struct TuneSetup {
     /// Project node-hour budget (the paper's real constraint that forced
     /// the 1800 s wall-clock limits); the run stops when exhausted.
     pub node_hours_budget: Option<f64>,
+    /// Ensemble evaluation engine: 0 or 1 keeps the serial in-loop path;
+    /// >= 2 routes the run through `crate::ensemble`'s manager/worker
+    /// subsystem (opt-in).
+    pub ensemble_workers: usize,
+    /// Proposals in flight per ensemble manager cycle (0 = worker count).
+    pub ensemble_batch: usize,
+    /// Pending-point imputation for the ensemble's async-BO bridge.
+    pub liar: crate::ensemble::LiarStrategy,
+    /// Simulated transient evaluation-failure probability (ensemble fault
+    /// injection; 0.0 disables).
+    pub fault_rate: f64,
+    /// Retries (with worker exclusion) before an evaluation is abandoned.
+    pub max_retries: usize,
+    /// Cancel in-flight runs whose runtime exceeds this multiple of the
+    /// batch median (ensemble straggler policy; None disables).
+    pub straggler_factor: Option<f64>,
+    /// Ensemble checkpoint file: completed evaluations persist here and a
+    /// resumed session re-evaluates none of them.
+    pub checkpoint_path: Option<std::path::PathBuf>,
 }
 
 impl TuneSetup {
@@ -90,6 +109,13 @@ impl TuneSetup {
             event_transport: false,
             power_cap_w: None,
             node_hours_budget: None,
+            ensemble_workers: 0,
+            ensemble_batch: 0,
+            liar: crate::ensemble::LiarStrategy::ConstantMin,
+            fault_rate: 0.0,
+            max_retries: 2,
+            straggler_factor: None,
+            checkpoint_path: None,
         }
     }
 }
@@ -112,30 +138,73 @@ pub struct TuneResult {
     /// Split-gain parameter importance from a forest refit on the run's
     /// database (which knobs mattered), normalized, descending.
     pub param_importance: Vec<(String, f64)>,
+    /// Ensemble-engine telemetry (None on the serial path).
+    pub ensemble: Option<crate::ensemble::EnsembleStats>,
 }
 
-enum Strat {
+pub(crate) enum Strat {
     Bo(BayesianOptimizer),
     Other(Box<dyn SearchStrategy>),
 }
 
 impl Strat {
-    fn propose(&mut self, rng: &mut Pcg32) -> Configuration {
+    pub(crate) fn propose(&mut self, rng: &mut Pcg32) -> Configuration {
         match self {
             Strat::Bo(b) => b.propose(rng),
             Strat::Other(s) => s.propose(rng),
         }
     }
 
-    fn observe(&mut self, cfg: &Configuration, y: f64) {
+    pub(crate) fn observe(&mut self, cfg: &Configuration, y: f64) {
         match self {
             Strat::Bo(b) => b.observe(cfg, y),
             Strat::Other(s) => s.observe(cfg, y),
         }
     }
+
+    /// The Bayesian optimizer, when that is the active strategy (the
+    /// ensemble's pending-point bridge only applies to BO).
+    pub(crate) fn as_bo_mut(&mut self) -> Option<&mut BayesianOptimizer> {
+        match self {
+            Strat::Bo(b) => Some(b),
+            Strat::Other(_) => None,
+        }
+    }
 }
 
-fn model_for_setup(setup: &TuneSetup) -> Box<dyn AppModel> {
+/// Construct the configured search strategy (shared by the serial loop
+/// and the ensemble manager).
+pub(crate) fn build_strategy(
+    setup: &TuneSetup,
+    space: Arc<crate::space::ConfigSpace>,
+    scorer: Arc<Scorer>,
+) -> Strat {
+    match setup.strategy {
+        StrategyKind::Bo => {
+            let mut bo = BayesianOptimizer::new(
+                space,
+                BoConfig {
+                    n_init: setup.n_init,
+                    acquisition: crate::acquisition::Acquisition::Lcb { kappa: setup.kappa },
+                    surrogate: setup.surrogate,
+                    ..Default::default()
+                },
+                scorer,
+            );
+            if let Some(prior) = &setup.warm_start {
+                bo.preload(prior);
+            }
+            Strat::Bo(bo)
+        }
+        StrategyKind::Random => Strat::Other(Box::new(RandomSearch::new(space))),
+        StrategyKind::Grid => {
+            Strat::Other(Box::new(GridSearch::new(space, setup.max_evals as u128 * 2)))
+        }
+        StrategyKind::Mctree => Strat::Other(Box::new(crate::search::McTreeSearch::new(space))),
+    }
+}
+
+pub(crate) fn model_for_setup(setup: &TuneSetup) -> Box<dyn AppModel> {
     if setup.app == AppKind::XSBenchMixed && setup.event_transport {
         Box::new(apps::xsbench::XsBenchCpu::mixed_event())
     } else {
@@ -144,7 +213,7 @@ fn model_for_setup(setup: &TuneSetup) -> Box<dyn AppModel> {
 }
 
 /// Generate the Step-3 launch plan for a configuration.
-fn launch_plan(
+pub(crate) fn launch_plan(
     setup: &TuneSetup,
     space: &ConfigSpace,
     cfg: &Configuration,
@@ -159,7 +228,7 @@ fn launch_plan(
 }
 
 /// Measure one run with the selected metric (Step 5's measurement half).
-fn measure(
+pub(crate) fn measure(
     setup: &TuneSetup,
     run: &crate::apps::AppRun,
     scorer: &Scorer,
@@ -224,39 +293,22 @@ pub fn autotune(setup: &TuneSetup) -> Result<TuneResult> {
 }
 
 /// Run with a pre-loaded scorer (examples/benches share one runtime).
+///
+/// Defaults to the paper's serial loop; setups with `ensemble_workers >=
+/// 2` opt in to the asynchronous manager/worker engine in
+/// [`crate::ensemble`].
 pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneResult> {
     anyhow::ensure!(setup.parallel_evals >= 1, "parallel_evals must be >= 1");
+    if setup.ensemble_workers >= 2 {
+        return crate::ensemble::autotune_ensemble(setup, scorer);
+    }
     let space = Arc::new(paper::build_space(setup.app, setup.platform));
     let model = model_for_setup(setup);
     let mut rng = Pcg32::seeded(setup.seed);
 
     let (baseline, baseline_objective) = measure_baseline(setup, &scorer)?;
 
-    let mut strat = match setup.strategy {
-        StrategyKind::Bo => {
-            let mut bo = BayesianOptimizer::new(
-                space.clone(),
-                BoConfig {
-                    n_init: setup.n_init,
-                    acquisition: crate::acquisition::Acquisition::Lcb { kappa: setup.kappa },
-                    surrogate: setup.surrogate,
-                    ..Default::default()
-                },
-                scorer.clone(),
-            );
-            if let Some(prior) = &setup.warm_start {
-                bo.preload(prior);
-            }
-            Strat::Bo(bo)
-        }
-        StrategyKind::Random => Strat::Other(Box::new(RandomSearch::new(space.clone()))),
-        StrategyKind::Grid => {
-            Strat::Other(Box::new(GridSearch::new(space.clone(), setup.max_evals as u128 * 2)))
-        }
-        StrategyKind::Mctree => {
-            Strat::Other(Box::new(crate::search::McTreeSearch::new(space.clone())))
-        }
-    };
+    let mut strat = build_strategy(setup, space.clone(), scorer.clone());
 
     let mut db = PerfDatabase::new();
     let mut wallclock = 0.0f64;
@@ -284,20 +336,33 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
         // ---- Step 1: select configurations --------------------------------
         let t_search = std::time::Instant::now();
         let mut cfgs = Vec::with_capacity(batch);
+        // index of each planted lie in the optimizer, so the real
+        // measurement amends exactly the observation it belongs to even
+        // when a mid-batch evaluation is skipped (failed launch)
+        let mut lie_idx: Vec<Option<usize>> = Vec::with_capacity(batch);
         for _ in 0..batch {
             let c = strat.propose(&mut rng);
-            if batch > 1 {
-                // constant-liar so the batch spreads out; amended below
-                let liar = if best.is_finite() { best } else { baseline_objective };
-                strat.observe(&c, liar);
-            }
+            // constant-liar so a BO batch spreads out; amended below.
+            // Non-BO strategies have no amendment hook and get their real
+            // observations after the batch completes instead.
+            let lie = match strat.as_bo_mut() {
+                Some(bo) if batch > 1 => {
+                    let liar = if best.is_finite() { best } else { baseline_objective };
+                    let idx = bo.next_index();
+                    bo.observe(&c, liar);
+                    Some(idx)
+                }
+                _ => None,
+            };
+            lie_idx.push(lie);
             cfgs.push(c);
         }
         let search_s = t_search.elapsed().as_secs_f64();
 
         let mut batch_spans: Vec<f64> = Vec::with_capacity(batch);
         let mut real_ys: Vec<(Configuration, f64)> = Vec::with_capacity(batch);
-        for cfg in cfgs {
+        let mut amendments: Vec<(usize, f64)> = Vec::with_capacity(batch);
+        for (cfg, lie) in cfgs.into_iter().zip(lie_idx) {
             // ---- Step 2: instantiate + verify the code mold ---------------
             let source = codegen::instantiate(setup.app, &space, &cfg)
                 .context("code-mold instantiation")?;
@@ -319,8 +384,12 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
                 }
                 Err(e) => {
                     // invalid launch (should not happen with paper spaces):
-                    // record as failed evaluation
+                    // skip, but settle this configuration's pending lie so
+                    // later amendments stay aligned with their observations
                     log::warn!("launch generation failed: {e}");
+                    if let (Some(idx), Some(bo)) = (lie, strat.as_bo_mut()) {
+                        bo.amend_at(idx, baseline_objective * 3.0);
+                    }
                     continue;
                 }
             };
@@ -346,8 +415,11 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
                 }
             };
             let objective = if timed_out {
-                // penalty for the surrogate: strictly worse than anything real
-                setup.eval_timeout_s.unwrap() * 3.0
+                // penalty for the surrogate: strictly worse than anything
+                // real in *objective units* (the timeout is seconds, which
+                // for energy/EDP metrics could otherwise undercut real
+                // measurements in joules)
+                (setup.eval_timeout_s.unwrap() * 3.0).max(baseline_objective * 3.0)
             } else {
                 measured.objective(setup.metric)
             };
@@ -387,8 +459,12 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
                 wallclock_s: wallclock + processing_s + charged_runtime,
                 best_so_far: if best.is_finite() { best } else { objective },
                 timed_out,
+                cancelled: false,
             });
             batch_spans.push(processing_s + charged_runtime);
+            if let Some(idx) = lie {
+                amendments.push((idx, objective));
+            }
             real_ys.push((cfg, objective));
             eval_id += 1;
 
@@ -397,14 +473,15 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
             }
         }
 
-        // feed back real observations
-        if batch > 1 {
-            if let Strat::Bo(bo) = &mut strat {
-                bo.amend_last(real_ys.len(), &real_ys.iter().map(|r| r.1).collect::<Vec<_>>());
-            }
-        } else {
+        // feed back real observations: BO batches amend their pending
+        // lies in place; everything else observes the real objectives
+        if amendments.is_empty() {
             for (cfg, y) in &real_ys {
                 strat.observe(cfg, *y);
+            }
+        } else if let Some(bo) = strat.as_bo_mut() {
+            for (idx, y) in &amendments {
+                bo.amend_at(*idx, *y);
             }
         }
 
@@ -442,12 +519,17 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
         scorer_accelerated: scorer.is_accelerated(),
         param_importance,
         db,
+        ensemble: None,
     })
 }
 
 /// Which knobs mattered: refit a forest on the evaluated points and pull
 /// split-gain importances (surrogate::importance), ranked descending.
-fn importance_from_db(space: &ConfigSpace, db: &PerfDatabase, seed: u64) -> Vec<(String, f64)> {
+pub(crate) fn importance_from_db(
+    space: &ConfigSpace,
+    db: &PerfDatabase,
+    seed: u64,
+) -> Vec<(String, f64)> {
     let usable: Vec<&EvalRecord> =
         db.records.iter().filter(|r| !r.timed_out && r.objective.is_finite()).collect();
     if usable.len() < 8 {
@@ -505,6 +587,29 @@ impl TuneResult {
         ));
         s.push_str(&format!("best configuration: {}\n", self.best_config_desc));
         s.push_str(&format!("max ytopt overhead: {:.1} s\n", self.db.max_overhead_s()));
+        if let Some(es) = &self.ensemble {
+            s.push_str(&format!(
+                "ensemble: {} workers | batch {} | liar {} | {} batches | faults {} (retries {}, abandoned {}) | timeouts {} | stragglers cancelled {} | resumed {}\n",
+                es.workers,
+                es.batch,
+                es.liar.name(),
+                es.batches,
+                es.faults,
+                es.retries,
+                es.failed_evals,
+                es.timeouts,
+                es.stragglers_cancelled,
+                es.resumed_evals,
+            ));
+            if self.wallclock_s > 0.0 && es.serial_equivalent_s > 0.0 {
+                s.push_str(&format!(
+                    "ensemble wall-clock compression: {:.0} s vs {:.0} s serial-equivalent ({:.2}x)\n",
+                    self.wallclock_s,
+                    es.serial_equivalent_s,
+                    es.serial_equivalent_s / self.wallclock_s,
+                ));
+            }
+        }
         if !self.param_importance.is_empty() {
             let top: Vec<String> = self
                 .param_importance

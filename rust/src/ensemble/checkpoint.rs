@@ -1,0 +1,230 @@
+//! Ensemble session persistence: every completed evaluation is appended
+//! to a JSON checkpoint (atomically: write-temp + rename), so a killed
+//! session resumes without re-evaluating any completed configuration.
+//!
+//! The checkpoint carries a setup fingerprint; resuming against a
+//! different app/platform/metric/seed is refused rather than silently
+//! polluting the surrogate with foreign observations.
+
+use std::path::Path;
+
+use crate::coordinator::{EvalRecord, TuneSetup};
+use crate::space::Configuration;
+use crate::util::Json;
+use anyhow::{Context, Result};
+
+/// Persisted state of one (possibly interrupted) ensemble session.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub fingerprint: String,
+    /// Simulated wall-clock at the last completed batch.
+    pub wallclock_s: f64,
+    /// Completed evaluations, in id order.
+    pub records: Vec<EvalRecord>,
+}
+
+/// Identity of a tuning run for resume-compatibility checks.
+///
+/// Everything that shapes what the recorded observations *mean* is
+/// included: the problem (app/platform/nodes/metric, power cap, event
+/// transport), the search (seed/strategy/surrogate/n_init/kappa and the
+/// warm-start prior's contents), and the outcome semantics (timeout
+/// penalty, fault injection, straggler policy, liar imputation).
+/// Deliberately excluded are pure capacity knobs —
+/// max_evals, the wall-clock budget, node-hours, worker count, and
+/// batch size — because resuming with a larger budget or on different
+/// parallel hardware is the normal way to continue an interrupted
+/// session.
+pub fn fingerprint(setup: &TuneSetup) -> String {
+    // content hash of the warm-start prior: same length with different
+    // observations must not fingerprint-match
+    let warm_hash = setup
+        .warm_start
+        .as_ref()
+        .map(|prior| {
+            prior.iter().fold(0xcbf2_9ce4_8422_2325u64, |mut h, (c, y)| {
+                for &i in c.indices() {
+                    h = (h ^ i as u64).wrapping_mul(0x100_0000_01b3);
+                }
+                (h ^ y.to_bits()).wrapping_mul(0x100_0000_01b3)
+            })
+        })
+        .unwrap_or(0);
+    format!(
+        "{}|{}|n{}|{}|seed{}|{:?}|{:?}|init{}|k{}|t{:?}|liar:{}|fault{}|r{}|straggle{:?}|cap{:?}|evt{}|warm{:x}",
+        setup.app.name(),
+        setup.platform.name(),
+        setup.nodes,
+        setup.metric.name(),
+        setup.seed,
+        setup.strategy,
+        setup.surrogate,
+        setup.n_init,
+        setup.kappa,
+        setup.eval_timeout_s,
+        setup.liar.name(),
+        setup.fault_rate,
+        setup.max_retries,
+        setup.straggler_factor,
+        setup.power_cap_w,
+        setup.event_transport,
+        warm_hash,
+    )
+}
+
+/// Parse a `Configuration` back from an [`EvalRecord::config_key`].
+pub fn config_from_key(key: &str) -> Result<Configuration> {
+    let idx: std::result::Result<Vec<u32>, _> =
+        key.split(',').map(|s| s.trim().parse::<u32>()).collect();
+    match idx {
+        Ok(v) if !v.is_empty() => Ok(Configuration::from_indices(v)),
+        _ => anyhow::bail!("malformed config key `{key}`"),
+    }
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", 1u64.into()),
+            ("fingerprint", self.fingerprint.as_str().into()),
+            ("wallclock_s", self.wallclock_s.into()),
+            ("records", Json::Arr(self.records.iter().map(EvalRecord::to_json_full).collect())),
+        ])
+    }
+
+    pub fn parse(text: &str) -> Result<Checkpoint> {
+        let v = Json::parse(text).context("parsing ensemble checkpoint")?;
+        let fingerprint = v
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .context("checkpoint missing `fingerprint`")?
+            .to_string();
+        let wallclock_s = v
+            .get("wallclock_s")
+            .and_then(Json::as_f64)
+            .context("checkpoint missing `wallclock_s`")?;
+        let mut records: Vec<EvalRecord> = v
+            .get("records")
+            .and_then(Json::as_arr)
+            .context("checkpoint missing `records`")?
+            .iter()
+            .map(EvalRecord::from_json_full)
+            .collect::<Result<_>>()?;
+        records.sort_by_key(|r| r.id);
+        Ok(Checkpoint { fingerprint, wallclock_s, records })
+    }
+
+    /// Load from `path`; `Ok(None)` when no checkpoint exists yet.
+    pub fn load(path: &Path) -> Result<Option<Checkpoint>> {
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Ok(Some(Self::parse(&text)?))
+    }
+
+    /// Atomic save: write a sibling temp file, then rename over `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string())
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("installing checkpoint {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Measured;
+
+    fn rec(id: usize) -> EvalRecord {
+        EvalRecord {
+            id,
+            config_key: format!("{},{}", id, id + 1),
+            config_desc: format!("threads={id}"),
+            command: "aprun -n 1".into(),
+            measured: Measured::runtime_only(3.0 + id as f64),
+            objective: 3.0 + id as f64,
+            compile_s: 2.0,
+            processing_s: 40.0,
+            overhead_s: 38.0,
+            wallclock_s: 60.0 * (id + 1) as f64,
+            best_so_far: 3.0,
+            timed_out: false,
+            cancelled: false,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ytopt-ckpt-test-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        assert!(Checkpoint::load(&path).unwrap().is_none());
+        let cp = Checkpoint {
+            fingerprint: "fp".into(),
+            wallclock_s: 123.5,
+            records: vec![rec(1), rec(0)],
+        };
+        cp.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap().expect("checkpoint exists");
+        assert_eq!(back.fingerprint, "fp");
+        assert_eq!(back.wallclock_s, 123.5);
+        // records come back sorted by id
+        assert_eq!(back.records.len(), 2);
+        assert_eq!(back.records[0].id, 0);
+        assert_eq!(back.records[1].id, 1);
+        assert_eq!(back.records[1].config_key, "1,2");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn config_key_parses_and_rejects() {
+        let c = config_from_key("3,0,7").unwrap();
+        assert_eq!(c.indices(), &[3, 0, 7]);
+        assert!(config_from_key("").is_err());
+        assert!(config_from_key("1,x").is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_setups() {
+        use crate::apps::AppKind;
+        use crate::metrics::Metric;
+        use crate::platform::PlatformKind;
+        let a = TuneSetup::new(AppKind::Amg, PlatformKind::Theta, 64, Metric::Runtime);
+        let mut b = a.clone();
+        b.seed = a.seed + 1;
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        // search-identity knobs all change the fingerprint
+        let mut k = a.clone();
+        k.kappa = 4.0;
+        assert_ne!(fingerprint(&a), fingerprint(&k));
+        let mut t = a.clone();
+        t.eval_timeout_s = Some(60.0);
+        assert_ne!(fingerprint(&a), fingerprint(&t));
+        let mut l = a.clone();
+        l.liar = crate::ensemble::LiarStrategy::KrigingBeliever;
+        assert_ne!(fingerprint(&a), fingerprint(&l));
+        let mut p = a.clone();
+        p.power_cap_w = Some(200.0); // different physics
+        assert_ne!(fingerprint(&a), fingerprint(&p));
+        // warm-start content (not just length) is part of the identity
+        let cfg = Configuration::from_indices(vec![1, 2]);
+        let mut w1 = a.clone();
+        w1.warm_start = Some(vec![(cfg.clone(), 5.0)]);
+        let mut w2 = a.clone();
+        w2.warm_start = Some(vec![(cfg, 6.0)]);
+        assert_ne!(fingerprint(&w1), fingerprint(&w2));
+        assert_ne!(fingerprint(&a), fingerprint(&w1));
+        // capacity knobs must NOT change identity
+        let mut c = a.clone();
+        c.max_evals += 10;
+        c.wallclock_budget_s *= 2.0;
+        c.ensemble_workers = 16;
+        c.ensemble_batch = 32;
+        assert_eq!(fingerprint(&a), fingerprint(&c));
+    }
+}

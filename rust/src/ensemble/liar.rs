@@ -1,0 +1,118 @@
+//! Pending-point imputation for the async-BO bridge.
+//!
+//! While evaluations are in flight, the Bayesian optimizer must keep
+//! proposing — without imputation it would re-propose the same argmin of
+//! the unchanged acquisition surface (or stall waiting on stragglers).
+//! Each in-flight configuration is therefore observed with a *lie* that
+//! is amended to the real measurement when the worker reports back
+//! (`BayesianOptimizer::amend_at`). The lie family is the classic batch
+//! BO menu (Ginsbourger's constant liar and kriging believer, the same
+//! options libEnsemble's persistent-gp generator exposes):
+//!
+//! * `cl-min`  — lie with the best (minimum) real objective so far:
+//!   optimistic; spreads the batch away from the incumbent.
+//! * `cl-mean` — lie with the mean real objective: neutral.
+//! * `cl-max`  — lie with the worst real objective: pessimistic; allows
+//!   the batch to densify near promising regions.
+//! * `kriging` — believe the surrogate: lie with its posterior mean at
+//!   the pending point.
+
+use crate::search::BayesianOptimizer;
+use crate::space::Configuration;
+use crate::util::Pcg32;
+
+/// How in-flight (pending) evaluations are imputed for the surrogate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LiarStrategy {
+    ConstantMin,
+    ConstantMean,
+    ConstantMax,
+    KrigingBeliever,
+}
+
+impl LiarStrategy {
+    pub fn parse(s: &str) -> Option<LiarStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "cl-min" | "clmin" | "min" | "constant-liar" => Some(LiarStrategy::ConstantMin),
+            "cl-mean" | "clmean" | "mean" => Some(LiarStrategy::ConstantMean),
+            "cl-max" | "clmax" | "max" => Some(LiarStrategy::ConstantMax),
+            "kriging" | "kriging-believer" | "believer" | "kb" => {
+                Some(LiarStrategy::KrigingBeliever)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LiarStrategy::ConstantMin => "cl-min",
+            LiarStrategy::ConstantMean => "cl-mean",
+            LiarStrategy::ConstantMax => "cl-max",
+            LiarStrategy::KrigingBeliever => "kriging",
+        }
+    }
+
+    /// The imputed objective for a pending configuration.
+    ///
+    /// `real_ys` are the finite real measurements so far; `fallback` (the
+    /// baseline objective) is used before any exist. The kriging believer
+    /// consults the optimizer's surrogate and degrades to `cl-mean` when
+    /// the posterior is unavailable (fewer than two observations).
+    pub fn impute(
+        &self,
+        bo: Option<&BayesianOptimizer>,
+        cfg: &Configuration,
+        real_ys: &[f64],
+        fallback: f64,
+        rng: &mut Pcg32,
+    ) -> f64 {
+        let finite: Vec<f64> = real_ys.iter().copied().filter(|y| y.is_finite()).collect();
+        if finite.is_empty() {
+            return fallback;
+        }
+        let mean = finite.iter().sum::<f64>() / finite.len() as f64;
+        match self {
+            LiarStrategy::ConstantMin => finite.iter().copied().fold(f64::INFINITY, f64::min),
+            LiarStrategy::ConstantMean => mean,
+            LiarStrategy::ConstantMax => finite.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            LiarStrategy::KrigingBeliever => bo
+                .and_then(|b| b.predict_mean(cfg, rng))
+                .filter(|m| m.is_finite())
+                .unwrap_or(mean),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_aliases() {
+        for s in [
+            LiarStrategy::ConstantMin,
+            LiarStrategy::ConstantMean,
+            LiarStrategy::ConstantMax,
+            LiarStrategy::KrigingBeliever,
+        ] {
+            assert_eq!(LiarStrategy::parse(s.name()), Some(s), "{s:?}");
+        }
+        assert_eq!(LiarStrategy::parse("KB"), Some(LiarStrategy::KrigingBeliever));
+        assert_eq!(LiarStrategy::parse("nope"), None);
+    }
+
+    #[test]
+    fn constant_liars_pick_the_right_statistic() {
+        let cfg = Configuration::from_indices(vec![0]);
+        let mut rng = Pcg32::seeded(1);
+        let ys = [3.0, 1.0, 5.0, f64::INFINITY]; // non-finite ignored
+        let args = |s: LiarStrategy, rng: &mut Pcg32| s.impute(None, &cfg, &ys, 9.0, rng);
+        assert_eq!(args(LiarStrategy::ConstantMin, &mut rng), 1.0);
+        assert_eq!(args(LiarStrategy::ConstantMean, &mut rng), 3.0);
+        assert_eq!(args(LiarStrategy::ConstantMax, &mut rng), 5.0);
+        // no data at all: fall back to the baseline
+        assert_eq!(LiarStrategy::ConstantMin.impute(None, &cfg, &[], 9.0, &mut rng), 9.0);
+        // believer without an optimizer degrades to the mean
+        assert_eq!(LiarStrategy::KrigingBeliever.impute(None, &cfg, &ys, 9.0, &mut rng), 3.0);
+    }
+}

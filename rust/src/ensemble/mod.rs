@@ -1,0 +1,773 @@
+//! Asynchronous ensemble evaluation: a libEnsemble-style manager/worker
+//! engine for parallel, fault-tolerant autotuning (the paper's follow-on
+//! "Integrating ytopt and libEnsemble" direction).
+//!
+//! The serial coordinator walks Fig. 1's five steps one configuration at
+//! a time; this subsystem decouples *selection* from *evaluation*:
+//!
+//! * [`worker`] — a bounded-queue [`WorkerPool`] of `std::thread`
+//!   workers, each running the five-step evaluation pipeline (codegen →
+//!   launch line → compile model → app model → measurement) against the
+//!   simulated substrate.
+//! * [`liar`] — the async-BO bridge: in-flight configurations are
+//!   observed under a [`LiarStrategy`] imputation (constant-liar min /
+//!   mean / max, kriging believer) so the surrogate keeps proposing
+//!   while evaluations are outstanding, then amended in place
+//!   (`BayesianOptimizer::amend_at`) when real measurements land.
+//! * fault handling — deterministic transient-fault injection with
+//!   retry-with-exclusion, per-evaluation timeouts (as in the serial
+//!   path), and straggler cancellation (runs exceeding a multiple of the
+//!   batch-median runtime are cut off and penalized), all surfaced in
+//!   [`EnsembleStats`]. Exclusion is a *placement* policy (the retry is
+//!   kept off the worker that just failed it, as an operator would drain
+//!   a suspect node); whether the retry itself faults is rolled from
+//!   `(seed, configuration, attempt)` only, which is what keeps the
+//!   tuning trajectory independent of thread scheduling.
+//! * [`checkpoint`] — completed evaluations persist through an atomic
+//!   JSON checkpoint; a killed session resumes with zero re-evaluation
+//!   of completed configurations.
+//!
+//! Determinism: evaluation outcomes depend only on `(seed, eval_id,
+//! attempt)` — never on which OS thread ran them or in which order
+//! results arrived — and the manager applies results in eval-id order
+//! with an analytic greedy-scheduler wall-clock model, so a tuning run
+//! is reproducible from its seed despite real concurrency.
+
+pub mod checkpoint;
+pub mod liar;
+pub mod worker;
+
+pub use checkpoint::Checkpoint;
+pub use liar::LiarStrategy;
+pub use worker::WorkerPool;
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::apps::{AppModel, EvalContext};
+use crate::codegen;
+use crate::coordinator::{self, overhead, EvalRecord, PerfDatabase, TuneResult, TuneSetup};
+use crate::metrics::{improvement_pct, Measured};
+use crate::platform::{compile_time, launch};
+use crate::runtime::Scorer;
+use crate::search::SearchStrategy;
+use crate::space::{paper, ConfigSpace, Configuration};
+use crate::util::Pcg32;
+use anyhow::{Context, Result};
+
+/// Ensemble telemetry surfaced in [`TuneResult`].
+#[derive(Debug, Clone)]
+pub struct EnsembleStats {
+    pub workers: usize,
+    /// Proposals in flight per manager cycle.
+    pub batch: usize,
+    pub liar: LiarStrategy,
+    /// Manager cycles executed (excluding resumed history).
+    pub batches: usize,
+    /// Transient faults observed (including ones later retried away).
+    pub faults: usize,
+    /// Retry submissions issued (always with the failing worker excluded).
+    pub retries: usize,
+    /// Evaluations abandoned after exhausting retries (or failing launch).
+    pub failed_evals: usize,
+    /// Evaluations cut off by the per-evaluation timeout.
+    pub timeouts: usize,
+    /// In-flight runs cancelled by the straggler policy.
+    pub stragglers_cancelled: usize,
+    /// Completed evaluations restored from the checkpoint (not re-run).
+    pub resumed_evals: usize,
+    /// What the recorded evaluations would have cost back-to-back — the
+    /// serial-equivalent wall-clock the worker pool compressed.
+    pub serial_equivalent_s: f64,
+}
+
+/// One unit of work handed to the pool.
+struct EvalJob {
+    eval_id: usize,
+    /// Observation index of this point's pending lie in the optimizer.
+    bo_index: Option<usize>,
+    attempt: usize,
+    bounces: usize,
+    /// Workers excluded by retry-with-exclusion.
+    excluded: Vec<usize>,
+    cfg: Configuration,
+}
+
+/// A completed five-step evaluation (simulated timings included).
+struct EvalDone {
+    command: String,
+    measured: Measured,
+    timed_out: bool,
+    charged_runtime_s: f64,
+    compile_s: f64,
+    orch_s: f64,
+    launch_s: f64,
+}
+
+enum OutcomeKind {
+    Done(Box<EvalDone>),
+    /// Deterministic transient fault (simulated node/launch failure).
+    Fault,
+    /// The polling worker was excluded for this job; resubmit.
+    Bounced,
+    /// Launch-line generation failed (invalid placement).
+    LaunchFailed(String),
+    /// Measurement pipeline error — fatal, mirrors the serial `?`.
+    MeasureError(String),
+}
+
+struct EvalOutcome {
+    job: EvalJob,
+    worker: usize,
+    kind: OutcomeKind,
+}
+
+/// A job's final disposition after retries/bounces settle.
+enum Resolved {
+    Done(EvalJob, Box<EvalDone>),
+    Failed(EvalJob),
+}
+
+impl Resolved {
+    fn eval_id(&self) -> usize {
+        match self {
+            Resolved::Done(j, _) => j.eval_id,
+            Resolved::Failed(j) => j.eval_id,
+        }
+    }
+}
+
+/// Deterministic fault roll for `(seed, configuration, attempt)` —
+/// independent of the worker and of thread scheduling.
+fn fault_roll(seed: u64, cfg: &Configuration, attempt: usize) -> f64 {
+    let mut h = seed ^ 0xfa01_77ab_c0de_5eed;
+    for &i in cfg.indices() {
+        h = h.rotate_left(9) ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    }
+    h ^= (attempt as u64 + 1).wrapping_mul(0x2545_f491_4f6c_dd1d);
+    let mut r = Pcg32::new(h, 0xfa417);
+    r.f64()
+}
+
+/// Run the five-step pipeline for one job on one worker.
+fn evaluate_one(
+    setup: &TuneSetup,
+    space: &ConfigSpace,
+    scorer: &Scorer,
+    model: &dyn AppModel,
+    worker: usize,
+    job: EvalJob,
+) -> EvalOutcome {
+    // per-(eval, attempt) stream: deterministic wherever this job runs
+    let mut rng = Pcg32::new(
+        setup.seed ^ (job.eval_id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        0x5851_f42d ^ job.attempt as u64,
+    );
+
+    if setup.fault_rate > 0.0 && fault_roll(setup.seed, &job.cfg, job.attempt) < setup.fault_rate {
+        return EvalOutcome { job, worker, kind: OutcomeKind::Fault };
+    }
+
+    // ---- Step 2: instantiate + verify the code mold -------------------
+    let source = match codegen::instantiate(setup.app, space, &job.cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            let kind = OutcomeKind::MeasureError(format!("code-mold instantiation: {e}"));
+            return EvalOutcome { job, worker, kind };
+        }
+    };
+    if !codegen::verify(&source) {
+        let kind = OutcomeKind::MeasureError("generated code failed verification".to_string());
+        return EvalOutcome { job, worker, kind };
+    }
+
+    // ---- Step 3: generate the launch command --------------------------
+    let (command, ctx) = match coordinator::launch_plan(setup, space, &job.cfg) {
+        Ok(plan) => {
+            let mut ctx = EvalContext::new(setup.platform, setup.nodes);
+            ctx.ranks_per_node = plan.ranks_per_node;
+            ctx.uses_gpus = plan.uses_gpus;
+            let cmd = if setup.metric.needs_power() {
+                format!(
+                    "{} {}",
+                    codegen::env_prefix(space, &job.cfg),
+                    launch::geopmlaunch(&plan, "gm.report")
+                )
+            } else {
+                format!("{} {}", codegen::env_prefix(space, &job.cfg), plan.command)
+            };
+            (cmd, ctx)
+        }
+        Err(e) => {
+            return EvalOutcome { job, worker, kind: OutcomeKind::LaunchFailed(e.to_string()) }
+        }
+    };
+
+    // ---- Step 4: compile ----------------------------------------------
+    let compile_s = compile_time::sample_compile_s(setup.app, setup.platform, &mut rng);
+
+    // ---- Step 5: run + measure ----------------------------------------
+    let mut ctx = ctx;
+    ctx.noise_seed = setup.seed ^ (job.eval_id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let mut run = model.run(space, &job.cfg, &ctx);
+    if let Some(cap) = setup.power_cap_w {
+        run = crate::power::apply_cap(&run, cap);
+    }
+    let (measured, timed_out, charged_runtime_s) = match setup.eval_timeout_s {
+        Some(t) if run.runtime_s > t => (Measured::runtime_only(f64::INFINITY), true, t),
+        _ => match coordinator::measure(setup, &run, scorer, ctx.noise_seed) {
+            Ok(m) => (m, false, m.runtime_s),
+            Err(e) => {
+                let kind = OutcomeKind::MeasureError(format!("{e:#}"));
+                return EvalOutcome { job, worker, kind };
+            }
+        },
+    };
+    let orch_s = overhead::sample_orchestration_s(setup.app, setup.platform, setup.nodes, &mut rng);
+    let launch_s = launch::launch_overhead_s(setup.platform, setup.nodes);
+    EvalOutcome {
+        job,
+        worker,
+        kind: OutcomeKind::Done(Box::new(EvalDone {
+            command,
+            measured,
+            timed_out,
+            charged_runtime_s,
+            compile_s,
+            orch_s,
+            launch_s,
+        })),
+    }
+}
+
+/// Run the full autotuning loop on the ensemble engine. Invoked by
+/// [`coordinator::autotune_with_scorer`] when `ensemble_workers >= 2`.
+pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneResult> {
+    anyhow::ensure!(
+        setup.ensemble_workers >= 2,
+        "ensemble path needs >= 2 workers (got {})",
+        setup.ensemble_workers
+    );
+    let workers = setup.ensemble_workers;
+    let batch_target = if setup.ensemble_batch == 0 { workers } else { setup.ensemble_batch };
+
+    let space = Arc::new(paper::build_space(setup.app, setup.platform));
+    let mut rng = Pcg32::seeded(setup.seed);
+    let (baseline, baseline_objective) = coordinator::measure_baseline(setup, &scorer)?;
+
+    let mut strat = coordinator::build_strategy(setup, space.clone(), scorer.clone());
+
+    let mut db = PerfDatabase::new();
+    let mut wallclock = 0.0f64;
+    let mut best = f64::INFINITY;
+    let mut best_desc = String::new();
+    let mut eval_id = 0usize;
+    // finite real measurements (the liar pool)
+    let mut real_objectives: Vec<f64> = Vec::new();
+    let mut stats = EnsembleStats {
+        workers,
+        batch: batch_target,
+        liar: setup.liar,
+        batches: 0,
+        faults: 0,
+        retries: 0,
+        failed_evals: 0,
+        timeouts: 0,
+        stragglers_cancelled: 0,
+        resumed_evals: 0,
+        serial_equivalent_s: 0.0,
+    };
+
+    // ---- resume: feed checkpointed evaluations straight to the search --
+    let fp = checkpoint::fingerprint(setup);
+    if let Some(path) = &setup.checkpoint_path {
+        if let Some(cp) = Checkpoint::load(path)? {
+            anyhow::ensure!(
+                cp.fingerprint == fp,
+                "checkpoint {} belongs to a different run: `{}` != `{fp}`",
+                path.display(),
+                cp.fingerprint
+            );
+            for rec in cp.records {
+                let cfg = checkpoint::config_from_key(&rec.config_key)?;
+                strat.observe(&cfg, rec.objective);
+                if !rec.timed_out && rec.objective.is_finite() {
+                    if rec.objective < best {
+                        best = rec.objective;
+                        best_desc = rec.config_desc.clone();
+                    }
+                    real_objectives.push(rec.objective);
+                }
+                db.push(rec);
+            }
+            eval_id = db.len();
+            wallclock = cp.wallclock_s;
+            stats.resumed_evals = eval_id;
+            log::info!("resumed {eval_id} completed evaluations from {}", path.display());
+        }
+    }
+
+    // ---- the worker pool ------------------------------------------------
+    let eval_fn = {
+        let setup = Arc::new(setup.clone());
+        let space = space.clone();
+        let scorer = scorer.clone();
+        let model: Arc<dyn AppModel> = Arc::from(coordinator::model_for_setup(&setup));
+        move |worker: usize, job: EvalJob| -> EvalOutcome {
+            if job.excluded.contains(&worker) {
+                return EvalOutcome { job, worker, kind: OutcomeKind::Bounced };
+            }
+            evaluate_one(&setup, &space, &scorer, model.as_ref(), worker, job)
+        }
+    };
+    let mut pool: WorkerPool<EvalJob, EvalOutcome> =
+        WorkerPool::new(workers, workers.max(batch_target) * 2, eval_fn);
+
+    let mut allocation = setup.node_hours_budget.map(|nh| {
+        crate::platform::scheduler::Allocation::new(setup.platform, "ytopt-repro", nh)
+    });
+
+    'outer: while eval_id < setup.max_evals && wallclock < setup.wallclock_budget_s {
+        if let Some(alloc) = &allocation {
+            let est = if eval_id > 0 { wallclock / eval_id as f64 } else { 60.0 };
+            if !alloc.can_afford(setup.nodes, est) {
+                log::info!("allocation exhausted after {eval_id} evaluations");
+                break 'outer;
+            }
+        }
+        let batch = batch_target.min(setup.max_evals - eval_id);
+
+        // ---- Step 1: propose a batch, lying about in-flight points -----
+        let t_search = std::time::Instant::now();
+        let mut jobs: Vec<EvalJob> = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let cfg = strat.propose(&mut rng);
+            let bo_index = match strat.as_bo_mut() {
+                Some(bo) if batch > 1 => {
+                    let lie = setup.liar.impute(
+                        Some(&*bo),
+                        &cfg,
+                        &real_objectives,
+                        baseline_objective,
+                        &mut rng,
+                    );
+                    let idx = bo.next_index();
+                    bo.observe(&cfg, lie);
+                    Some(idx)
+                }
+                _ => None,
+            };
+            jobs.push(EvalJob {
+                eval_id: eval_id + b,
+                bo_index,
+                attempt: 0,
+                bounces: 0,
+                excluded: Vec::new(),
+                cfg,
+            });
+        }
+        let search_s = t_search.elapsed().as_secs_f64();
+
+        // ---- dispatch + collect (retries and bounces settle here) ------
+        for job in jobs {
+            anyhow::ensure!(pool.submit(job), "ensemble worker pool rejected a job");
+        }
+        let mut resolved: Vec<Resolved> = Vec::with_capacity(batch);
+        while resolved.len() < batch {
+            let out = pool
+                .recv_timeout(Duration::from_secs(120))
+                .context("ensemble worker stalled (no result within 120 s)")?;
+            match out.kind {
+                OutcomeKind::Done(d) => resolved.push(Resolved::Done(out.job, d)),
+                OutcomeKind::Bounced => {
+                    let mut job = out.job;
+                    job.bounces += 1;
+                    if job.bounces > 8 * workers {
+                        // pathological exclusion set: clear it rather than
+                        // ping-pong forever
+                        job.excluded.clear();
+                    }
+                    // back off briefly so an excluded-but-idle worker does
+                    // not turn resubmission into a hot spin while the
+                    // non-excluded workers stay busy
+                    std::thread::sleep(Duration::from_millis(1));
+                    anyhow::ensure!(pool.submit(job), "ensemble worker pool rejected a retry");
+                }
+                OutcomeKind::Fault => {
+                    stats.faults += 1;
+                    let mut job = out.job;
+                    if job.attempt < setup.max_retries {
+                        stats.retries += 1;
+                        job.attempt += 1;
+                        if !job.excluded.contains(&out.worker) {
+                            job.excluded.push(out.worker);
+                        }
+                        if job.excluded.len() >= workers {
+                            job.excluded.clear();
+                        }
+                        anyhow::ensure!(pool.submit(job), "ensemble worker pool rejected a retry");
+                    } else {
+                        resolved.push(Resolved::Failed(job));
+                    }
+                }
+                OutcomeKind::LaunchFailed(e) => {
+                    log::warn!("launch generation failed: {e}");
+                    resolved.push(Resolved::Failed(out.job));
+                }
+                OutcomeKind::MeasureError(e) => {
+                    anyhow::bail!("evaluation {} failed: {e}", out.job.eval_id);
+                }
+            }
+        }
+        // apply results in eval-id order: the tuning trajectory must not
+        // depend on thread completion order
+        resolved.sort_by_key(Resolved::eval_id);
+
+        // ---- straggler cancellation ------------------------------------
+        let mut straggler_cutoff = f64::INFINITY;
+        let mut cancelled_ids: HashSet<usize> = HashSet::new();
+        if let Some(factor) = setup.straggler_factor {
+            let mut runtimes: Vec<f64> = resolved
+                .iter()
+                .filter_map(|r| match r {
+                    Resolved::Done(_, d) if !d.timed_out => Some(d.charged_runtime_s),
+                    _ => None,
+                })
+                .collect();
+            if runtimes.len() >= 3 {
+                runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let median = runtimes[runtimes.len() / 2];
+                straggler_cutoff = median * factor.max(1.0);
+                for r in &resolved {
+                    if let Resolved::Done(j, d) = r {
+                        if !d.timed_out && d.charged_runtime_s > straggler_cutoff {
+                            cancelled_ids.insert(j.eval_id);
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- record, amend the surrogate, advance simulated time -------
+        let batch_n = resolved.len().max(1);
+        let dispatch_s = overhead::ensemble_dispatch_s(workers);
+        // greedy schedule over the real worker count: completion offsets
+        let mut worker_free = vec![0.0f64; workers];
+        for r in &resolved {
+            let (job, done) = match r {
+                Resolved::Done(j, d) => (j, Some(d)),
+                Resolved::Failed(j) => (j, None),
+            };
+            let first_extra = if job.eval_id == 0 {
+                overhead::first_eval_setup_s(setup.app, setup.platform, setup.nodes)
+            } else {
+                0.0
+            };
+            let record_s = 0.2;
+            let (measured, objective, timed_out, cancelled, compile_s, processing_s, charged) =
+                match done {
+                    Some(d) => {
+                        let cancelled = cancelled_ids.contains(&job.eval_id);
+                        let timed_out = d.timed_out || cancelled;
+                        let measured = if cancelled {
+                            Measured::runtime_only(f64::INFINITY)
+                        } else {
+                            d.measured
+                        };
+                        // penalties stay strictly worse than anything real
+                        // in objective units (timeouts are seconds, which
+                        // for energy/EDP could undercut real joules)
+                        let objective = if d.timed_out {
+                            (setup.eval_timeout_s.unwrap_or(baseline_objective) * 3.0)
+                                .max(baseline_objective * 3.0)
+                        } else if cancelled {
+                            baseline_objective * 3.0
+                        } else {
+                            d.measured.objective(setup.metric)
+                        };
+                        let charged =
+                            if cancelled { straggler_cutoff } else { d.charged_runtime_s };
+                        let processing_s = search_s / batch_n as f64
+                            + d.orch_s
+                            + first_extra
+                            + d.launch_s
+                            + d.compile_s
+                            + dispatch_s
+                            + record_s;
+                        (measured, objective, timed_out, cancelled, d.compile_s, processing_s, charged)
+                    }
+                    None => {
+                        // abandoned after retries: every attempt burned
+                        // orchestration + launch time but produced nothing
+                        let attempts = job.attempt as f64 + 1.0;
+                        let burn = attempts
+                            * (overhead::orchestration_s(setup.app, setup.platform, setup.nodes)
+                                + launch::launch_overhead_s(setup.platform, setup.nodes));
+                        let processing_s =
+                            search_s / batch_n as f64 + burn + first_extra + dispatch_s + record_s;
+                        (
+                            Measured::runtime_only(f64::INFINITY),
+                            baseline_objective * 3.0,
+                            true,
+                            false,
+                            0.0,
+                            processing_s,
+                            0.0,
+                        )
+                    }
+                };
+            if done.is_none() {
+                stats.failed_evals += 1;
+            }
+            if let Some(d) = done {
+                if d.timed_out {
+                    stats.timeouts += 1;
+                }
+            }
+            if cancelled {
+                stats.stragglers_cancelled += 1;
+            }
+
+            // amend the pending lie (or observe, when no lie was planted)
+            match job.bo_index {
+                Some(idx) => {
+                    if let Some(bo) = strat.as_bo_mut() {
+                        bo.amend_at(idx, objective);
+                    }
+                }
+                None => strat.observe(&job.cfg, objective),
+            }
+            if !timed_out && objective.is_finite() {
+                real_objectives.push(objective);
+                if objective < best {
+                    best = objective;
+                    best_desc = space.describe(&job.cfg);
+                }
+            }
+
+            let span = processing_s + charged;
+            stats.serial_equivalent_s += span;
+            // earliest-free worker takes the next job (submission order)
+            let w = (0..workers)
+                .min_by(|&a, &b| worker_free[a].partial_cmp(&worker_free[b]).unwrap())
+                .unwrap();
+            worker_free[w] += span;
+            let completion = wallclock + worker_free[w];
+
+            db.push(EvalRecord {
+                id: job.eval_id,
+                config_key: job.cfg.key(),
+                config_desc: space.describe(&job.cfg),
+                command: done.map(|d| d.command.clone()).unwrap_or_default(),
+                measured,
+                objective,
+                compile_s,
+                processing_s,
+                overhead_s: processing_s - compile_s,
+                wallclock_s: completion,
+                best_so_far: if best.is_finite() { best } else { objective },
+                timed_out,
+                cancelled,
+            });
+        }
+        let makespan = worker_free.iter().cloned().fold(0.0, f64::max);
+        wallclock += makespan;
+        eval_id += batch;
+        stats.batches += 1;
+
+        if let Some(alloc) = &mut allocation {
+            if alloc.charge(setup.nodes, makespan).is_err() {
+                // the job simply hits its allocation limit
+                if let Some(path) = &setup.checkpoint_path {
+                    save_checkpoint(path, &fp, wallclock, &db)?;
+                }
+                break 'outer;
+            }
+        }
+        if let Some(path) = &setup.checkpoint_path {
+            save_checkpoint(path, &fp, wallclock, &db)?;
+        }
+    }
+
+    pool.shutdown();
+
+    let param_importance = coordinator::importance_from_db(&space, &db, setup.seed);
+    Ok(TuneResult {
+        setup: setup.clone(),
+        space_size: space.size(),
+        baseline,
+        baseline_objective,
+        best_objective: best,
+        best_config_desc: best_desc,
+        improvement_pct: improvement_pct(baseline_objective, best),
+        wallclock_s: wallclock,
+        evaluations: db.len(),
+        scorer_accelerated: scorer.is_accelerated(),
+        param_importance,
+        db,
+        ensemble: Some(stats),
+    })
+}
+
+fn save_checkpoint(
+    path: &std::path::Path,
+    fingerprint: &str,
+    wallclock_s: f64,
+    db: &PerfDatabase,
+) -> Result<()> {
+    Checkpoint { fingerprint: fingerprint.to_string(), wallclock_s, records: db.records.clone() }
+        .save(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppKind;
+    use crate::metrics::Metric;
+    use crate::platform::PlatformKind;
+
+    fn setup(app: AppKind, platform: PlatformKind, nodes: u64, metric: Metric) -> TuneSetup {
+        let mut s = TuneSetup::new(app, platform, nodes, metric);
+        s.max_evals = 16;
+        s.wallclock_budget_s = 1e9;
+        s.n_init = 6;
+        s.ensemble_workers = 4;
+        s
+    }
+
+    fn run(s: &TuneSetup) -> TuneResult {
+        autotune_ensemble(s, Arc::new(Scorer::fallback())).unwrap()
+    }
+
+    #[test]
+    fn ensemble_is_deterministic_despite_threads() {
+        let s = setup(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+        let a = run(&s);
+        let b = run(&s);
+        assert_eq!(a.best_objective, b.best_objective);
+        // spans include the real (host) search time, which jitters by
+        // milliseconds against tens-of-seconds simulated spans
+        assert!(
+            (a.wallclock_s - b.wallclock_s).abs() < a.wallclock_s * 0.01 + 1.0,
+            "{} vs {}",
+            a.wallclock_s,
+            b.wallclock_s
+        );
+        let keys = |r: &TuneResult| {
+            r.db.records.iter().map(|x| x.config_key.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(keys(&a), keys(&b));
+    }
+
+    #[test]
+    fn ensemble_compresses_wallclock_vs_serial_equivalent() {
+        let s = setup(AppKind::Swfft, PlatformKind::Theta, 64, Metric::Runtime);
+        let r = run(&s);
+        assert_eq!(r.evaluations, 16);
+        let es = r.ensemble.as_ref().expect("ensemble stats present");
+        assert_eq!(es.workers, 4);
+        assert!(es.batches >= 4);
+        // the pool must beat back-to-back execution by a wide margin
+        assert!(
+            r.wallclock_s < es.serial_equivalent_s * 0.6,
+            "wallclock {} vs serial-equivalent {}",
+            r.wallclock_s,
+            es.serial_equivalent_s
+        );
+        // records exist for every id, in order
+        for (i, rec) in r.db.records.iter().enumerate() {
+            assert_eq!(rec.id, i);
+        }
+    }
+
+    #[test]
+    fn faults_retry_with_exclusion_and_the_run_completes() {
+        let mut s = setup(AppKind::Swfft, PlatformKind::Summit, 64, Metric::Runtime);
+        s.fault_rate = 0.4;
+        s.max_retries = 3;
+        let r = run(&s);
+        let es = r.ensemble.as_ref().unwrap();
+        assert_eq!(r.evaluations, 16, "every evaluation id must resolve");
+        assert!(es.faults > 0, "fault injection at 40% produced no faults in 16 evals");
+        assert!(es.retries > 0);
+        // permanently failed evaluations (if any) are penalty records
+        for rec in &r.db.records {
+            if rec.command.is_empty() {
+                assert!(rec.timed_out);
+                assert!(!rec.measured.runtime_s.is_finite());
+            }
+        }
+        // a clean best still emerged
+        assert!(r.best_objective.is_finite());
+    }
+
+    #[test]
+    fn timeout_extension_applies_on_the_ensemble_path() {
+        let mut s = setup(AppKind::Amg, PlatformKind::Theta, 4096, Metric::Runtime);
+        s.eval_timeout_s = Some(60.0); // AMG pathological corner ~1000 s
+        s.max_evals = 24;
+        let r = run(&s);
+        let es = r.ensemble.as_ref().unwrap();
+        for rec in &r.db.records {
+            if rec.timed_out && !rec.cancelled {
+                assert!(!rec.measured.runtime_s.is_finite());
+            } else if !rec.timed_out {
+                assert!(rec.measured.runtime_s <= 60.0);
+            }
+        }
+        assert_eq!(
+            es.timeouts,
+            r.db.records.iter().filter(|x| x.timed_out && !x.cancelled).count()
+        );
+    }
+
+    #[test]
+    fn stragglers_are_cancelled_under_an_aggressive_policy() {
+        let mut s = setup(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+        s.straggler_factor = Some(1.02);
+        s.max_evals = 24;
+        s.ensemble_workers = 8;
+        let r = run(&s);
+        let es = r.ensemble.as_ref().unwrap();
+        assert!(
+            es.stragglers_cancelled > 0,
+            "a 1.02x-median cutoff over random early batches must cancel something"
+        );
+        for rec in r.db.records.iter().filter(|x| x.cancelled) {
+            assert!(rec.timed_out);
+            assert!(!rec.measured.runtime_s.is_finite());
+            assert!(rec.objective > r.baseline_objective, "cancellation must be penalized");
+        }
+    }
+
+    #[test]
+    fn energy_metric_flows_through_workers() {
+        let mut s = setup(AppKind::Amg, PlatformKind::Theta, 256, Metric::Energy);
+        s.max_evals = 12;
+        let r = run(&s);
+        assert!(r.baseline.avg_node_energy_j.is_some());
+        let ok = r.db.records.iter().find(|x| !x.timed_out).expect("a finished eval");
+        assert!(ok.command.contains("geopmlaunch"), "{}", ok.command);
+        assert!(ok.measured.avg_node_energy_j.unwrap_or(0.0) > 0.0);
+    }
+
+    #[test]
+    fn rejects_single_worker_setups() {
+        let mut s = setup(AppKind::Amg, PlatformKind::Theta, 64, Metric::Runtime);
+        s.ensemble_workers = 1;
+        assert!(autotune_ensemble(&s, Arc::new(Scorer::fallback())).is_err());
+    }
+
+    #[test]
+    fn non_bo_strategies_run_on_the_ensemble_path() {
+        use crate::search::StrategyKind;
+        for kind in [StrategyKind::Random, StrategyKind::Grid, StrategyKind::Mctree] {
+            let mut s = setup(AppKind::Swfft, PlatformKind::Summit, 64, Metric::Runtime);
+            s.strategy = kind;
+            s.max_evals = 10;
+            let r = run(&s);
+            assert_eq!(r.evaluations, 10, "{kind:?}");
+        }
+    }
+}

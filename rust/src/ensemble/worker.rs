@@ -1,0 +1,245 @@
+//! A bounded-queue manager/worker thread pool (the libEnsemble-style
+//! evaluation engine's substrate).
+//!
+//! Design constraints, in order:
+//!   * **std-only** — the offline crate set has no crossbeam/rayon, so
+//!     the queue is a `Mutex<VecDeque>` + three condvars (job ready,
+//!     slot free, result ready).
+//!   * **bounded** — `submit` blocks while the queue holds `capacity`
+//!     jobs, so a fast manager cannot run unbounded ahead of slow
+//!     workers (libEnsemble's alloc_f gives the same back-pressure).
+//!   * **graceful shutdown** — `shutdown` (and `Drop`) stops intake,
+//!     lets workers drain the queue, then joins every thread. No job
+//!     that was accepted is abandoned mid-run.
+//!
+//! The pool is generic over job and result types; the ensemble manager
+//! instantiates it with the five-step evaluation closure.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+struct State<J, R> {
+    jobs: VecDeque<J>,
+    results: VecDeque<R>,
+    shutdown: bool,
+    /// Workers currently executing a job (not counting queued jobs).
+    busy: usize,
+}
+
+struct Shared<J, R> {
+    state: Mutex<State<J, R>>,
+    job_ready: Condvar,
+    slot_free: Condvar,
+    result_ready: Condvar,
+    capacity: usize,
+}
+
+/// A fixed-size pool of `std::thread` workers running one closure.
+pub struct WorkerPool<J: Send + 'static, R: Send + 'static> {
+    shared: Arc<Shared<J, R>>,
+    handles: Vec<JoinHandle<()>>,
+    n_workers: usize,
+}
+
+impl<J: Send + 'static, R: Send + 'static> WorkerPool<J, R> {
+    /// Spawn `n_workers` threads running `f(worker_id, job) -> result`
+    /// over a bounded queue of `capacity` waiting jobs.
+    pub fn new<F>(n_workers: usize, capacity: usize, f: F) -> Self
+    where
+        F: Fn(usize, J) -> R + Send + Sync + 'static,
+    {
+        assert!(n_workers >= 1, "pool needs at least one worker");
+        assert!(capacity >= 1, "queue capacity must be at least 1");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                jobs: VecDeque::new(),
+                results: VecDeque::new(),
+                shutdown: false,
+                busy: 0,
+            }),
+            job_ready: Condvar::new(),
+            slot_free: Condvar::new(),
+            result_ready: Condvar::new(),
+            capacity,
+        });
+        let f = Arc::new(f);
+        let handles = (0..n_workers)
+            .map(|wid| {
+                let shared = shared.clone();
+                let f = f.clone();
+                std::thread::Builder::new()
+                    .name(format!("ensemble-worker-{wid}"))
+                    .spawn(move || worker_loop(wid, &shared, &*f))
+                    .expect("failed to spawn ensemble worker thread")
+            })
+            .collect();
+        WorkerPool { shared, handles, n_workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Enqueue a job, blocking while the bounded queue is full. Returns
+    /// false (job dropped) if the pool has been shut down.
+    pub fn submit(&self, job: J) -> bool {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.jobs.len() >= self.shared.capacity && !st.shutdown {
+            st = self.shared.slot_free.wait(st).unwrap();
+        }
+        if st.shutdown {
+            return false;
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.shared.job_ready.notify_one();
+        true
+    }
+
+    /// Next completed result, blocking up to `timeout`. `None` on timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<R> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.results.pop_front() {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timed_out) =
+                self.shared.result_ready.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Jobs accepted but whose results have not been received yet.
+    pub fn outstanding(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.jobs.len() + st.busy + st.results.len()
+    }
+
+    /// Graceful shutdown: stop intake, let workers drain the queue, join
+    /// every thread. Idempotent; also invoked by `Drop`.
+    pub fn shutdown(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.job_ready.notify_all();
+        self.shared.slot_free.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<J: Send + 'static, R: Send + 'static> Drop for WorkerPool<J, R> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop<J, R>(wid: usize, shared: &Shared<J, R>, f: &(dyn Fn(usize, J) -> R)) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    st.busy += 1;
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.job_ready.wait(st).unwrap();
+            }
+        };
+        shared.slot_free.notify_one();
+        let r = f(wid, job);
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.busy -= 1;
+            st.results.push_back(r);
+        }
+        shared.result_ready.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TICK: Duration = Duration::from_secs(10);
+
+    #[test]
+    fn results_collected_independent_of_completion_order() {
+        let pool: WorkerPool<u64, u64> = WorkerPool::new(4, 8, |_wid, j| {
+            // stagger completion so arrival order scrambles
+            if j % 3 == 0 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            j * j
+        });
+        for j in 0..50u64 {
+            assert!(pool.submit(j));
+        }
+        let mut got: Vec<u64> = (0..50).map(|_| pool.recv_timeout(TICK).expect("result")).collect();
+        got.sort_unstable();
+        let want: Vec<u64> = (0..50u64).map(|j| j * j).collect();
+        assert_eq!(got, want);
+        assert_eq!(pool.outstanding(), 0);
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure_without_loss() {
+        // capacity 1 with slow workers: submits must block, not drop
+        let pool: WorkerPool<u64, u64> = WorkerPool::new(2, 1, |_wid, j| {
+            std::thread::sleep(Duration::from_millis(1));
+            j + 100
+        });
+        for j in 0..20u64 {
+            assert!(pool.submit(j));
+        }
+        let mut got: Vec<u64> = (0..20).map(|_| pool.recv_timeout(TICK).expect("result")).collect();
+        got.sort_unstable();
+        assert_eq!(got, (100..120u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs_and_joins() {
+        let counter = Arc::new(Mutex::new(0usize));
+        let c = counter.clone();
+        let mut pool: WorkerPool<usize, usize> = WorkerPool::new(2, 16, move |_wid, j| {
+            *c.lock().unwrap() += 1;
+            j
+        });
+        for j in 0..10 {
+            assert!(pool.submit(j));
+        }
+        pool.shutdown(); // must not hang; queued jobs drain first
+        assert_eq!(*counter.lock().unwrap(), 10, "queued jobs were abandoned");
+        assert!(!pool.submit(99), "submit after shutdown must be rejected");
+        pool.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn drop_joins_without_deadlock() {
+        let pool: WorkerPool<u8, u8> = WorkerPool::new(3, 4, |_wid, j| j);
+        for j in 0..4 {
+            pool.submit(j);
+        }
+        drop(pool); // Drop path must terminate
+    }
+
+    #[test]
+    fn recv_timeout_expires_when_idle() {
+        let pool: WorkerPool<u8, u8> = WorkerPool::new(1, 1, |_wid, j| j);
+        let t0 = Instant::now();
+        assert!(pool.recv_timeout(Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+}

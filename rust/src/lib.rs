@@ -4,8 +4,10 @@
 //!
 //! Layer 3 (this crate) is the coordinator: search-space expression,
 //! Bayesian-optimization search with a Random-Forest surrogate, the
-//! five-step evaluation pipeline, and the simulated substrate (platforms,
-//! ECP proxy applications, GEOPM power stack). Layers 2/1 are the
+//! five-step evaluation pipeline, the simulated substrate (platforms,
+//! ECP proxy applications, GEOPM power stack), and the asynchronous
+//! manager/worker evaluation engine in [`ensemble`] (parallel,
+//! fault-tolerant, checkpoint-resumable autotuning). Layers 2/1 are the
 //! AOT-compiled JAX/Pallas artifacts in `artifacts/` executed through the
 //! PJRT runtime in [`runtime`]; Python never runs on the tuning path.
 //!
@@ -17,6 +19,7 @@ pub mod bench_support;
 pub mod cliargs;
 pub mod codegen;
 pub mod coordinator;
+pub mod ensemble;
 pub mod search;
 pub mod configfile;
 pub mod metrics;

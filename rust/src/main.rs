@@ -13,6 +13,7 @@ use ytopt::apps::AppKind;
 use ytopt::cliargs::{Args, CliError, CliSpec};
 use ytopt::configfile::ConfigDoc;
 use ytopt::coordinator::{autotune_with_scorer, TuneSetup};
+use ytopt::ensemble::LiarStrategy;
 use ytopt::metrics::Metric;
 use ytopt::platform::PlatformKind;
 use ytopt::runtime::Scorer;
@@ -46,6 +47,13 @@ fn spec() -> CliSpec {
         .opt("kappa", Some("1.96"), "LCB exploration parameter")
         .opt("timeout", None, "evaluation timeout (s)")
         .opt("parallel", Some("1"), "concurrent evaluations")
+        .opt("ensemble-workers", Some("0"), "ensemble worker threads (0 = serial loop)")
+        .opt("ensemble-batch", Some("0"), "in-flight proposals per cycle (0 = worker count)")
+        .opt("liar", Some("cl-min"), "pending-point lie: cl-min | cl-mean | cl-max | kriging")
+        .opt("fault-rate", Some("0"), "injected transient-failure probability")
+        .opt("retries", Some("2"), "retries (with worker exclusion) per failed evaluation")
+        .opt("straggler-factor", None, "cancel runs beyond this multiple of the batch median")
+        .opt("checkpoint", None, "ensemble checkpoint file (resume skips completed evals)")
         .opt("out", None, "write the performance database CSV here")
         .flag("trace", "print the per-evaluation trace")
 }
@@ -67,6 +75,14 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     let mut evals = args.int("evals").unwrap_or(64);
     let mut budget = args.float("budget").unwrap_or(1800.0);
     let mut seed = args.int("seed").unwrap_or(42);
+    // ensemble knobs: CLI first, then the [ensemble] config section
+    let mut ens_workers = args.usize("ensemble-workers").unwrap_or(0);
+    let mut ens_batch = args.usize("ensemble-batch").unwrap_or(0);
+    let mut liar = args.get_or("liar", "cl-min").to_string();
+    let mut fault_rate = args.float("fault-rate").unwrap_or(0.0);
+    let mut retries = args.usize("retries").unwrap_or(2);
+    let mut straggler = args.float("straggler-factor");
+    let mut checkpoint = args.get("checkpoint").map(|s| s.to_string());
     if let Some(path) = args.get("config") {
         let doc = ConfigDoc::load(std::path::Path::new(path))?;
         app = doc.str_or("tune", "app", &app).to_string();
@@ -76,6 +92,17 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
         evals = doc.int_or("tune", "max_evals", evals);
         budget = doc.float_or("tune", "wallclock_s", budget);
         seed = doc.int_or("tune", "seed", seed);
+        ens_workers = doc.usize_or("ensemble", "workers", ens_workers);
+        ens_batch = doc.usize_or("ensemble", "batch", ens_batch);
+        liar = doc.str_or("ensemble", "liar", &liar).to_string();
+        fault_rate = doc.float_or("ensemble", "fault_rate", fault_rate);
+        retries = doc.usize_or("ensemble", "retries", retries);
+        if let Some(f) = doc.get("ensemble", "straggler_factor").and_then(|v| v.as_float()) {
+            straggler = Some(f);
+        }
+        if let Some(p) = doc.get("ensemble", "checkpoint").and_then(|v| v.as_str()) {
+            checkpoint = Some(p.to_string());
+        }
     }
     let app = AppKind::parse(&app).ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?;
     let platform = parse_platform(&platform)?;
@@ -92,6 +119,14 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     setup.kappa = args.float("kappa").unwrap_or(1.96);
     setup.eval_timeout_s = args.float("timeout");
     setup.parallel_evals = args.int("parallel").unwrap_or(1) as usize;
+    setup.ensemble_workers = ens_workers;
+    setup.ensemble_batch = ens_batch;
+    setup.liar = LiarStrategy::parse(&liar)
+        .ok_or_else(|| anyhow::anyhow!("unknown liar strategy `{liar}`"))?;
+    setup.fault_rate = fault_rate.clamp(0.0, 1.0);
+    setup.max_retries = retries;
+    setup.straggler_factor = straggler;
+    setup.checkpoint_path = checkpoint.map(std::path::PathBuf::from);
     Ok(setup)
 }
 

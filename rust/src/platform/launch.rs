@@ -19,15 +19,29 @@ pub struct LaunchPlan {
     pub uses_gpus: bool,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LaunchError {
-    #[error("OMP_NUM_THREADS={threads} exceeds node capacity {max} on {platform}")]
     TooManyThreads { threads: u64, max: u64, platform: &'static str },
-    #[error("OMP_NUM_THREADS={threads} not divisible for SMT level {smt} (paper launch algorithm)")]
     NotDivisible { threads: u64, smt: u64 },
-    #[error("GPU launch requested on {0} which has no GPUs")]
     NoGpus(&'static str),
 }
+
+impl std::fmt::Display for LaunchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LaunchError::TooManyThreads { threads, max, platform } => {
+                write!(f, "OMP_NUM_THREADS={threads} exceeds node capacity {max} on {platform}")
+            }
+            LaunchError::NotDivisible { threads, smt } => write!(
+                f,
+                "OMP_NUM_THREADS={threads} not divisible for SMT level {smt} (paper launch algorithm)"
+            ),
+            LaunchError::NoGpus(p) => write!(f, "GPU launch requested on {p} which has no GPUs"),
+        }
+    }
+}
+
+impl std::error::Error for LaunchError {}
 
 /// Theta §VI algorithm:
 /// ```text

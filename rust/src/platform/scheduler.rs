@@ -21,13 +21,27 @@ pub struct Allocation {
     pub node_hours_used: f64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SchedulerError {
-    #[error("allocation `{project}` exhausted: {used:.1} of {budget:.1} node-hours used")]
     Exhausted { project: String, used: f64, budget: f64 },
-    #[error("job requests {nodes} nodes but {platform} has only {max}")]
     TooManyNodes { nodes: u64, max: u64, platform: &'static str },
 }
+
+impl std::fmt::Display for SchedulerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedulerError::Exhausted { project, used, budget } => write!(
+                f,
+                "allocation `{project}` exhausted: {used:.1} of {budget:.1} node-hours used"
+            ),
+            SchedulerError::TooManyNodes { nodes, max, platform } => {
+                write!(f, "job requests {nodes} nodes but {platform} has only {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SchedulerError {}
 
 impl Allocation {
     pub fn new(platform: PlatformKind, project: &str, node_hours: f64) -> Self {

@@ -16,12 +16,15 @@ pub use fallback::{energy_reduce_cpu, forest_score_cpu, ScoreOut};
 pub use manifest::{EnergyShape, ForestShape, Manifest};
 
 use crate::surrogate::ForestTensors;
-use anyhow::{Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
+use anyhow::Result;
 use std::path::Path;
 
 /// Build a shaped f32 literal with a single copy (perf: `vec1` followed
 /// by `reshape` copies the buffer twice through the FFI; this goes
 /// straight to the shaped constructor — see EXPERIMENTS.md §Perf).
+#[cfg(feature = "xla")]
 fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
@@ -29,6 +32,7 @@ fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
 }
 
 /// Shaped i32 literal, single copy.
+#[cfg(feature = "xla")]
 fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
@@ -36,6 +40,7 @@ fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
 }
 
 /// Compiled AOT executables on the PJRT CPU client.
+#[cfg(feature = "xla")]
 pub struct XlaRuntime {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -44,6 +49,7 @@ pub struct XlaRuntime {
     pub manifest: Manifest,
 }
 
+#[cfg(feature = "xla")]
 impl XlaRuntime {
     /// Load + compile both artifacts from `dir` (once, at startup).
     pub fn load(dir: &Path) -> Result<XlaRuntime> {
@@ -134,6 +140,7 @@ impl XlaRuntime {
 /// Execution backend for the search loop: AOT XLA artifacts when
 /// available, the pure-Rust reference otherwise.
 pub enum Scorer {
+    #[cfg(feature = "xla")]
     Xla(Box<XlaRuntime>),
     Fallback(Manifest),
 }
@@ -141,13 +148,19 @@ pub enum Scorer {
 impl Scorer {
     /// Load the XLA runtime from `dir`, falling back to pure Rust.
     pub fn auto(dir: &Path) -> Scorer {
+        #[cfg(feature = "xla")]
         match XlaRuntime::load(dir) {
-            Ok(rt) => Scorer::Xla(Box::new(rt)),
+            Ok(rt) => return Scorer::Xla(Box::new(rt)),
             Err(e) => {
                 log::warn!("AOT artifacts unavailable ({e:#}); using pure-Rust scorer");
-                Scorer::Fallback(Manifest::default_shapes())
             }
         }
+        #[cfg(not(feature = "xla"))]
+        log::warn!(
+            "built without the `xla` feature; ignoring {} and using the pure-Rust scorer",
+            dir.display()
+        );
+        Scorer::Fallback(Manifest::default_shapes())
     }
 
     pub fn fallback() -> Scorer {
@@ -156,13 +169,21 @@ impl Scorer {
 
     pub fn manifest(&self) -> &Manifest {
         match self {
+            #[cfg(feature = "xla")]
             Scorer::Xla(rt) => &rt.manifest,
             Scorer::Fallback(m) => m,
         }
     }
 
     pub fn is_accelerated(&self) -> bool {
-        matches!(self, Scorer::Xla(_))
+        #[cfg(feature = "xla")]
+        {
+            matches!(self, Scorer::Xla(_))
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            false
+        }
     }
 
     /// Score `n` encoded candidates (row-major, `dim` == manifest feature
@@ -179,6 +200,7 @@ impl Scorer {
         anyhow::ensure!(rows.len() == n * f, "rows buffer mismatch: {} != {n}*{f}", rows.len());
         match self {
             Scorer::Fallback(_) => Ok(forest_score_cpu(rows, f, tensors, kappa)),
+            #[cfg(feature = "xla")]
             Scorer::Xla(rt) => {
                 let c = rt.manifest.forest.candidates;
                 let mut out =
@@ -221,6 +243,7 @@ impl Scorer {
                 let active = vec![1.0f32; nodes];
                 Ok(energy_reduce_cpu(pkg, dram, &active, samples, n_samples, dt, runtime))
             }
+            #[cfg(feature = "xla")]
             Scorer::Xla(rt) => {
                 let es = rt.manifest.energy.clone();
                 anyhow::ensure!(

@@ -104,11 +104,72 @@ impl BayesianOptimizer {
 
     /// Replace the objectives of the last `n` observations (constant-liar
     /// batch proposals are amended with real measurements afterwards).
-    pub fn amend_last(&mut self, n: usize, ys: &[f64]) {
-        assert_eq!(n, ys.len());
-        assert!(n <= self.ys.len());
+    ///
+    /// Bounds-safe: if `n` exceeds either `ys.len()` or the number of
+    /// recorded observations, the request is clamped — the *most recent*
+    /// `min(n, ys.len(), observations)` entries of `ys` are applied to
+    /// the most recent observations. Returns how many were amended.
+    pub fn amend_last(&mut self, n: usize, ys: &[f64]) -> usize {
+        let n = n.min(ys.len()).min(self.ys.len());
+        if n == 0 {
+            return 0;
+        }
         let start = self.ys.len() - n;
-        self.ys[start..].copy_from_slice(ys);
+        self.ys[start..].copy_from_slice(&ys[ys.len() - n..]);
+        n
+    }
+
+    /// Replace one observation's objective (async-ensemble amendment of a
+    /// pending-point lie with the real measurement). Returns false when
+    /// `idx` is out of range instead of panicking.
+    pub fn amend_at(&mut self, idx: usize, y: f64) -> bool {
+        match self.ys.get_mut(idx) {
+            Some(slot) => {
+                *slot = y;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Index the next `observe` call will occupy (pending-point
+    /// bookkeeping for the ensemble's async-BO bridge).
+    pub fn next_index(&self) -> usize {
+        self.ys.len()
+    }
+
+    /// The recorded objectives (real measurements and any still-pending
+    /// imputed lies), in observation order.
+    pub fn objectives(&self) -> &[f64] {
+        &self.ys
+    }
+
+    /// Surrogate posterior mean at `cfg` in objective units — the
+    /// kriging-believer imputation for in-flight points. `None` until two
+    /// observations exist. Fits a small throwaway forest, so this is
+    /// O(fit) per call; batch sizes are small enough that this stays well
+    /// under the per-evaluation orchestration costs being simulated.
+    pub fn predict_mean(&self, cfg: &Configuration, rng: &mut Pcg32) -> Option<f64> {
+        if self.ys.len() < 2 {
+            return None;
+        }
+        let mean = self.ys.iter().sum::<f64>() / self.ys.len() as f64;
+        let var = self.ys.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>()
+            / self.ys.len() as f64;
+        let scale = var.sqrt().max(1e-12);
+        let dim = self.space.dim();
+        let mut x = Vec::with_capacity(self.xs.len() * dim);
+        let mut row = vec![0.0f32; dim];
+        for c in &self.xs {
+            self.space.encode_into(c, &mut row);
+            x.extend_from_slice(&row);
+        }
+        let y: Vec<f32> = self.ys.iter().map(|v| ((v - mean) / scale) as f32).collect();
+        let fc = ForestConfig { n_trees: 16, ..Default::default() };
+        let rf = RandomForest::fit(&x, &y, dim, &fc, rng);
+        self.space.encode_into(cfg, &mut row);
+        let (m, _) = rf.predict_one(&row);
+        Some(m as f64 * scale + mean)
     }
 
     /// Pre-load observations (transfer-learning warm start, §VIII).
@@ -375,6 +436,65 @@ mod tests {
         );
         let best = run_strategy(bo, &space, 50, 11);
         assert!(best <= 6.0, "EI best {best}");
+    }
+
+    #[test]
+    fn amend_last_clamps_out_of_range() {
+        let space = toy_space();
+        let mut bo =
+            BayesianOptimizer::new(space.clone(), BoConfig::default(), Arc::new(Scorer::fallback()));
+        // empty optimizer: nothing to amend, and no panic
+        assert_eq!(bo.amend_last(3, &[1.0, 2.0, 3.0]), 0);
+        let mut rng = Pcg32::seeded(21);
+        for y in [1.0, 2.0, 3.0] {
+            let c = bo.propose(&mut rng);
+            bo.observe(&c, y);
+        }
+        // n exceeds the recorded observations: clamped to 3, applying the
+        // most recent entries of ys
+        assert_eq!(bo.amend_last(5, &[9.0, 8.0, 7.0, 6.0, 5.0]), 3);
+        assert_eq!(bo.objectives(), &[7.0, 6.0, 5.0]);
+        // n exceeds ys.len(): clamped to the provided values
+        assert_eq!(bo.amend_last(3, &[4.0]), 1);
+        assert_eq!(bo.objectives(), &[7.0, 6.0, 4.0]);
+        // the normal in-bounds path still amends exactly the tail
+        assert_eq!(bo.amend_last(2, &[1.5, 2.5]), 2);
+        assert_eq!(bo.objectives(), &[7.0, 1.5, 2.5]);
+    }
+
+    #[test]
+    fn amend_at_is_bounds_safe() {
+        let space = toy_space();
+        let mut bo =
+            BayesianOptimizer::new(space.clone(), BoConfig::default(), Arc::new(Scorer::fallback()));
+        let mut rng = Pcg32::seeded(22);
+        assert_eq!(bo.next_index(), 0);
+        let c = bo.propose(&mut rng);
+        bo.observe(&c, 10.0);
+        assert_eq!(bo.next_index(), 1);
+        assert!(bo.amend_at(0, 4.0));
+        assert!(!bo.amend_at(1, 4.0));
+        assert_eq!(bo.objectives(), &[4.0]);
+    }
+
+    #[test]
+    fn predict_mean_tracks_the_landscape() {
+        let space = toy_space();
+        let mut bo =
+            BayesianOptimizer::new(space.clone(), BoConfig::default(), Arc::new(Scorer::fallback()));
+        let mut rng = Pcg32::seeded(23);
+        let probe = space.sample(&mut rng.clone());
+        assert!(bo.predict_mean(&probe, &mut rng).is_none(), "no data yet");
+        for _ in 0..40 {
+            let c = bo.propose(&mut rng);
+            let y = objective(&space, &c);
+            bo.observe(&c, y);
+        }
+        // the believer's mean should land inside the observed range
+        let lo = bo.objectives().iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = bo.objectives().iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let m = bo.predict_mean(&probe, &mut rng).unwrap();
+        assert!(m >= lo - 10.0 && m <= hi + 10.0, "believer mean {m} outside [{lo}, {hi}]");
     }
 
     #[test]

@@ -19,17 +19,34 @@ pub struct ForestTensors {
     pub leaf: Vec<f32>,    // [T*N]
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ExportError {
-    #[error("forest has {got} trees but the artifact expects {want}")]
     TreeCount { got: usize, want: usize },
-    #[error("tree {tree} has {got} nodes, exceeding the artifact budget {want}")]
     NodeBudget { tree: usize, got: usize, want: usize },
-    #[error("tree {tree} depth {got} exceeds artifact depth {want}")]
     Depth { tree: usize, got: usize, want: usize },
-    #[error("forest dim {got} exceeds artifact feature budget {want}")]
     FeatureDim { got: usize, want: usize },
 }
+
+impl std::fmt::Display for ExportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExportError::TreeCount { got, want } => {
+                write!(f, "forest has {got} trees but the artifact expects {want}")
+            }
+            ExportError::NodeBudget { tree, got, want } => {
+                write!(f, "tree {tree} has {got} nodes, exceeding the artifact budget {want}")
+            }
+            ExportError::Depth { tree, got, want } => {
+                write!(f, "tree {tree} depth {got} exceeds artifact depth {want}")
+            }
+            ExportError::FeatureDim { got, want } => {
+                write!(f, "forest dim {got} exceeds artifact feature budget {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExportError {}
 
 /// Lower `forest` into padded tensors for the AOT scorer.
 ///

@@ -1,0 +1,158 @@
+//! End-to-end ensemble-engine tests: tuning-quality parity with the
+//! serial loop, wall-clock compression at the same evaluation budget,
+//! and checkpoint resume with zero re-evaluation.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use ytopt::apps::AppKind;
+use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+
+fn run(setup: &TuneSetup) -> TuneResult {
+    autotune_with_scorer(setup, Arc::new(Scorer::fallback())).unwrap()
+}
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ytopt-e2e-{tag}-{}.json", std::process::id()))
+}
+
+#[test]
+fn ensemble_matches_serial_quality_in_less_wallclock() {
+    // the acceptance setting: 8 workers, same evaluation budget, XSBench
+    let mut serial = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+    serial.max_evals = 48;
+    serial.wallclock_budget_s = 1e9;
+    serial.seed = 7;
+    let mut ensemble = serial.clone();
+    ensemble.ensemble_workers = 8;
+
+    let rs = run(&serial);
+    let re = run(&ensemble);
+
+    assert_eq!(rs.evaluations, 48);
+    assert_eq!(re.evaluations, 48, "ensemble must complete the same evaluation budget");
+    assert!(rs.ensemble.is_none(), "serial path must not report ensemble stats");
+    assert!(re.ensemble.is_some());
+
+    // quality parity: the ensemble's best configuration objective is
+    // within 5% of the serial run's
+    assert!(
+        re.best_objective <= rs.best_objective * 1.05,
+        "ensemble best {} vs serial best {}",
+        re.best_objective,
+        rs.best_objective
+    );
+    // both actually tune
+    assert!(re.best_objective < re.baseline_objective);
+    assert!(rs.best_objective < rs.baseline_objective);
+
+    // wall-clock: measurably less than the serial path at 8 workers
+    assert!(
+        re.wallclock_s < rs.wallclock_s * 0.5,
+        "ensemble wallclock {} vs serial {}",
+        re.wallclock_s,
+        rs.wallclock_s
+    );
+}
+
+#[test]
+fn killed_and_resumed_session_re_evaluates_nothing() {
+    let ckpt = tmpfile("resume");
+    let _ = std::fs::remove_file(&ckpt);
+
+    let mut base = TuneSetup::new(AppKind::Swfft, PlatformKind::Theta, 64, Metric::Runtime);
+    base.wallclock_budget_s = 1e9;
+    base.seed = 11;
+    base.ensemble_workers = 4;
+    base.checkpoint_path = Some(ckpt.clone());
+
+    // "killed" session: completes only 12 of the eventual 20 evaluations
+    let mut first = base.clone();
+    first.max_evals = 12;
+    let ra = run(&first);
+    assert_eq!(ra.evaluations, 12);
+    assert!(ckpt.exists(), "checkpoint must be written");
+
+    // resumed session: 12 restored + 8 fresh
+    let mut second = base.clone();
+    second.max_evals = 20;
+    let rb = run(&second);
+    let es = rb.ensemble.as_ref().unwrap();
+    assert_eq!(es.resumed_evals, 12, "all completed evaluations restore from the checkpoint");
+    assert_eq!(rb.evaluations, 20);
+    for (a, b) in ra.db.records.iter().zip(rb.db.records.iter()) {
+        assert_eq!(a.config_key, b.config_key, "restored record drifted");
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.wallclock_s, b.wallclock_s);
+    }
+    // zero re-evaluation: no fresh record repeats a completed configuration
+    for fresh in &rb.db.records[12..] {
+        assert!(
+            ra.db.records.iter().all(|r| r.config_key != fresh.config_key),
+            "configuration {} was re-evaluated after resume",
+            fresh.config_key
+        );
+    }
+
+    // resuming a fully-complete session does no work at all
+    let rc = run(&second);
+    let es = rc.ensemble.as_ref().unwrap();
+    assert_eq!(es.resumed_evals, 20);
+    assert_eq!(es.batches, 0, "nothing left to evaluate");
+    assert_eq!(rc.evaluations, 20);
+    assert_eq!(rc.wallclock_s, rb.wallclock_s);
+
+    std::fs::remove_file(&ckpt).unwrap();
+}
+
+#[test]
+fn checkpoint_from_a_different_run_is_refused() {
+    let ckpt = tmpfile("mismatch");
+    let _ = std::fs::remove_file(&ckpt);
+
+    let mut a = TuneSetup::new(AppKind::Swfft, PlatformKind::Theta, 64, Metric::Runtime);
+    a.wallclock_budget_s = 1e9;
+    a.max_evals = 8;
+    a.ensemble_workers = 4;
+    a.checkpoint_path = Some(ckpt.clone());
+    let _ = run(&a);
+
+    let mut b = a.clone();
+    b.seed = a.seed + 1; // different run identity
+    let err = autotune_with_scorer(&b, Arc::new(Scorer::fallback()));
+    assert!(err.is_err(), "mismatched checkpoint must be refused");
+
+    std::fs::remove_file(&ckpt).unwrap();
+}
+
+#[test]
+fn liar_strategies_all_reach_comparable_quality() {
+    use ytopt::ensemble::LiarStrategy;
+    let mut setup = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+    setup.max_evals = 32;
+    setup.wallclock_budget_s = 1e9;
+    setup.seed = 3;
+    setup.ensemble_workers = 4;
+    let mut bests = Vec::new();
+    for liar in [
+        LiarStrategy::ConstantMin,
+        LiarStrategy::ConstantMean,
+        LiarStrategy::ConstantMax,
+        LiarStrategy::KrigingBeliever,
+    ] {
+        let mut s = setup.clone();
+        s.liar = liar;
+        let r = run(&s);
+        assert_eq!(r.evaluations, 32, "{liar:?}");
+        assert!(r.best_objective < r.baseline_objective, "{liar:?} failed to tune");
+        bests.push(r.best_objective);
+    }
+    // no strategy collapses: all within 15% of the group's best
+    let lo = bests.iter().cloned().fold(f64::INFINITY, f64::min);
+    for (i, b) in bests.iter().enumerate() {
+        assert!(*b <= lo * 1.15, "liar #{i} best {b} vs group best {lo}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Offline stand-in for the `log` facade.
+//!
+//! The offline crate set has no crates.io access, so this path dependency
+//! provides the `log::error!` … `log::trace!` macro surface the crate
+//! uses. Records go to stderr when `YTOPT_LOG` is set (to any value);
+//! otherwise they are dropped, like an unconfigured `log` facade.
+
+/// Severity, ordered from most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Macro back end: emit one record to stderr if `YTOPT_LOG` is set.
+pub fn __emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if std::env::var_os("YTOPT_LOG").is_some() {
+        eprintln!("[{}] {}", level.as_str(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Error, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Warn, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Info, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Debug, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Trace, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand_and_run() {
+        crate::error!("e {}", 1);
+        crate::warn!("w {x}", x = 2);
+        crate::info!("i");
+        crate::debug!("d");
+        crate::trace!("t");
+    }
+
+    #[test]
+    fn levels_order() {
+        assert!(crate::Level::Error < crate::Level::Trace);
+        assert_eq!(crate::Level::Warn.as_str(), "WARN");
+    }
+}
