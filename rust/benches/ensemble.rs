@@ -6,7 +6,11 @@
 //! serial coordinator loop and through the ensemble engine at several
 //! worker counts, reporting the *simulated* campaign wall-clock (what an
 //! operator would wait on the real machine), the best objective found,
-//! and the real host-side time the harness itself took.
+//! and the real host-side time the harness itself took. A second
+//! section duels the two manager cycles at equal budgets: continuous
+//! must never lose wall-clock to generational, must report strictly
+//! less barrier idle, and must produce an identical result history
+//! across two same-seed runs.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -14,6 +18,7 @@ use std::time::Instant;
 use ytopt::apps::AppKind;
 use ytopt::bench_support::section;
 use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
+use ytopt::ensemble::ManagerCycle;
 use ytopt::metrics::Metric;
 use ytopt::platform::PlatformKind;
 use ytopt::runtime::Scorer;
@@ -84,6 +89,69 @@ fn campaign(app: AppKind, nodes: u64, metric: Metric, scorer: &Arc<Scorer>) {
     println!("{}", t.render());
 }
 
+/// Continuous vs. generational at equal budgets: the acceptance gate
+/// for the event-driven manager.
+fn cycle_duel(app: AppKind, nodes: u64, metric: Metric, scorer: &Arc<Scorer>) {
+    section(&format!(
+        "{} on Theta x{nodes} | metric {} | manager-cycle duel at {EVALS} evaluations",
+        app.name(),
+        metric.name()
+    ));
+    let mut t = Table::new(
+        "generational barrier vs continuous event loop",
+        &["cycle x workers", "sim. wallclock (s)", "barrier idle (s)", "best objective", "host (s)"],
+    );
+    for workers in [4usize, 8] {
+        let mut gen_s = base(app, nodes, metric);
+        gen_s.ensemble_workers = workers;
+        gen_s.manager_cycle = ManagerCycle::Generational;
+        let mut cont_s = gen_s.clone();
+        cont_s.manager_cycle = ManagerCycle::Continuous;
+        let (rg, host_g) = run(&gen_s, scorer);
+        let (rc, host_c) = run(&cont_s, scorer);
+        // same-seed determinism of the continuous history
+        let (rc2, _) = run(&cont_s, scorer);
+        let keys = |r: &TuneResult| {
+            r.db.records.iter().map(|x| x.config_key.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(
+            keys(&rc),
+            keys(&rc2),
+            "continuous result history must be deterministic across same-seed runs"
+        );
+        assert_eq!(rc.best_objective, rc2.best_objective);
+
+        assert_eq!(rg.evaluations, rc.evaluations, "budgets must match");
+        let ig = rg.ensemble.as_ref().unwrap().worker_idle_s;
+        let ic = rc.ensemble.as_ref().unwrap().worker_idle_s;
+        assert!(
+            rc.wallclock_s <= rg.wallclock_s,
+            "continuous wall-clock {} exceeded generational {} at {workers} workers",
+            rc.wallclock_s,
+            rg.wallclock_s
+        );
+        assert!(
+            ic < ig,
+            "continuous barrier idle {ic} not strictly below generational {ig}"
+        );
+        t.row(&[
+            format!("generational x{workers}"),
+            format!("{:.0}", rg.wallclock_s),
+            format!("{ig:.0}"),
+            format!("{:.3}", rg.best_objective),
+            format!("{host_g:.2}"),
+        ]);
+        t.row(&[
+            format!("continuous x{workers}"),
+            format!("{:.0}", rc.wallclock_s),
+            format!("{ic:.0}"),
+            format!("{:.3}", rc.best_objective),
+            format!("{host_c:.2}"),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
 fn main() {
     let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
     println!(
@@ -92,4 +160,5 @@ fn main() {
     );
     campaign(AppKind::XSBenchHistory, 1, Metric::Runtime, &scorer);
     campaign(AppKind::Amg, 256, Metric::Energy, &scorer);
+    cycle_duel(AppKind::XSBenchHistory, 1, Metric::Runtime, &scorer);
 }

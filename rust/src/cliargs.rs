@@ -37,6 +37,8 @@ pub enum CliError {
     Unknown(String),
     MissingValue(String),
     UnexpectedPositional(String),
+    /// Value outside a declared choice set: (option, detail).
+    InvalidValue(String, String),
     HelpRequested,
 }
 
@@ -47,6 +49,9 @@ impl std::fmt::Display for CliError {
             CliError::MissingValue(n) => write!(f, "option --{n} requires a value"),
             CliError::UnexpectedPositional(a) => {
                 write!(f, "unexpected positional argument `{a}`")
+            }
+            CliError::InvalidValue(n, detail) => {
+                write!(f, "invalid value for --{n}: {detail}")
             }
             CliError::HelpRequested => write!(f, "help requested"),
         }
@@ -188,6 +193,21 @@ impl Args {
         self.get(name)?.parse().ok()
     }
 
+    /// Value constrained to a fixed choice set (case-insensitive match;
+    /// the raw value is returned so callers keep their own parsing).
+    /// Errors name the option and list the accepted values.
+    pub fn choice<'a>(&'a self, name: &str, allowed: &[&str]) -> Result<&'a str, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        if allowed.iter().any(|a| v.eq_ignore_ascii_case(a)) {
+            Ok(v)
+        } else {
+            Err(CliError::InvalidValue(
+                name.to_string(),
+                format!("`{v}` (expected one of: {})", allowed.join(" | ")),
+            ))
+        }
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -248,6 +268,28 @@ mod tests {
             Err(CliError::UnexpectedPositional(_))
         ));
         assert!(matches!(spec().parse(&sv(&["--help"])), Err(CliError::HelpRequested)));
+    }
+
+    #[test]
+    fn choice_validates_against_the_allowed_set() {
+        let sp = CliSpec::new("t", "test").opt("mode", Some("fast"), "speed mode");
+        // declared default satisfies the choice
+        let a = sp.parse(&sv(&[])).unwrap();
+        assert_eq!(a.choice("mode", &["fast", "slow"]).unwrap(), "fast");
+        // matching is case-insensitive but the raw value is returned
+        let a = sp.parse(&sv(&["--mode", "SLOW"])).unwrap();
+        assert_eq!(a.choice("mode", &["fast", "slow"]).unwrap(), "SLOW");
+        // out-of-set values error with the option name and the set
+        let a = sp.parse(&sv(&["--mode", "warp"])).unwrap();
+        match a.choice("mode", &["fast", "slow"]) {
+            Err(CliError::InvalidValue(n, detail)) => {
+                assert_eq!(n, "mode");
+                assert!(detail.contains("warp") && detail.contains("fast | slow"), "{detail}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // undeclared options surface as missing
+        assert!(matches!(a.choice("nope", &["x"]), Err(CliError::MissingValue(_))));
     }
 
     #[test]

@@ -82,8 +82,16 @@ pub struct TuneSetup {
     /// Retries (with worker exclusion) before an evaluation is abandoned.
     pub max_retries: usize,
     /// Cancel in-flight runs whose runtime exceeds this multiple of the
-    /// batch median (ensemble straggler policy; None disables).
+    /// median runtime (ensemble straggler policy; None disables). The
+    /// continuous manager cycle uses a running quantile over all
+    /// completed runtimes; the generational cycle uses the batch median.
+    /// Neither cancels off fewer than 4 completed samples.
     pub straggler_factor: Option<f64>,
+    /// How the ensemble manager feeds its workers: `Continuous` (the
+    /// default) tops up a freed worker the moment each completion is
+    /// applied; `Generational` barriers on whole proposal batches (kept
+    /// as the reference oracle for parity tests).
+    pub manager_cycle: crate::ensemble::ManagerCycle,
     /// Ensemble checkpoint file: completed evaluations persist here and a
     /// resumed session re-evaluates none of them.
     pub checkpoint_path: Option<std::path::PathBuf>,
@@ -115,6 +123,7 @@ impl TuneSetup {
             fault_rate: 0.0,
             max_retries: 2,
             straggler_factor: None,
+            manager_cycle: crate::ensemble::ManagerCycle::Continuous,
             checkpoint_path: None,
         }
     }
@@ -336,11 +345,12 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
         // ---- Step 1: select configurations --------------------------------
         let t_search = std::time::Instant::now();
         let mut cfgs = Vec::with_capacity(batch);
-        // index of each planted lie in the optimizer, so the real
-        // measurement amends exactly the observation it belongs to even
-        // when a mid-batch evaluation is skipped (failed launch)
-        let mut lie_idx: Vec<Option<usize>> = Vec::with_capacity(batch);
-        for _ in 0..batch {
+        // pending key of each planted lie, so the real measurement amends
+        // exactly the observation it belongs to (index-keyed through the
+        // optimizer's PendingSet) even when a mid-batch evaluation is
+        // skipped (failed launch)
+        let mut lie_keys: Vec<Option<usize>> = Vec::with_capacity(batch);
+        for b in 0..batch {
             let c = strat.propose(&mut rng);
             // constant-liar so a BO batch spreads out; amended below.
             // Non-BO strategies have no amendment hook and get their real
@@ -348,13 +358,12 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
             let lie = match strat.as_bo_mut() {
                 Some(bo) if batch > 1 => {
                     let liar = if best.is_finite() { best } else { baseline_objective };
-                    let idx = bo.next_index();
-                    bo.observe(&c, liar);
-                    Some(idx)
+                    bo.observe_pending(eval_id + b, &c, liar);
+                    Some(eval_id + b)
                 }
                 _ => None,
             };
-            lie_idx.push(lie);
+            lie_keys.push(lie);
             cfgs.push(c);
         }
         let search_s = t_search.elapsed().as_secs_f64();
@@ -362,7 +371,7 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
         let mut batch_spans: Vec<f64> = Vec::with_capacity(batch);
         let mut real_ys: Vec<(Configuration, f64)> = Vec::with_capacity(batch);
         let mut amendments: Vec<(usize, f64)> = Vec::with_capacity(batch);
-        for (cfg, lie) in cfgs.into_iter().zip(lie_idx) {
+        for (cfg, lie) in cfgs.into_iter().zip(lie_keys) {
             // ---- Step 2: instantiate + verify the code mold ---------------
             let source = codegen::instantiate(setup.app, &space, &cfg)
                 .context("code-mold instantiation")?;
@@ -387,8 +396,8 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
                     // skip, but settle this configuration's pending lie so
                     // later amendments stay aligned with their observations
                     log::warn!("launch generation failed: {e}");
-                    if let (Some(idx), Some(bo)) = (lie, strat.as_bo_mut()) {
-                        bo.amend_at(idx, baseline_objective * 3.0);
+                    if let (Some(key), Some(bo)) = (lie, strat.as_bo_mut()) {
+                        bo.resolve_pending(key, baseline_objective * 3.0);
                     }
                     continue;
                 }
@@ -462,8 +471,8 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
                 cancelled: false,
             });
             batch_spans.push(processing_s + charged_runtime);
-            if let Some(idx) = lie {
-                amendments.push((idx, objective));
+            if let Some(key) = lie {
+                amendments.push((key, objective));
             }
             real_ys.push((cfg, objective));
             eval_id += 1;
@@ -474,14 +483,15 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
         }
 
         // feed back real observations: BO batches amend their pending
-        // lies in place; everything else observes the real objectives
+        // lies in place (index-keyed, so completion order is irrelevant);
+        // everything else observes the real objectives
         if amendments.is_empty() {
             for (cfg, y) in &real_ys {
                 strat.observe(cfg, *y);
             }
         } else if let Some(bo) = strat.as_bo_mut() {
-            for (idx, y) in &amendments {
-                bo.amend_at(*idx, *y);
+            for (key, y) in &amendments {
+                bo.resolve_pending(*key, *y);
             }
         }
 
@@ -589,8 +599,9 @@ impl TuneResult {
         s.push_str(&format!("max ytopt overhead: {:.1} s\n", self.db.max_overhead_s()));
         if let Some(es) = &self.ensemble {
             s.push_str(&format!(
-                "ensemble: {} workers | batch {} | liar {} | {} batches | faults {} (retries {}, abandoned {}) | timeouts {} | stragglers cancelled {} | resumed {}\n",
+                "ensemble: {} workers | {} cycle | batch {} | liar {} | {} cycles | faults {} (retries {}, abandoned {}) | timeouts {} | stragglers cancelled {} | barrier idle {:.0} s | resumed {}\n",
                 es.workers,
+                es.cycle.name(),
                 es.batch,
                 es.liar.name(),
                 es.batches,
@@ -599,6 +610,7 @@ impl TuneResult {
                 es.failed_evals,
                 es.timeouts,
                 es.stragglers_cancelled,
+                es.worker_idle_s,
                 es.resumed_evals,
             ));
             if self.wallclock_s > 0.0 && es.serial_equivalent_s > 0.0 {

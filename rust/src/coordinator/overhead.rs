@@ -93,6 +93,17 @@ pub fn ensemble_dispatch_s(workers: usize) -> f64 {
     0.6 + 2.4 / workers.max(1) as f64
 }
 
+/// Continuous-manager cost per completion (seconds): amend the pending
+/// lie by index, refit/propose exactly one replacement candidate,
+/// dispatch it to the freed worker, and append the checkpoint. Cheaper
+/// than the generational cycle's per-evaluation share
+/// ([`ensemble_dispatch_s`]) because there is no batch assembly or
+/// barrier collection bookkeeping — the event loop touches one result
+/// at a time.
+pub fn continuous_completion_s(workers: usize) -> f64 {
+    0.5 + 2.0 / workers.max(1) as f64
+}
+
 /// Table IV: expected maximum ytopt overhead (s) per app and system.
 pub fn table4_max_overhead_s(app: AppKind, platform: PlatformKind) -> f64 {
     use AppKind::*;
@@ -170,6 +181,18 @@ mod tests {
         assert!(one <= 3.5 && eight >= 0.6, "one={one} eight={eight}");
         // degenerate input does not divide by zero
         assert!(ensemble_dispatch_s(0).is_finite());
+    }
+
+    #[test]
+    fn continuous_completion_undercuts_the_generational_dispatch() {
+        for workers in [1usize, 2, 4, 8, 64] {
+            let cont = continuous_completion_s(workers);
+            let gen = ensemble_dispatch_s(workers);
+            assert!(cont < gen, "workers={workers}: continuous {cont} !< generational {gen}");
+            assert!(cont > 0.0);
+        }
+        // degenerate input does not divide by zero
+        assert!(continuous_completion_s(0).is_finite());
     }
 
     #[test]

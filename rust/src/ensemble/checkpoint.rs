@@ -17,10 +17,23 @@ use anyhow::{Context, Result};
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
     pub fingerprint: String,
-    /// Simulated wall-clock at the last completed batch.
+    /// Simulated wall-clock at the last applied completion.
     pub wallclock_s: f64,
     /// Completed evaluations, in id order.
     pub records: Vec<EvalRecord>,
+    /// Evaluations dispatched but not yet completed when the checkpoint
+    /// was written (continuous manager cycle); a resumed session
+    /// re-queues them with their original eval ids, so the deterministic
+    /// outcome — which depends only on `(seed, configuration, eval id,
+    /// attempt)` — is unchanged by the interruption.
+    pub in_flight: Vec<InFlightEval>,
+}
+
+/// One dispatched-but-unfinished evaluation in a [`Checkpoint`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InFlightEval {
+    pub eval_id: usize,
+    pub config_key: String,
 }
 
 /// Identity of a tuning run for resume-compatibility checks.
@@ -28,13 +41,16 @@ pub struct Checkpoint {
 /// Everything that shapes what the recorded observations *mean* is
 /// included: the problem (app/platform/nodes/metric, power cap, event
 /// transport), the search (seed/strategy/surrogate/n_init/kappa and the
-/// warm-start prior's contents), and the outcome semantics (timeout
-/// penalty, fault injection, straggler policy, liar imputation).
-/// Deliberately excluded are pure capacity knobs —
-/// max_evals, the wall-clock budget, node-hours, worker count, and
-/// batch size — because resuming with a larger budget or on different
-/// parallel hardware is the normal way to continue an interrupted
-/// session.
+/// warm-start prior's contents), the outcome semantics (timeout
+/// penalty, fault injection, straggler policy, liar imputation), and
+/// the async evaluation policy (worker count, in-flight batch size, and
+/// the manager-cycle mode) — the lies planted for in-flight points
+/// depend on how many proposals are outstanding, so resuming under a
+/// different async policy would silently mix two different observation
+/// streams into one surrogate. Deliberately excluded are pure capacity
+/// knobs — max_evals, the wall-clock budget, and node-hours — because
+/// resuming with a larger budget is the normal way to continue an
+/// interrupted session.
 pub fn fingerprint(setup: &TuneSetup) -> String {
     // content hash of the warm-start prior: same length with different
     // observations must not fingerprint-match
@@ -50,8 +66,12 @@ pub fn fingerprint(setup: &TuneSetup) -> String {
             })
         })
         .unwrap_or(0);
+    // hash the *resolved* in-flight target (0 means "worker count"), so
+    // spelling the identical policy differently still resumes
+    let batch_target =
+        if setup.ensemble_batch == 0 { setup.ensemble_workers } else { setup.ensemble_batch };
     format!(
-        "{}|{}|n{}|{}|seed{}|{:?}|{:?}|init{}|k{}|t{:?}|liar:{}|fault{}|r{}|straggle{:?}|cap{:?}|evt{}|warm{:x}",
+        "{}|{}|n{}|{}|seed{}|{:?}|{:?}|init{}|k{}|t{:?}|liar:{}|fault{}|r{}|straggle{:?}|cap{:?}|evt{}|w{}|b{}|cycle:{}|warm{:x}",
         setup.app.name(),
         setup.platform.name(),
         setup.nodes,
@@ -68,6 +88,9 @@ pub fn fingerprint(setup: &TuneSetup) -> String {
         setup.straggler_factor,
         setup.power_cap_w,
         setup.event_transport,
+        setup.ensemble_workers,
+        batch_target,
+        setup.manager_cycle.name(),
         warm_hash,
     )
 }
@@ -82,14 +105,53 @@ pub fn config_from_key(key: &str) -> Result<Configuration> {
     }
 }
 
+impl InFlightEval {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", self.eval_id.into()),
+            ("config", self.config_key.as_str().into()),
+        ])
+    }
+}
+
+/// Serialize checkpoint parts without owning them — the continuous
+/// manager saves after every completion, so the hot path must not clone
+/// the full record vec per event.
+fn parts_to_json(
+    fingerprint: &str,
+    wallclock_s: f64,
+    records: &[EvalRecord],
+    in_flight: &[InFlightEval],
+) -> Json {
+    Json::obj(vec![
+        ("version", 2u64.into()),
+        ("fingerprint", fingerprint.into()),
+        ("wallclock_s", wallclock_s.into()),
+        ("records", Json::Arr(records.iter().map(EvalRecord::to_json_full).collect())),
+        ("in_flight", Json::Arr(in_flight.iter().map(InFlightEval::to_json).collect())),
+    ])
+}
+
+/// Atomic save from borrowed parts: write a sibling temp file, then
+/// rename over `path`.
+pub fn save_parts(
+    path: &Path,
+    fingerprint: &str,
+    wallclock_s: f64,
+    records: &[EvalRecord],
+    in_flight: &[InFlightEval],
+) -> Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, parts_to_json(fingerprint, wallclock_s, records, in_flight).to_string())
+        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("installing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
 impl Checkpoint {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("version", 1u64.into()),
-            ("fingerprint", self.fingerprint.as_str().into()),
-            ("wallclock_s", self.wallclock_s.into()),
-            ("records", Json::Arr(self.records.iter().map(EvalRecord::to_json_full).collect())),
-        ])
+        parts_to_json(&self.fingerprint, self.wallclock_s, &self.records, &self.in_flight)
     }
 
     pub fn parse(text: &str) -> Result<Checkpoint> {
@@ -111,7 +173,28 @@ impl Checkpoint {
             .map(EvalRecord::from_json_full)
             .collect::<Result<_>>()?;
         records.sort_by_key(|r| r.id);
-        Ok(Checkpoint { fingerprint, wallclock_s, records })
+        // absent in version-1 (generational-only) checkpoints
+        let mut in_flight: Vec<InFlightEval> = match v.get("in_flight").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(|e| {
+                    let eval_id = e
+                        .get("id")
+                        .and_then(Json::as_u64)
+                        .context("in_flight entry missing `id`")?
+                        as usize;
+                    let config_key = e
+                        .get("config")
+                        .and_then(Json::as_str)
+                        .context("in_flight entry missing `config`")?
+                        .to_string();
+                    Ok(InFlightEval { eval_id, config_key })
+                })
+                .collect::<Result<_>>()?,
+            None => Vec::new(),
+        };
+        in_flight.sort_by_key(|f| f.eval_id);
+        Ok(Checkpoint { fingerprint, wallclock_s, records, in_flight })
     }
 
     /// Load from `path`; `Ok(None)` when no checkpoint exists yet.
@@ -126,12 +209,7 @@ impl Checkpoint {
 
     /// Atomic save: write a sibling temp file, then rename over `path`.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, self.to_json().to_string())
-            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("installing checkpoint {}", path.display()))?;
-        Ok(())
+        save_parts(path, &self.fingerprint, self.wallclock_s, &self.records, &self.in_flight)
     }
 }
 
@@ -168,6 +246,10 @@ mod tests {
             fingerprint: "fp".into(),
             wallclock_s: 123.5,
             records: vec![rec(1), rec(0)],
+            in_flight: vec![
+                InFlightEval { eval_id: 3, config_key: "5,6".into() },
+                InFlightEval { eval_id: 2, config_key: "4,5".into() },
+            ],
         };
         cp.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap().expect("checkpoint exists");
@@ -178,7 +260,33 @@ mod tests {
         assert_eq!(back.records[0].id, 0);
         assert_eq!(back.records[1].id, 1);
         assert_eq!(back.records[1].config_key, "1,2");
+        // in-flight evaluations round-trip too, sorted by id
+        assert_eq!(
+            back.in_flight,
+            vec![
+                InFlightEval { eval_id: 2, config_key: "4,5".into() },
+                InFlightEval { eval_id: 3, config_key: "5,6".into() },
+            ]
+        );
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn version1_checkpoints_without_in_flight_still_parse() {
+        let cp = Checkpoint {
+            fingerprint: "fp".into(),
+            wallclock_s: 9.0,
+            records: vec![rec(0)],
+            in_flight: Vec::new(),
+        };
+        // strip the in_flight key to simulate a pre-continuous checkpoint
+        let full = cp.to_json().to_string();
+        let text = full.replace("\"in_flight\":[],", "").replace(",\"in_flight\":[]", "");
+        assert_ne!(text, full, "the in_flight key must actually be stripped");
+        assert!(!text.contains("in_flight"));
+        let back = Checkpoint::parse(&text).unwrap();
+        assert_eq!(back.records.len(), 1);
+        assert!(back.in_flight.is_empty());
     }
 
     #[test]
@@ -223,8 +331,41 @@ mod tests {
         let mut c = a.clone();
         c.max_evals += 10;
         c.wallclock_budget_s *= 2.0;
-        c.ensemble_workers = 16;
-        c.ensemble_batch = 32;
+        c.node_hours_budget = Some(500.0);
         assert_eq!(fingerprint(&a), fingerprint(&c));
+    }
+
+    #[test]
+    fn fingerprint_covers_the_async_evaluation_policy() {
+        use crate::apps::AppKind;
+        use crate::ensemble::{LiarStrategy, ManagerCycle};
+        use crate::metrics::Metric;
+        use crate::platform::PlatformKind;
+        let a = TuneSetup::new(AppKind::Amg, PlatformKind::Theta, 64, Metric::Runtime);
+        // worker count and in-flight batch shape the pending-lie stream
+        let mut w = a.clone();
+        w.ensemble_workers = 16;
+        assert_ne!(fingerprint(&a), fingerprint(&w));
+        let mut b = a.clone();
+        b.ensemble_batch = 32;
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        // ...but the identical policy spelled differently (batch 0 means
+        // "worker count") resolves to the same identity
+        let mut e1 = a.clone();
+        e1.ensemble_workers = 4;
+        let mut e2 = e1.clone();
+        e2.ensemble_batch = 4;
+        assert_eq!(fingerprint(&e1), fingerprint(&e2));
+        // manager-cycle mode changes when lies are amended
+        let mut m = a.clone();
+        m.manager_cycle = ManagerCycle::Generational;
+        assert_ne!(fingerprint(&a), fingerprint(&m));
+        // liar strategy and straggler policy were already identity
+        let mut l = a.clone();
+        l.liar = LiarStrategy::ConstantMax;
+        assert_ne!(fingerprint(&a), fingerprint(&l));
+        let mut s = a.clone();
+        s.straggler_factor = Some(2.5);
+        assert_ne!(fingerprint(&a), fingerprint(&s));
     }
 }

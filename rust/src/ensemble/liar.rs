@@ -5,7 +5,9 @@
 //! the unchanged acquisition surface (or stall waiting on stragglers).
 //! Each in-flight configuration is therefore observed with a *lie* that
 //! is amended to the real measurement when the worker reports back
-//! (`BayesianOptimizer::amend_at`). The lie family is the classic batch
+//! (the index-keyed `BayesianOptimizer::observe_pending` /
+//! `resolve_pending` pair, keyed by eval id so completions may land in
+//! any order). The lie family is the classic batch
 //! BO menu (Ginsbourger's constant liar and kriging believer, the same
 //! options libEnsemble's persistent-gp generator exposes):
 //!

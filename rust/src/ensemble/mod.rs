@@ -12,36 +12,54 @@
 //! * [`liar`] — the async-BO bridge: in-flight configurations are
 //!   observed under a [`LiarStrategy`] imputation (constant-liar min /
 //!   mean / max, kriging believer) so the surrogate keeps proposing
-//!   while evaluations are outstanding, then amended in place
-//!   (`BayesianOptimizer::amend_at`) when real measurements land.
+//!   while evaluations are outstanding; real measurements amend exactly
+//!   the observation they belong to through the index-keyed
+//!   `BayesianOptimizer::observe_pending` / `resolve_pending` pair —
+//!   never positionally, which would corrupt the surrogate the moment a
+//!   completion lands out of proposal order.
+//! * manager cycle ([`ManagerCycle`]) — **continuous** (the default):
+//!   an event-driven loop that blocks on the result channel and, on
+//!   every single completion, amends that result's pending lie by
+//!   index, proposes one replacement candidate under the liar strategy,
+//!   and dispatches it immediately — no worker ever idles at a batch
+//!   boundary while budget remains. The **generational** cycle (propose
+//!   a batch, barrier on the whole batch, repeat) is retained as the
+//!   reference oracle for parity tests.
 //! * fault handling — deterministic transient-fault injection with
 //!   retry-with-exclusion, per-evaluation timeouts (as in the serial
-//!   path), and straggler cancellation (runs exceeding a multiple of the
-//!   batch-median runtime are cut off and penalized), all surfaced in
-//!   [`EnsembleStats`]. Exclusion is a *placement* policy (the retry is
-//!   kept off the worker that just failed it, as an operator would drain
-//!   a suspect node); whether the retry itself faults is rolled from
-//!   `(seed, configuration, attempt)` only, which is what keeps the
-//!   tuning trajectory independent of thread scheduling.
+//!   path), and straggler cancellation, all surfaced in
+//!   [`EnsembleStats`]. The continuous cycle draws its straggler cutoff
+//!   from a running quantile over *all* completed runtimes (never from
+//!   fewer than four samples — a median of one or two runtimes plus a
+//!   factor near 1.0 would cancel the only other in-flight run);
+//!   exclusion is a *placement* policy (the retry is kept off the
+//!   worker that just failed it, as an operator would drain a suspect
+//!   node); whether the retry itself faults is rolled from `(seed,
+//!   configuration, attempt)` only, which is what keeps the tuning
+//!   trajectory independent of thread scheduling.
 //! * [`checkpoint`] — completed evaluations persist through an atomic
-//!   JSON checkpoint; a killed session resumes with zero re-evaluation
-//!   of completed configurations.
+//!   JSON checkpoint, and the continuous cycle additionally records its
+//!   dispatched-but-unfinished evaluations; a killed session resumes
+//!   with zero re-evaluation of completed configurations and re-queues
+//!   the in-flight ones under their original eval ids.
 //!
 //! Determinism: evaluation outcomes depend only on `(seed, eval_id,
 //! attempt)` — never on which OS thread ran them or in which order
-//! results arrived — and the manager applies results in eval-id order
-//! with an analytic greedy-scheduler wall-clock model, so a tuning run
-//! is reproducible from its seed despite real concurrency.
+//! results arrived — and the manager applies results (surrogate
+//! amendments, records, replacement proposals) in eval-id order even
+//! when completions interleave freely, with an analytic greedy-scheduler
+//! wall-clock model, so a tuning run is reproducible from its seed
+//! despite real concurrency.
 
 pub mod checkpoint;
 pub mod liar;
 pub mod worker;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, InFlightEval};
 pub use liar::LiarStrategy;
 pub use worker::WorkerPool;
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -51,19 +69,60 @@ use crate::coordinator::{self, overhead, EvalRecord, PerfDatabase, TuneResult, T
 use crate::metrics::{improvement_pct, Measured};
 use crate::platform::{compile_time, launch};
 use crate::runtime::Scorer;
-use crate::search::SearchStrategy;
 use crate::space::{paper, ConfigSpace, Configuration};
+use crate::util::stats::RunningQuantile;
 use crate::util::Pcg32;
 use anyhow::{Context, Result};
+
+/// How the manager feeds the worker pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ManagerCycle {
+    /// Propose a batch, barrier on the whole batch, repeat. Kept as the
+    /// reference oracle: workers idle at every batch boundary.
+    Generational,
+    /// Event-driven: every single completion amends its pending lie by
+    /// index, proposes one replacement, and dispatches it immediately.
+    #[default]
+    Continuous,
+}
+
+impl ManagerCycle {
+    /// Every accepted spelling, paired with its cycle. The CLI's choice
+    /// validation and [`Self::parse`] both read this table, so the two
+    /// can never drift apart.
+    pub const ALIASES: [(&'static str, ManagerCycle); 6] = [
+        ("continuous", ManagerCycle::Continuous),
+        ("cont", ManagerCycle::Continuous),
+        ("async", ManagerCycle::Continuous),
+        ("generational", ManagerCycle::Generational),
+        ("gen", ManagerCycle::Generational),
+        ("batch", ManagerCycle::Generational),
+    ];
+
+    pub fn parse(s: &str) -> Option<ManagerCycle> {
+        let s = s.to_ascii_lowercase();
+        Self::ALIASES.iter().find(|(a, _)| *a == s).map(|(_, c)| *c)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ManagerCycle::Generational => "generational",
+            ManagerCycle::Continuous => "continuous",
+        }
+    }
+}
 
 /// Ensemble telemetry surfaced in [`TuneResult`].
 #[derive(Debug, Clone)]
 pub struct EnsembleStats {
     pub workers: usize,
-    /// Proposals in flight per manager cycle.
+    /// In-flight proposal target (generational: batch size; continuous:
+    /// maximum concurrent proposals).
     pub batch: usize,
     pub liar: LiarStrategy,
-    /// Manager cycles executed (excluding resumed history).
+    pub cycle: ManagerCycle,
+    /// Manager cycles executed, excluding resumed history (generational:
+    /// batches; continuous: completions processed).
     pub batches: usize,
     /// Transient faults observed (including ones later retried away).
     pub faults: usize,
@@ -80,18 +139,25 @@ pub struct EnsembleStats {
     /// What the recorded evaluations would have cost back-to-back — the
     /// serial-equivalent wall-clock the worker pool compressed.
     pub serial_equivalent_s: f64,
+    /// Simulated worker-seconds spent idle at manager synchronization
+    /// barriers. The generational cycle pays this at every batch
+    /// boundary (each worker waits for the batch makespan); the
+    /// continuous cycle has no barriers and reports exactly 0.
+    pub worker_idle_s: f64,
 }
 
 /// One unit of work handed to the pool.
 struct EvalJob {
     eval_id: usize,
-    /// Observation index of this point's pending lie in the optimizer.
-    bo_index: Option<usize>,
     attempt: usize,
     bounces: usize,
     /// Workers excluded by retry-with-exclusion.
     excluded: Vec<usize>,
     cfg: Configuration,
+    /// Host-side search time spent proposing this configuration
+    /// (continuous cycle charges it per completion; the generational
+    /// cycle amortizes the batch's search time instead).
+    search_s: f64,
 }
 
 /// A completed five-step evaluation (simulated timings included).
@@ -137,6 +203,11 @@ impl Resolved {
         }
     }
 }
+
+/// Minimum completed runtimes before the straggler policy may cancel
+/// anything, shared by both manager cycles: a "median" of 1-2 samples
+/// with a factor near 1.0 would cancel the only other in-flight run.
+const STRAGGLER_MIN_SAMPLES: usize = 4;
 
 /// Deterministic fault roll for `(seed, configuration, attempt)` —
 /// independent of the worker and of thread scheduling.
@@ -241,12 +312,148 @@ fn evaluate_one(
     }
 }
 
+/// Drain one pool event, shared by both manager cycles so the retry /
+/// exclusion / bounce policy can never diverge between them: bounces
+/// and retryable faults are resubmitted (returning `None`); terminal
+/// outcomes come back as `Some(Resolved)` for the caller's collection
+/// (the generational batch vec or the continuous reorder buffer).
+fn handle_outcome(
+    pool: &WorkerPool<EvalJob, EvalOutcome>,
+    out: EvalOutcome,
+    workers: usize,
+    max_retries: usize,
+    stats: &mut EnsembleStats,
+) -> Result<Option<Resolved>> {
+    match out.kind {
+        OutcomeKind::Done(d) => Ok(Some(Resolved::Done(out.job, d))),
+        OutcomeKind::Bounced => {
+            let mut job = out.job;
+            job.bounces += 1;
+            if job.bounces > 8 * workers {
+                // pathological exclusion set: clear it rather than
+                // ping-pong forever
+                job.excluded.clear();
+            }
+            // back off briefly so an excluded-but-idle worker does not
+            // turn resubmission into a hot spin while the non-excluded
+            // workers stay busy
+            std::thread::sleep(Duration::from_millis(1));
+            anyhow::ensure!(pool.submit(job), "ensemble worker pool rejected a retry");
+            Ok(None)
+        }
+        OutcomeKind::Fault => {
+            stats.faults += 1;
+            let mut job = out.job;
+            if job.attempt < max_retries {
+                stats.retries += 1;
+                job.attempt += 1;
+                if !job.excluded.contains(&out.worker) {
+                    job.excluded.push(out.worker);
+                }
+                if job.excluded.len() >= workers {
+                    job.excluded.clear();
+                }
+                anyhow::ensure!(pool.submit(job), "ensemble worker pool rejected a retry");
+                Ok(None)
+            } else {
+                Ok(Some(Resolved::Failed(job)))
+            }
+        }
+        OutcomeKind::LaunchFailed(e) => {
+            log::warn!("launch generation failed: {e}");
+            Ok(Some(Resolved::Failed(out.job)))
+        }
+        OutcomeKind::MeasureError(e) => {
+            anyhow::bail!("evaluation {} failed: {e}", out.job.eval_id)
+        }
+    }
+}
+
+/// Everything one resolved evaluation contributes to the database.
+struct Settled {
+    measured: Measured,
+    objective: f64,
+    timed_out: bool,
+    compile_s: f64,
+    processing_s: f64,
+    /// Application runtime charged to the simulated schedule.
+    charged: f64,
+}
+
+/// Shared Step-5 bookkeeping for one resolved evaluation: penalty
+/// objectives, charged runtime, and processing seconds. `cancel_cutoff`
+/// is `Some(cutoff)` when the straggler policy cancelled this run at
+/// that runtime; `manager_s` is the mode-specific manager cost charged
+/// to this evaluation (amortized batch search + dispatch for the
+/// generational cycle, per-completion cost for the continuous cycle).
+fn settle_result(
+    setup: &TuneSetup,
+    baseline_objective: f64,
+    job: &EvalJob,
+    done: Option<&EvalDone>,
+    cancel_cutoff: Option<f64>,
+    manager_s: f64,
+    first_extra: f64,
+) -> Settled {
+    let record_s = 0.2;
+    let cancelled = cancel_cutoff.is_some();
+    match done {
+        Some(d) => {
+            let timed_out = d.timed_out || cancelled;
+            let measured =
+                if cancelled { Measured::runtime_only(f64::INFINITY) } else { d.measured };
+            // penalties stay strictly worse than anything real in
+            // objective units (timeouts are seconds, which for
+            // energy/EDP could undercut real joules)
+            let objective = if d.timed_out {
+                (setup.eval_timeout_s.unwrap_or(baseline_objective) * 3.0)
+                    .max(baseline_objective * 3.0)
+            } else if cancelled {
+                baseline_objective * 3.0
+            } else {
+                d.measured.objective(setup.metric)
+            };
+            let charged = cancel_cutoff.unwrap_or(d.charged_runtime_s);
+            let processing_s =
+                manager_s + d.orch_s + first_extra + d.launch_s + d.compile_s + record_s;
+            Settled {
+                measured,
+                objective,
+                timed_out,
+                compile_s: d.compile_s,
+                processing_s,
+                charged,
+            }
+        }
+        None => {
+            // abandoned after retries: every attempt burned orchestration
+            // + launch time but produced nothing
+            let attempts = job.attempt as f64 + 1.0;
+            let burn = attempts
+                * (overhead::orchestration_s(setup.app, setup.platform, setup.nodes)
+                    + launch::launch_overhead_s(setup.platform, setup.nodes));
+            let processing_s = manager_s + burn + first_extra + record_s;
+            Settled {
+                measured: Measured::runtime_only(f64::INFINITY),
+                objective: baseline_objective * 3.0,
+                timed_out: true,
+                compile_s: 0.0,
+                processing_s,
+                charged: 0.0,
+            }
+        }
+    }
+}
+
 /// Run the full autotuning loop on the ensemble engine. Invoked by
-/// [`coordinator::autotune_with_scorer`] when `ensemble_workers >= 2`.
+/// [`coordinator::autotune_with_scorer`] when `ensemble_workers >= 2`;
+/// callable directly with a single worker (used by the continuous-vs-
+/// generational parity tests, where one worker makes the two cycles
+/// provably identical).
 pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneResult> {
     anyhow::ensure!(
-        setup.ensemble_workers >= 2,
-        "ensemble path needs >= 2 workers (got {})",
+        setup.ensemble_workers >= 1,
+        "ensemble path needs >= 1 worker (got {})",
         setup.ensemble_workers
     );
     let workers = setup.ensemble_workers;
@@ -269,6 +476,7 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
         workers,
         batch: batch_target,
         liar: setup.liar,
+        cycle: setup.manager_cycle,
         batches: 0,
         faults: 0,
         retries: 0,
@@ -277,10 +485,12 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
         stragglers_cancelled: 0,
         resumed_evals: 0,
         serial_equivalent_s: 0.0,
+        worker_idle_s: 0.0,
     };
 
     // ---- resume: feed checkpointed evaluations straight to the search --
     let fp = checkpoint::fingerprint(setup);
+    let mut resume_inflight: Vec<(usize, Configuration)> = Vec::new();
     if let Some(path) = &setup.checkpoint_path {
         if let Some(cp) = Checkpoint::load(path)? {
             anyhow::ensure!(
@@ -304,7 +514,26 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
             eval_id = db.len();
             wallclock = cp.wallclock_s;
             stats.resumed_evals = eval_id;
-            log::info!("resumed {eval_id} completed evaluations from {}", path.display());
+            for f in cp.in_flight {
+                let cfg = checkpoint::config_from_key(&f.config_key)?;
+                resume_inflight.push((f.eval_id, cfg));
+            }
+            // applications happen in eval-id order, so the in-flight set
+            // must be exactly the ids right after the completed records
+            for (i, (id, _)) in resume_inflight.iter().enumerate() {
+                anyhow::ensure!(
+                    *id == eval_id + i,
+                    "checkpoint {} in-flight ids are not contiguous with its \
+                     completed records (found {id}, expected {})",
+                    path.display(),
+                    eval_id + i
+                );
+            }
+            log::info!(
+                "resumed {eval_id} completed evaluations ({} in flight re-queued) from {}",
+                resume_inflight.len(),
+                path.display()
+            );
         }
     }
 
@@ -328,265 +557,455 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
         crate::platform::scheduler::Allocation::new(setup.platform, "ytopt-repro", nh)
     });
 
-    'outer: while eval_id < setup.max_evals && wallclock < setup.wallclock_budget_s {
-        if let Some(alloc) = &allocation {
-            let est = if eval_id > 0 { wallclock / eval_id as f64 } else { 60.0 };
-            if !alloc.can_afford(setup.nodes, est) {
-                log::info!("allocation exhausted after {eval_id} evaluations");
-                break 'outer;
-            }
-        }
-        let batch = batch_target.min(setup.max_evals - eval_id);
-
-        // ---- Step 1: propose a batch, lying about in-flight points -----
-        let t_search = std::time::Instant::now();
-        let mut jobs: Vec<EvalJob> = Vec::with_capacity(batch);
-        for b in 0..batch {
-            let cfg = strat.propose(&mut rng);
-            let bo_index = match strat.as_bo_mut() {
-                Some(bo) if batch > 1 => {
-                    let lie = setup.liar.impute(
-                        Some(&*bo),
-                        &cfg,
-                        &real_objectives,
-                        baseline_objective,
-                        &mut rng,
-                    );
-                    let idx = bo.next_index();
-                    bo.observe(&cfg, lie);
-                    Some(idx)
-                }
-                _ => None,
-            };
-            jobs.push(EvalJob {
-                eval_id: eval_id + b,
-                bo_index,
-                attempt: 0,
-                bounces: 0,
-                excluded: Vec::new(),
-                cfg,
-            });
-        }
-        let search_s = t_search.elapsed().as_secs_f64();
-
-        // ---- dispatch + collect (retries and bounces settle here) ------
-        for job in jobs {
-            anyhow::ensure!(pool.submit(job), "ensemble worker pool rejected a job");
-        }
-        let mut resolved: Vec<Resolved> = Vec::with_capacity(batch);
-        while resolved.len() < batch {
-            let out = pool
-                .recv_timeout(Duration::from_secs(120))
-                .context("ensemble worker stalled (no result within 120 s)")?;
-            match out.kind {
-                OutcomeKind::Done(d) => resolved.push(Resolved::Done(out.job, d)),
-                OutcomeKind::Bounced => {
-                    let mut job = out.job;
-                    job.bounces += 1;
-                    if job.bounces > 8 * workers {
-                        // pathological exclusion set: clear it rather than
-                        // ping-pong forever
-                        job.excluded.clear();
-                    }
-                    // back off briefly so an excluded-but-idle worker does
-                    // not turn resubmission into a hot spin while the
-                    // non-excluded workers stay busy
-                    std::thread::sleep(Duration::from_millis(1));
-                    anyhow::ensure!(pool.submit(job), "ensemble worker pool rejected a retry");
-                }
-                OutcomeKind::Fault => {
-                    stats.faults += 1;
-                    let mut job = out.job;
-                    if job.attempt < setup.max_retries {
-                        stats.retries += 1;
-                        job.attempt += 1;
-                        if !job.excluded.contains(&out.worker) {
-                            job.excluded.push(out.worker);
-                        }
-                        if job.excluded.len() >= workers {
-                            job.excluded.clear();
-                        }
-                        anyhow::ensure!(pool.submit(job), "ensemble worker pool rejected a retry");
-                    } else {
-                        resolved.push(Resolved::Failed(job));
+    match setup.manager_cycle {
+        // ================================================================
+        // Generational reference cycle: propose a batch, barrier on the
+        // whole batch, repeat. Workers idle at every batch boundary.
+        // ================================================================
+        ManagerCycle::Generational => {
+            anyhow::ensure!(
+                resume_inflight.is_empty(),
+                "generational cycle cannot re-queue in-flight evaluations \
+                 (checkpoint was written by a continuous run)"
+            );
+            let no_inflight: BTreeMap<usize, Configuration> = BTreeMap::new();
+            'outer: while eval_id < setup.max_evals && wallclock < setup.wallclock_budget_s {
+                if let Some(alloc) = &allocation {
+                    let est = if eval_id > 0 { wallclock / eval_id as f64 } else { 60.0 };
+                    if !alloc.can_afford(setup.nodes, est) {
+                        log::info!("allocation exhausted after {eval_id} evaluations");
+                        break 'outer;
                     }
                 }
-                OutcomeKind::LaunchFailed(e) => {
-                    log::warn!("launch generation failed: {e}");
-                    resolved.push(Resolved::Failed(out.job));
-                }
-                OutcomeKind::MeasureError(e) => {
-                    anyhow::bail!("evaluation {} failed: {e}", out.job.eval_id);
-                }
-            }
-        }
-        // apply results in eval-id order: the tuning trajectory must not
-        // depend on thread completion order
-        resolved.sort_by_key(Resolved::eval_id);
+                let batch = batch_target.min(setup.max_evals - eval_id);
 
-        // ---- straggler cancellation ------------------------------------
-        let mut straggler_cutoff = f64::INFINITY;
-        let mut cancelled_ids: HashSet<usize> = HashSet::new();
-        if let Some(factor) = setup.straggler_factor {
-            let mut runtimes: Vec<f64> = resolved
-                .iter()
-                .filter_map(|r| match r {
-                    Resolved::Done(_, d) if !d.timed_out => Some(d.charged_runtime_s),
-                    _ => None,
-                })
-                .collect();
-            if runtimes.len() >= 3 {
-                runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                let median = runtimes[runtimes.len() / 2];
-                straggler_cutoff = median * factor.max(1.0);
-                for r in &resolved {
-                    if let Resolved::Done(j, d) = r {
-                        if !d.timed_out && d.charged_runtime_s > straggler_cutoff {
-                            cancelled_ids.insert(j.eval_id);
-                        }
-                    }
-                }
-            }
-        }
-
-        // ---- record, amend the surrogate, advance simulated time -------
-        let batch_n = resolved.len().max(1);
-        let dispatch_s = overhead::ensemble_dispatch_s(workers);
-        // greedy schedule over the real worker count: completion offsets
-        let mut worker_free = vec![0.0f64; workers];
-        for r in &resolved {
-            let (job, done) = match r {
-                Resolved::Done(j, d) => (j, Some(d)),
-                Resolved::Failed(j) => (j, None),
-            };
-            let first_extra = if job.eval_id == 0 {
-                overhead::first_eval_setup_s(setup.app, setup.platform, setup.nodes)
-            } else {
-                0.0
-            };
-            let record_s = 0.2;
-            let (measured, objective, timed_out, cancelled, compile_s, processing_s, charged) =
-                match done {
-                    Some(d) => {
-                        let cancelled = cancelled_ids.contains(&job.eval_id);
-                        let timed_out = d.timed_out || cancelled;
-                        let measured = if cancelled {
-                            Measured::runtime_only(f64::INFINITY)
-                        } else {
-                            d.measured
-                        };
-                        // penalties stay strictly worse than anything real
-                        // in objective units (timeouts are seconds, which
-                        // for energy/EDP could undercut real joules)
-                        let objective = if d.timed_out {
-                            (setup.eval_timeout_s.unwrap_or(baseline_objective) * 3.0)
-                                .max(baseline_objective * 3.0)
-                        } else if cancelled {
-                            baseline_objective * 3.0
-                        } else {
-                            d.measured.objective(setup.metric)
-                        };
-                        let charged =
-                            if cancelled { straggler_cutoff } else { d.charged_runtime_s };
-                        let processing_s = search_s / batch_n as f64
-                            + d.orch_s
-                            + first_extra
-                            + d.launch_s
-                            + d.compile_s
-                            + dispatch_s
-                            + record_s;
-                        (measured, objective, timed_out, cancelled, d.compile_s, processing_s, charged)
-                    }
-                    None => {
-                        // abandoned after retries: every attempt burned
-                        // orchestration + launch time but produced nothing
-                        let attempts = job.attempt as f64 + 1.0;
-                        let burn = attempts
-                            * (overhead::orchestration_s(setup.app, setup.platform, setup.nodes)
-                                + launch::launch_overhead_s(setup.platform, setup.nodes));
-                        let processing_s =
-                            search_s / batch_n as f64 + burn + first_extra + dispatch_s + record_s;
-                        (
-                            Measured::runtime_only(f64::INFINITY),
-                            baseline_objective * 3.0,
-                            true,
-                            false,
-                            0.0,
-                            processing_s,
-                            0.0,
-                        )
-                    }
-                };
-            if done.is_none() {
-                stats.failed_evals += 1;
-            }
-            if let Some(d) = done {
-                if d.timed_out {
-                    stats.timeouts += 1;
-                }
-            }
-            if cancelled {
-                stats.stragglers_cancelled += 1;
-            }
-
-            // amend the pending lie (or observe, when no lie was planted)
-            match job.bo_index {
-                Some(idx) => {
+                // ---- Step 1: propose a batch, lying about in-flight points
+                let t_search = std::time::Instant::now();
+                let mut jobs: Vec<EvalJob> = Vec::with_capacity(batch);
+                for b in 0..batch {
+                    let cfg = strat.propose(&mut rng);
                     if let Some(bo) = strat.as_bo_mut() {
-                        bo.amend_at(idx, objective);
+                        if batch > 1 {
+                            let lie = setup.liar.impute(
+                                Some(&*bo),
+                                &cfg,
+                                &real_objectives,
+                                baseline_objective,
+                                &mut rng,
+                            );
+                            bo.observe_pending(eval_id + b, &cfg, lie);
+                        }
+                    }
+                    jobs.push(EvalJob {
+                        eval_id: eval_id + b,
+                        attempt: 0,
+                        bounces: 0,
+                        excluded: Vec::new(),
+                        cfg,
+                        search_s: 0.0,
+                    });
+                }
+                let search_s = t_search.elapsed().as_secs_f64();
+
+                // ---- dispatch + collect (retries and bounces settle here)
+                for job in jobs {
+                    anyhow::ensure!(pool.submit(job), "ensemble worker pool rejected a job");
+                }
+                let mut resolved: Vec<Resolved> = Vec::with_capacity(batch);
+                while resolved.len() < batch {
+                    let out = pool
+                        .recv_timeout(Duration::from_secs(120))
+                        .context("ensemble worker stalled (no result within 120 s)")?;
+                    if let Some(r) =
+                        handle_outcome(&pool, out, workers, setup.max_retries, &mut stats)?
+                    {
+                        resolved.push(r);
                     }
                 }
-                None => strat.observe(&job.cfg, objective),
-            }
-            if !timed_out && objective.is_finite() {
-                real_objectives.push(objective);
-                if objective < best {
-                    best = objective;
-                    best_desc = space.describe(&job.cfg);
+                // apply results in eval-id order: the tuning trajectory must
+                // not depend on thread completion order
+                resolved.sort_by_key(Resolved::eval_id);
+
+                // ---- straggler cancellation (batch median, min 4 samples)
+                let mut straggler_cutoff = f64::INFINITY;
+                let mut cancelled_ids: HashSet<usize> = HashSet::new();
+                if let Some(factor) = setup.straggler_factor {
+                    let mut runtimes: Vec<f64> = resolved
+                        .iter()
+                        .filter_map(|r| match r {
+                            Resolved::Done(_, d) if !d.timed_out => Some(d.charged_runtime_s),
+                            _ => None,
+                        })
+                        .collect();
+                    if runtimes.len() >= STRAGGLER_MIN_SAMPLES {
+                        runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                        let median = runtimes[runtimes.len() / 2];
+                        straggler_cutoff = median * factor.max(1.0);
+                        for r in &resolved {
+                            if let Resolved::Done(j, d) = r {
+                                if !d.timed_out && d.charged_runtime_s > straggler_cutoff {
+                                    cancelled_ids.insert(j.eval_id);
+                                }
+                            }
+                        }
+                    }
                 }
-            }
 
-            let span = processing_s + charged;
-            stats.serial_equivalent_s += span;
-            // earliest-free worker takes the next job (submission order)
-            let w = (0..workers)
-                .min_by(|&a, &b| worker_free[a].partial_cmp(&worker_free[b]).unwrap())
-                .unwrap();
-            worker_free[w] += span;
-            let completion = wallclock + worker_free[w];
+                // ---- record, amend the surrogate, advance simulated time --
+                let batch_n = resolved.len().max(1);
+                let dispatch_s = overhead::ensemble_dispatch_s(workers);
+                // greedy schedule over the real worker count
+                let mut worker_free = vec![0.0f64; workers];
+                for r in &resolved {
+                    let (job, done): (&EvalJob, Option<&EvalDone>) = match r {
+                        Resolved::Done(j, d) => (j, Some(&**d)),
+                        Resolved::Failed(j) => (j, None),
+                    };
+                    let first_extra = if job.eval_id == 0 {
+                        overhead::first_eval_setup_s(setup.app, setup.platform, setup.nodes)
+                    } else {
+                        0.0
+                    };
+                    let cancel_cutoff = if cancelled_ids.contains(&job.eval_id) {
+                        Some(straggler_cutoff)
+                    } else {
+                        None
+                    };
+                    let cancelled = cancel_cutoff.is_some();
+                    let s = settle_result(
+                        setup,
+                        baseline_objective,
+                        job,
+                        done,
+                        cancel_cutoff,
+                        search_s / batch_n as f64 + dispatch_s,
+                        first_extra,
+                    );
+                    if done.is_none() {
+                        stats.failed_evals += 1;
+                    }
+                    if let Some(d) = done {
+                        if d.timed_out {
+                            stats.timeouts += 1;
+                        }
+                    }
+                    if cancelled {
+                        stats.stragglers_cancelled += 1;
+                    }
 
-            db.push(EvalRecord {
-                id: job.eval_id,
-                config_key: job.cfg.key(),
-                config_desc: space.describe(&job.cfg),
-                command: done.map(|d| d.command.clone()).unwrap_or_default(),
-                measured,
-                objective,
-                compile_s,
-                processing_s,
-                overhead_s: processing_s - compile_s,
-                wallclock_s: completion,
-                best_so_far: if best.is_finite() { best } else { objective },
-                timed_out,
-                cancelled,
-            });
-        }
-        let makespan = worker_free.iter().cloned().fold(0.0, f64::max);
-        wallclock += makespan;
-        eval_id += batch;
-        stats.batches += 1;
+                    // amend the pending lie (or observe, when none was planted)
+                    let amended = match strat.as_bo_mut() {
+                        Some(bo) => bo.resolve_pending(job.eval_id, s.objective),
+                        None => false,
+                    };
+                    if !amended {
+                        strat.observe(&job.cfg, s.objective);
+                    }
+                    if !s.timed_out && s.objective.is_finite() {
+                        real_objectives.push(s.objective);
+                        if s.objective < best {
+                            best = s.objective;
+                            best_desc = space.describe(&job.cfg);
+                        }
+                    }
 
-        if let Some(alloc) = &mut allocation {
-            if alloc.charge(setup.nodes, makespan).is_err() {
-                // the job simply hits its allocation limit
+                    let span = s.processing_s + s.charged;
+                    stats.serial_equivalent_s += span;
+                    // earliest-free worker takes the next job
+                    let w = (0..workers)
+                        .min_by(|&a, &b| worker_free[a].partial_cmp(&worker_free[b]).unwrap())
+                        .unwrap();
+                    worker_free[w] += span;
+                    let completion = wallclock + worker_free[w];
+
+                    db.push(EvalRecord {
+                        id: job.eval_id,
+                        config_key: job.cfg.key(),
+                        config_desc: space.describe(&job.cfg),
+                        command: done.map(|d| d.command.clone()).unwrap_or_default(),
+                        measured: s.measured,
+                        objective: s.objective,
+                        compile_s: s.compile_s,
+                        processing_s: s.processing_s,
+                        overhead_s: s.processing_s - s.compile_s,
+                        wallclock_s: completion,
+                        best_so_far: if best.is_finite() { best } else { s.objective },
+                        timed_out: s.timed_out,
+                        cancelled,
+                    });
+                }
+                let makespan = worker_free.iter().cloned().fold(0.0, f64::max);
+                // the barrier: every worker waits out the batch makespan
+                for w in &worker_free {
+                    stats.worker_idle_s += makespan - *w;
+                }
+                wallclock += makespan;
+                eval_id += batch;
+                stats.batches += 1;
+
+                if let Some(alloc) = &mut allocation {
+                    if alloc.charge(setup.nodes, makespan).is_err() {
+                        // the job simply hits its allocation limit
+                        if let Some(path) = &setup.checkpoint_path {
+                            save_checkpoint(path, &fp, wallclock, &db, &no_inflight)?;
+                        }
+                        break 'outer;
+                    }
+                }
                 if let Some(path) = &setup.checkpoint_path {
-                    save_checkpoint(path, &fp, wallclock, &db)?;
+                    save_checkpoint(path, &fp, wallclock, &db, &no_inflight)?;
                 }
-                break 'outer;
             }
         }
-        if let Some(path) = &setup.checkpoint_path {
-            save_checkpoint(path, &fp, wallclock, &db)?;
+
+        // ================================================================
+        // Continuous cycle: block on the result channel; every completion
+        // amends its lie by index, proposes one replacement, dispatches
+        // it immediately. Surrogate updates apply in eval-id order even
+        // when completions arrive out of order (late results buffer in
+        // `arrived` until their predecessors land), which is what keeps
+        // the trajectory reproducible under real thread timing.
+        // ================================================================
+        ManagerCycle::Continuous => {
+            let inflight_target = batch_target.max(1);
+            let completion_s = overhead::continuous_completion_s(workers);
+            // dispatched-but-unapplied evaluations (for checkpointing)
+            let mut inflight: BTreeMap<usize, Configuration> = BTreeMap::new();
+            // completions waiting for a predecessor (out-of-order buffer)
+            let mut arrived: BTreeMap<usize, Resolved> = BTreeMap::new();
+            let mut next_apply = eval_id;
+            // online runtime distribution for the straggler cutoff,
+            // seeded from resumed history
+            let mut runtime_dist = RunningQuantile::new();
+            for rec in &db.records {
+                if !rec.timed_out && !rec.cancelled {
+                    runtime_dist.push(rec.measured.runtime_s);
+                }
+            }
+            // absolute simulated time each worker frees (greedy schedule)
+            let mut worker_free = vec![wallclock; workers];
+            let mut charged_wallclock = wallclock;
+            let mut alloc_stop = false;
+
+            // resume: re-queue checkpointed in-flight evaluations under
+            // their original eval ids before proposing anything new
+            for (id, cfg) in &resume_inflight {
+                // same gate as the generational `batch > 1`: lies only
+                // matter when more than one proposal can be outstanding
+                if inflight_target > 1 {
+                    if let Some(bo) = strat.as_bo_mut() {
+                        let lie = setup.liar.impute(
+                            Some(&*bo),
+                            cfg,
+                            &real_objectives,
+                            baseline_objective,
+                            &mut rng,
+                        );
+                        bo.observe_pending(*id, cfg, lie);
+                    }
+                }
+                inflight.insert(*id, cfg.clone());
+                anyhow::ensure!(
+                    pool.submit(EvalJob {
+                        eval_id: *id,
+                        attempt: 0,
+                        bounces: 0,
+                        excluded: Vec::new(),
+                        cfg: cfg.clone(),
+                        search_s: 0.0,
+                    }),
+                    "ensemble worker pool rejected a re-queued job"
+                );
+            }
+            eval_id += resume_inflight.len();
+
+            loop {
+                // top up: keep every worker fed while budget remains.
+                // This runs at manager events only (start of run and
+                // after each application), so the propose/apply
+                // interleaving — and with it the surrogate state behind
+                // every proposal — is a pure function of the applied
+                // prefix, never of host arrival timing.
+                while inflight.len() < inflight_target
+                    && eval_id < setup.max_evals
+                    && wallclock < setup.wallclock_budget_s
+                    && !alloc_stop
+                {
+                    if let Some(alloc) = &allocation {
+                        let done_n = db.len();
+                        let est = if done_n > 0 { wallclock / done_n as f64 } else { 60.0 };
+                        if !alloc.can_afford(setup.nodes, est) {
+                            log::info!("allocation exhausted after {done_n} evaluations");
+                            alloc_stop = true;
+                            break;
+                        }
+                    }
+                    let t_search = std::time::Instant::now();
+                    let cfg = strat.propose(&mut rng);
+                    if inflight_target > 1 {
+                        if let Some(bo) = strat.as_bo_mut() {
+                            let lie = setup.liar.impute(
+                                Some(&*bo),
+                                &cfg,
+                                &real_objectives,
+                                baseline_objective,
+                                &mut rng,
+                            );
+                            bo.observe_pending(eval_id, &cfg, lie);
+                        }
+                    }
+                    let search_s = t_search.elapsed().as_secs_f64();
+                    inflight.insert(eval_id, cfg.clone());
+                    anyhow::ensure!(
+                        pool.submit(EvalJob {
+                            eval_id,
+                            attempt: 0,
+                            bounces: 0,
+                            excluded: Vec::new(),
+                            cfg,
+                            search_s,
+                        }),
+                        "ensemble worker pool rejected a job"
+                    );
+                    eval_id += 1;
+                }
+                if inflight.is_empty() {
+                    break;
+                }
+
+                // wait for the next *in-order* completion; later results
+                // buffer in `arrived` until their predecessors land
+                while !arrived.contains_key(&next_apply) {
+                    let out = pool
+                        .recv_timeout(Duration::from_secs(120))
+                        .context("ensemble worker stalled (no result within 120 s)")?;
+                    if let Some(r) =
+                        handle_outcome(&pool, out, workers, setup.max_retries, &mut stats)?
+                    {
+                        arrived.insert(r.eval_id(), r);
+                    }
+                }
+
+                // apply exactly one completion, then loop back to the
+                // top-up so its replacement dispatches immediately
+                {
+                    let res = arrived.remove(&next_apply).expect("checked above");
+                    let (job, done): (&EvalJob, Option<&EvalDone>) = match &res {
+                        Resolved::Done(j, d) => (j, Some(&**d)),
+                        Resolved::Failed(j) => (j, None),
+                    };
+                    // running-quantile straggler cutoff over all completed
+                    // runtimes so far
+                    let cancel_cutoff = match (setup.straggler_factor, done) {
+                        (Some(factor), Some(d))
+                            if !d.timed_out
+                                && runtime_dist.len() >= STRAGGLER_MIN_SAMPLES =>
+                        {
+                            let cutoff = runtime_dist.median().unwrap_or(f64::INFINITY)
+                                * factor.max(1.0);
+                            (d.charged_runtime_s > cutoff).then_some(cutoff)
+                        }
+                        _ => None,
+                    };
+                    let cancelled = cancel_cutoff.is_some();
+                    let first_extra = if job.eval_id == 0 {
+                        overhead::first_eval_setup_s(setup.app, setup.platform, setup.nodes)
+                    } else {
+                        0.0
+                    };
+                    let s = settle_result(
+                        setup,
+                        baseline_objective,
+                        job,
+                        done,
+                        cancel_cutoff,
+                        job.search_s + completion_s,
+                        first_extra,
+                    );
+                    if done.is_none() {
+                        stats.failed_evals += 1;
+                    }
+                    if let Some(d) = done {
+                        if d.timed_out {
+                            stats.timeouts += 1;
+                        }
+                        if !d.timed_out && !cancelled {
+                            runtime_dist.push(d.charged_runtime_s);
+                        }
+                    }
+                    if cancelled {
+                        stats.stragglers_cancelled += 1;
+                    }
+
+                    // (a) amend this result's pending lie by index
+                    let amended = match strat.as_bo_mut() {
+                        Some(bo) => bo.resolve_pending(job.eval_id, s.objective),
+                        None => false,
+                    };
+                    if !amended {
+                        strat.observe(&job.cfg, s.objective);
+                    }
+                    if !s.timed_out && s.objective.is_finite() {
+                        real_objectives.push(s.objective);
+                        if s.objective < best {
+                            best = s.objective;
+                            best_desc = space.describe(&job.cfg);
+                        }
+                    }
+
+                    // advance the simulated schedule: the freed worker
+                    // takes the span, no barrier in sight
+                    let span = s.processing_s + s.charged;
+                    stats.serial_equivalent_s += span;
+                    let w = (0..workers)
+                        .min_by(|&a, &b| worker_free[a].partial_cmp(&worker_free[b]).unwrap())
+                        .unwrap();
+                    worker_free[w] += span;
+                    let completion = worker_free[w];
+                    wallclock = wallclock.max(completion);
+
+                    db.push(EvalRecord {
+                        id: job.eval_id,
+                        config_key: job.cfg.key(),
+                        config_desc: space.describe(&job.cfg),
+                        command: done.map(|d| d.command.clone()).unwrap_or_default(),
+                        measured: s.measured,
+                        objective: s.objective,
+                        compile_s: s.compile_s,
+                        processing_s: s.processing_s,
+                        overhead_s: s.processing_s - s.compile_s,
+                        wallclock_s: completion,
+                        best_so_far: if best.is_finite() { best } else { s.objective },
+                        timed_out: s.timed_out,
+                        cancelled,
+                    });
+
+                    inflight.remove(&next_apply);
+                    next_apply += 1;
+                    stats.batches += 1;
+
+                    if let Some(alloc) = &mut allocation {
+                        let advance = wallclock - charged_wallclock;
+                        if advance > 0.0 {
+                            if alloc.charge(setup.nodes, advance).is_err() {
+                                // allocation exhausted: stop proposing,
+                                // drain what is already in flight
+                                alloc_stop = true;
+                            }
+                            charged_wallclock = wallclock;
+                        }
+                    }
+                    // (c) is handled by the top-up at the loop head; the
+                    // checkpoint records both the applied prefix and the
+                    // still-in-flight suffix so a kill here resumes clean.
+                    // The full rewrite per completion is deliberate (exact
+                    // resume at any kill point); it serializes by
+                    // reference, and campaigns are bounded by max_evals.
+                    if let Some(path) = &setup.checkpoint_path {
+                        save_checkpoint(path, &fp, wallclock, &db, &inflight)?;
+                    }
+                }
+            }
         }
     }
 
@@ -615,9 +1034,16 @@ fn save_checkpoint(
     fingerprint: &str,
     wallclock_s: f64,
     db: &PerfDatabase,
+    in_flight: &BTreeMap<usize, Configuration>,
 ) -> Result<()> {
-    Checkpoint { fingerprint: fingerprint.to_string(), wallclock_s, records: db.records.clone() }
-        .save(path)
+    // serialize by reference: the continuous cycle saves per completion,
+    // so this path must not clone the full record vec each time (only
+    // the handful of in-flight entries are materialized)
+    let in_flight: Vec<InFlightEval> = in_flight
+        .iter()
+        .map(|(id, cfg)| InFlightEval { eval_id: *id, config_key: cfg.key() })
+        .collect();
+    checkpoint::save_parts(path, fingerprint, wallclock_s, &db.records, &in_flight)
 }
 
 #[cfg(test)]
@@ -641,6 +1067,21 @@ mod tests {
     }
 
     #[test]
+    fn manager_cycle_parses_and_defaults_to_continuous() {
+        assert_eq!(ManagerCycle::default(), ManagerCycle::Continuous);
+        for cycle in [ManagerCycle::Generational, ManagerCycle::Continuous] {
+            assert_eq!(ManagerCycle::parse(cycle.name()), Some(cycle));
+        }
+        assert_eq!(ManagerCycle::parse("ASYNC"), Some(ManagerCycle::Continuous));
+        assert_eq!(ManagerCycle::parse("batch"), Some(ManagerCycle::Generational));
+        assert_eq!(ManagerCycle::parse("nope"), None);
+        // the CLI allowlist and parse() read the same table
+        for (alias, cycle) in ManagerCycle::ALIASES {
+            assert_eq!(ManagerCycle::parse(alias), Some(cycle), "{alias}");
+        }
+    }
+
+    #[test]
     fn ensemble_is_deterministic_despite_threads() {
         let s = setup(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
         let a = run(&s);
@@ -661,13 +1102,31 @@ mod tests {
     }
 
     #[test]
+    fn generational_cycle_is_also_deterministic() {
+        let mut s = setup(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+        s.manager_cycle = ManagerCycle::Generational;
+        let a = run(&s);
+        let b = run(&s);
+        assert_eq!(a.evaluations, 16);
+        assert_eq!(a.best_objective, b.best_objective);
+        let keys = |r: &TuneResult| {
+            r.db.records.iter().map(|x| x.config_key.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(keys(&a), keys(&b));
+        // the oracle still reports barrier idle; continuous reports none
+        assert!(a.ensemble.as_ref().unwrap().worker_idle_s > 0.0);
+    }
+
+    #[test]
     fn ensemble_compresses_wallclock_vs_serial_equivalent() {
         let s = setup(AppKind::Swfft, PlatformKind::Theta, 64, Metric::Runtime);
         let r = run(&s);
         assert_eq!(r.evaluations, 16);
         let es = r.ensemble.as_ref().expect("ensemble stats present");
         assert_eq!(es.workers, 4);
+        assert_eq!(es.cycle, ManagerCycle::Continuous);
         assert!(es.batches >= 4);
+        assert_eq!(es.worker_idle_s, 0.0, "continuous cycle must not idle at barriers");
         // the pool must beat back-to-back execution by a wide margin
         assert!(
             r.wallclock_s < es.serial_equivalent_s * 0.6,
@@ -732,13 +1191,77 @@ mod tests {
         let es = r.ensemble.as_ref().unwrap();
         assert!(
             es.stragglers_cancelled > 0,
-            "a 1.02x-median cutoff over random early batches must cancel something"
+            "a 1.02x-median cutoff over noisy runtimes must cancel something"
         );
         for rec in r.db.records.iter().filter(|x| x.cancelled) {
             assert!(rec.timed_out);
             assert!(!rec.measured.runtime_s.is_finite());
             assert!(rec.objective > r.baseline_objective, "cancellation must be penalized");
         }
+    }
+
+    /// The straggler policy must never fire off fewer than 4 completed
+    /// runtimes: a "median" of 1-2 samples with a factor near 1.0 would
+    /// cancel the only other in-flight run.
+    #[test]
+    fn no_straggler_cancellation_below_four_samples() {
+        for cycle in [ManagerCycle::Generational, ManagerCycle::Continuous] {
+            let mut s = setup(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+            s.manager_cycle = cycle;
+            s.straggler_factor = Some(1.0); // maximally aggressive
+            s.max_evals = 3;
+            s.ensemble_workers = 3;
+            let r = run(&s);
+            let es = r.ensemble.as_ref().unwrap();
+            assert_eq!(r.evaluations, 3, "{cycle:?}");
+            assert_eq!(
+                es.stragglers_cancelled, 0,
+                "{cycle:?}: cancelled off a sub-4-sample runtime distribution"
+            );
+            assert!(r.db.records.iter().all(|rec| !rec.cancelled), "{cycle:?}");
+        }
+    }
+
+    /// A continuous checkpoint with in-flight evaluations re-queues them
+    /// under their original eval ids, reproducing the exact outcomes the
+    /// uninterrupted run recorded (determinism is per `(seed, eval id,
+    /// configuration, attempt)`).
+    #[test]
+    fn continuous_resume_requeues_in_flight_evaluations() {
+        let mut s = setup(AppKind::Swfft, PlatformKind::Theta, 64, Metric::Runtime);
+        s.max_evals = 8;
+        s.seed = 17;
+        let full = run(&s);
+        assert_eq!(full.evaluations, 8);
+
+        let path = std::env::temp_dir()
+            .join(format!("ytopt-requeue-test-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // hand-craft a mid-run checkpoint: 4 applied, 2 in flight
+        let cp = Checkpoint {
+            fingerprint: checkpoint::fingerprint(&s),
+            wallclock_s: full.db.records[3].wallclock_s,
+            records: full.db.records[..4].to_vec(),
+            in_flight: vec![
+                InFlightEval { eval_id: 4, config_key: full.db.records[4].config_key.clone() },
+                InFlightEval { eval_id: 5, config_key: full.db.records[5].config_key.clone() },
+            ],
+        };
+        cp.save(&path).unwrap();
+
+        let mut resumed = s.clone();
+        resumed.checkpoint_path = Some(path.clone());
+        let r = run(&resumed);
+        let es = r.ensemble.as_ref().unwrap();
+        assert_eq!(es.resumed_evals, 4);
+        assert_eq!(r.evaluations, 8);
+        // the re-queued evaluations ran the checkpointed configurations
+        // under their original ids and reproduced their measurements
+        for id in [4usize, 5] {
+            assert_eq!(r.db.records[id].config_key, full.db.records[id].config_key);
+            assert_eq!(r.db.records[id].objective, full.db.records[id].objective);
+        }
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]
@@ -753,10 +1276,15 @@ mod tests {
     }
 
     #[test]
-    fn rejects_single_worker_setups() {
+    fn rejects_zero_worker_setups_but_allows_one() {
         let mut s = setup(AppKind::Amg, PlatformKind::Theta, 64, Metric::Runtime);
-        s.ensemble_workers = 1;
+        s.ensemble_workers = 0;
         assert!(autotune_ensemble(&s, Arc::new(Scorer::fallback())).is_err());
+        // a single worker is valid (the parity-oracle configuration)
+        s.ensemble_workers = 1;
+        s.max_evals = 4;
+        let r = autotune_ensemble(&s, Arc::new(Scorer::fallback())).unwrap();
+        assert_eq!(r.evaluations, 4);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use ytopt::apps::AppKind;
 use ytopt::cliargs::{Args, CliError, CliSpec};
 use ytopt::configfile::ConfigDoc;
 use ytopt::coordinator::{autotune_with_scorer, TuneSetup};
-use ytopt::ensemble::LiarStrategy;
+use ytopt::ensemble::{LiarStrategy, ManagerCycle};
 use ytopt::metrics::Metric;
 use ytopt::platform::PlatformKind;
 use ytopt::runtime::Scorer;
@@ -49,6 +49,7 @@ fn spec() -> CliSpec {
         .opt("parallel", Some("1"), "concurrent evaluations")
         .opt("ensemble-workers", Some("0"), "ensemble worker threads (0 = serial loop)")
         .opt("ensemble-batch", Some("0"), "in-flight proposals per cycle (0 = worker count)")
+        .opt("manager-cycle", Some("continuous"), "ensemble manager: continuous | generational")
         .opt("liar", Some("cl-min"), "pending-point lie: cl-min | cl-mean | cl-max | kriging")
         .opt("fault-rate", Some("0"), "injected transient-failure probability")
         .opt("retries", Some("2"), "retries (with worker exclusion) per failed evaluation")
@@ -78,6 +79,11 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     // ensemble knobs: CLI first, then the [ensemble] config section
     let mut ens_workers = args.usize("ensemble-workers").unwrap_or(0);
     let mut ens_batch = args.usize("ensemble-batch").unwrap_or(0);
+    // validate the CLI value early with a message that lists the set
+    // (drawn from ManagerCycle::ALIASES, the same table parse() reads);
+    // the config file's [ensemble] section may still override it
+    let cycle_aliases: Vec<&str> = ManagerCycle::ALIASES.iter().map(|(a, _)| *a).collect();
+    let mut cycle = args.choice("manager-cycle", &cycle_aliases)?.to_string();
     let mut liar = args.get_or("liar", "cl-min").to_string();
     let mut fault_rate = args.float("fault-rate").unwrap_or(0.0);
     let mut retries = args.usize("retries").unwrap_or(2);
@@ -94,6 +100,7 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
         seed = doc.int_or("tune", "seed", seed);
         ens_workers = doc.usize_or("ensemble", "workers", ens_workers);
         ens_batch = doc.usize_or("ensemble", "batch", ens_batch);
+        cycle = doc.str_or("ensemble", "manager_cycle", &cycle).to_string();
         liar = doc.str_or("ensemble", "liar", &liar).to_string();
         fault_rate = doc.float_or("ensemble", "fault_rate", fault_rate);
         retries = doc.usize_or("ensemble", "retries", retries);
@@ -121,6 +128,8 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     setup.parallel_evals = args.int("parallel").unwrap_or(1) as usize;
     setup.ensemble_workers = ens_workers;
     setup.ensemble_batch = ens_batch;
+    setup.manager_cycle = ManagerCycle::parse(&cycle)
+        .ok_or_else(|| anyhow::anyhow!("unknown manager cycle `{cycle}`"))?;
     setup.liar = LiarStrategy::parse(&liar)
         .ok_or_else(|| anyhow::anyhow!("unknown liar strategy `{liar}`"))?;
     setup.fault_rate = fault_rate.clamp(0.0, 1.0);

@@ -64,6 +64,50 @@ impl Default for BoConfig {
     }
 }
 
+/// Index-keyed bookkeeping for in-flight observations: maps an
+/// evaluation id to the observation index holding its imputed lie, so a
+/// real measurement amends exactly the observation it belongs to no
+/// matter in which order completions arrive. This is what retires the
+/// positional `amend_last` from the async hot path — pairing results
+/// with "the most recent observations" corrupts the surrogate the
+/// moment a mid-batch result lands late.
+#[derive(Debug, Clone, Default)]
+pub struct PendingSet {
+    map: std::collections::BTreeMap<usize, usize>,
+}
+
+impl PendingSet {
+    pub fn new() -> Self {
+        PendingSet::default()
+    }
+
+    pub fn insert(&mut self, eval_id: usize, obs_index: usize) {
+        self.map.insert(eval_id, obs_index);
+    }
+
+    /// Remove and return the observation index for `eval_id`.
+    pub fn take(&mut self, eval_id: usize) -> Option<usize> {
+        self.map.remove(&eval_id)
+    }
+
+    pub fn get(&self, eval_id: usize) -> Option<usize> {
+        self.map.get(&eval_id).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Pending evaluation ids, ascending.
+    pub fn ids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.map.keys().copied()
+    }
+}
+
 pub struct BayesianOptimizer {
     space: Arc<ConfigSpace>,
     cfg: BoConfig,
@@ -71,6 +115,8 @@ pub struct BayesianOptimizer {
     xs: Vec<Configuration>,
     ys: Vec<f64>,
     seen: HashSet<Configuration>,
+    /// In-flight lies awaiting their real measurement, keyed by eval id.
+    pending: PendingSet,
     /// Per-fit timing (seconds) for the overhead accounting + perf bench.
     pub last_fit_s: f64,
     pub last_score_s: f64,
@@ -85,6 +131,7 @@ impl BayesianOptimizer {
             xs: Vec::new(),
             ys: Vec::new(),
             seen: HashSet::new(),
+            pending: PendingSet::new(),
             last_fit_s: 0.0,
             last_score_s: 0.0,
         }
@@ -109,6 +156,12 @@ impl BayesianOptimizer {
     /// recorded observations, the request is clamped — the *most recent*
     /// `min(n, ys.len(), observations)` entries of `ys` are applied to
     /// the most recent observations. Returns how many were amended.
+    #[deprecated(
+        note = "positional amendment pairs results with the most recent \
+                observations and corrupts the surrogate when completions \
+                arrive out of proposal order; use the index-keyed \
+                `amend_at` / `observe_pending` + `resolve_pending` instead"
+    )]
     pub fn amend_last(&mut self, n: usize, ys: &[f64]) -> usize {
         let n = n.min(ys.len()).min(self.ys.len());
         if n == 0 {
@@ -136,6 +189,32 @@ impl BayesianOptimizer {
     /// bookkeeping for the ensemble's async-BO bridge).
     pub fn next_index(&self) -> usize {
         self.ys.len()
+    }
+
+    /// Observe `cfg` under an imputed objective (`lie`) for the
+    /// in-flight evaluation `eval_id`; the observation index is tracked
+    /// in the [`PendingSet`] so [`Self::resolve_pending`] amends exactly
+    /// this observation when the real measurement lands — regardless of
+    /// completion order.
+    pub fn observe_pending(&mut self, eval_id: usize, cfg: &Configuration, lie: f64) {
+        let idx = self.next_index();
+        self.observe(cfg, lie);
+        self.pending.insert(eval_id, idx);
+    }
+
+    /// Amend the pending lie for `eval_id` with the real measurement.
+    /// Returns false (and changes nothing) when `eval_id` has no pending
+    /// observation — callers fall back to a plain `observe`.
+    pub fn resolve_pending(&mut self, eval_id: usize, y: f64) -> bool {
+        match self.pending.take(eval_id) {
+            Some(idx) => self.amend_at(idx, y),
+            None => false,
+        }
+    }
+
+    /// The in-flight lies still awaiting their real measurement.
+    pub fn pending(&self) -> &PendingSet {
+        &self.pending
     }
 
     /// The recorded objectives (real measurements and any still-pending
@@ -439,6 +518,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // pinning the legacy helper's clamping contract
     fn amend_last_clamps_out_of_range() {
         let space = toy_space();
         let mut bo =
@@ -460,6 +540,35 @@ mod tests {
         // the normal in-bounds path still amends exactly the tail
         assert_eq!(bo.amend_last(2, &[1.5, 2.5]), 2);
         assert_eq!(bo.objectives(), &[7.0, 1.5, 2.5]);
+    }
+
+    /// Regression for the out-of-order amendment corruption: a batch of
+    /// pending lies completed in *reverse* order must still land each
+    /// measurement in its own observation slot. (The retired positional
+    /// `amend_last` would have overwritten the wrong entries here.)
+    #[test]
+    fn out_of_order_completions_amend_their_own_observations() {
+        let space = toy_space();
+        let mut bo =
+            BayesianOptimizer::new(space.clone(), BoConfig::default(), Arc::new(Scorer::fallback()));
+        let mut rng = Pcg32::seeded(31);
+        for id in 0..3usize {
+            let c = bo.propose(&mut rng);
+            bo.observe_pending(id, &c, 100.0);
+        }
+        assert_eq!(bo.pending().len(), 3);
+        assert_eq!(bo.pending().ids().collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(bo.pending().get(1), Some(1));
+        // completions land in reverse order; ys[i] must hold its own value
+        for (id, y) in [(2usize, 12.0), (1, 11.0), (0, 10.0)] {
+            assert!(bo.resolve_pending(id, y));
+        }
+        assert_eq!(bo.objectives(), &[10.0, 11.0, 12.0]);
+        assert!(bo.pending().is_empty());
+        // double-resolve and unknown ids are inert
+        assert!(!bo.resolve_pending(0, 9.0));
+        assert!(!bo.resolve_pending(7, 9.0));
+        assert_eq!(bo.objectives(), &[10.0, 11.0, 12.0]);
     }
 
     #[test]

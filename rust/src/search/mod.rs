@@ -8,7 +8,7 @@ pub mod mctree;
 pub mod random;
 pub mod transfer;
 
-pub use bo::{BoConfig, BayesianOptimizer, SurrogateKind};
+pub use bo::{BoConfig, BayesianOptimizer, PendingSet, SurrogateKind};
 pub use grid::GridSearch;
 pub use mctree::McTreeSearch;
 pub use random::RandomSearch;

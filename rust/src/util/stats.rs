@@ -116,6 +116,58 @@ impl OnlineStats {
     }
 }
 
+/// Online quantile over a growing sample, kept sorted for O(log n)
+/// lookup of the insertion point. Backs the continuous ensemble
+/// manager's straggler policy, where the cutoff must come from the
+/// distribution of *all* completed runtimes so far rather than from one
+/// batch's handful. Non-finite values are ignored.
+#[derive(Debug, Clone, Default)]
+pub struct RunningQuantile {
+    sorted: Vec<f64>,
+}
+
+impl RunningQuantile {
+    pub fn new() -> Self {
+        RunningQuantile::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        let i = self.sorted.partition_point(|v| *v < x);
+        self.sorted.insert(i, x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Linear-interpolated quantile, `q` in [0, 1]; `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.sorted.is_empty() {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let pos = q * (self.sorted.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        Some(if lo == hi {
+            self.sorted[lo]
+        } else {
+            self.sorted[lo] + (pos - lo as f64) * (self.sorted[hi] - self.sorted[lo])
+        })
+    }
+
+    pub fn median(&self) -> Option<f64> {
+        self.quantile(0.5)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +193,23 @@ mod tests {
         assert_eq!(argmin(&[3.0, 1.0, 1.0, 2.0]), Some(1));
         assert_eq!(argmin(&[f64::NAN, 2.0]), Some(1));
         assert_eq!(argmin(&[]), None);
+    }
+
+    #[test]
+    fn running_quantile_matches_batch_percentile() {
+        let xs = [4.0, 1.0, 3.0, 2.0, 9.0, 5.0];
+        let mut rq = RunningQuantile::new();
+        assert!(rq.is_empty());
+        assert_eq!(rq.median(), None);
+        for &x in &xs {
+            rq.push(x);
+        }
+        rq.push(f64::INFINITY); // ignored
+        rq.push(f64::NAN); // ignored
+        assert_eq!(rq.len(), 6);
+        assert!((rq.median().unwrap() - median(&xs)).abs() < 1e-12);
+        assert!((rq.quantile(1.0).unwrap() - 9.0).abs() < 1e-12);
+        assert!((rq.quantile(0.0).unwrap() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,12 +1,15 @@
 //! End-to-end ensemble-engine tests: tuning-quality parity with the
 //! serial loop, wall-clock compression at the same evaluation budget,
-//! and checkpoint resume with zero re-evaluation.
+//! checkpoint resume with zero re-evaluation, and the continuous-vs-
+//! generational manager-cycle contracts (seed-for-seed parity at one
+//! worker, zero idle-at-barrier gaps at many).
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use ytopt::apps::AppKind;
 use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
+use ytopt::ensemble::{autotune_ensemble, LiarStrategy, ManagerCycle};
 use ytopt::metrics::Metric;
 use ytopt::platform::PlatformKind;
 use ytopt::runtime::Scorer;
@@ -108,6 +111,79 @@ fn killed_and_resumed_session_re_evaluates_nothing() {
     std::fs::remove_file(&ckpt).unwrap();
 }
 
+/// Seed-for-seed parity: with a single worker there is nothing to
+/// overlap, so the continuous cycle must replay the generational
+/// trajectory exactly — same configurations, same measurements, same
+/// best-so-far curve, bit for bit. (Host-timed fields like
+/// `processing_s` are excluded: they carry real search-time jitter in
+/// both modes.)
+#[test]
+fn continuous_single_worker_matches_generational_history() {
+    let mut s = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+    s.max_evals = 14;
+    s.wallclock_budget_s = 1e9;
+    s.seed = 5;
+    s.n_init = 4;
+    s.ensemble_workers = 1;
+    let mut gen_s = s.clone();
+    gen_s.manager_cycle = ManagerCycle::Generational;
+    let mut cont_s = s.clone();
+    cont_s.manager_cycle = ManagerCycle::Continuous;
+    let rg = autotune_ensemble(&gen_s, Arc::new(Scorer::fallback())).unwrap();
+    let rc = autotune_ensemble(&cont_s, Arc::new(Scorer::fallback())).unwrap();
+    assert_eq!(rg.evaluations, 14);
+    assert_eq!(rc.evaluations, 14);
+    let history = |r: &TuneResult| {
+        r.db.records
+            .iter()
+            .map(|x| {
+                (
+                    x.id,
+                    x.config_key.clone(),
+                    x.objective.to_bits(),
+                    x.measured.runtime_s.to_bits(),
+                    x.best_so_far.to_bits(),
+                    x.timed_out,
+                    x.cancelled,
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(
+        history(&rg),
+        history(&rc),
+        "single-worker continuous must replay the generational trajectory"
+    );
+    assert_eq!(rg.best_objective, rc.best_objective);
+}
+
+/// The point of the continuous cycle: no worker ever waits at a batch
+/// boundary while budget remains. The generational oracle reports
+/// strictly positive barrier idle on the same problem; continuous
+/// reports exactly zero, and does not pay for that with wall-clock.
+#[test]
+fn continuous_mode_eliminates_barrier_idle() {
+    let mut s = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+    s.max_evals = 24;
+    s.wallclock_budget_s = 1e9;
+    s.seed = 9;
+    s.ensemble_workers = 4;
+    let mut gen_s = s.clone();
+    gen_s.manager_cycle = ManagerCycle::Generational;
+    let rg = run(&gen_s);
+    let rc = run(&s); // default cycle is continuous
+    let ig = rg.ensemble.as_ref().unwrap().worker_idle_s;
+    let ic = rc.ensemble.as_ref().unwrap().worker_idle_s;
+    assert_eq!(ic, 0.0, "continuous manager must report zero idle-at-barrier gaps");
+    assert!(ig > 0.0, "generational reference must show barrier idle (got {ig})");
+    assert!(
+        rc.wallclock_s <= rg.wallclock_s,
+        "continuous wall-clock {} must not exceed generational {}",
+        rc.wallclock_s,
+        rg.wallclock_s
+    );
+}
+
 #[test]
 fn checkpoint_from_a_different_run_is_refused() {
     let ckpt = tmpfile("mismatch");
@@ -128,9 +204,60 @@ fn checkpoint_from_a_different_run_is_refused() {
     std::fs::remove_file(&ckpt).unwrap();
 }
 
+/// Resuming under a different *async policy* must be refused too: the
+/// lies planted for in-flight points depend on the liar strategy, the
+/// straggler policy, the worker/batch shape, and the manager-cycle
+/// mode, so mixing observation streams across policies would silently
+/// corrupt the surrogate.
+#[test]
+fn resume_under_a_different_async_policy_is_refused() {
+    let ckpt = tmpfile("policy-mismatch");
+    let _ = std::fs::remove_file(&ckpt);
+
+    let mut a = TuneSetup::new(AppKind::Swfft, PlatformKind::Theta, 64, Metric::Runtime);
+    a.wallclock_budget_s = 1e9;
+    a.max_evals = 6;
+    a.ensemble_workers = 4;
+    a.checkpoint_path = Some(ckpt.clone());
+    let _ = run(&a);
+
+    let mutations: Vec<(&str, TuneSetup)> = vec![
+        ("liar strategy", {
+            let mut m = a.clone();
+            m.liar = LiarStrategy::KrigingBeliever;
+            m
+        }),
+        ("straggler factor", {
+            let mut m = a.clone();
+            m.straggler_factor = Some(2.0);
+            m
+        }),
+        ("worker count", {
+            let mut m = a.clone();
+            m.ensemble_workers = 8;
+            m
+        }),
+        ("ensemble batch", {
+            let mut m = a.clone();
+            m.ensemble_batch = 2;
+            m
+        }),
+        ("manager cycle", {
+            let mut m = a.clone();
+            m.manager_cycle = ManagerCycle::Generational;
+            m
+        }),
+    ];
+    for (what, m) in mutations {
+        let err = autotune_with_scorer(&m, Arc::new(Scorer::fallback()));
+        assert!(err.is_err(), "resume with a different {what} must be refused");
+    }
+
+    std::fs::remove_file(&ckpt).unwrap();
+}
+
 #[test]
 fn liar_strategies_all_reach_comparable_quality() {
-    use ytopt::ensemble::LiarStrategy;
     let mut setup = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
     setup.max_evals = 32;
     setup.wallclock_budget_s = 1e9;
