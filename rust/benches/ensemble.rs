@@ -10,7 +10,11 @@
 //! section duels the two manager cycles at equal budgets: continuous
 //! must never lose wall-clock to generational, must report strictly
 //! less barrier idle, and must produce an identical result history
-//! across two same-seed runs.
+//! across two same-seed runs. A third section duels the K=4 federation
+//! against the single continuous manager at the same budget: the
+//! sharded campaign must never lose simulated wall-clock (its exchange
+//! overhead has to stay cheaper than what sharding saves) and must be
+//! deterministic across same-seed runs.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -152,6 +156,79 @@ fn cycle_duel(app: AppKind, nodes: u64, metric: Metric, scorer: &Arc<Scorer>) {
     println!("{}", t.render());
 }
 
+/// Single continuous manager (one 4-worker pool) vs. the K=4 federation
+/// (four shards, each with its *own* 4-worker pool) at the same
+/// evaluation budget. This is the scale-out claim — adding manager
+/// shards adds worker pools — so the federation must never lose
+/// wall-clock; the coordination-cost claim is gated separately below
+/// (exchange seconds must stay a marginal fraction of the campaign),
+/// since with 4x the workers the wall-clock comparison alone would not
+/// catch an exchange-cost regression. The merged history must also be
+/// deterministic across same-seed runs.
+fn federation_duel(app: AppKind, nodes: u64, metric: Metric, scorer: &Arc<Scorer>) {
+    section(&format!(
+        "{} on Theta x{nodes} | metric {} | single manager vs K=4 federation at {EVALS} evaluations",
+        app.name(),
+        metric.name()
+    ));
+    let mut t = Table::new(
+        "single continuous manager vs sharded federation",
+        &["topology", "sim. wallclock (s)", "speedup", "best objective", "host (s)"],
+    );
+    let mut single = base(app, nodes, metric);
+    single.ensemble_workers = 4;
+    let mut fed = single.clone();
+    fed.federation_shards = 4;
+    fed.elite_exchange_every = 4;
+    fed.federation_elites = 3;
+
+    let (rs, host_s) = run(&single, scorer);
+    let (rf, host_f) = run(&fed, scorer);
+    let (rf2, _) = run(&fed, scorer);
+
+    assert_eq!(rs.evaluations, rf.evaluations, "budgets must match");
+    let keys =
+        |r: &TuneResult| r.db.records.iter().map(|x| x.config_key.clone()).collect::<Vec<_>>();
+    assert_eq!(
+        keys(&rf),
+        keys(&rf2),
+        "federated result history must be deterministic across same-seed runs"
+    );
+    assert_eq!(rf.best_objective, rf2.best_objective);
+    assert!(
+        rf.wallclock_s <= rs.wallclock_s,
+        "K=4 federation wall-clock {} exceeded the single manager's {}",
+        rf.wallclock_s,
+        rs.wallclock_s
+    );
+    let fs = rf.federation.as_ref().expect("federation stats present");
+    assert!(
+        fs.exchange_s < rf.wallclock_s * 0.05,
+        "elite-exchange cost {:.1} s is not marginal against the {:.0} s campaign",
+        fs.exchange_s,
+        rf.wallclock_s
+    );
+    t.row(&[
+        "single manager x4 workers".into(),
+        format!("{:.0}", rs.wallclock_s),
+        "1.00x".into(),
+        format!("{:.3}", rs.best_objective),
+        format!("{host_s:.2}"),
+    ]);
+    t.row(&[
+        format!("federation {}x4 workers", fs.shards),
+        format!("{:.0}", rf.wallclock_s),
+        format!("{:.2}x", rs.wallclock_s / rf.wallclock_s),
+        format!("{:.3}", rf.best_objective),
+        format!("{host_f:.2}"),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "federation: {} exchanges | {} foreign observations | exchange cost {:.1} s | per-shard evals {:?}\n",
+        fs.exchanges, fs.elites_absorbed, fs.exchange_s, fs.per_shard_evals
+    );
+}
+
 fn main() {
     let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
     println!(
@@ -161,4 +238,5 @@ fn main() {
     campaign(AppKind::XSBenchHistory, 1, Metric::Runtime, &scorer);
     campaign(AppKind::Amg, 256, Metric::Energy, &scorer);
     cycle_duel(AppKind::XSBenchHistory, 1, Metric::Runtime, &scorer);
+    federation_duel(AppKind::XSBenchHistory, 1, Metric::Runtime, &scorer);
 }

@@ -193,6 +193,20 @@ impl Args {
         self.get(name)?.parse().ok()
     }
 
+    /// Count option constrained to `lo..=hi` (shard counts, exchange
+    /// periods). Errors name the option, the offending value, and the
+    /// accepted range instead of silently clamping or defaulting.
+    pub fn usize_in(&self, name: &str, lo: usize, hi: usize) -> Result<usize, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        match v.parse::<usize>() {
+            Ok(n) if (lo..=hi).contains(&n) => Ok(n),
+            _ => Err(CliError::InvalidValue(
+                name.to_string(),
+                format!("`{v}` (expected an integer in {lo}..={hi})"),
+            )),
+        }
+    }
+
     /// Value constrained to a fixed choice set (case-insensitive match;
     /// the raw value is returned so callers keep their own parsing).
     /// Errors name the option and list the accepted values.
@@ -290,6 +304,28 @@ mod tests {
         }
         // undeclared options surface as missing
         assert!(matches!(a.choice("nope", &["x"]), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn usize_in_enforces_the_declared_range() {
+        let sp = CliSpec::new("t", "test").opt("shards", Some("0"), "shard count");
+        let a = sp.parse(&sv(&[])).unwrap();
+        assert_eq!(a.usize_in("shards", 0, 64).unwrap(), 0);
+        let a = sp.parse(&sv(&["--shards", "64"])).unwrap();
+        assert_eq!(a.usize_in("shards", 0, 64).unwrap(), 64);
+        for bad in ["65", "-1", "3.5", "many"] {
+            let a = sp.parse(&sv(&["--shards", bad])).unwrap();
+            match a.usize_in("shards", 0, 64) {
+                Err(CliError::InvalidValue(n, detail)) => {
+                    assert_eq!(n, "shards");
+                    assert!(detail.contains(bad) && detail.contains("0..=64"), "{detail}");
+                }
+                other => panic!("`{bad}` accepted: {other:?}"),
+            }
+        }
+        // undeclared options surface as missing
+        let a = sp.parse(&sv(&[])).unwrap();
+        assert!(matches!(a.usize_in("nope", 0, 1), Err(CliError::MissingValue(_))));
     }
 
     #[test]

@@ -95,6 +95,15 @@ pub struct TuneSetup {
     /// Ensemble checkpoint file: completed evaluations persist here and a
     /// resumed session re-evaluates none of them.
     pub checkpoint_path: Option<std::path::PathBuf>,
+    /// Manager federation: 0 keeps the single-manager paths; K >= 1 runs
+    /// K continuous manager shards, each owning a deterministic hash
+    /// partition of the candidate space (K = 1 is the single manager
+    /// spelled through the federation front-end — bit-identical history).
+    pub federation_shards: usize,
+    /// Completions per shard between federation elite exchanges.
+    pub elite_exchange_every: usize,
+    /// Top-N history entries each shard broadcasts per exchange.
+    pub federation_elites: usize,
 }
 
 impl TuneSetup {
@@ -125,6 +134,9 @@ impl TuneSetup {
             straggler_factor: None,
             manager_cycle: crate::ensemble::ManagerCycle::Continuous,
             checkpoint_path: None,
+            federation_shards: 0,
+            elite_exchange_every: 8,
+            federation_elites: 3,
         }
     }
 }
@@ -149,6 +161,8 @@ pub struct TuneResult {
     pub param_importance: Vec<(String, f64)>,
     /// Ensemble-engine telemetry (None on the serial path).
     pub ensemble: Option<crate::ensemble::EnsembleStats>,
+    /// Multi-manager federation telemetry (None off the federated path).
+    pub federation: Option<crate::ensemble::FederationStats>,
 }
 
 pub(crate) enum Strat {
@@ -167,6 +181,16 @@ impl Strat {
     pub(crate) fn observe(&mut self, cfg: &Configuration, y: f64) {
         match self {
             Strat::Bo(b) => b.observe(cfg, y),
+            Strat::Other(s) => s.observe(cfg, y),
+        }
+    }
+
+    /// Record a real measurement imported from another federation shard.
+    /// BO marks it seen (never re-proposed); other strategies take it as
+    /// a plain observation.
+    pub(crate) fn observe_foreign(&mut self, cfg: &Configuration, y: f64) {
+        match self {
+            Strat::Bo(b) => b.observe_foreign(cfg, y),
             Strat::Other(s) => s.observe(cfg, y),
         }
     }
@@ -308,6 +332,9 @@ pub fn autotune(setup: &TuneSetup) -> Result<TuneResult> {
 /// [`crate::ensemble`].
 pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneResult> {
     anyhow::ensure!(setup.parallel_evals >= 1, "parallel_evals must be >= 1");
+    if setup.federation_shards >= 1 {
+        return crate::ensemble::autotune_federation(setup, scorer);
+    }
     if setup.ensemble_workers >= 2 {
         return crate::ensemble::autotune_ensemble(setup, scorer);
     }
@@ -530,6 +557,7 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
         param_importance,
         db,
         ensemble: None,
+        federation: None,
     })
 }
 
@@ -621,6 +649,18 @@ impl TuneResult {
                     es.serial_equivalent_s / self.wallclock_s,
                 ));
             }
+        }
+        if let Some(fs) = &self.federation {
+            s.push_str(&format!(
+                "federation: {} shards | exchange every {} | {} elites | {} exchanges | {} foreign observations | exchange cost {:.1} s | per-shard evals {:?}\n",
+                fs.shards,
+                fs.exchange_every,
+                fs.elite_n,
+                fs.exchanges,
+                fs.elites_absorbed,
+                fs.exchange_s,
+                fs.per_shard_evals,
+            ));
         }
         if !self.param_importance.is_empty() {
             let top: Vec<String> = self

@@ -104,6 +104,23 @@ pub fn continuous_completion_s(workers: usize) -> f64 {
     0.5 + 2.0 / workers.max(1) as f64
 }
 
+/// Federation elite-exchange cost per round (seconds), charged to every
+/// participating shard: serialize the shard's top-N history entries,
+/// all-to-all broadcast among the K managers (each shard sends one
+/// message to and receives one from each of the K-1 peers), and absorb
+/// the foreign observations into the local surrogate. Linear in the
+/// peer count and in the elite width, with a fixed synchronization
+/// floor; zero when there is nothing to exchange (K <= 1). Stays well
+/// under a single evaluation's orchestration cost at the paper's scales
+/// — the federation must never pay more to coordinate than it saves by
+/// sharding.
+pub fn federation_exchange_s(shards: usize, elites: usize) -> f64 {
+    if shards <= 1 {
+        return 0.0;
+    }
+    0.2 + 0.02 * (shards - 1) as f64 * elites.max(1) as f64
+}
+
 /// Table IV: expected maximum ytopt overhead (s) per app and system.
 pub fn table4_max_overhead_s(app: AppKind, platform: PlatformKind) -> f64 {
     use AppKind::*;
@@ -193,6 +210,23 @@ mod tests {
         }
         // degenerate input does not divide by zero
         assert!(continuous_completion_s(0).is_finite());
+    }
+
+    #[test]
+    fn federation_exchange_is_cheap_and_scales_with_policy() {
+        // nothing to exchange with one (or zero) managers
+        assert_eq!(federation_exchange_s(0, 8), 0.0);
+        assert_eq!(federation_exchange_s(1, 8), 0.0);
+        // monotone in both shard count and elite width
+        assert!(federation_exchange_s(2, 3) > 0.0);
+        assert!(federation_exchange_s(8, 3) > federation_exchange_s(2, 3));
+        assert!(federation_exchange_s(4, 16) > federation_exchange_s(4, 2));
+        // a zero-elite exchange still pays the synchronization floor
+        assert!(federation_exchange_s(4, 0) > 0.0);
+        // typical policies stay under a second — far below the tens of
+        // seconds one evaluation's orchestration costs
+        assert!(federation_exchange_s(4, 3) < 1.0);
+        assert!(federation_exchange_s(8, 8) < 2.0);
     }
 
     #[test]

@@ -42,15 +42,20 @@ pub struct InFlightEval {
 /// included: the problem (app/platform/nodes/metric, power cap, event
 /// transport), the search (seed/strategy/surrogate/n_init/kappa and the
 /// warm-start prior's contents), the outcome semantics (timeout
-/// penalty, fault injection, straggler policy, liar imputation), and
-/// the async evaluation policy (worker count, in-flight batch size, and
+/// penalty, fault injection, straggler policy, liar imputation), the
+/// async evaluation policy (worker count, in-flight batch size, and
 /// the manager-cycle mode) — the lies planted for in-flight points
 /// depend on how many proposals are outstanding, so resuming under a
 /// different async policy would silently mix two different observation
-/// streams into one surrogate. Deliberately excluded are pure capacity
-/// knobs — max_evals, the wall-clock budget, and node-hours — because
-/// resuming with a larger budget is the normal way to continue an
-/// interrupted session.
+/// streams into one surrogate — and the federation policy (shard count,
+/// elite-exchange period, elite width): the shard count decides which
+/// partition each manager proposes from and which global eval ids it
+/// owns, and the exchange schedule decides when foreign observations
+/// enter each surrogate, so resuming any shard under a different
+/// federation policy would replay its history into the wrong partition.
+/// Deliberately excluded are pure capacity knobs — max_evals, the
+/// wall-clock budget, and node-hours — because resuming with a larger
+/// budget is the normal way to continue an interrupted session.
 pub fn fingerprint(setup: &TuneSetup) -> String {
     // content hash of the warm-start prior: same length with different
     // observations must not fingerprint-match
@@ -71,7 +76,7 @@ pub fn fingerprint(setup: &TuneSetup) -> String {
     let batch_target =
         if setup.ensemble_batch == 0 { setup.ensemble_workers } else { setup.ensemble_batch };
     format!(
-        "{}|{}|n{}|{}|seed{}|{:?}|{:?}|init{}|k{}|t{:?}|liar:{}|fault{}|r{}|straggle{:?}|cap{:?}|evt{}|w{}|b{}|cycle:{}|warm{:x}",
+        "{}|{}|n{}|{}|seed{}|{:?}|{:?}|init{}|k{}|t{:?}|liar:{}|fault{}|r{}|straggle{:?}|cap{:?}|evt{}|w{}|b{}|cycle:{}|warm{:x}|fed{}:ex{}:el{}",
         setup.app.name(),
         setup.platform.name(),
         setup.nodes,
@@ -92,6 +97,9 @@ pub fn fingerprint(setup: &TuneSetup) -> String {
         batch_target,
         setup.manager_cycle.name(),
         warm_hash,
+        setup.federation_shards,
+        setup.elite_exchange_every,
+        setup.federation_elites,
     )
 }
 
@@ -367,5 +375,40 @@ mod tests {
         let mut s = a.clone();
         s.straggler_factor = Some(2.5);
         assert_ne!(fingerprint(&a), fingerprint(&s));
+    }
+
+    /// The federation policy is run identity too: the shard count picks
+    /// each manager's partition and global eval ids, and the exchange
+    /// schedule decides when foreign observations enter each surrogate —
+    /// so cross-policy resumes must be refused.
+    #[test]
+    fn fingerprint_covers_the_federation_policy() {
+        use crate::apps::AppKind;
+        use crate::metrics::Metric;
+        use crate::platform::PlatformKind;
+        let a = TuneSetup::new(AppKind::Amg, PlatformKind::Theta, 64, Metric::Runtime);
+        let mut k = a.clone();
+        k.federation_shards = 4;
+        assert_ne!(fingerprint(&a), fingerprint(&k));
+        let mut k1 = a.clone();
+        k1.federation_shards = 1;
+        assert_ne!(fingerprint(&a), fingerprint(&k1), "K=1 federation is its own identity");
+        assert_ne!(fingerprint(&k1), fingerprint(&k));
+        let mut e = a.clone();
+        e.elite_exchange_every = 16;
+        assert_ne!(fingerprint(&a), fingerprint(&e));
+        let mut n = a.clone();
+        n.federation_elites = 7;
+        assert_ne!(fingerprint(&a), fingerprint(&n));
+        // the three knobs must not alias each other through formatting
+        let mut x = a.clone();
+        x.federation_shards = 2;
+        x.elite_exchange_every = 3;
+        x.federation_elites = 4;
+        let mut y = a.clone();
+        y.federation_shards = 23;
+        y.elite_exchange_every = 4;
+        y.federation_elites = 4;
+        assert_ne!(fingerprint(&x), fingerprint(&y));
     }
 }

@@ -42,6 +42,12 @@
 //!   dispatched-but-unfinished evaluations; a killed session resumes
 //!   with zero re-evaluation of completed configurations and re-queues
 //!   the in-flight ones under their original eval ids.
+//! * [`federation`] — the multi-manager layer: K continuous shards, each
+//!   owning a seeded-hash partition of the candidate space (a disjoint
+//!   cover of the flat index space), exchanging top-N elites
+//!   periodically, and merging into one eval-id-ordered history. The
+//!   plain continuous manager is the K=1 special case of the same
+//!   engine; the [`Federation`] front-end validates and runs a policy.
 //!
 //! Determinism: evaluation outcomes depend only on `(seed, eval_id,
 //! attempt)` — never on which OS thread ran them or in which order
@@ -52,10 +58,14 @@
 //! despite real concurrency.
 
 pub mod checkpoint;
+pub mod federation;
 pub mod liar;
 pub mod worker;
 
 pub use checkpoint::{Checkpoint, InFlightEval};
+pub use federation::{
+    autotune_federation, shard_of_index, FederationManifest, FederationStats, ShardSpec,
+};
 pub use liar::LiarStrategy;
 pub use worker::WorkerPool;
 
@@ -70,7 +80,6 @@ use crate::metrics::{improvement_pct, Measured};
 use crate::platform::{compile_time, launch};
 use crate::runtime::Scorer;
 use crate::space::{paper, ConfigSpace, Configuration};
-use crate::util::stats::RunningQuantile;
 use crate::util::Pcg32;
 use anyhow::{Context, Result};
 
@@ -144,6 +153,29 @@ pub struct EnsembleStats {
     /// boundary (each worker waits for the batch makespan); the
     /// continuous cycle has no barriers and reports exactly 0.
     pub worker_idle_s: f64,
+}
+
+impl EnsembleStats {
+    /// Fresh zeroed counters — every manager (both cycles, each
+    /// federation shard, and the federation merge accumulator) starts
+    /// here, so adding a stat field touches exactly one literal.
+    pub fn new(workers: usize, batch: usize, liar: LiarStrategy, cycle: ManagerCycle) -> Self {
+        EnsembleStats {
+            workers,
+            batch,
+            liar,
+            cycle,
+            batches: 0,
+            faults: 0,
+            retries: 0,
+            failed_evals: 0,
+            timeouts: 0,
+            stragglers_cancelled: 0,
+            resumed_evals: 0,
+            serial_equivalent_s: 0.0,
+            worker_idle_s: 0.0,
+        }
+    }
 }
 
 /// One unit of work handed to the pool.
@@ -456,6 +488,13 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
         "ensemble path needs >= 1 worker (got {})",
         setup.ensemble_workers
     );
+    // The continuous cycle (the default) is the single-shard special
+    // case of the federation's shard manager; both run the same engine,
+    // which is what makes a K=1 federation bit-identical to the plain
+    // continuous manager.
+    if setup.manager_cycle == ManagerCycle::Continuous {
+        return federation::autotune_continuous(setup, scorer);
+    }
     let workers = setup.ensemble_workers;
     let batch_target = if setup.ensemble_batch == 0 { workers } else { setup.ensemble_batch };
 
@@ -472,21 +511,7 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
     let mut eval_id = 0usize;
     // finite real measurements (the liar pool)
     let mut real_objectives: Vec<f64> = Vec::new();
-    let mut stats = EnsembleStats {
-        workers,
-        batch: batch_target,
-        liar: setup.liar,
-        cycle: setup.manager_cycle,
-        batches: 0,
-        faults: 0,
-        retries: 0,
-        failed_evals: 0,
-        timeouts: 0,
-        stragglers_cancelled: 0,
-        resumed_evals: 0,
-        serial_equivalent_s: 0.0,
-        worker_idle_s: 0.0,
-    };
+    let mut stats = EnsembleStats::new(workers, batch_target, setup.liar, setup.manager_cycle);
 
     // ---- resume: feed checkpointed evaluations straight to the search --
     let fp = checkpoint::fingerprint(setup);
@@ -758,255 +783,11 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
             }
         }
 
-        // ================================================================
-        // Continuous cycle: block on the result channel; every completion
-        // amends its lie by index, proposes one replacement, dispatches
-        // it immediately. Surrogate updates apply in eval-id order even
-        // when completions arrive out of order (late results buffer in
-        // `arrived` until their predecessors land), which is what keeps
-        // the trajectory reproducible under real thread timing.
-        // ================================================================
-        ManagerCycle::Continuous => {
-            let inflight_target = batch_target.max(1);
-            let completion_s = overhead::continuous_completion_s(workers);
-            // dispatched-but-unapplied evaluations (for checkpointing)
-            let mut inflight: BTreeMap<usize, Configuration> = BTreeMap::new();
-            // completions waiting for a predecessor (out-of-order buffer)
-            let mut arrived: BTreeMap<usize, Resolved> = BTreeMap::new();
-            let mut next_apply = eval_id;
-            // online runtime distribution for the straggler cutoff,
-            // seeded from resumed history
-            let mut runtime_dist = RunningQuantile::new();
-            for rec in &db.records {
-                if !rec.timed_out && !rec.cancelled {
-                    runtime_dist.push(rec.measured.runtime_s);
-                }
-            }
-            // absolute simulated time each worker frees (greedy schedule)
-            let mut worker_free = vec![wallclock; workers];
-            let mut charged_wallclock = wallclock;
-            let mut alloc_stop = false;
-
-            // resume: re-queue checkpointed in-flight evaluations under
-            // their original eval ids before proposing anything new
-            for (id, cfg) in &resume_inflight {
-                // same gate as the generational `batch > 1`: lies only
-                // matter when more than one proposal can be outstanding
-                if inflight_target > 1 {
-                    if let Some(bo) = strat.as_bo_mut() {
-                        let lie = setup.liar.impute(
-                            Some(&*bo),
-                            cfg,
-                            &real_objectives,
-                            baseline_objective,
-                            &mut rng,
-                        );
-                        bo.observe_pending(*id, cfg, lie);
-                    }
-                }
-                inflight.insert(*id, cfg.clone());
-                anyhow::ensure!(
-                    pool.submit(EvalJob {
-                        eval_id: *id,
-                        attempt: 0,
-                        bounces: 0,
-                        excluded: Vec::new(),
-                        cfg: cfg.clone(),
-                        search_s: 0.0,
-                    }),
-                    "ensemble worker pool rejected a re-queued job"
-                );
-            }
-            eval_id += resume_inflight.len();
-
-            loop {
-                // top up: keep every worker fed while budget remains.
-                // This runs at manager events only (start of run and
-                // after each application), so the propose/apply
-                // interleaving — and with it the surrogate state behind
-                // every proposal — is a pure function of the applied
-                // prefix, never of host arrival timing.
-                while inflight.len() < inflight_target
-                    && eval_id < setup.max_evals
-                    && wallclock < setup.wallclock_budget_s
-                    && !alloc_stop
-                {
-                    if let Some(alloc) = &allocation {
-                        let done_n = db.len();
-                        let est = if done_n > 0 { wallclock / done_n as f64 } else { 60.0 };
-                        if !alloc.can_afford(setup.nodes, est) {
-                            log::info!("allocation exhausted after {done_n} evaluations");
-                            alloc_stop = true;
-                            break;
-                        }
-                    }
-                    let t_search = std::time::Instant::now();
-                    let cfg = strat.propose(&mut rng);
-                    if inflight_target > 1 {
-                        if let Some(bo) = strat.as_bo_mut() {
-                            let lie = setup.liar.impute(
-                                Some(&*bo),
-                                &cfg,
-                                &real_objectives,
-                                baseline_objective,
-                                &mut rng,
-                            );
-                            bo.observe_pending(eval_id, &cfg, lie);
-                        }
-                    }
-                    let search_s = t_search.elapsed().as_secs_f64();
-                    inflight.insert(eval_id, cfg.clone());
-                    anyhow::ensure!(
-                        pool.submit(EvalJob {
-                            eval_id,
-                            attempt: 0,
-                            bounces: 0,
-                            excluded: Vec::new(),
-                            cfg,
-                            search_s,
-                        }),
-                        "ensemble worker pool rejected a job"
-                    );
-                    eval_id += 1;
-                }
-                if inflight.is_empty() {
-                    break;
-                }
-
-                // wait for the next *in-order* completion; later results
-                // buffer in `arrived` until their predecessors land
-                while !arrived.contains_key(&next_apply) {
-                    let out = pool
-                        .recv_timeout(Duration::from_secs(120))
-                        .context("ensemble worker stalled (no result within 120 s)")?;
-                    if let Some(r) =
-                        handle_outcome(&pool, out, workers, setup.max_retries, &mut stats)?
-                    {
-                        arrived.insert(r.eval_id(), r);
-                    }
-                }
-
-                // apply exactly one completion, then loop back to the
-                // top-up so its replacement dispatches immediately
-                {
-                    let res = arrived.remove(&next_apply).expect("checked above");
-                    let (job, done): (&EvalJob, Option<&EvalDone>) = match &res {
-                        Resolved::Done(j, d) => (j, Some(&**d)),
-                        Resolved::Failed(j) => (j, None),
-                    };
-                    // running-quantile straggler cutoff over all completed
-                    // runtimes so far
-                    let cancel_cutoff = match (setup.straggler_factor, done) {
-                        (Some(factor), Some(d))
-                            if !d.timed_out
-                                && runtime_dist.len() >= STRAGGLER_MIN_SAMPLES =>
-                        {
-                            let cutoff = runtime_dist.median().unwrap_or(f64::INFINITY)
-                                * factor.max(1.0);
-                            (d.charged_runtime_s > cutoff).then_some(cutoff)
-                        }
-                        _ => None,
-                    };
-                    let cancelled = cancel_cutoff.is_some();
-                    let first_extra = if job.eval_id == 0 {
-                        overhead::first_eval_setup_s(setup.app, setup.platform, setup.nodes)
-                    } else {
-                        0.0
-                    };
-                    let s = settle_result(
-                        setup,
-                        baseline_objective,
-                        job,
-                        done,
-                        cancel_cutoff,
-                        job.search_s + completion_s,
-                        first_extra,
-                    );
-                    if done.is_none() {
-                        stats.failed_evals += 1;
-                    }
-                    if let Some(d) = done {
-                        if d.timed_out {
-                            stats.timeouts += 1;
-                        }
-                        if !d.timed_out && !cancelled {
-                            runtime_dist.push(d.charged_runtime_s);
-                        }
-                    }
-                    if cancelled {
-                        stats.stragglers_cancelled += 1;
-                    }
-
-                    // (a) amend this result's pending lie by index
-                    let amended = match strat.as_bo_mut() {
-                        Some(bo) => bo.resolve_pending(job.eval_id, s.objective),
-                        None => false,
-                    };
-                    if !amended {
-                        strat.observe(&job.cfg, s.objective);
-                    }
-                    if !s.timed_out && s.objective.is_finite() {
-                        real_objectives.push(s.objective);
-                        if s.objective < best {
-                            best = s.objective;
-                            best_desc = space.describe(&job.cfg);
-                        }
-                    }
-
-                    // advance the simulated schedule: the freed worker
-                    // takes the span, no barrier in sight
-                    let span = s.processing_s + s.charged;
-                    stats.serial_equivalent_s += span;
-                    let w = (0..workers)
-                        .min_by(|&a, &b| worker_free[a].partial_cmp(&worker_free[b]).unwrap())
-                        .unwrap();
-                    worker_free[w] += span;
-                    let completion = worker_free[w];
-                    wallclock = wallclock.max(completion);
-
-                    db.push(EvalRecord {
-                        id: job.eval_id,
-                        config_key: job.cfg.key(),
-                        config_desc: space.describe(&job.cfg),
-                        command: done.map(|d| d.command.clone()).unwrap_or_default(),
-                        measured: s.measured,
-                        objective: s.objective,
-                        compile_s: s.compile_s,
-                        processing_s: s.processing_s,
-                        overhead_s: s.processing_s - s.compile_s,
-                        wallclock_s: completion,
-                        best_so_far: if best.is_finite() { best } else { s.objective },
-                        timed_out: s.timed_out,
-                        cancelled,
-                    });
-
-                    inflight.remove(&next_apply);
-                    next_apply += 1;
-                    stats.batches += 1;
-
-                    if let Some(alloc) = &mut allocation {
-                        let advance = wallclock - charged_wallclock;
-                        if advance > 0.0 {
-                            if alloc.charge(setup.nodes, advance).is_err() {
-                                // allocation exhausted: stop proposing,
-                                // drain what is already in flight
-                                alloc_stop = true;
-                            }
-                            charged_wallclock = wallclock;
-                        }
-                    }
-                    // (c) is handled by the top-up at the loop head; the
-                    // checkpoint records both the applied prefix and the
-                    // still-in-flight suffix so a kill here resumes clean.
-                    // The full rewrite per completion is deliberate (exact
-                    // resume at any kill point); it serializes by
-                    // reference, and campaigns are bounded by max_evals.
-                    if let Some(path) = &setup.checkpoint_path {
-                        save_checkpoint(path, &fp, wallclock, &db, &inflight)?;
-                    }
-                }
-            }
-        }
+        // The continuous cycle lives in `federation::ContinuousShard`
+        // (the single manager is its one-shard special case) and
+        // delegates at the top of this function; only the
+        // generational oracle reaches this match.
+        ManagerCycle::Continuous => unreachable!("continuous runs delegate above"),
     }
 
     pool.shutdown();
@@ -1026,7 +807,36 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
         param_importance,
         db,
         ensemble: Some(stats),
+        federation: None,
     })
+}
+
+/// Front-end for the multi-manager federation in [`federation`]: holds a
+/// validated policy (shard count, exchange period, elite width all live
+/// on [`TuneSetup`]) and runs K continuous shards over a seeded-hash
+/// partition of the candidate space, merging their histories into one
+/// eval-id-ordered [`TuneResult`].
+pub struct Federation {
+    setup: TuneSetup,
+}
+
+impl Federation {
+    /// Validate the federation policy carried by `setup` (shard count in
+    /// range, at least one worker per shard, continuous manager cycle).
+    pub fn new(setup: TuneSetup) -> Result<Federation> {
+        federation::validate_federation(&setup)?;
+        Ok(Federation { setup })
+    }
+
+    /// Shard count K.
+    pub fn shards(&self) -> usize {
+        self.setup.federation_shards
+    }
+
+    /// Run the federated campaign.
+    pub fn run(&self, scorer: Arc<Scorer>) -> Result<TuneResult> {
+        federation::autotune_federation(&self.setup, scorer)
+    }
 }
 
 fn save_checkpoint(
@@ -1285,6 +1095,31 @@ mod tests {
         s.max_evals = 4;
         let r = autotune_ensemble(&s, Arc::new(Scorer::fallback())).unwrap();
         assert_eq!(r.evaluations, 4);
+    }
+
+    /// The `Federation` front-end validates policies up front and runs
+    /// the same campaign `autotune_federation` would.
+    #[test]
+    fn federation_front_end_validates_and_runs() {
+        let mut s = setup(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+        s.max_evals = 8;
+        s.ensemble_workers = 2;
+        s.federation_shards = 2;
+        let fed = Federation::new(s.clone()).expect("valid policy");
+        assert_eq!(fed.shards(), 2);
+        let r = fed.run(Arc::new(Scorer::fallback())).unwrap();
+        assert_eq!(r.evaluations, 8);
+        assert_eq!(r.federation.as_ref().unwrap().shards, 2);
+        // invalid policies are refused before any work happens
+        let mut bad = s.clone();
+        bad.ensemble_workers = 0;
+        assert!(Federation::new(bad).is_err());
+        let mut bad = s.clone();
+        bad.manager_cycle = ManagerCycle::Generational;
+        assert!(Federation::new(bad).is_err());
+        let mut bad = s;
+        bad.federation_shards = federation::MAX_SHARDS + 1;
+        assert!(Federation::new(bad).is_err());
     }
 
     #[test]

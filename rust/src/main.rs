@@ -50,6 +50,9 @@ fn spec() -> CliSpec {
         .opt("ensemble-workers", Some("0"), "ensemble worker threads (0 = serial loop)")
         .opt("ensemble-batch", Some("0"), "in-flight proposals per cycle (0 = worker count)")
         .opt("manager-cycle", Some("continuous"), "ensemble manager: continuous | generational")
+        .opt("federation-shards", Some("0"), "manager shards (0 = single manager; K>=1 federates)")
+        .opt("elite-exchange-every", Some("8"), "completions per shard between elite exchanges")
+        .opt("federation-elites", Some("3"), "top-N history entries broadcast per exchange")
         .opt("liar", Some("cl-min"), "pending-point lie: cl-min | cl-mean | cl-max | kriging")
         .opt("fault-rate", Some("0"), "injected transient-failure probability")
         .opt("retries", Some("2"), "retries (with worker exclusion) per failed evaluation")
@@ -84,6 +87,10 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     // the config file's [ensemble] section may still override it
     let cycle_aliases: Vec<&str> = ManagerCycle::ALIASES.iter().map(|(a, _)| *a).collect();
     let mut cycle = args.choice("manager-cycle", &cycle_aliases)?.to_string();
+    // federation policy: validated ranges, config-file overridable below
+    let mut fed_shards = args.usize_in("federation-shards", 0, ytopt::ensemble::federation::MAX_SHARDS)?;
+    let mut exchange_every = args.usize_in("elite-exchange-every", 1, 1_000_000)?;
+    let mut fed_elites = args.usize_in("federation-elites", 0, 64)?;
     let mut liar = args.get_or("liar", "cl-min").to_string();
     let mut fault_rate = args.float("fault-rate").unwrap_or(0.0);
     let mut retries = args.usize("retries").unwrap_or(2);
@@ -110,6 +117,9 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
         if let Some(p) = doc.get("ensemble", "checkpoint").and_then(|v| v.as_str()) {
             checkpoint = Some(p.to_string());
         }
+        fed_shards = doc.usize_or("federation", "shards", fed_shards);
+        exchange_every = doc.usize_or("federation", "exchange_every", exchange_every);
+        fed_elites = doc.usize_or("federation", "elites", fed_elites);
     }
     let app = AppKind::parse(&app).ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?;
     let platform = parse_platform(&platform)?;
@@ -136,6 +146,9 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     setup.max_retries = retries;
     setup.straggler_factor = straggler;
     setup.checkpoint_path = checkpoint.map(std::path::PathBuf::from);
+    setup.federation_shards = fed_shards;
+    setup.elite_exchange_every = exchange_every;
+    setup.federation_elites = fed_elites;
     Ok(setup)
 }
 

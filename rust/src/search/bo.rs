@@ -117,6 +117,11 @@ pub struct BayesianOptimizer {
     seen: HashSet<Configuration>,
     /// In-flight lies awaiting their real measurement, keyed by eval id.
     pending: PendingSet,
+    /// Foreign observations absorbed (federation elite exchange).
+    foreign: usize,
+    /// Proposal restriction to one federation shard's partition
+    /// (None = the whole space).
+    shard: Option<crate::ensemble::ShardSpec>,
     /// Per-fit timing (seconds) for the overhead accounting + perf bench.
     pub last_fit_s: f64,
     pub last_score_s: f64,
@@ -132,6 +137,8 @@ impl BayesianOptimizer {
             ys: Vec::new(),
             seen: HashSet::new(),
             pending: PendingSet::new(),
+            foreign: 0,
+            shard: None,
             last_fit_s: 0.0,
             last_score_s: 0.0,
         }
@@ -217,6 +224,45 @@ impl BayesianOptimizer {
         &self.pending
     }
 
+    /// Record a *foreign* observation — a real measurement imported from
+    /// another federation shard's history. The measurement is final (no
+    /// pending entry is involved) and the configuration is marked seen,
+    /// so this optimizer never proposes a duplicate of an imported
+    /// point: its shard neither owns it nor needs to re-measure it.
+    pub fn observe_foreign(&mut self, cfg: &Configuration, y: f64) {
+        self.foreign += 1;
+        self.observe(cfg, y);
+    }
+
+    /// How many foreign observations have been absorbed.
+    pub fn foreign_observations(&self) -> usize {
+        self.foreign
+    }
+
+    /// Whether `cfg` has been observed (own or foreign) and is therefore
+    /// excluded from future proposals.
+    pub fn has_seen(&self, cfg: &Configuration) -> bool {
+        self.seen.contains(cfg)
+    }
+
+    /// Restrict every future proposal to `spec`'s partition of the flat
+    /// config-index space (multi-manager federation). The candidate pool
+    /// is filtered by membership *before* acquisition scoring, so one
+    /// surrogate fit always yields an in-shard proposal — without this,
+    /// a K-shard manager would pay ~K discarded full propose pipelines
+    /// (fit + score) per accepted proposal, and at large K would degrade
+    /// to uniform random search once every model proposal missed.
+    pub fn restrict_to_shard(&mut self, spec: crate::ensemble::ShardSpec) {
+        self.shard = Some(spec);
+    }
+
+    fn in_shard(&self, cfg: &Configuration) -> bool {
+        match self.shard {
+            Some(s) => s.contains(&self.space, cfg),
+            None => true,
+        }
+    }
+
     /// The recorded objectives (real measurements and any still-pending
     /// imputed lies), in observation order.
     pub fn objectives(&self) -> &[f64] {
@@ -264,11 +310,11 @@ impl BayesianOptimizer {
     fn random_unseen(&self, rng: &mut Pcg32) -> Configuration {
         for _ in 0..2000 {
             let c = self.space.sample(rng);
-            if !self.seen.contains(&c) {
+            if !self.seen.contains(&c) && self.in_shard(&c) {
                 return c;
             }
         }
-        self.space.sample(rng) // exhausted small space: allow repeats
+        self.space.sample(rng) // exhausted small space/shard: allow repeats
     }
 
     /// Candidate batch: uniform + neighbourhood moves around incumbents.
@@ -279,7 +325,9 @@ impl BayesianOptimizer {
         let mut dedup: HashSet<Configuration> = HashSet::with_capacity(n);
         while out.len() < n_random {
             let c = self.space.sample(rng);
-            if !self.seen.contains(&c) && dedup.insert(c.clone()) {
+            // out-of-shard draws still enter `dedup` so the exhaustion
+            // bound below keeps terminating on small spaces
+            if !self.seen.contains(&c) && dedup.insert(c.clone()) && self.in_shard(&c) {
                 out.push(c);
             }
             if dedup.len() + self.seen.len() >= self.space.size().min(u128::from(u64::MAX)) as usize
@@ -301,7 +349,7 @@ impl BayesianOptimizer {
                 for _ in 0..1 + rng.index(3) {
                     c = self.space.neighbor(&c, rng);
                 }
-                if !self.seen.contains(&c) && dedup.insert(c.clone()) {
+                if !self.seen.contains(&c) && dedup.insert(c.clone()) && self.in_shard(&c) {
                     out.push(c);
                 }
             }
@@ -569,6 +617,61 @@ mod tests {
         assert!(!bo.resolve_pending(0, 9.0));
         assert!(!bo.resolve_pending(7, 9.0));
         assert_eq!(bo.objectives(), &[10.0, 11.0, 12.0]);
+    }
+
+    /// A shard-restricted optimizer (federation) proposes only inside
+    /// its partition — through both the random warm-up path and the
+    /// model-driven candidate path — with a single fit per proposal.
+    #[test]
+    fn shard_restricted_proposals_stay_in_the_partition() {
+        use crate::ensemble::ShardSpec;
+        let space = toy_space();
+        let mut bo = BayesianOptimizer::new(
+            space.clone(),
+            BoConfig { n_candidates: 128, ..Default::default() },
+            Arc::new(Scorer::fallback()),
+        );
+        let spec = ShardSpec { seed: 9, shards: 4, shard: 2 };
+        bo.restrict_to_shard(spec);
+        let mut rng = Pcg32::seeded(77);
+        for i in 0..40 {
+            let c = bo.propose(&mut rng);
+            assert!(spec.contains(&space, &c), "proposal {i} left shard 2's partition");
+            bo.observe(&c, objective(&space, &c));
+        }
+    }
+
+    /// Foreign observations (federation elite exchange) enter the
+    /// surrogate as real measurements and are never proposed again —
+    /// even while pending lies are outstanding.
+    #[test]
+    fn foreign_observations_are_recorded_and_never_proposed() {
+        let space = toy_space();
+        let mut bo = BayesianOptimizer::new(
+            space.clone(),
+            BoConfig { n_candidates: 256, ..Default::default() },
+            Arc::new(Scorer::fallback()),
+        );
+        let mut rng = Pcg32::seeded(41);
+        // plant a pending lie first: a foreign observe must not disturb
+        // the index-keyed amendment
+        let inflight = bo.propose(&mut rng);
+        bo.observe_pending(0, &inflight, 100.0);
+        let foreign = space.config_at(17);
+        assert!(!bo.has_seen(&foreign));
+        bo.observe_foreign(&foreign, 2.5);
+        assert_eq!(bo.foreign_observations(), 1);
+        assert!(bo.has_seen(&foreign));
+        assert_eq!(bo.objectives(), &[100.0, 2.5]);
+        // the pending lie still amends its own slot
+        assert!(bo.resolve_pending(0, 7.0));
+        assert_eq!(bo.objectives(), &[7.0, 2.5]);
+        // the foreign point is excluded from every future proposal
+        for _ in 0..60 {
+            let c = bo.propose(&mut rng);
+            assert_ne!(c, foreign, "foreign elite was re-proposed");
+            bo.observe(&c, objective(&space, &c));
+        }
     }
 
     #[test]

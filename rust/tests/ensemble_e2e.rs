@@ -1,15 +1,19 @@
 //! End-to-end ensemble-engine tests: tuning-quality parity with the
 //! serial loop, wall-clock compression at the same evaluation budget,
-//! checkpoint resume with zero re-evaluation, and the continuous-vs-
+//! checkpoint resume with zero re-evaluation, the continuous-vs-
 //! generational manager-cycle contracts (seed-for-seed parity at one
-//! worker, zero idle-at-barrier gaps at many).
+//! worker, zero idle-at-barrier gaps at many), and the multi-manager
+//! federation contracts (K=1 bit-identity with the single continuous
+//! manager, K=3 seed-for-seed determinism, kill-one-shard resume
+//! equality, cross-policy resume refusal).
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use ytopt::apps::AppKind;
 use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
-use ytopt::ensemble::{autotune_ensemble, LiarStrategy, ManagerCycle};
+use ytopt::ensemble::federation::{shard_checkpoint_path, shard_fingerprint};
+use ytopt::ensemble::{autotune_ensemble, Checkpoint, InFlightEval, LiarStrategy, ManagerCycle};
 use ytopt::metrics::Metric;
 use ytopt::platform::PlatformKind;
 use ytopt::runtime::Scorer;
@@ -20,6 +24,26 @@ fn run(setup: &TuneSetup) -> TuneResult {
 
 fn tmpfile(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("ytopt-e2e-{tag}-{}.json", std::process::id()))
+}
+
+/// The host-timing-free view of a run's history: everything that must be
+/// bit-identical across deterministic replays. (`processing_s` and
+/// `wallclock_s` carry real host search-time jitter and are excluded.)
+fn history(r: &TuneResult) -> Vec<(usize, String, u64, u64, u64, bool, bool)> {
+    r.db.records
+        .iter()
+        .map(|x| {
+            (
+                x.id,
+                x.config_key.clone(),
+                x.objective.to_bits(),
+                x.measured.runtime_s.to_bits(),
+                x.best_so_far.to_bits(),
+                x.timed_out,
+                x.cancelled,
+            )
+        })
+        .collect()
 }
 
 #[test]
@@ -254,6 +278,205 @@ fn resume_under_a_different_async_policy_is_refused() {
     }
 
     std::fs::remove_file(&ckpt).unwrap();
+}
+
+/// A K=1 federation runs the very same `ContinuousShard` engine the
+/// plain continuous manager delegates to, so its merged history must be
+/// bit-identical to the single manager's — configurations, objectives,
+/// measurements, best-so-far chain, flags, ids.
+#[test]
+fn federation_k1_matches_single_continuous_manager_bit_for_bit() {
+    let mut s = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+    s.max_evals = 16;
+    s.wallclock_budget_s = 1e9;
+    s.seed = 21;
+    s.n_init = 4;
+    s.ensemble_workers = 4;
+    let single = run(&s);
+    assert!(single.federation.is_none());
+
+    let mut fed_s = s.clone();
+    fed_s.federation_shards = 1;
+    let fed = run(&fed_s);
+    let fs = fed.federation.as_ref().expect("federated run reports federation stats");
+    assert_eq!(fs.shards, 1);
+    assert_eq!(fs.exchanges, 0, "one shard has nobody to exchange with");
+    assert_eq!(fs.elites_absorbed, 0);
+
+    assert_eq!(single.evaluations, 16);
+    assert_eq!(fed.evaluations, 16);
+    assert_eq!(
+        history(&single),
+        history(&fed),
+        "K=1 federation must replay the single continuous manager exactly"
+    );
+    assert_eq!(single.best_objective.to_bits(), fed.best_objective.to_bits());
+    assert_eq!(single.best_config_desc, fed.best_config_desc);
+}
+
+/// A K=3 federated run is seed-for-seed reproducible: shard RNG streams,
+/// the hash partition, elite-exchange boundaries (counted in
+/// completions, not host time), and the eval-id merge are all
+/// deterministic, so two identical runs produce one history.
+#[test]
+fn federation_k3_is_seed_for_seed_reproducible() {
+    let mut s = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+    s.max_evals = 18;
+    s.wallclock_budget_s = 1e9;
+    s.seed = 33;
+    s.n_init = 4;
+    s.ensemble_workers = 2;
+    s.federation_shards = 3;
+    s.elite_exchange_every = 2;
+    s.federation_elites = 2;
+
+    let a = run(&s);
+    let b = run(&s);
+    assert_eq!(a.evaluations, 18);
+    assert_eq!(history(&a), history(&b), "K=3 federation must be deterministic");
+    assert_eq!(a.best_objective.to_bits(), b.best_objective.to_bits());
+    // merged ids are a contiguous 0..max_evals cover (round-robin shards)
+    for (i, rec) in a.db.records.iter().enumerate() {
+        assert_eq!(rec.id, i);
+    }
+    let fa = a.federation.as_ref().unwrap();
+    let fb = b.federation.as_ref().unwrap();
+    assert_eq!(fa.shards, 3);
+    assert_eq!(fa.per_shard_evals, vec![6, 6, 6]);
+    assert_eq!(fa.exchanges, fb.exchanges);
+    assert_eq!(fa.elites_absorbed, fb.elites_absorbed);
+    assert!(fa.exchanges > 0, "18 evals at exchange-every-2 must hit exchange boundaries");
+}
+
+/// Kill one shard mid-run (under deterministic fault injection),
+/// checkpoint, resume, and the merged history equals the uninterrupted
+/// run: the killed shard restores its completed prefix and re-queues its
+/// dispatched-but-unfinished evaluations under their original global
+/// eval ids, whose outcomes depend only on `(seed, configuration, eval
+/// id, attempt)` — extending PR 2's in-flight re-queue contract across
+/// the federation.
+#[test]
+fn federated_kill_one_shard_resume_matches_the_uninterrupted_run() {
+    let ckpt = tmpfile("fed-kill");
+    let shard_files: Vec<PathBuf> = (0..3usize).map(|k| shard_checkpoint_path(&ckpt, k)).collect();
+    let _ = std::fs::remove_file(&ckpt);
+    for f in &shard_files {
+        let _ = std::fs::remove_file(f);
+    }
+
+    let mut s = TuneSetup::new(AppKind::Swfft, PlatformKind::Theta, 64, Metric::Runtime);
+    s.max_evals = 18;
+    s.wallclock_budget_s = 1e9;
+    s.seed = 47;
+    s.n_init = 4;
+    s.ensemble_workers = 4;
+    s.fault_rate = 0.3;
+    s.max_retries = 3;
+    s.federation_shards = 3;
+    s.elite_exchange_every = 2;
+    s.federation_elites = 2;
+    s.checkpoint_path = Some(ckpt.clone());
+
+    let full = run(&s);
+    assert_eq!(full.evaluations, 18);
+    assert!(
+        full.ensemble.as_ref().unwrap().faults > 0,
+        "30% fault injection must fire somewhere in 18 evaluations"
+    );
+    assert!(ckpt.exists(), "federation manifest must be written");
+    for f in &shard_files {
+        assert!(f.exists(), "every shard must checkpoint ({})", f.display());
+    }
+
+    // "kill" shard 1 mid-run: rewind its checkpoint to 2 applied
+    // completions with the remaining 4 dispatched but unfinished.
+    // Shard 1 owns global ids 1, 4, 7, 10, 13, 16; merged ids are a
+    // contiguous 0..18, so record[i] has id i.
+    let rewound = Checkpoint {
+        fingerprint: shard_fingerprint(&s, 1),
+        wallclock_s: full.db.records[4].wallclock_s,
+        records: vec![full.db.records[1].clone(), full.db.records[4].clone()],
+        in_flight: [7usize, 10, 13, 16]
+            .iter()
+            .map(|&id| InFlightEval {
+                eval_id: id,
+                config_key: full.db.records[id].config_key.clone(),
+            })
+            .collect(),
+    };
+    rewound.save(&shard_files[1]).unwrap();
+
+    let resumed = run(&s);
+    assert_eq!(resumed.evaluations, 18);
+    let es = resumed.ensemble.as_ref().unwrap();
+    assert_eq!(es.resumed_evals, 14, "6 + 2 + 6 completed evaluations restore");
+    assert_eq!(
+        history(&full),
+        history(&resumed),
+        "kill-one-shard resume must reproduce the uninterrupted merged history"
+    );
+    assert_eq!(full.best_objective.to_bits(), resumed.best_objective.to_bits());
+
+    std::fs::remove_file(&ckpt).unwrap();
+    for f in &shard_files {
+        std::fs::remove_file(f).unwrap();
+    }
+}
+
+/// Resuming a federated campaign under a different federation policy —
+/// shard count, exchange period, or elite width — must be refused: the
+/// shard count decides every manager's partition and global eval ids,
+/// and the exchange schedule decides when foreign observations enter
+/// each surrogate. The manifest (and every shard fingerprint) pins all
+/// three.
+#[test]
+fn federated_resume_under_a_different_policy_is_refused() {
+    let ckpt = tmpfile("fed-policy");
+    let shard_files: Vec<PathBuf> = (0..2usize).map(|k| shard_checkpoint_path(&ckpt, k)).collect();
+    let _ = std::fs::remove_file(&ckpt);
+    for f in &shard_files {
+        let _ = std::fs::remove_file(f);
+    }
+
+    let mut a = TuneSetup::new(AppKind::Swfft, PlatformKind::Theta, 64, Metric::Runtime);
+    a.wallclock_budget_s = 1e9;
+    a.max_evals = 8;
+    a.ensemble_workers = 2;
+    a.federation_shards = 2;
+    a.checkpoint_path = Some(ckpt.clone());
+    let _ = run(&a);
+
+    let mutations: Vec<(&str, TuneSetup)> = vec![
+        ("shard count", {
+            let mut m = a.clone();
+            m.federation_shards = 3;
+            m
+        }),
+        ("exchange period", {
+            let mut m = a.clone();
+            m.elite_exchange_every = 5;
+            m
+        }),
+        ("elite width", {
+            let mut m = a.clone();
+            m.federation_elites = 9;
+            m
+        }),
+    ];
+    for (what, m) in mutations {
+        let err = autotune_with_scorer(&m, Arc::new(Scorer::fallback()));
+        assert!(err.is_err(), "resume with a different {what} must be refused");
+    }
+    // handing the federation manifest to the single-manager path is
+    // refused too (it is not a shard checkpoint)
+    let mut plain = a.clone();
+    plain.federation_shards = 0;
+    assert!(autotune_with_scorer(&plain, Arc::new(Scorer::fallback())).is_err());
+
+    std::fs::remove_file(&ckpt).unwrap();
+    for f in &shard_files {
+        std::fs::remove_file(f).unwrap();
+    }
 }
 
 #[test]

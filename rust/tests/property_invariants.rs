@@ -45,6 +45,42 @@ fn prop_index_roundtrip_on_paper_spaces() {
     );
 }
 
+/// Federation sharding: for random paper spaces and K in 1..=8, the
+/// seeded hash partition is a disjoint cover of the flat index space —
+/// every sampled index lands in a valid shard and is claimed by exactly
+/// one `ShardSpec` — and re-sharding under the same seed is
+/// byte-identical.
+#[test]
+fn prop_shard_partition_is_a_stable_disjoint_cover() {
+    use ytopt::ensemble::{shard_of_index, ShardSpec};
+    for_all(
+        "seeded hash-sharding: disjoint cover, byte-stable",
+        80,
+        41,
+        |rng| {
+            let space = random_space(rng);
+            let k = 1 + rng.index(8) as u32; // K in 1..=8
+            let seed = rng.next_u64();
+            let idxs: Vec<u128> =
+                (0..48).map(|_| rng.gen_range(u64::MAX) as u128 % space.size()).collect();
+            (space, k, seed, idxs)
+        },
+        |(space, k, seed, idxs)| {
+            idxs.iter().all(|&i| {
+                let s = shard_of_index(*seed, i, *k);
+                let cfg = space.config_at(i);
+                let claims = (0..*k)
+                    .filter(|&sh| {
+                        ShardSpec { seed: *seed, shards: *k, shard: sh }.contains(space, &cfg)
+                    })
+                    .count();
+                // in range, claimed exactly once, stable under re-shard
+                s < *k && claims == 1 && shard_of_index(*seed, i, *k) == s
+            })
+        },
+    );
+}
+
 #[test]
 fn prop_encoding_is_unit_interval_and_zero_padded() {
     for_all(
