@@ -18,7 +18,7 @@ use ytopt::coordinator::{autotune_with_scorer, TuneSetup};
 use ytopt::metrics::Metric;
 use ytopt::platform::PlatformKind;
 use ytopt::runtime::Scorer;
-use ytopt::search::warm_start;
+use ytopt::history::rescale;
 use ytopt::space::Configuration;
 
 fn main() -> anyhow::Result<()> {
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
             let (_, target_baseline) =
                 ytopt::coordinator::measure_baseline(&large, &scorer)?;
             large.warm_start =
-                Some(warm_start(&prior, r_small.baseline_objective, target_baseline));
+                Some(rescale(&prior, r_small.baseline_objective, target_baseline));
             large.n_init = 2; // the prior replaces most of the random init
         }
         autotune_with_scorer(&large, scorer.clone())

@@ -1,0 +1,79 @@
+//! Cross-run transfer tuning through the history database: tune at a
+//! small node count with `--history-dir` semantics (the run appends a
+//! `RunRecord` to a store), then warm-start the large-scale search from
+//! that store with `--warm-start-from` semantics.
+//!
+//! ```bash
+//! cargo run --release --example transfer_tuning
+//! ```
+//!
+//! Unlike `transfer_learning.rs` (which hand-carries observations
+//! through the deprecated baseline-ratio free function), this is the
+//! durable pipeline: the store survives the process, indexes runs by
+//! space fingerprint, picks the nearest source scale, and feeds the
+//! top-K elites to the optimizer as foreign observations — recorded,
+//! marked seen, never re-proposed.
+
+use std::sync::Arc;
+
+use ytopt::apps::AppKind;
+use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
+use ytopt::history::HistoryStore;
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+
+fn main() -> anyhow::Result<()> {
+    let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
+    let store_dir =
+        std::env::temp_dir().join(format!("ytopt-transfer-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let evals = 20usize;
+
+    // 1) small-scale seed run (cheap: 64 nodes), recorded into the store
+    let mut small = TuneSetup::new(AppKind::Amg, PlatformKind::Theta, 64, Metric::Runtime);
+    small.max_evals = evals;
+    small.wallclock_budget_s = 1e9;
+    small.seed = 11;
+    small.history_dir = Some(store_dir.clone());
+    let r_small = autotune_with_scorer(&small, scorer.clone())?;
+    println!("--- small scale (64 nodes), recorded to the store ---\n{}", r_small.summary());
+
+    let store = HistoryStore::open(&store_dir)?;
+    println!("store now holds {} run record(s) at {}\n", store.load_all()?.len(), store_dir.display());
+
+    // 2) large-scale runs: cold start vs store-driven warm start
+    let run_large = |warm: bool| -> anyhow::Result<TuneResult> {
+        let mut large = TuneSetup::new(AppKind::Amg, PlatformKind::Theta, 1024, Metric::Runtime);
+        large.max_evals = evals;
+        large.wallclock_budget_s = 1e9;
+        large.seed = 12;
+        if warm {
+            large.warm_start_from = Some(store_dir.clone());
+            large.warm_start_elites = 8;
+            large.n_init = 2; // the transferred elites replace most of the random init
+        }
+        autotune_with_scorer(&large, scorer.clone())
+    };
+    let cold = run_large(false)?;
+    let warm = run_large(true)?;
+    println!("--- large scale (1,024 nodes), cold start ---\n{}", cold.summary());
+    println!("--- large scale (1,024 nodes), warm start from the store ---\n{}", warm.summary());
+
+    // convergence comparison: best-so-far after k evaluations
+    println!("best-so-far by evaluation (cold vs warm):");
+    for k in [4usize, 8, 12, 16, evals] {
+        let at = |r: &TuneResult| {
+            r.db.records
+                .iter()
+                .take(k)
+                .filter(|x| !x.timed_out)
+                .map(|x| x.objective)
+                .fold(f64::INFINITY, f64::min)
+        };
+        println!("  after {k:2} evals: cold {:.3} s | warm {:.3} s", at(&cold), at(&warm));
+    }
+
+    std::fs::remove_dir_all(&store_dir)?;
+    Ok(())
+}

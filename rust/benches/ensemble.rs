@@ -229,6 +229,88 @@ fn federation_duel(app: AppKind, nodes: u64, metric: Metric, scorer: &Arc<Scorer
     );
 }
 
+/// Cross-run transfer duel: a cold start vs a history-store warm start
+/// at the same budget, gated on evaluations-to-target (the seed run's
+/// best objective). The warm side must never need *more* evaluations —
+/// if transfer cannot at least match a cold start on the synthetic
+/// barrier-cliff landscape, the history store is a net loss.
+fn warm_start_duel(scorer: &Arc<Scorer>) {
+    section(&format!(
+        "{} on Theta x1024 | cold start vs history-store warm start at {EVALS} evaluations",
+        AppKind::Sw4lite.name()
+    ));
+    let store =
+        std::env::temp_dir().join(format!("ytopt-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store);
+
+    // seed run: small budget, recorded into the store
+    let mut seed_s = TuneSetup::new(AppKind::Sw4lite, PlatformKind::Theta, 1024, Metric::Runtime);
+    seed_s.max_evals = 12;
+    seed_s.wallclock_budget_s = 1e9;
+    seed_s.seed = 77;
+    seed_s.history_dir = Some(store.clone());
+    let (seed_run, _) = run(&seed_s, scorer);
+    let target = seed_run.best_objective;
+
+    let to_target = |r: &TuneResult| -> usize {
+        let mut best = f64::INFINITY;
+        for (i, rec) in r.db.records.iter().enumerate() {
+            if !rec.timed_out && rec.objective.is_finite() {
+                best = best.min(rec.objective);
+            }
+            if best <= target {
+                return i + 1;
+            }
+        }
+        EVALS + 1
+    };
+    let fmt_reach = |e: usize| {
+        if e > EVALS { "never".to_string() } else { format!("{e}") }
+    };
+    let mut t = Table::new(
+        "cold start vs history-store warm start (target: seed-run best)",
+        &["seed", "cold: evals to target", "warm: evals to target", "cold best", "warm best", "host (s)"],
+    );
+    // summed over three seeds so one lucky cold draw cannot flip the gate
+    let mut sum_cold = 0usize;
+    let mut sum_warm = 0usize;
+    for seed in [78u64, 79, 80] {
+        let mut cold_s =
+            TuneSetup::new(AppKind::Sw4lite, PlatformKind::Theta, 1024, Metric::Runtime);
+        cold_s.max_evals = EVALS;
+        cold_s.wallclock_budget_s = 1e9;
+        cold_s.seed = seed;
+        let mut warm_s = cold_s.clone();
+        warm_s.warm_start_from = Some(store.clone());
+        warm_s.warm_start_elites = 32; // the full seed history transfers
+
+        let (cold, host_c) = run(&cold_s, scorer);
+        let (warm, host_w) = run(&warm_s, scorer);
+        let (ec, ew) = (to_target(&cold), to_target(&warm));
+        sum_cold += ec;
+        sum_warm += ew;
+        t.row(&[
+            format!("{seed}"),
+            fmt_reach(ec),
+            fmt_reach(ew),
+            format!("{:.3}", cold.best_objective),
+            format!("{:.3}", warm.best_objective),
+            format!("{:.2}", host_c + host_w),
+        ]);
+    }
+    assert!(
+        sum_warm <= sum_cold,
+        "warm start needed {sum_warm} evaluations to reach the seed best vs cold's \
+         {sum_cold} (summed over 3 seeds) — the history store must not lose to a cold start"
+    );
+    println!("{}", t.render());
+    println!(
+        "transfer target: seed-run best {target:.3} after {} evaluations\n",
+        seed_run.evaluations
+    );
+    let _ = std::fs::remove_dir_all(&store);
+}
+
 fn main() {
     let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
     println!(
@@ -239,4 +321,5 @@ fn main() {
     campaign(AppKind::Amg, 256, Metric::Energy, &scorer);
     cycle_duel(AppKind::XSBenchHistory, 1, Metric::Runtime, &scorer);
     federation_duel(AppKind::XSBenchHistory, 1, Metric::Runtime, &scorer);
+    warm_start_duel(&scorer);
 }

@@ -193,6 +193,13 @@ impl Args {
         self.get(name)?.parse().ok()
     }
 
+    /// Filesystem-path option (checkpoint files, history-store
+    /// directories). `None` when absent or empty — an empty `--x=""`
+    /// would otherwise silently become the current directory.
+    pub fn path(&self, name: &str) -> Option<std::path::PathBuf> {
+        self.get(name).filter(|s| !s.is_empty()).map(std::path::PathBuf::from)
+    }
+
     /// Count option constrained to `lo..=hi` (shard counts, exchange
     /// periods). Errors name the option, the offending value, and the
     /// accepted range instead of silently clamping or defaulting.
@@ -263,6 +270,17 @@ mod tests {
         assert_eq!(a.usize("nodes"), None);
         let a = spec().parse(&sv(&["tune", "--nodes", "abc"])).unwrap();
         assert_eq!(a.usize("nodes"), None);
+    }
+
+    #[test]
+    fn path_rejects_empty_values() {
+        let sp = CliSpec::new("t", "test").opt("history-dir", None, "store dir");
+        let a = sp.parse(&sv(&["--history-dir", "/tmp/store"])).unwrap();
+        assert_eq!(a.path("history-dir"), Some(std::path::PathBuf::from("/tmp/store")));
+        let a = sp.parse(&sv(&["--history-dir="])).unwrap();
+        assert_eq!(a.path("history-dir"), None, "empty path must not mean cwd");
+        let a = sp.parse(&sv(&[])).unwrap();
+        assert_eq!(a.path("history-dir"), None);
     }
 
     #[test]

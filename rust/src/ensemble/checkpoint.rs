@@ -27,6 +27,118 @@ pub struct Checkpoint {
     /// outcome — which depends only on `(seed, configuration, eval id,
     /// attempt)` — is unchanged by the interruption.
     pub in_flight: Vec<InFlightEval>,
+    /// The manager's persisted proposal state (version-3 checkpoints):
+    /// RNG stream position plus the strategy event log. With it, a
+    /// resumed shard's *fresh* proposals are bit-identical to an
+    /// uninterrupted run's — without it (older checkpoints), resume is
+    /// exact only for the re-queued in-flight work.
+    pub proposal: Option<ProposalState>,
+}
+
+/// One strategy-shaping event in a continuous manager's life, recorded
+/// in manager-event order. Replaying the log at resume rebuilds the
+/// search strategy's internal state exactly as the live run built it:
+/// pending lies land at their original observation indices, completions
+/// amend in the original order, and foreign elites re-enter (and re-seed
+/// the absorbed-elite dedup set) at their original positions between
+/// completions — none of which is recoverable from the completed
+/// records alone.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StrategyEvent {
+    /// A proposal was dispatched; `lie` is the pending-point imputation
+    /// planted at propose time (`None` when no lie was planted — single
+    /// in-flight slot, or a non-BO strategy).
+    Propose { eval_id: usize, config_key: String, lie: Option<f64> },
+    /// The completion for `eval_id` was applied (its objective lives in
+    /// the checkpoint's record with that id).
+    Apply { eval_id: usize },
+    /// A foreign elite was absorbed from a peer shard.
+    Foreign { config_key: String, y: f64 },
+}
+
+impl StrategyEvent {
+    fn to_json(&self) -> Json {
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        match self {
+            StrategyEvent::Propose { eval_id, config_key, lie } => Json::obj(vec![
+                ("t", "propose".into()),
+                ("id", (*eval_id).into()),
+                ("config", config_key.as_str().into()),
+                ("lie", lie.map(num).unwrap_or(Json::Null)),
+            ]),
+            StrategyEvent::Apply { eval_id } => {
+                Json::obj(vec![("t", "apply".into()), ("id", (*eval_id).into())])
+            }
+            StrategyEvent::Foreign { config_key, y } => Json::obj(vec![
+                ("t", "foreign".into()),
+                ("config", config_key.as_str().into()),
+                ("y", num(*y)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<StrategyEvent> {
+        let id = || -> Result<usize> {
+            Ok(v.get("id").and_then(Json::as_u64).context("strategy event missing `id`")? as usize)
+        };
+        let config = || -> Result<String> {
+            Ok(v.get("config")
+                .and_then(Json::as_str)
+                .context("strategy event missing `config`")?
+                .to_string())
+        };
+        match v.get("t").and_then(Json::as_str) {
+            Some("propose") => Ok(StrategyEvent::Propose {
+                eval_id: id()?,
+                config_key: config()?,
+                lie: v.get("lie").and_then(Json::as_f64),
+            }),
+            Some("apply") => Ok(StrategyEvent::Apply { eval_id: id()? }),
+            Some("foreign") => Ok(StrategyEvent::Foreign {
+                config_key: config()?,
+                // an absorbed elite is always finite when broadcast;
+                // null reads back as +inf defensively
+                y: v.get("y").and_then(Json::as_f64).unwrap_or(f64::INFINITY),
+            }),
+            other => anyhow::bail!("unknown strategy event kind {other:?}"),
+        }
+    }
+}
+
+/// The persisted proposal state of one continuous manager shard: the
+/// PCG32 stream position (full 64-bit words, hex-encoded — JSON numbers
+/// are f64 and cannot carry them losslessly) plus the strategy event
+/// log. The absorbed-elite dedup set and the exchange-receiver history
+/// the ROADMAP calls for are both carried by the log's `Foreign` events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProposalState {
+    pub rng_state: u64,
+    pub rng_inc: u64,
+    pub log: Vec<StrategyEvent>,
+}
+
+impl ProposalState {
+    // serialization lives in `parts_to_json`, which writes from borrowed
+    // parts so the per-completion save path never clones the event log
+
+    fn from_json(v: &Json) -> Result<ProposalState> {
+        let hex = |key: &str| -> Result<u64> {
+            let s = v
+                .get(key)
+                .and_then(Json::as_str)
+                .with_context(|| format!("proposal state missing `{key}`"))?;
+            u64::from_str_radix(s, 16)
+                .with_context(|| format!("proposal state `{key}` is not a hex word: `{s}`"))
+        };
+        let log = v
+            .get("log")
+            .and_then(Json::as_arr)
+            .context("proposal state missing `log`")?
+            .iter()
+            .map(StrategyEvent::from_json)
+            .collect::<Result<_>>()?;
+        Ok(ProposalState { rng_state: hex("rng_state")?, rng_inc: hex("rng_inc")?, log })
+    }
 }
 
 /// One dispatched-but-unfinished evaluation in a [`Checkpoint`].
@@ -34,6 +146,21 @@ pub struct Checkpoint {
 pub struct InFlightEval {
     pub eval_id: usize,
     pub config_key: String,
+}
+
+/// Content hash of a warm-start prior: same length with different
+/// observations must not fingerprint-match.
+fn prior_hash(prior: Option<&Vec<(Configuration, f64)>>, salt: u64) -> u64 {
+    prior
+        .map(|prior| {
+            prior.iter().fold(0xcbf2_9ce4_8422_2325u64 ^ salt, |mut h, (c, y)| {
+                for &i in c.indices() {
+                    h = (h ^ i as u64).wrapping_mul(0x100_0000_01b3);
+                }
+                (h ^ y.to_bits()).wrapping_mul(0x100_0000_01b3)
+            })
+        })
+        .unwrap_or(0)
 }
 
 /// Identity of a tuning run for resume-compatibility checks.
@@ -55,28 +182,19 @@ pub struct InFlightEval {
 /// federation policy would replay its history into the wrong partition.
 /// Deliberately excluded are pure capacity knobs — max_evals, the
 /// wall-clock budget, and node-hours — because resuming with a larger
-/// budget is the normal way to continue an interrupted session.
+/// budget is the normal way to continue an interrupted session — and
+/// the *resolved* history warm start (`foreign_warm`): the foreign
+/// observations it plants shape every proposal, so resuming against a
+/// store whose contents changed must be refused.
 pub fn fingerprint(setup: &TuneSetup) -> String {
-    // content hash of the warm-start prior: same length with different
-    // observations must not fingerprint-match
-    let warm_hash = setup
-        .warm_start
-        .as_ref()
-        .map(|prior| {
-            prior.iter().fold(0xcbf2_9ce4_8422_2325u64, |mut h, (c, y)| {
-                for &i in c.indices() {
-                    h = (h ^ i as u64).wrapping_mul(0x100_0000_01b3);
-                }
-                (h ^ y.to_bits()).wrapping_mul(0x100_0000_01b3)
-            })
-        })
-        .unwrap_or(0);
+    let warm_hash = prior_hash(setup.warm_start.as_ref(), 0);
+    let fwarm_hash = prior_hash(setup.foreign_warm.as_ref(), 0x5ee3_9c1d);
     // hash the *resolved* in-flight target (0 means "worker count"), so
     // spelling the identical policy differently still resumes
     let batch_target =
         if setup.ensemble_batch == 0 { setup.ensemble_workers } else { setup.ensemble_batch };
     format!(
-        "{}|{}|n{}|{}|seed{}|{:?}|{:?}|init{}|k{}|t{:?}|liar:{}|fault{}|r{}|straggle{:?}|cap{:?}|evt{}|w{}|b{}|cycle:{}|warm{:x}|fed{}:ex{}:el{}",
+        "{}|{}|n{}|{}|seed{}|{:?}|{:?}|init{}|k{}|t{:?}|liar:{}|fault{}|r{}|straggle{:?}|cap{:?}|evt{}|w{}|b{}|cycle:{}|warm{:x}|fed{}:ex{}:el{}|fwarm{:x}",
         setup.app.name(),
         setup.platform.name(),
         setup.nodes,
@@ -100,6 +218,7 @@ pub fn fingerprint(setup: &TuneSetup) -> String {
         setup.federation_shards,
         setup.elite_exchange_every,
         setup.federation_elites,
+        fwarm_hash,
     )
 }
 
@@ -122,6 +241,11 @@ impl InFlightEval {
     }
 }
 
+/// Borrowed view of a [`ProposalState`] for the hot save path: the
+/// continuous manager saves after every completion and must not clone
+/// its whole event log per event.
+pub type ProposalParts<'a> = (u64, u64, &'a [StrategyEvent]);
+
 /// Serialize checkpoint parts without owning them — the continuous
 /// manager saves after every completion, so the hot path must not clone
 /// the full record vec per event.
@@ -130,14 +254,26 @@ fn parts_to_json(
     wallclock_s: f64,
     records: &[EvalRecord],
     in_flight: &[InFlightEval],
+    proposal: Option<ProposalParts<'_>>,
 ) -> Json {
-    Json::obj(vec![
-        ("version", 2u64.into()),
+    let mut pairs = vec![
+        ("version", if proposal.is_some() { 3u64.into() } else { 2u64.into() }),
         ("fingerprint", fingerprint.into()),
         ("wallclock_s", wallclock_s.into()),
         ("records", Json::Arr(records.iter().map(EvalRecord::to_json_full).collect())),
         ("in_flight", Json::Arr(in_flight.iter().map(InFlightEval::to_json).collect())),
-    ])
+    ];
+    if let Some((rng_state, rng_inc, log)) = proposal {
+        pairs.push((
+            "proposal",
+            Json::obj(vec![
+                ("rng_state", format!("{rng_state:016x}").into()),
+                ("rng_inc", format!("{rng_inc:016x}").into()),
+                ("log", Json::Arr(log.iter().map(StrategyEvent::to_json).collect())),
+            ]),
+        ));
+    }
+    Json::obj(pairs)
 }
 
 /// Atomic save from borrowed parts: write a sibling temp file, then
@@ -148,10 +284,14 @@ pub fn save_parts(
     wallclock_s: f64,
     records: &[EvalRecord],
     in_flight: &[InFlightEval],
+    proposal: Option<ProposalParts<'_>>,
 ) -> Result<()> {
     let tmp = path.with_extension("json.tmp");
-    std::fs::write(&tmp, parts_to_json(fingerprint, wallclock_s, records, in_flight).to_string())
-        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+    std::fs::write(
+        &tmp,
+        parts_to_json(fingerprint, wallclock_s, records, in_flight, proposal).to_string(),
+    )
+    .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
     std::fs::rename(&tmp, path)
         .with_context(|| format!("installing checkpoint {}", path.display()))?;
     Ok(())
@@ -159,7 +299,13 @@ pub fn save_parts(
 
 impl Checkpoint {
     pub fn to_json(&self) -> Json {
-        parts_to_json(&self.fingerprint, self.wallclock_s, &self.records, &self.in_flight)
+        parts_to_json(
+            &self.fingerprint,
+            self.wallclock_s,
+            &self.records,
+            &self.in_flight,
+            self.proposal.as_ref().map(|p| (p.rng_state, p.rng_inc, p.log.as_slice())),
+        )
     }
 
     pub fn parse(text: &str) -> Result<Checkpoint> {
@@ -202,7 +348,12 @@ impl Checkpoint {
             None => Vec::new(),
         };
         in_flight.sort_by_key(|f| f.eval_id);
-        Ok(Checkpoint { fingerprint, wallclock_s, records, in_flight })
+        // absent before version 3 (no persisted proposal state)
+        let proposal = match v.get("proposal") {
+            Some(p) => Some(ProposalState::from_json(p)?),
+            None => None,
+        };
+        Ok(Checkpoint { fingerprint, wallclock_s, records, in_flight, proposal })
     }
 
     /// Load from `path`; `Ok(None)` when no checkpoint exists yet.
@@ -217,7 +368,14 @@ impl Checkpoint {
 
     /// Atomic save: write a sibling temp file, then rename over `path`.
     pub fn save(&self, path: &Path) -> Result<()> {
-        save_parts(path, &self.fingerprint, self.wallclock_s, &self.records, &self.in_flight)
+        save_parts(
+            path,
+            &self.fingerprint,
+            self.wallclock_s,
+            &self.records,
+            &self.in_flight,
+            self.proposal.as_ref().map(|p| (p.rng_state, p.rng_inc, p.log.as_slice())),
+        )
     }
 }
 
@@ -258,11 +416,13 @@ mod tests {
                 InFlightEval { eval_id: 3, config_key: "5,6".into() },
                 InFlightEval { eval_id: 2, config_key: "4,5".into() },
             ],
+            proposal: None,
         };
         cp.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap().expect("checkpoint exists");
         assert_eq!(back.fingerprint, "fp");
         assert_eq!(back.wallclock_s, 123.5);
+        assert!(back.proposal.is_none());
         // records come back sorted by id
         assert_eq!(back.records.len(), 2);
         assert_eq!(back.records[0].id, 0);
@@ -279,6 +439,37 @@ mod tests {
         std::fs::remove_file(&path).unwrap();
     }
 
+    /// The persisted proposal state round-trips losslessly: full 64-bit
+    /// RNG words (beyond f64's integer range) and the event log with
+    /// planted lies, applies, and foreign absorptions in order.
+    #[test]
+    fn proposal_state_roundtrips_bit_exactly() {
+        let ps = ProposalState {
+            rng_state: 0xdead_beef_cafe_f00d, // > 2^53: must survive JSON
+            rng_inc: u64::MAX,
+            log: vec![
+                StrategyEvent::Propose {
+                    eval_id: 0,
+                    config_key: "1,2".into(),
+                    lie: Some(3.0000000000000004),
+                },
+                StrategyEvent::Propose { eval_id: 3, config_key: "0,0".into(), lie: None },
+                StrategyEvent::Apply { eval_id: 0 },
+                StrategyEvent::Foreign { config_key: "7,7".into(), y: 0.1 + 0.2 },
+                StrategyEvent::Apply { eval_id: 3 },
+            ],
+        };
+        let cp = Checkpoint {
+            fingerprint: "fp".into(),
+            wallclock_s: 1.0,
+            records: vec![rec(0)],
+            in_flight: Vec::new(),
+            proposal: Some(ps.clone()),
+        };
+        let back = Checkpoint::parse(&cp.to_json().to_string()).unwrap();
+        assert_eq!(back.proposal, Some(ps));
+    }
+
     #[test]
     fn version1_checkpoints_without_in_flight_still_parse() {
         let cp = Checkpoint {
@@ -286,6 +477,7 @@ mod tests {
             wallclock_s: 9.0,
             records: vec![rec(0)],
             in_flight: Vec::new(),
+            proposal: None,
         };
         // strip the in_flight key to simulate a pre-continuous checkpoint
         let full = cp.to_json().to_string();
@@ -335,11 +527,24 @@ mod tests {
         w2.warm_start = Some(vec![(cfg, 6.0)]);
         assert_ne!(fingerprint(&w1), fingerprint(&w2));
         assert_ne!(fingerprint(&a), fingerprint(&w1));
+        // the resolved history warm start is identity too (and is not
+        // confusable with the preload-style warm_start prior)
+        let cfg2 = Configuration::from_indices(vec![1, 2]);
+        let mut h1 = a.clone();
+        h1.foreign_warm = Some(vec![(cfg2.clone(), 5.0)]);
+        let mut h2 = a.clone();
+        h2.foreign_warm = Some(vec![(cfg2.clone(), 6.0)]);
+        assert_ne!(fingerprint(&h1), fingerprint(&h2));
+        assert_ne!(fingerprint(&a), fingerprint(&h1));
+        let mut cross = a.clone();
+        cross.warm_start = Some(vec![(cfg2, 5.0)]);
+        assert_ne!(fingerprint(&h1), fingerprint(&cross), "prior kinds must not alias");
         // capacity knobs must NOT change identity
         let mut c = a.clone();
         c.max_evals += 10;
         c.wallclock_budget_s *= 2.0;
         c.node_hours_budget = Some(500.0);
+        c.kill_after_evals = Some(3); // simulated-kill point is capacity too
         assert_eq!(fingerprint(&a), fingerprint(&c));
     }
 

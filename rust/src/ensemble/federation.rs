@@ -264,11 +264,25 @@ pub(crate) struct ContinuousShard {
     allocation: Option<crate::platform::scheduler::Allocation>,
     alloc_stop: bool,
     /// Configuration keys of foreign elites already absorbed (dedup
-    /// across exchange rounds).
+    /// across exchange rounds; seeded with warm-start elites and, on
+    /// resume, with the checkpoint log's `Foreign` events).
     received_foreign: HashSet<String>,
+    /// Strategy event log (proposals with their planted lies, applies,
+    /// foreign absorptions) persisted with every checkpoint so a
+    /// resumed shard's *fresh* proposals are bit-identical to an
+    /// uninterrupted run's.
+    slog: Vec<checkpoint::StrategyEvent>,
+    /// False when this session resumed a pre-proposal-state checkpoint:
+    /// a log started mid-run would not cover the restored records, so
+    /// the session keeps writing the legacy format instead.
+    log_valid: bool,
     fingerprint: String,
     checkpoint_path: Option<PathBuf>,
     done: bool,
+    /// Simulated SIGKILL fired (`TuneSetup::kill_after_evals`): the
+    /// shard stopped right after a checkpointed apply, leaving its
+    /// dispatched-but-unfinished evaluations behind.
+    killed: bool,
 }
 
 impl ContinuousShard {
@@ -311,8 +325,27 @@ impl ContinuousShard {
         let mut stats =
             EnsembleStats::new(workers, batch_target, setup.liar, ManagerCycle::Continuous);
 
+        // warm-start elites were absorbed at strategy construction (in
+        // `coordinator::build_strategy`); the shard seeds its liar pool
+        // and its exchange dedup set with them here, so a federation
+        // round can never re-absorb an elite the warm start already
+        // planted — and so fresh and resumed sessions agree on the
+        // real-objective pool's contents and order.
+        let mut received_foreign: HashSet<String> = HashSet::new();
+        if let Some(prior) = &setup.foreign_warm {
+            for (c, y) in prior {
+                received_foreign.insert(c.key());
+                if y.is_finite() {
+                    real_objectives.push(*y);
+                }
+            }
+        }
+
         // ---- resume: feed checkpointed evaluations straight to the search
         let mut resume_inflight: Vec<(usize, Configuration)> = Vec::new();
+        let mut slog: Vec<checkpoint::StrategyEvent> = Vec::new();
+        let mut log_valid = true;
+        let mut restored_rng: Option<Pcg32> = None;
         if let Some(path) = &checkpoint_path {
             if let Some(cp) = Checkpoint::load(path)? {
                 anyhow::ensure!(
@@ -321,16 +354,102 @@ impl ContinuousShard {
                     path.display(),
                     cp.fingerprint
                 );
-                for rec in cp.records {
-                    let cfg = checkpoint::config_from_key(&rec.config_key)?;
-                    strat.observe(&cfg, rec.objective);
-                    if !rec.timed_out && rec.objective.is_finite() {
-                        if rec.objective < best {
-                            best = rec.objective;
-                            best_desc = rec.config_desc.clone();
+                match cp.proposal {
+                    Some(ps) => {
+                        // version-3 resume: replay the strategy event log.
+                        // Pending lies land at their original observation
+                        // indices, completions amend in their original
+                        // order, and foreign elites re-enter (re-seeding
+                        // the dedup set) between the right completions;
+                        // then the persisted RNG stream continues — so
+                        // fresh post-resume proposals are bit-identical
+                        // to an uninterrupted run's.
+                        let by_id: BTreeMap<usize, &EvalRecord> =
+                            cp.records.iter().map(|r| (r.id, r)).collect();
+                        let mut applied = 0usize;
+                        for ev in &ps.log {
+                            match ev {
+                                checkpoint::StrategyEvent::Propose {
+                                    eval_id,
+                                    config_key,
+                                    lie,
+                                } => {
+                                    if let Some(lie) = lie {
+                                        let cfg = checkpoint::config_from_key(config_key)?;
+                                        if let Some(bo) = strat.as_bo_mut() {
+                                            bo.observe_pending(*eval_id, &cfg, *lie);
+                                        }
+                                    }
+                                }
+                                checkpoint::StrategyEvent::Apply { eval_id } => {
+                                    let rec = by_id.get(eval_id).with_context(|| {
+                                        format!(
+                                            "checkpoint {} log applies eval {eval_id} with no \
+                                             record for it",
+                                            path.display()
+                                        )
+                                    })?;
+                                    let cfg = checkpoint::config_from_key(&rec.config_key)?;
+                                    let amended = match strat.as_bo_mut() {
+                                        Some(bo) => bo.resolve_pending(*eval_id, rec.objective),
+                                        None => false,
+                                    };
+                                    if !amended {
+                                        strat.observe(&cfg, rec.objective);
+                                    }
+                                    if !rec.timed_out && rec.objective.is_finite() {
+                                        real_objectives.push(rec.objective);
+                                        if rec.objective < best {
+                                            best = rec.objective;
+                                            best_desc = rec.config_desc.clone();
+                                        }
+                                    }
+                                    applied += 1;
+                                }
+                                checkpoint::StrategyEvent::Foreign { config_key, y } => {
+                                    let cfg = checkpoint::config_from_key(config_key)?;
+                                    received_foreign.insert(config_key.clone());
+                                    strat.observe_foreign(&cfg, *y);
+                                    if y.is_finite() {
+                                        real_objectives.push(*y);
+                                    }
+                                }
+                            }
                         }
-                        real_objectives.push(rec.objective);
+                        anyhow::ensure!(
+                            applied == cp.records.len(),
+                            "checkpoint {} strategy log covers {applied} applied completions \
+                             but {} records are checkpointed",
+                            path.display(),
+                            cp.records.len()
+                        );
+                        restored_rng = Some(Pcg32::from_state(ps.rng_state, ps.rng_inc));
+                        slog = ps.log;
                     }
+                    None => {
+                        // pre-proposal-state checkpoint: restore the
+                        // applied history only. Resume stays exact for the
+                        // re-queued in-flight work (outcomes depend only
+                        // on seed/config/id/attempt); fresh proposals draw
+                        // a fresh stream, as before this state existed.
+                        // The session must then keep the legacy format: a
+                        // log started mid-run would cover neither the
+                        // restored records nor the re-imputed lies.
+                        log_valid = cp.records.is_empty() && cp.in_flight.is_empty();
+                        for rec in &cp.records {
+                            let cfg = checkpoint::config_from_key(&rec.config_key)?;
+                            strat.observe(&cfg, rec.objective);
+                            if !rec.timed_out && rec.objective.is_finite() {
+                                if rec.objective < best {
+                                    best = rec.objective;
+                                    best_desc = rec.config_desc.clone();
+                                }
+                                real_objectives.push(rec.objective);
+                            }
+                        }
+                    }
+                }
+                for rec in cp.records {
                     db.push(rec);
                 }
                 wallclock = cp.wallclock_s;
@@ -353,10 +472,12 @@ impl ContinuousShard {
                     );
                 }
                 log::info!(
-                    "shard {}: resumed {} completed evaluations ({} in flight re-queued) from {}",
+                    "shard {}: resumed {} completed evaluations ({} in flight re-queued, \
+                     proposal state {}) from {}",
                     lens.shard,
                     db.len(),
                     resume_inflight.len(),
+                    if restored_rng.is_some() { "replayed" } else { "absent" },
                     path.display()
                 );
             }
@@ -406,10 +527,14 @@ impl ContinuousShard {
 
         // re-queue checkpointed in-flight evaluations under their
         // original global eval ids before proposing anything new
+        let replayed = restored_rng.is_some();
         for (id, cfg) in &resume_inflight {
-            // same gate as the fresh proposal path: lies only matter when
-            // more than one proposal can be outstanding
-            if inflight_target > 1 {
+            // a replayed session already planted these lies through the
+            // log (at their original observation indices, with their
+            // original values); the legacy path re-imputes them, gated
+            // as on the fresh proposal path — lies only matter when more
+            // than one proposal can be outstanding
+            if !replayed && inflight_target > 1 {
                 if let Some(bo) = strat.as_bo_mut() {
                     let lie = setup.liar.impute(
                         Some(&*bo),
@@ -434,6 +559,12 @@ impl ContinuousShard {
                 "ensemble worker pool rejected a re-queued job"
             );
             next_id += stride;
+        }
+        // continue the persisted stream (replay) instead of re-seeding:
+        // the next fresh proposal draws exactly the numbers the
+        // uninterrupted run would have drawn
+        if let Some(r) = restored_rng {
+            rng = r;
         }
 
         Ok(ContinuousShard {
@@ -462,15 +593,26 @@ impl ContinuousShard {
             charged_wallclock,
             allocation,
             alloc_stop: false,
-            received_foreign: HashSet::new(),
+            received_foreign,
+            slog,
+            log_valid,
             fingerprint,
             checkpoint_path,
             done: false,
+            killed: false,
         })
     }
 
-    fn is_done(&self) -> bool {
-        self.done
+    /// Out of work (budget drained) *or* simulated-killed: either way
+    /// this shard applies nothing more this session.
+    fn is_finished(&self) -> bool {
+        self.done || self.killed
+    }
+
+    /// Completions applied so far, resumed history included — the
+    /// absolute count the federation's exchange schedule is keyed on.
+    fn applied(&self) -> usize {
+        self.db.len()
     }
 
     /// Propose the next configuration inside this shard's partition.
@@ -531,6 +673,7 @@ impl ContinuousShard {
             }
             let t_search = std::time::Instant::now();
             let cfg = self.propose_in_shard();
+            let mut planted_lie = None;
             if self.inflight_target > 1 {
                 if let Some(bo) = self.strat.as_bo_mut() {
                     let lie = self.setup.liar.impute(
@@ -541,7 +684,15 @@ impl ContinuousShard {
                         &mut self.rng,
                     );
                     bo.observe_pending(self.next_id, &cfg, lie);
+                    planted_lie = Some(lie);
                 }
+            }
+            if self.log_valid {
+                self.slog.push(checkpoint::StrategyEvent::Propose {
+                    eval_id: self.next_id,
+                    config_key: cfg.key(),
+                    lie: planted_lie,
+                });
             }
             let search_s = t_search.elapsed().as_secs_f64();
             self.inflight.insert(self.next_id, cfg.clone());
@@ -613,6 +764,9 @@ impl ContinuousShard {
         }
 
         // (a) amend this result's pending lie by index
+        if self.log_valid {
+            self.slog.push(checkpoint::StrategyEvent::Apply { eval_id: job.eval_id });
+        }
         let amended = match self.strat.as_bo_mut() {
             Some(bo) => bo.resolve_pending(job.eval_id, s.objective),
             None => false,
@@ -670,10 +824,22 @@ impl ContinuousShard {
                 self.charged_wallclock = self.wallclock;
             }
         }
-        // the checkpoint records both the applied prefix and the
-        // still-in-flight suffix so a kill here resumes clean
+        // the checkpoint records the applied prefix, the still-in-flight
+        // suffix, AND the proposal state (RNG stream position + strategy
+        // event log) so a kill here resumes clean *and* keeps proposing
+        // mid-trajectory exactly as the uninterrupted run would
         if let Some(path) = &self.checkpoint_path {
-            save_checkpoint(path, &self.fingerprint, self.wallclock, &self.db, &self.inflight)?;
+            let (rng_state, rng_inc) = self.rng.state();
+            let proposal =
+                self.log_valid.then_some((rng_state, rng_inc, self.slog.as_slice()));
+            save_checkpoint(
+                path,
+                &self.fingerprint,
+                self.wallclock,
+                &self.db,
+                &self.inflight,
+                proposal,
+            )?;
         }
         Ok(())
     }
@@ -682,11 +848,24 @@ impl ContinuousShard {
     /// (or until this shard's budget is exhausted and its in-flight work
     /// drained). Returns how many completions were applied.
     fn run_for(&mut self, max_apply: usize) -> Result<usize> {
-        if self.done {
+        if self.is_finished() {
             return Ok(0);
         }
         let mut applied = 0usize;
         while applied < max_apply {
+            // simulated SIGKILL (crash-recovery tests): stop right after
+            // the checkpoint for the latest apply was written — before
+            // proposing anything further — leaving the dispatched-but-
+            // unfinished work exactly as a real kill would
+            if self.setup.kill_after_evals.is_some_and(|n| self.db.len() >= n) {
+                self.killed = true;
+                log::info!(
+                    "shard {}: simulated kill after {} applied completions",
+                    self.lens.shard,
+                    self.db.len()
+                );
+                break;
+            }
             self.top_up()?;
             if self.inflight.is_empty() {
                 self.done = true;
@@ -715,12 +894,25 @@ impl ContinuousShard {
         Ok(applied)
     }
 
-    /// This shard's top-`n` finite history entries (ascending objective,
-    /// ties by eval id), for the elite exchange.
-    fn elites(&self, n: usize) -> Vec<(Configuration, f64)> {
-        let mut fin: Vec<&EvalRecord> = self
-            .db
-            .records
+    /// Run until this shard has applied `target` completions *in total*
+    /// (resumed history included). The federation's exchange schedule is
+    /// expressed in absolute per-shard completion counts, so a resumed
+    /// shard re-joins exactly the boundaries an uninterrupted run hits —
+    /// a relative "run N more" would shift every boundary by the resume
+    /// point and desynchronize the elite exchange.
+    fn run_until(&mut self, target: usize) -> Result<usize> {
+        self.run_for(target.saturating_sub(self.db.len()))
+    }
+
+    /// This shard's top-`n` finite history entries among its first
+    /// `upto` completions (ascending objective, ties by eval id), for
+    /// the elite exchange. The prefix — not the whole history — is what
+    /// keeps a resumed campaign's exchanges bit-identical: a shard that
+    /// restored *beyond* a boundary must broadcast what it knew *at*
+    /// that boundary, exactly as the uninterrupted run did.
+    fn elites_at(&self, n: usize, upto: usize) -> Vec<(Configuration, f64)> {
+        let upto = upto.min(self.db.records.len());
+        let mut fin: Vec<&EvalRecord> = self.db.records[..upto]
             .iter()
             .filter(|r| !r.timed_out && r.objective.is_finite())
             .collect();
@@ -747,10 +939,13 @@ impl ContinuousShard {
             if self.received_foreign.contains(&key) || self.lens.contains(&self.space, cfg) {
                 continue;
             }
-            self.received_foreign.insert(key);
+            self.received_foreign.insert(key.clone());
             self.strat.observe_foreign(cfg, *y);
             if y.is_finite() {
                 self.real_objectives.push(*y);
+            }
+            if self.log_valid {
+                self.slog.push(checkpoint::StrategyEvent::Foreign { config_key: key, y: *y });
             }
             absorbed += 1;
         }
@@ -760,7 +955,7 @@ impl ContinuousShard {
     /// Charge one exchange round's synchronization cost to this shard's
     /// simulated clock (workers cannot pick up new spans before it).
     fn charge_exchange(&mut self, s: f64) {
-        if s <= 0.0 || self.done {
+        if s <= 0.0 || self.is_finished() {
             return;
         }
         self.wallclock += s;
@@ -858,6 +1053,13 @@ pub(crate) fn autotune_continuous(setup: &TuneSetup, scorer: Arc<Scorer>) -> Res
 /// exchange and a final eval-id-ordered merge into one [`TuneResult`].
 pub fn autotune_federation(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneResult> {
     let k = validate_federation(setup)?;
+    // resolve the history-database warm start (idempotent; every shard
+    // then absorbs the same resolved prior — once — at strategy
+    // construction, deduped against later elite exchanges through each
+    // shard's `received_foreign` set)
+    let mut setup = setup.clone();
+    crate::history::apply_warm_start(&mut setup, scorer.as_ref())?;
+    let setup = &setup;
     let space = Arc::new(paper::build_space(setup.app, setup.platform));
     let (baseline, baseline_objective) = coordinator::measure_baseline(setup, &scorer)?;
     let fp = checkpoint::fingerprint(setup);
@@ -910,32 +1112,46 @@ pub fn autotune_federation(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tun
         per_shard_evals: Vec::new(),
     };
 
-    // round loop: every shard advances `every` completions, then elites
-    // broadcast all-to-all. Exchange points are counted in completions —
-    // never in host time — so the whole schedule is deterministic.
+    // round loop: every shard advances to the next *absolute* exchange
+    // boundary (boundaries are counted in per-shard completions — never
+    // in host time — so the schedule is deterministic, and a resumed
+    // shard re-joins exactly the boundaries an uninterrupted run hits),
+    // then elites broadcast all-to-all from each shard's history prefix
+    // at that boundary.
+    let mut round = 0usize;
     loop {
+        round += 1;
+        let boundary = round.saturating_mul(every);
         for sh in shards.iter_mut() {
-            sh.run_for(every)?;
+            sh.run_until(boundary)?;
         }
-        if shards.iter().all(ContinuousShard::is_done) {
+        if shards.iter().all(ContinuousShard::is_finished) {
             break;
         }
         if k > 1 {
-            let all_elites: Vec<Vec<(Configuration, f64)>> =
-                shards.iter().map(|s| s.elites(elite_n)).collect();
-            for (i, sh) in shards.iter_mut().enumerate() {
-                if sh.is_done() {
-                    continue;
-                }
-                for (j, es) in all_elites.iter().enumerate() {
-                    if i != j {
-                        fstats.elites_absorbed += sh.absorb_foreign(es);
+            // finished shards propose nothing more; a shard resumed
+            // *past* this boundary absorbed and paid for this exchange
+            // in its previous life (its checkpoint log replays those
+            // absorptions). A live shard sits exactly at the boundary.
+            let at_boundary =
+                |sh: &ContinuousShard| !sh.is_finished() && sh.applied() <= boundary;
+            if shards.iter().any(|s| at_boundary(s)) {
+                let all_elites: Vec<Vec<(Configuration, f64)>> =
+                    shards.iter().map(|s| s.elites_at(elite_n, boundary)).collect();
+                for (i, sh) in shards.iter_mut().enumerate() {
+                    if !at_boundary(sh) {
+                        continue;
                     }
+                    for (j, es) in all_elites.iter().enumerate() {
+                        if i != j {
+                            fstats.elites_absorbed += sh.absorb_foreign(es);
+                        }
+                    }
+                    sh.charge_exchange(exch_s);
                 }
-                sh.charge_exchange(exch_s);
+                fstats.exchanges += 1;
+                fstats.exchange_s += exch_s;
             }
-            fstats.exchanges += 1;
-            fstats.exchange_s += exch_s;
         }
     }
 

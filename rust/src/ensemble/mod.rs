@@ -39,9 +39,14 @@
 //!   trajectory independent of thread scheduling.
 //! * [`checkpoint`] — completed evaluations persist through an atomic
 //!   JSON checkpoint, and the continuous cycle additionally records its
-//!   dispatched-but-unfinished evaluations; a killed session resumes
-//!   with zero re-evaluation of completed configurations and re-queues
-//!   the in-flight ones under their original eval ids.
+//!   dispatched-but-unfinished evaluations *and its proposal state*
+//!   (RNG stream position plus the strategy event log: planted lies,
+//!   applies, absorbed foreign elites, in manager-event order); a
+//!   killed session resumes with zero re-evaluation of completed
+//!   configurations, re-queues the in-flight ones under their original
+//!   eval ids, and — replaying the log, then continuing the persisted
+//!   stream — keeps *proposing* mid-trajectory: fresh post-resume
+//!   proposals are bit-identical to an uninterrupted run's.
 //! * [`federation`] — the multi-manager layer: K continuous shards, each
 //!   owning a seeded-hash partition of the candidate space (a disjoint
 //!   cover of the flat index space), exchanging top-N elites
@@ -62,7 +67,7 @@ pub mod federation;
 pub mod liar;
 pub mod worker;
 
-pub use checkpoint::{Checkpoint, InFlightEval};
+pub use checkpoint::{Checkpoint, InFlightEval, ProposalState, StrategyEvent};
 pub use federation::{
     autotune_federation, shard_of_index, FederationManifest, FederationStats, ShardSpec,
 };
@@ -488,6 +493,11 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
         "ensemble path needs >= 1 worker (got {})",
         setup.ensemble_workers
     );
+    // resolve the history-database warm start (idempotent: a no-op when
+    // the coordinator front-end already did, or none is configured)
+    let mut setup = setup.clone();
+    crate::history::apply_warm_start(&mut setup, scorer.as_ref())?;
+    let setup = &setup;
     // The continuous cycle (the default) is the single-shard special
     // case of the federation's shard manager; both run the same engine,
     // which is what makes a K=1 federation bit-identical to the plain
@@ -772,13 +782,15 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
                     if alloc.charge(setup.nodes, makespan).is_err() {
                         // the job simply hits its allocation limit
                         if let Some(path) = &setup.checkpoint_path {
-                            save_checkpoint(path, &fp, wallclock, &db, &no_inflight)?;
+                            // the generational oracle does not persist
+                            // proposal state (no mid-batch resume exists)
+                            save_checkpoint(path, &fp, wallclock, &db, &no_inflight, None)?;
                         }
                         break 'outer;
                     }
                 }
                 if let Some(path) = &setup.checkpoint_path {
-                    save_checkpoint(path, &fp, wallclock, &db, &no_inflight)?;
+                    save_checkpoint(path, &fp, wallclock, &db, &no_inflight, None)?;
                 }
             }
         }
@@ -845,6 +857,7 @@ fn save_checkpoint(
     wallclock_s: f64,
     db: &PerfDatabase,
     in_flight: &BTreeMap<usize, Configuration>,
+    proposal: Option<checkpoint::ProposalParts<'_>>,
 ) -> Result<()> {
     // serialize by reference: the continuous cycle saves per completion,
     // so this path must not clone the full record vec each time (only
@@ -853,7 +866,7 @@ fn save_checkpoint(
         .iter()
         .map(|(id, cfg)| InFlightEval { eval_id: *id, config_key: cfg.key() })
         .collect();
-    checkpoint::save_parts(path, fingerprint, wallclock_s, &db.records, &in_flight)
+    checkpoint::save_parts(path, fingerprint, wallclock_s, &db.records, &in_flight, proposal)
 }
 
 #[cfg(test)]
@@ -1056,6 +1069,7 @@ mod tests {
                 InFlightEval { eval_id: 4, config_key: full.db.records[4].config_key.clone() },
                 InFlightEval { eval_id: 5, config_key: full.db.records[5].config_key.clone() },
             ],
+            proposal: None, // legacy checkpoint: exact re-queue, fresh stream
         };
         cp.save(&path).unwrap();
 

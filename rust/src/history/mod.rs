@@ -1,0 +1,687 @@
+//! Cross-run tuning-history database with transfer-learning warm starts
+//! (paper §VIII future work; the Sid-Lakhdar et al. multitask-transfer
+//! and Wu et al. ytopt+libEnsemble directions).
+//!
+//! Every completed autotuning run — serial, ensemble, or federated —
+//! can append one durable [`RunRecord`] (space fingerprint, app/scale
+//! metadata, the full evaluation history, best-so-far, wall-clock and
+//! energy stats) to a [`HistoryStore`] directory. A later run at any
+//! scale looks up records with a *compatible space fingerprint*, picks
+//! the nearest source scale, extracts the top-K elites, rescales their
+//! objectives by the target/source baseline ratio (the ordering
+//! structure of the landscape is what transfers), and feeds them to the
+//! search through `BayesianOptimizer::warm_start_from_history` — the
+//! index-keyed `observe_foreign` world, so warmed observations are
+//! recorded in the surrogate but never re-proposed, exactly like
+//! federation elites.
+//!
+//! Durability contract: appends are atomic (write a sibling temp file,
+//! rename over the final name — the same discipline as
+//! `ensemble::Checkpoint::save`), and a truncated or garbage record is
+//! skipped with a warning during the store scan, never aborting it: one
+//! corrupt file must not poison every future warm start.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::{TuneResult, TuneSetup};
+use crate::runtime::Scorer;
+use crate::space::{paper, ConfigSpace, Configuration};
+use crate::util::Json;
+use anyhow::{Context, Result};
+
+/// Identity of a search space for cross-run compatibility: the space
+/// name plus every parameter's name and cardinality. Two runs may
+/// exchange observations only when these match — a configuration key is
+/// a vector of value *indices*, meaningless under any other layout.
+pub fn space_fingerprint(space: &ConfigSpace) -> String {
+    let params: Vec<String> = space
+        .params()
+        .iter()
+        .map(|p| format!("{}:{}", p.name, p.domain.cardinality()))
+        .collect();
+    format!("{}|{}d|{}|{}", space.name(), space.dim(), space.size(), params.join(","))
+}
+
+/// One evaluation inside a [`RunRecord`] — the transferable slice of an
+/// `EvalRecord` (non-finite numbers round-trip through JSON `null`,
+/// reading back as +inf, the same convention the checkpoint uses).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistoryEval {
+    pub config_key: String,
+    pub objective: f64,
+    pub runtime_s: f64,
+    pub energy_j: Option<f64>,
+    pub timed_out: bool,
+}
+
+impl HistoryEval {
+    fn to_json(&self) -> Json {
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        Json::obj(vec![
+            ("config_key", self.config_key.as_str().into()),
+            ("objective", num(self.objective)),
+            ("runtime_s", num(self.runtime_s)),
+            ("energy_j", self.energy_j.map(Json::from).unwrap_or(Json::Null)),
+            ("timed_out", self.timed_out.into()),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<HistoryEval> {
+        let config_key = v
+            .get("config_key")
+            .and_then(Json::as_str)
+            .context("history eval missing `config_key`")?
+            .to_string();
+        let f = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(f64::INFINITY);
+        Ok(HistoryEval {
+            config_key,
+            objective: f("objective"),
+            runtime_s: f("runtime_s"),
+            energy_j: v.get("energy_j").and_then(Json::as_f64),
+            timed_out: v.get("timed_out").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+/// One completed tuning run in the cross-run history database.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    /// [`space_fingerprint`] of the run's search space (compatibility key).
+    pub space_fingerprint: String,
+    pub app: String,
+    pub platform: String,
+    /// The scale this run tuned at (nearest-scale source selection).
+    pub nodes: u64,
+    pub metric: String,
+    pub seed: u64,
+    /// Default-configuration objective at this scale (the rescale anchor).
+    pub baseline_objective: f64,
+    pub best_objective: f64,
+    pub best_config_key: String,
+    /// Simulated campaign wall-clock.
+    pub wallclock_s: f64,
+    /// Full evaluation history, in eval-id order.
+    pub evals: Vec<HistoryEval>,
+}
+
+impl RunRecord {
+    /// Capture the transferable view of a finished run.
+    pub fn from_result(result: &TuneResult) -> RunRecord {
+        let setup = &result.setup;
+        let space = paper::build_space(setup.app, setup.platform);
+        RunRecord {
+            space_fingerprint: space_fingerprint(&space),
+            app: setup.app.name().to_string(),
+            platform: setup.platform.name().to_string(),
+            nodes: setup.nodes,
+            metric: setup.metric.name().to_string(),
+            seed: setup.seed,
+            baseline_objective: result.baseline_objective,
+            best_objective: result.best_objective,
+            best_config_key: result
+                .db
+                .best()
+                .map(|r| r.config_key.clone())
+                .unwrap_or_default(),
+            wallclock_s: result.wallclock_s,
+            evals: result
+                .db
+                .records
+                .iter()
+                .map(|r| HistoryEval {
+                    config_key: r.config_key.clone(),
+                    objective: r.objective,
+                    runtime_s: r.measured.runtime_s,
+                    energy_j: r.measured.avg_node_energy_j,
+                    timed_out: r.timed_out,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        Json::obj(vec![
+            ("version", 1u64.into()),
+            ("kind", "run-record".into()),
+            ("space_fingerprint", self.space_fingerprint.as_str().into()),
+            ("app", self.app.as_str().into()),
+            ("platform", self.platform.as_str().into()),
+            ("nodes", self.nodes.into()),
+            ("metric", self.metric.as_str().into()),
+            // hex-encoded: JSON numbers are f64 and cannot carry a full
+            // u64 seed losslessly (same convention as the checkpoint's
+            // persisted RNG words)
+            ("seed", format!("{:016x}", self.seed).into()),
+            ("baseline_objective", num(self.baseline_objective)),
+            ("best_objective", num(self.best_objective)),
+            ("best_config_key", self.best_config_key.as_str().into()),
+            ("wallclock_s", num(self.wallclock_s)),
+            ("evals", Json::Arr(self.evals.iter().map(HistoryEval::to_json).collect())),
+        ])
+    }
+
+    pub fn parse(text: &str) -> Result<RunRecord> {
+        let v = Json::parse(text).context("parsing run record")?;
+        anyhow::ensure!(
+            v.get("kind").and_then(Json::as_str) == Some("run-record"),
+            "not a run record (missing `kind`)"
+        );
+        let s = |key: &str| -> Result<String> {
+            v.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("run record missing string field `{key}`"))
+        };
+        let f = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(f64::INFINITY);
+        let evals = v
+            .get("evals")
+            .and_then(Json::as_arr)
+            .context("run record missing `evals`")?
+            .iter()
+            .map(HistoryEval::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RunRecord {
+            space_fingerprint: s("space_fingerprint")?,
+            app: s("app")?,
+            platform: s("platform")?,
+            nodes: v.get("nodes").and_then(Json::as_u64).context("run record missing `nodes`")?,
+            metric: s("metric")?,
+            seed: v
+                .get("seed")
+                .and_then(Json::as_str)
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .unwrap_or(0),
+            baseline_objective: f("baseline_objective"),
+            best_objective: f("best_objective"),
+            best_config_key: s("best_config_key")?,
+            wallclock_s: f("wallclock_s"),
+            evals,
+        })
+    }
+
+    /// Content-derived identifier (FNV-1a over the serialized record):
+    /// appending the same run twice is idempotent, and no wall-clock or
+    /// counter enters the store (determinism across replays).
+    pub fn run_id(&self) -> String {
+        let text = self.to_json().to_string();
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in text.as_bytes() {
+            h = (h ^ *b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+        format!("{h:016x}")
+    }
+}
+
+/// A directory of [`RunRecord`] files (`run-<content-hash>.json`),
+/// appended atomically and scanned leniently.
+#[derive(Debug, Clone)]
+pub struct HistoryStore {
+    dir: PathBuf,
+}
+
+impl HistoryStore {
+    /// Open (creating if needed) the store directory — the append path.
+    pub fn open(dir: &Path) -> Result<HistoryStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating history store {}", dir.display()))?;
+        Ok(HistoryStore { dir: dir.to_path_buf() })
+    }
+
+    /// Open an existing store without creating anything: the read-only
+    /// warm-start path must not mkdir a mistyped `--warm-start-from`
+    /// directory as a side effect, and a missing store should say so
+    /// instead of reporting itself as empty.
+    pub fn open_existing(dir: &Path) -> Result<HistoryStore> {
+        anyhow::ensure!(
+            dir.is_dir(),
+            "history store {} does not exist (check the warm-start path)",
+            dir.display()
+        );
+        Ok(HistoryStore { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Append one run record atomically: write `run-<id>.json.tmp`, then
+    /// rename over `run-<id>.json`. A crash mid-write leaves only a temp
+    /// file, which the scan ignores; the store never holds a half
+    /// record under its final name.
+    pub fn append(&self, rec: &RunRecord) -> Result<PathBuf> {
+        let path = self.dir.join(format!("run-{}.json", rec.run_id()));
+        let tmp = self.dir.join(format!("run-{}.json.tmp", rec.run_id()));
+        std::fs::write(&tmp, rec.to_json().to_string())
+            .with_context(|| format!("writing run record {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("installing run record {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Every readable run record, in file-name order (deterministic).
+    /// Truncated or garbage files are skipped with a warning — a corrupt
+    /// record must not abort the scan.
+    pub fn load_all(&self) -> Result<Vec<RunRecord>> {
+        let mut names: Vec<PathBuf> = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("scanning history store {}", self.dir.display()))?
+        {
+            let path = entry?.path();
+            let is_record = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.ends_with(".json"))
+                .unwrap_or(false);
+            if is_record && path.is_file() {
+                names.push(path);
+            }
+        }
+        names.sort();
+        let mut out = Vec::with_capacity(names.len());
+        for path in names {
+            let parsed = std::fs::read_to_string(&path)
+                .map_err(anyhow::Error::from)
+                .and_then(|text| RunRecord::parse(&text));
+            match parsed {
+                Ok(rec) => out.push(rec),
+                Err(e) => {
+                    log::warn!("skipping corrupt history record {}: {e:#}", path.display())
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Records whose space fingerprint matches `fp` exactly.
+    pub fn compatible(&self, fp: &str) -> Result<Vec<RunRecord>> {
+        Ok(self.load_all()?.into_iter().filter(|r| r.space_fingerprint == fp).collect())
+    }
+}
+
+/// The subset of `records` tuned at the scale nearest `target_nodes`
+/// (log-ratio distance: 64 -> 4,096 is "closer" to 1,024 than to 1).
+pub fn nearest_scale<'a>(records: &[&'a RunRecord], target_nodes: u64) -> Vec<&'a RunRecord> {
+    let dist = |nodes: u64| {
+        ((nodes.max(1) as f64).ln() - (target_nodes.max(1) as f64).ln()).abs()
+    };
+    // ties in distance resolve to the smaller node count (the `(dist,
+    // nodes)` lexicographic minimum), so the selection is a pure
+    // function of the record *set*
+    let best = records
+        .iter()
+        .map(|r| r.nodes)
+        .min_by(|&a, &b| dist(a).partial_cmp(&dist(b)).unwrap().then(a.cmp(&b)));
+    match best {
+        Some(nodes) => records.iter().copied().filter(|r| r.nodes == nodes).collect(),
+        None => Vec::new(),
+    }
+}
+
+/// Top-`k` elite `(configuration, objective)` pairs across `records`:
+/// finite, non-timed-out evaluations, deduped by configuration key
+/// (keeping each key's best objective), ordered by `(objective, key)`.
+/// The ordering is a total function of the record *contents*, so the
+/// extraction is stable under record-insertion order.
+pub fn top_k_elites(records: &[&RunRecord], k: usize) -> Vec<(Configuration, f64)> {
+    let mut best: std::collections::BTreeMap<String, f64> = std::collections::BTreeMap::new();
+    for rec in records {
+        for e in &rec.evals {
+            if e.timed_out || !e.objective.is_finite() {
+                continue;
+            }
+            best.entry(e.config_key.clone())
+                .and_modify(|y| *y = y.min(e.objective))
+                .or_insert(e.objective);
+        }
+    }
+    let mut pool: Vec<(String, f64)> = best.into_iter().collect();
+    pool.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0)));
+    // parse *before* taking k: an unparseable key from a damaged record
+    // must not consume an elite slot (it would silently shrink — or
+    // empty — the prior while valid elites sit further down the pool)
+    pool.into_iter()
+        .filter_map(|(key, y)| {
+            crate::ensemble::checkpoint::config_from_key(&key).ok().map(|c| (c, y))
+        })
+        .take(k)
+        .collect()
+}
+
+/// Rescale source-scale observations into the target scale's range by
+/// the ratio of target/source default-configuration baselines — the
+/// generalization of the retired `search::transfer::warm_start` free
+/// function. The *ordering structure* of the landscape is what
+/// transfers; panics on non-positive baselines (same contract as the
+/// deprecated shim that delegates here).
+pub fn rescale(
+    source_obs: &[(Configuration, f64)],
+    source_baseline: f64,
+    target_baseline: f64,
+) -> Vec<(Configuration, f64)> {
+    assert!(
+        source_baseline > 0.0 && target_baseline > 0.0,
+        "baselines must be positive (source {source_baseline}, target {target_baseline})"
+    );
+    let ratio = target_baseline / source_baseline;
+    source_obs.iter().map(|(c, y)| (c.clone(), y * ratio)).collect()
+}
+
+/// Build the warm-start prior from source records: rescale every
+/// record's history by its own baseline ratio, then take the stable
+/// top-`k` elites over the rescaled pool.
+pub fn warm_prior(
+    records: &[&RunRecord],
+    target_baseline: f64,
+    k: usize,
+) -> Result<Vec<(Configuration, f64)>> {
+    anyhow::ensure!(target_baseline > 0.0, "target baseline must be positive");
+    let mut rescaled: Vec<RunRecord> = Vec::with_capacity(records.len());
+    for rec in records {
+        anyhow::ensure!(
+            rec.baseline_objective.is_finite() && rec.baseline_objective > 0.0,
+            "source run (seed {}, {} nodes) has a non-positive baseline {}",
+            rec.seed,
+            rec.nodes,
+            rec.baseline_objective
+        );
+        let ratio = target_baseline / rec.baseline_objective;
+        let mut r = (*rec).clone();
+        for e in &mut r.evals {
+            if e.objective.is_finite() {
+                e.objective *= ratio;
+            }
+        }
+        rescaled.push(r);
+    }
+    let views: Vec<&RunRecord> = rescaled.iter().collect();
+    Ok(top_k_elites(&views, k))
+}
+
+/// Resolve `setup.warm_start_from` into the concrete foreign warm-start
+/// prior, in place. Idempotent: a no-op when no store is configured or
+/// the prior is already resolved — so every entry point (the serial
+/// coordinator, the ensemble manager, the federation driver) may call
+/// it and exactly one resolution happens. The resolved prior is part of
+/// the run's checkpoint fingerprint, which is what makes a warm-started
+/// run seed-for-seed deterministic *given the same store contents* and
+/// refuses resumes against a store that changed underneath it.
+///
+/// Refusal contract: a configured store with no space-compatible run is
+/// an error naming both fingerprints — silently cold-starting would
+/// misreport a transfer experiment as a warm one.
+pub fn apply_warm_start(setup: &mut TuneSetup, scorer: &Scorer) -> Result<()> {
+    if setup.foreign_warm.is_some() {
+        return Ok(());
+    }
+    let Some(dir) = setup.warm_start_from.clone() else {
+        return Ok(());
+    };
+    // range check lives here — not only in the CLI — so config-file and
+    // library callers get the same acceptance rules (and K=0 errors
+    // clearly instead of resolving an empty prior)
+    anyhow::ensure!(
+        (1..=64).contains(&setup.warm_start_elites),
+        "warm-start-elites must be in 1..=64 when a warm-start store is configured (got {})",
+        setup.warm_start_elites
+    );
+    let space = paper::build_space(setup.app, setup.platform);
+    let fp = space_fingerprint(&space);
+    let store = HistoryStore::open_existing(&dir)?;
+    let all = store.load_all()?;
+    anyhow::ensure!(
+        !all.is_empty(),
+        "warm-start store {} holds no readable run records",
+        dir.display()
+    );
+    // the metric is part of compatibility too: joule objectives must
+    // never seed a runtime search (energy and runtime optima differ —
+    // that is the point of tuning them separately)
+    let metric = setup.metric.name();
+    let compat: Vec<&RunRecord> = all
+        .iter()
+        .filter(|r| r.space_fingerprint == fp && r.metric == metric)
+        .collect();
+    if compat.is_empty() {
+        let mut found: Vec<String> =
+            all.iter().map(|r| format!("{} [{}]", r.space_fingerprint, r.metric)).collect();
+        found.sort_unstable();
+        found.dedup();
+        anyhow::bail!(
+            "warm-start refused: store {} has no run with a compatible space fingerprint \
+             and metric\n  this run's space: `{fp}` [{metric}]\n  store holds:      `{}`",
+            dir.display(),
+            found.join("`, `")
+        );
+    }
+    let source = nearest_scale(&compat, setup.nodes);
+    let source_nodes = source.first().map(|r| r.nodes).unwrap_or(0);
+    // drop damaged observations (unparseable or out-of-space keys)
+    // *before* elite selection, so they can never consume top-K slots
+    // while valid elites sit further down the pool
+    let cleaned: Vec<RunRecord> = source
+        .iter()
+        .map(|rec| {
+            let mut r = (**rec).clone();
+            r.evals.retain(|e| {
+                crate::ensemble::checkpoint::config_from_key(&e.config_key)
+                    .map(|c| space.is_valid(&c))
+                    .unwrap_or(false)
+            });
+            r
+        })
+        .collect();
+    let cleaned_views: Vec<&RunRecord> = cleaned.iter().collect();
+    // pay for the baseline once: the engines reuse this measurement
+    // through the memo instead of re-running it
+    let (baseline, target_baseline) = crate::coordinator::measure_baseline(setup, scorer)?;
+    setup.baseline_memo = Some((baseline, target_baseline));
+    let prior = warm_prior(&cleaned_views, target_baseline, setup.warm_start_elites)?;
+    anyhow::ensure!(
+        !prior.is_empty(),
+        "warm-start store {} has compatible runs but no finite observations to transfer",
+        dir.display()
+    );
+    log::info!(
+        "warm start: {} elites from {} source run(s) at {} nodes (target {} nodes, \
+         baseline ratio anchored at {target_baseline:.3})",
+        prior.len(),
+        source.len(),
+        source_nodes,
+        setup.nodes
+    );
+    setup.foreign_warm = Some(prior);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppKind;
+    use crate::platform::PlatformKind;
+
+    fn record(nodes: u64, seed: u64, evals: &[(&str, f64)]) -> RunRecord {
+        RunRecord {
+            space_fingerprint: "toy|2d|16|a:4,b:4".into(),
+            app: "xsbench".into(),
+            platform: "Theta".into(),
+            nodes,
+            metric: "runtime".into(),
+            seed,
+            baseline_objective: 10.0,
+            best_objective: evals
+                .iter()
+                .map(|(_, y)| *y)
+                .fold(f64::INFINITY, f64::min),
+            best_config_key: evals
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .map(|(k, _)| k.to_string())
+                .unwrap_or_default(),
+            wallclock_s: 120.0,
+            evals: evals
+                .iter()
+                .map(|(k, y)| HistoryEval {
+                    config_key: k.to_string(),
+                    objective: *y,
+                    runtime_s: *y,
+                    energy_j: None,
+                    timed_out: false,
+                })
+                .collect(),
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ytopt-hist-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn space_fingerprints_separate_apps_and_platforms() {
+        let a = space_fingerprint(&paper::build_space(AppKind::XSBenchHistory, PlatformKind::Theta));
+        let b = space_fingerprint(&paper::build_space(AppKind::Amg, PlatformKind::Theta));
+        let c = space_fingerprint(&paper::build_space(AppKind::XSBenchHistory, PlatformKind::Summit));
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        // and are stable across rebuilds
+        assert_eq!(
+            a,
+            space_fingerprint(&paper::build_space(AppKind::XSBenchHistory, PlatformKind::Theta))
+        );
+    }
+
+    #[test]
+    fn append_is_atomic_and_idempotent() {
+        let dir = tmpdir("append");
+        let store = HistoryStore::open(&dir).unwrap();
+        let rec = record(64, 1, &[("0,0", 3.0), ("1,2", 2.0)]);
+        let p1 = store.append(&rec).unwrap();
+        let p2 = store.append(&rec).unwrap();
+        assert_eq!(p1, p2, "same content must land in the same file");
+        // no temp litter under the final-name contract
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().map(|x| x == "tmp").unwrap_or(false))
+            .collect();
+        assert!(leftovers.is_empty(), "append left temp files behind");
+        let all = store.load_all().unwrap();
+        assert_eq!(all, vec![rec]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_records_are_skipped_not_fatal() {
+        let dir = tmpdir("corrupt");
+        let store = HistoryStore::open(&dir).unwrap();
+        store.append(&record(64, 1, &[("0,0", 3.0)])).unwrap();
+        store.append(&record(256, 2, &[("1,1", 4.0)])).unwrap();
+        // a truncated record and outright garbage, both under final names
+        std::fs::write(dir.join("run-truncated.json"), "{\"kind\":\"run-rec").unwrap();
+        std::fs::write(dir.join("run-garbage.json"), "not json at all").unwrap();
+        // and a foreign-but-valid JSON file (wrong kind)
+        std::fs::write(dir.join("run-foreign.json"), "{\"fingerprint\":\"fp\"}").unwrap();
+        let all = store.load_all().unwrap();
+        assert_eq!(all.len(), 2, "exactly the two good records survive the scan");
+        // fingerprint lookup sees the same lenient view
+        let compat = store.compatible("toy|2d|16|a:4,b:4").unwrap();
+        assert_eq!(compat.len(), 2);
+        assert!(store.compatible("other-space").unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_existing_refuses_missing_dirs_without_creating_them() {
+        let dir = tmpdir("open-existing"); // removed, never created
+        let err = HistoryStore::open_existing(&dir);
+        assert!(err.is_err(), "a missing store must be an error, not an empty store");
+        assert!(!dir.exists(), "the read path must not mkdir as a side effect");
+        // the append path does create, and open_existing accepts it then
+        let store = HistoryStore::open(&dir).unwrap();
+        assert_eq!(HistoryStore::open_existing(&dir).unwrap().dir(), store.dir());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn nearest_scale_uses_log_distance() {
+        let rs = [record(1, 1, &[]), record(64, 2, &[]), record(4096, 3, &[])];
+        let views: Vec<&RunRecord> = rs.iter().collect();
+        // 1024 is closer to 4096 than to 64 in log space? ln ratios: 1.39 vs 2.77
+        let near = nearest_scale(&views, 1024);
+        assert_eq!(near.len(), 1);
+        assert_eq!(near[0].nodes, 4096);
+        let near = nearest_scale(&views, 2);
+        assert_eq!(near[0].nodes, 1);
+        // exact match wins outright and collects every run at that scale
+        let rs2 = [record(64, 1, &[]), record(64, 2, &[]), record(1, 3, &[])];
+        let views2: Vec<&RunRecord> = rs2.iter().collect();
+        let near = nearest_scale(&views2, 64);
+        assert_eq!(near.len(), 2);
+    }
+
+    #[test]
+    fn elite_extraction_dedupes_and_orders() {
+        let a = record(64, 1, &[("0,0", 5.0), ("1,1", 2.0), ("2,2", 9.0)]);
+        let b = record(64, 2, &[("1,1", 3.0), ("3,3", 2.5)]);
+        let elites = top_k_elites(&[&a, &b], 3);
+        assert_eq!(elites.len(), 3);
+        assert_eq!(elites[0].0.key(), "1,1");
+        assert_eq!(elites[0].1, 2.0, "dedup keeps the best objective per key");
+        assert_eq!(elites[1].0.key(), "3,3");
+        assert_eq!(elites[2].0.key(), "0,0");
+        // stable under record-insertion order
+        let swapped = top_k_elites(&[&b, &a], 3);
+        let key = |v: &[(Configuration, f64)]| {
+            v.iter().map(|(c, y)| (c.key(), y.to_bits())).collect::<Vec<_>>()
+        };
+        assert_eq!(key(&elites), key(&swapped));
+    }
+
+    #[test]
+    fn warm_prior_rescales_per_source_baseline() {
+        let mut a = record(64, 1, &[("0,0", 5.0)]);
+        a.baseline_objective = 10.0;
+        let mut b = record(64, 2, &[("1,1", 1.0)]);
+        b.baseline_objective = 2.0;
+        // target baseline 20: a's ratio 2.0 (5 -> 10), b's ratio 10.0 (1 -> 10)
+        let prior = warm_prior(&[&a, &b], 20.0, 8).unwrap();
+        assert_eq!(prior.len(), 2);
+        for (_, y) in &prior {
+            assert_eq!(*y, 10.0);
+        }
+        // non-positive source baseline is refused
+        let mut bad = record(64, 3, &[("2,2", 1.0)]);
+        bad.baseline_objective = 0.0;
+        assert!(warm_prior(&[&bad], 20.0, 8).is_err());
+    }
+
+    #[test]
+    fn rescale_keeps_the_ordering_structure() {
+        let obs = vec![
+            (Configuration::from_indices(vec![0]), 2.0),
+            (Configuration::from_indices(vec![1]), 4.0),
+        ];
+        let out = rescale(&obs, 2.0, 20.0);
+        assert_eq!(out[0].1, 20.0);
+        assert_eq!(out[1].1, 40.0);
+        assert!(out[0].1 < out[1].1);
+    }
+
+    #[test]
+    fn run_record_roundtrips_including_infinities() {
+        let mut rec = record(4096, 7, &[("0,1", 2.5), ("3,2", 4.25)]);
+        rec.evals.push(HistoryEval {
+            config_key: "1,1".into(),
+            objective: f64::INFINITY,
+            runtime_s: f64::INFINITY,
+            energy_j: Some(812.5),
+            timed_out: true,
+        });
+        rec.best_objective = 2.5;
+        let back = RunRecord::parse(&rec.to_json().to_string()).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.run_id(), rec.run_id());
+    }
+}

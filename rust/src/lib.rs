@@ -7,7 +7,9 @@
 //! five-step evaluation pipeline, the simulated substrate (platforms,
 //! ECP proxy applications, GEOPM power stack), and the asynchronous
 //! manager/worker evaluation engine in [`ensemble`] (parallel,
-//! fault-tolerant, checkpoint-resumable autotuning). Layers 2/1 are the
+//! fault-tolerant, checkpoint-resumable autotuning), and the cross-run
+//! tuning-history database in [`history`] (transfer-learning warm
+//! starts, paper §VIII). Layers 2/1 are the
 //! AOT-compiled JAX/Pallas artifacts in `artifacts/` executed through the
 //! PJRT runtime in [`runtime`]; Python never runs on the tuning path.
 //!
@@ -20,6 +22,7 @@ pub mod cliargs;
 pub mod codegen;
 pub mod coordinator;
 pub mod ensemble;
+pub mod history;
 pub mod search;
 pub mod configfile;
 pub mod metrics;

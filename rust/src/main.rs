@@ -58,6 +58,9 @@ fn spec() -> CliSpec {
         .opt("retries", Some("2"), "retries (with worker exclusion) per failed evaluation")
         .opt("straggler-factor", None, "cancel runs beyond this multiple of the batch median")
         .opt("checkpoint", None, "ensemble checkpoint file (resume skips completed evals)")
+        .opt("history-dir", None, "cross-run history store; completed runs append here")
+        .opt("warm-start-from", None, "history store to warm-start from (compatible space)")
+        .opt("warm-elites", Some("8"), "top-K elites pulled from the warm-start store")
         .opt("out", None, "write the performance database CSV here")
         .flag("trace", "print the per-evaluation trace")
 }
@@ -96,6 +99,10 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     let mut retries = args.usize("retries").unwrap_or(2);
     let mut straggler = args.float("straggler-factor");
     let mut checkpoint = args.get("checkpoint").map(|s| s.to_string());
+    // cross-run history database + transfer-learning warm start
+    let mut history_dir = args.path("history-dir");
+    let mut warm_start_from = args.path("warm-start-from");
+    let mut warm_elites = args.usize_in("warm-elites", 0, 64)?;
     if let Some(path) = args.get("config") {
         let doc = ConfigDoc::load(std::path::Path::new(path))?;
         app = doc.str_or("tune", "app", &app).to_string();
@@ -120,6 +127,13 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
         fed_shards = doc.usize_or("federation", "shards", fed_shards);
         exchange_every = doc.usize_or("federation", "exchange_every", exchange_every);
         fed_elites = doc.usize_or("federation", "elites", fed_elites);
+        if let Some(d) = doc.get("history", "dir").and_then(|v| v.as_str()) {
+            history_dir = Some(std::path::PathBuf::from(d));
+        }
+        if let Some(d) = doc.get("history", "warm_start_from").and_then(|v| v.as_str()) {
+            warm_start_from = Some(std::path::PathBuf::from(d));
+        }
+        warm_elites = doc.usize_or("history", "elites", warm_elites);
     }
     let app = AppKind::parse(&app).ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?;
     let platform = parse_platform(&platform)?;
@@ -149,6 +163,9 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     setup.federation_shards = fed_shards;
     setup.elite_exchange_every = exchange_every;
     setup.federation_elites = fed_elites;
+    setup.history_dir = history_dir;
+    setup.warm_start_from = warm_start_from;
+    setup.warm_start_elites = warm_elites;
     Ok(setup)
 }
 

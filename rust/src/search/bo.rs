@@ -307,6 +307,20 @@ impl BayesianOptimizer {
         }
     }
 
+    /// Warm-start from the cross-run history database: every prior
+    /// `(configuration, objective)` pair — already rescaled to this
+    /// run's objective range by `history::warm_prior` — enters the
+    /// surrogate through [`Self::observe_foreign`], so it is recorded
+    /// *and marked seen*, exactly like a federation elite: the search
+    /// starts from the transferred landscape without ever re-proposing
+    /// a transferred point. Returns how many observations were absorbed.
+    pub fn warm_start_from_history(&mut self, prior: &[(Configuration, f64)]) -> usize {
+        for (c, y) in prior {
+            self.observe_foreign(c, *y);
+        }
+        prior.len()
+    }
+
     fn random_unseen(&self, rng: &mut Pcg32) -> Configuration {
         for _ in 0..2000 {
             let c = self.space.sample(rng);
@@ -670,6 +684,38 @@ mod tests {
         for _ in 0..60 {
             let c = bo.propose(&mut rng);
             assert_ne!(c, foreign, "foreign elite was re-proposed");
+            bo.observe(&c, objective(&space, &c));
+        }
+    }
+
+    /// History warm starts enter through the foreign-observation path:
+    /// recorded, marked seen, never re-proposed — and the surrogate
+    /// actually uses the transferred landscape (it proposes near the
+    /// transferred optimum's neighbourhood once the model activates).
+    #[test]
+    fn history_warm_start_is_recorded_and_never_reproposed() {
+        let space = toy_space();
+        let mut bo = BayesianOptimizer::new(
+            space.clone(),
+            BoConfig { n_candidates: 256, ..Default::default() },
+            Arc::new(Scorer::fallback()),
+        );
+        let prior: Vec<(Configuration, f64)> = (0..6u128)
+            .map(|i| {
+                let c = space.config_at(i * 7);
+                let y = objective(&space, &c);
+                (c, y)
+            })
+            .collect();
+        assert_eq!(bo.warm_start_from_history(&prior), 6);
+        assert_eq!(bo.observations(), 6);
+        assert_eq!(bo.foreign_observations(), 6);
+        let mut rng = Pcg32::seeded(51);
+        for _ in 0..40 {
+            let c = bo.propose(&mut rng);
+            for (p, _) in &prior {
+                assert_ne!(&c, p, "warm-started observation was re-proposed");
+            }
             bo.observe(&c, objective(&space, &c));
         }
     }

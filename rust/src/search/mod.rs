@@ -1,6 +1,7 @@
 //! Search strategies over a [`ConfigSpace`]: the Bayesian-optimization
-//! loop (the paper's method) plus random and grid baselines and the
-//! transfer-learning warm start (paper §VIII future work).
+//! loop (the paper's method) plus random and grid baselines. The
+//! transfer-learning warm start (paper §VIII future work) lives in
+//! [`crate::history`] now; [`transfer`] keeps a deprecated shim.
 
 pub mod bo;
 pub mod grid;
@@ -12,6 +13,7 @@ pub use bo::{BoConfig, BayesianOptimizer, PendingSet, SurrogateKind};
 pub use grid::GridSearch;
 pub use mctree::McTreeSearch;
 pub use random::RandomSearch;
+#[allow(deprecated)]
 pub use transfer::warm_start;
 
 use crate::space::Configuration;

@@ -1,9 +1,12 @@
-//! Transfer-learning warm start (paper §VIII future work): seed the
-//! target-scale search with observations from a small-scale run.
+//! Transfer-learning warm start (paper §VIII future work) — subsumed by
+//! the cross-run history database in [`crate::history`].
 //!
-//! Objectives measured at the source scale are rescaled by the ratio of
-//! target/source baselines so the surrogate sees values in the target's
-//! range; the *ordering structure* of the landscape is what transfers.
+//! The baseline-ratio rescaling that used to live here is now
+//! [`crate::history::rescale`], feeding the index-keyed
+//! `BayesianOptimizer::warm_start_from_history` path (warmed
+//! observations are recorded but never re-proposed, like federation
+//! elites). This module keeps a thin deprecated shim for source
+//! compatibility, mirroring the `amend_last` precedent.
 
 use crate::space::Configuration;
 
@@ -11,18 +14,23 @@ use crate::space::Configuration;
 ///
 /// `source_baseline` / `target_baseline` are the default-configuration
 /// objectives at each scale.
+#[deprecated(
+    note = "use `crate::history::rescale` (and the history store's \
+            `warm_prior` / `apply_warm_start` pipeline, which also marks \
+            transferred points seen so they are never re-proposed); this \
+            free function rescales only and predates the store"
+)]
 pub fn warm_start(
     source_obs: &[(Configuration, f64)],
     source_baseline: f64,
     target_baseline: f64,
 ) -> Vec<(Configuration, f64)> {
-    assert!(source_baseline > 0.0 && target_baseline > 0.0);
-    let ratio = target_baseline / source_baseline;
-    source_obs.iter().map(|(c, y)| (c.clone(), y * ratio)).collect()
+    crate::history::rescale(source_obs, source_baseline, target_baseline)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // pinning the legacy shim's delegation contract
     use super::*;
 
     #[test]
@@ -36,6 +44,9 @@ mod tests {
         assert_eq!(out[1].1, 40.0);
         // ordering preserved
         assert!(out[0].1 < out[1].1);
+        // the shim and its replacement are the same function
+        let direct = crate::history::rescale(&obs, 2.0, 20.0);
+        assert_eq!(out, direct);
     }
 
     #[test]

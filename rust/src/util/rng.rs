@@ -34,6 +34,21 @@ impl Pcg32 {
         Pcg32::new(self.next_u64(), stream.wrapping_mul(2654435769).wrapping_add(1))
     }
 
+    /// Snapshot the raw generator state (checkpoint persistence). The
+    /// pair round-trips through [`Pcg32::from_state`] so a resumed
+    /// session continues the *same* stream mid-trajectory instead of
+    /// re-seeding from the start.
+    pub fn state(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from a [`Pcg32::state`] snapshot, without
+    /// re-running the seeding permutation (which would advance the
+    /// stream past the snapshot point).
+    pub fn from_state(state: u64, inc: u64) -> Pcg32 {
+        Pcg32 { state, inc }
+    }
+
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -137,6 +152,19 @@ mod tests {
         let mut a = Pcg32::seeded(42);
         let mut b = Pcg32::seeded(42);
         for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn state_snapshot_resumes_the_same_stream() {
+        let mut a = Pcg32::seeded(99);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let (s, i) = a.state();
+        let mut b = Pcg32::from_state(s, i);
+        for _ in 0..50 {
             assert_eq!(a.next_u64(), b.next_u64());
         }
     }

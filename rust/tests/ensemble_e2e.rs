@@ -4,16 +4,17 @@
 //! generational manager-cycle contracts (seed-for-seed parity at one
 //! worker, zero idle-at-barrier gaps at many), and the multi-manager
 //! federation contracts (K=1 bit-identity with the single continuous
-//! manager, K=3 seed-for-seed determinism, kill-one-shard resume
-//! equality, cross-policy resume refusal).
+//! manager, K=3 seed-for-seed determinism, mid-trajectory kill/resume
+//! bit-identity via the persisted proposal state, cross-policy resume
+//! refusal).
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use ytopt::apps::AppKind;
 use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
-use ytopt::ensemble::federation::{shard_checkpoint_path, shard_fingerprint};
-use ytopt::ensemble::{autotune_ensemble, Checkpoint, InFlightEval, LiarStrategy, ManagerCycle};
+use ytopt::ensemble::federation::shard_checkpoint_path;
+use ytopt::ensemble::{autotune_ensemble, LiarStrategy, ManagerCycle};
 use ytopt::metrics::Metric;
 use ytopt::platform::PlatformKind;
 use ytopt::runtime::Scorer;
@@ -348,74 +349,95 @@ fn federation_k3_is_seed_for_seed_reproducible() {
     assert!(fa.exchanges > 0, "18 evals at exchange-every-2 must hit exchange boundaries");
 }
 
-/// Kill one shard mid-run (under deterministic fault injection),
-/// checkpoint, resume, and the merged history equals the uninterrupted
-/// run: the killed shard restores its completed prefix and re-queues its
-/// dispatched-but-unfinished evaluations under their original global
-/// eval ids, whose outcomes depend only on `(seed, configuration, eval
-/// id, attempt)` — extending PR 2's in-flight re-queue contract across
-/// the federation.
+/// The K=3 mid-trajectory resume contract, upgraded from PR 3's "exact
+/// re-queue" equality to full bit-identity: kill the whole federation
+/// mid-run (simulated SIGKILL right after a checkpointed apply, under
+/// deterministic fault injection), resume, and the merged history —
+/// including every *fresh post-resume proposal*, not just the re-queued
+/// in-flight work — equals the uninterrupted run's, seed for seed. This
+/// is what the persisted proposal state (RNG stream position + strategy
+/// event log + absorbed-elite dedup set) buys: each shard replays its
+/// log, continues its stream, and re-joins the absolute exchange
+/// schedule exactly where the uninterrupted run would be.
+///
+/// Both kill parities are exercised: a kill at 3 applies persists the
+/// round-1 foreign absorptions in the log (replayed at resume, deduped
+/// at the next boundary), while a kill at 2 applies loses them to the
+/// crash (the exchange fires after the apply-2 checkpoint) and the
+/// resumed shard must re-absorb the identical elites at the identical
+/// boundary from its peers' history prefixes.
 #[test]
-fn federated_kill_one_shard_resume_matches_the_uninterrupted_run() {
-    let ckpt = tmpfile("fed-kill");
+fn federated_mid_trajectory_resume_is_bit_identical() {
+    let ckpt = tmpfile("fed-midtraj");
     let shard_files: Vec<PathBuf> = (0..3usize).map(|k| shard_checkpoint_path(&ckpt, k)).collect();
-    let _ = std::fs::remove_file(&ckpt);
-    for f in &shard_files {
-        let _ = std::fs::remove_file(f);
-    }
 
     let mut s = TuneSetup::new(AppKind::Swfft, PlatformKind::Theta, 64, Metric::Runtime);
     s.max_evals = 18;
     s.wallclock_budget_s = 1e9;
     s.seed = 47;
     s.n_init = 4;
-    s.ensemble_workers = 4;
+    s.ensemble_workers = 2;
     s.fault_rate = 0.3;
     s.max_retries = 3;
     s.federation_shards = 3;
     s.elite_exchange_every = 2;
     s.federation_elites = 2;
-    s.checkpoint_path = Some(ckpt.clone());
 
+    // the uninterrupted reference: no checkpointing at all
     let full = run(&s);
     assert_eq!(full.evaluations, 18);
     assert!(
         full.ensemble.as_ref().unwrap().faults > 0,
         "30% fault injection must fire somewhere in 18 evaluations"
     );
-    assert!(ckpt.exists(), "federation manifest must be written");
-    for f in &shard_files {
-        assert!(f.exists(), "every shard must checkpoint ({})", f.display());
+
+    for kill_after in [3usize, 2] {
+        let _ = std::fs::remove_file(&ckpt);
+        for f in &shard_files {
+            let _ = std::fs::remove_file(f);
+        }
+
+        // the killed campaign: every shard dies right after its
+        // `kill_after`-th checkpointed apply, in-flight work outstanding
+        let mut killed = s.clone();
+        killed.checkpoint_path = Some(ckpt.clone());
+        killed.kill_after_evals = Some(kill_after);
+        let partial = run(&killed);
+        assert_eq!(
+            partial.evaluations,
+            3 * kill_after,
+            "3 shards x {kill_after} applies before the kill"
+        );
+        assert!(ckpt.exists(), "federation manifest must be written");
+        for f in &shard_files {
+            assert!(f.exists(), "every shard must checkpoint ({})", f.display());
+        }
+        // the killed prefix is the uninterrupted prefix (shard k owns
+        // ids k, k+3, …, so the first `kill_after` applies per shard
+        // merge into the contiguous ids 0..3*kill_after)
+        assert_eq!(
+            history(&full)[..3 * kill_after].to_vec(),
+            history(&partial),
+            "killed campaign must record exactly the uninterrupted prefix"
+        );
+
+        // resume without the kill: each shard still owes fresh proposals
+        // beyond the re-queued in-flight work, and those must continue
+        // the interrupted trajectory exactly
+        let mut resumed = s.clone();
+        resumed.checkpoint_path = Some(ckpt.clone());
+        let r = run(&resumed);
+        assert_eq!(r.evaluations, 18);
+        let es = r.ensemble.as_ref().unwrap();
+        assert_eq!(es.resumed_evals, 3 * kill_after);
+        assert_eq!(
+            history(&full),
+            history(&r),
+            "kill at {kill_after}: mid-trajectory resume must be bit-identical \
+             (fresh post-resume proposals included)"
+        );
+        assert_eq!(full.best_objective.to_bits(), r.best_objective.to_bits());
     }
-
-    // "kill" shard 1 mid-run: rewind its checkpoint to 2 applied
-    // completions with the remaining 4 dispatched but unfinished.
-    // Shard 1 owns global ids 1, 4, 7, 10, 13, 16; merged ids are a
-    // contiguous 0..18, so record[i] has id i.
-    let rewound = Checkpoint {
-        fingerprint: shard_fingerprint(&s, 1),
-        wallclock_s: full.db.records[4].wallclock_s,
-        records: vec![full.db.records[1].clone(), full.db.records[4].clone()],
-        in_flight: [7usize, 10, 13, 16]
-            .iter()
-            .map(|&id| InFlightEval {
-                eval_id: id,
-                config_key: full.db.records[id].config_key.clone(),
-            })
-            .collect(),
-    };
-    rewound.save(&shard_files[1]).unwrap();
-
-    let resumed = run(&s);
-    assert_eq!(resumed.evaluations, 18);
-    let es = resumed.ensemble.as_ref().unwrap();
-    assert_eq!(es.resumed_evals, 14, "6 + 2 + 6 completed evaluations restore");
-    assert_eq!(
-        history(&full),
-        history(&resumed),
-        "kill-one-shard resume must reproduce the uninterrupted merged history"
-    );
-    assert_eq!(full.best_objective.to_bits(), resumed.best_objective.to_bits());
 
     std::fs::remove_file(&ckpt).unwrap();
     for f in &shard_files {

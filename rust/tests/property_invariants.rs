@@ -161,6 +161,120 @@ fn prop_forest_export_preserves_predictions() {
     );
 }
 
+/// Cross-run history: an arbitrary `RunRecord` — including non-finite
+/// objectives/runtimes (JSON `null`), empty histories, and
+/// awkward-but-valid strings — survives serialize → parse losslessly,
+/// and its content-derived id is stable.
+#[test]
+fn prop_run_record_json_roundtrip() {
+    use ytopt::history::{HistoryEval, RunRecord};
+    fn random_record(rng: &mut Pcg32) -> RunRecord {
+        let n = rng.index(12);
+        let evals: Vec<HistoryEval> = (0..n)
+            .map(|i| {
+                let timed_out = rng.bool(0.15);
+                HistoryEval {
+                    config_key: format!("{},{},{}", rng.index(8), rng.index(8), i),
+                    objective: if timed_out { f64::INFINITY } else { rng.f64() * 2e3 - 1e2 },
+                    runtime_s: if rng.bool(0.1) { f64::INFINITY } else { rng.f64() * 500.0 },
+                    energy_j: rng.bool(0.5).then(|| rng.f64() * 9e3),
+                    timed_out,
+                }
+            })
+            .collect();
+        RunRecord {
+            space_fingerprint: format!("s|{}d|{}|a:{}", rng.index(9), rng.index(7), rng.index(5)),
+            app: (*rng.choose(&["xsbench", "amg", "sw\"4\\lite"])).to_string(),
+            platform: "Theta".to_string(),
+            nodes: rng.gen_range(8192) + 1,
+            metric: "runtime".to_string(),
+            seed: rng.next_u64(), // full u64 range: seeds are hex-encoded
+            baseline_objective: rng.f64() * 100.0 + 0.1,
+            best_objective: rng.f64() * 100.0,
+            best_config_key: format!("{},{}", rng.index(9), rng.index(9)),
+            wallclock_s: rng.f64() * 1e5,
+            evals,
+        }
+    }
+    for_all(
+        "RunRecord parse(render(r)) == r",
+        200,
+        37,
+        random_record,
+        |r| {
+            RunRecord::parse(&r.to_json().to_string())
+                .map(|back| back == *r && back.run_id() == r.run_id())
+                .unwrap_or(false)
+        },
+    );
+}
+
+/// Cross-run history: top-K elite extraction is a pure function of the
+/// record *set* — any permutation of the insertion order yields the
+/// same elites in the same order, and the result is deduped and
+/// ascending in objective.
+#[test]
+fn prop_history_elites_stable_under_insertion_order() {
+    use ytopt::history::{HistoryEval, RunRecord};
+    fn record(rng: &mut Pcg32, seed: u64) -> RunRecord {
+        let n = 1 + rng.index(10);
+        let evals: Vec<HistoryEval> = (0..n)
+            .map(|_| HistoryEval {
+                // small key space on purpose: cross-record duplicates
+                config_key: format!("{},{}", rng.index(4), rng.index(4)),
+                objective: (rng.f64() * 40.0).round() / 2.0,
+                runtime_s: rng.f64() * 10.0,
+                energy_j: None,
+                timed_out: rng.bool(0.1),
+            })
+            .collect();
+        RunRecord {
+            space_fingerprint: "toy".into(),
+            app: "xsbench".into(),
+            platform: "Theta".into(),
+            nodes: 64,
+            metric: "runtime".into(),
+            seed,
+            baseline_objective: 10.0,
+            best_objective: 1.0,
+            best_config_key: String::new(),
+            wallclock_s: 1.0,
+            evals,
+        }
+    }
+    for_all(
+        "top-K elites independent of record order",
+        120,
+        43,
+        |rng| {
+            let records: Vec<RunRecord> =
+                (0..2 + rng.index(5)).map(|i| record(rng, i as u64)).collect();
+            let k = 1 + rng.index(8);
+            let mut order: Vec<usize> = (0..records.len()).collect();
+            let mut r = rng.split(5);
+            r.shuffle(&mut order);
+            (records, order, k)
+        },
+        |(records, order, k)| {
+            let forward: Vec<&RunRecord> = records.iter().collect();
+            let shuffled: Vec<&RunRecord> = order.iter().map(|&i| &records[i]).collect();
+            let a = ytopt::history::top_k_elites(&forward, *k);
+            let b = ytopt::history::top_k_elites(&shuffled, *k);
+            let key = |v: &[(ytopt::space::Configuration, f64)]| {
+                v.iter().map(|(c, y)| (c.key(), y.to_bits())).collect::<Vec<_>>()
+            };
+            // identical under permutation, capped at k, deduped, ascending
+            let keys: Vec<String> = a.iter().map(|(c, _)| c.key()).collect();
+            let mut sorted_keys = keys.clone();
+            sorted_keys.sort();
+            sorted_keys.dedup();
+            let deduped = sorted_keys.len() == keys.len();
+            let ascending = a.windows(2).all(|w| w[0].1 <= w[1].1);
+            key(&a) == key(&b) && a.len() <= *k && deduped && ascending
+        },
+    );
+}
+
 #[test]
 fn prop_json_roundtrip() {
     fn random_json(rng: &mut Pcg32, depth: usize) -> Json {
