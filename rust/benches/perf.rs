@@ -5,22 +5,29 @@
 //! Sections:
 //!   hot-path   — the per-iteration BO costs: RF fit, tensor export, AOT
 //!                scoring vs pure-Rust scoring, energy reduction
+//!   scorer duel — scalar walker vs blocked lockstep kernel at the
+//!                1024x64 artifact shape, plus cold-refit vs
+//!                epoch-cached continuous-manager proposal loop; emits
+//!                BENCH_scorer.json and (with --gate) enforces the CI
+//!                acceptance ratios. `--scorer-only` runs just this.
 //!   substrate  — space sampling/encoding throughput
 //!   ablations  — kappa sweep, surrogate family, sequential vs parallel
 //!                evaluation, BO vs random vs grid
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use ytopt::apps::AppKind;
 use ytopt::bench_support::{run, section};
 use ytopt::coordinator::{autotune_with_scorer, TuneSetup};
+use ytopt::ensemble::LiarStrategy;
 use ytopt::metrics::Metric;
 use ytopt::platform::PlatformKind;
 use ytopt::runtime::Scorer;
-use ytopt::search::{StrategyKind, SurrogateKind};
+use ytopt::search::{BayesianOptimizer, BoConfig, SearchStrategy, StrategyKind, SurrogateKind};
 use ytopt::space::paper;
 use ytopt::surrogate::{export_forest, ForestConfig, RandomForest};
-use ytopt::util::Pcg32;
+use ytopt::util::{Json, Pcg32};
 
 fn make_training(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
     let mut rng = Pcg32::seeded(seed);
@@ -128,6 +135,138 @@ fn hot_path(scorer: &Arc<Scorer>, quick: bool) {
     }
 }
 
+/// One simulated continuous-manager completion cycle at the BO level:
+/// propose a replacement, impute a kriging-believer lie for it, plant
+/// the pending observation, then amend an outstanding lie with its
+/// "measurement". Cold mode disables the surrogate epoch cache and uses
+/// the scalar scorer (the pre-cache pipeline: two full refits + scalar
+/// scoring per completion); cached mode is the production path (one
+/// refit, believer reuse, blocked scoring). Returns mean seconds per
+/// completion.
+fn proposal_loop_s(cached: bool, iters: usize) -> f64 {
+    let space = Arc::new(paper::build_space(AppKind::Sw4lite, PlatformKind::Theta));
+    let scorer = Arc::new(if cached { Scorer::fallback() } else { Scorer::fallback_scalar() });
+    let mut bo = BayesianOptimizer::new(
+        space.clone(),
+        BoConfig { n_candidates: 2048, n_init: 2, ..Default::default() },
+        scorer,
+    );
+    bo.set_surrogate_cache(cached);
+    let mut rng = Pcg32::seeded(17);
+    let mut reals: Vec<f64> = Vec::new();
+    for _ in 0..160 {
+        let c = space.sample(&mut rng);
+        let y = 50.0 + rng.f64() * 20.0;
+        bo.observe(&c, y);
+        reals.push(y);
+    }
+    // warm up (first fit, allocations)
+    let c = bo.propose(&mut rng);
+    bo.observe(&c, 55.0);
+    let t = Instant::now();
+    for id in 0..iters {
+        let c = bo.propose(&mut rng);
+        let lie =
+            LiarStrategy::KrigingBeliever.impute(Some(&mut bo), &c, &reals, 60.0, &mut rng);
+        bo.observe_pending(id, &c, lie);
+        bo.resolve_pending(id, 55.0 + (id % 9) as f64);
+    }
+    t.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Scalar-vs-blocked scorer duel at the full artifact shape, plus the
+/// cold-refit vs epoch-cached proposal-loop duel. Emits
+/// `BENCH_scorer.json`; with `gate`, enforces the CI acceptance ratios
+/// (blocked >= 2x scalar; cached proposal overhead <= 0.5x cold).
+fn scorer_duel(quick: bool, gate: bool) {
+    section("scorer duel: scalar walker vs blocked lockstep (1024 candidates x 64 trees)");
+    let scalar = Scorer::fallback_scalar();
+    let blocked = Scorer::fallback();
+    let m = blocked.manifest().forest.clone();
+    let dim = 17; // SW4lite-sized space
+    let (x, y) = make_training(220, dim, 5);
+    let mut rng = Pcg32::seeded(6);
+    let forest = RandomForest::fit(
+        &x,
+        &y,
+        dim,
+        &ForestConfig { n_trees: m.trees, ..Default::default() },
+        &mut rng,
+    );
+    let tensors = export_forest(&forest, m.trees, m.nodes_per_tree, m.features, m.depth).unwrap();
+    let mut rows = vec![0.0f32; m.candidates * m.features];
+    for i in 0..m.candidates {
+        for j in 0..dim {
+            rows[i * m.features + j] = rng.f32();
+        }
+    }
+    let samples = if quick { 10 } else { 30 };
+    let r_scalar = run(&format!("score {}: scalar walker", m.candidates), 2, samples, || {
+        let o = scalar.score_candidates(&rows, m.candidates, &tensors, 1.96).unwrap();
+        std::hint::black_box(&o);
+    });
+    let r_blocked = run(&format!("score {}: blocked lockstep", m.candidates), 2, samples, || {
+        let o = blocked.score_candidates(&rows, m.candidates, &tensors, 1.96).unwrap();
+        std::hint::black_box(&o);
+    });
+    let scorer_speedup = r_scalar.mean_s / r_blocked.mean_s;
+    println!(
+        "    -> {:.1}k vs {:.1}k candidates/s: blocked is {scorer_speedup:.2}x scalar",
+        r_blocked.throughput(m.candidates) / 1e3,
+        r_scalar.throughput(m.candidates) / 1e3,
+    );
+
+    section("proposal duel: cold-refit vs epoch-cached continuous-manager loop");
+    let iters = if quick { 12 } else { 40 };
+    let cold_s = proposal_loop_s(false, iters);
+    let cached_s = proposal_loop_s(true, iters);
+    let proposal_speedup = cold_s / cached_s;
+    println!(
+        "cold-refit {:.2} ms/completion | epoch-cached {:.2} ms/completion | {proposal_speedup:.2}x",
+        cold_s * 1e3,
+        cached_s * 1e3
+    );
+
+    let doc = Json::obj(vec![
+        (
+            "shape",
+            Json::obj(vec![
+                ("candidates", (m.candidates as u64).into()),
+                ("trees", (m.trees as u64).into()),
+                ("features", (m.features as u64).into()),
+            ]),
+        ),
+        ("scalar_s", Json::Num(r_scalar.mean_s)),
+        ("blocked_s", Json::Num(r_blocked.mean_s)),
+        ("scorer_speedup", Json::Num(scorer_speedup)),
+        ("cold_proposal_s", Json::Num(cold_s)),
+        ("cached_proposal_s", Json::Num(cached_s)),
+        ("proposal_speedup", Json::Num(proposal_speedup)),
+    ]);
+    // anchor to the package root: cargo runs bench binaries with cwd set
+    // to the manifest dir, but direct invocations may not
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_scorer.json");
+    std::fs::write(&path, doc.to_string()).expect("writing BENCH_scorer.json");
+    println!("wrote {}", path.display());
+
+    if gate {
+        assert!(
+            scorer_speedup >= 2.0,
+            "CI gate: blocked scorer must be >= 2x scalar at the {}x{} shape (got {scorer_speedup:.2}x)",
+            m.candidates,
+            m.trees
+        );
+        assert!(
+            cached_s <= 0.5 * cold_s,
+            "CI gate: epoch-cached proposal overhead must be <= 0.5x cold-refit \
+             (got {:.2} ms vs {:.2} ms)",
+            cached_s * 1e3,
+            cold_s * 1e3
+        );
+        println!("scorer gates passed: {scorer_speedup:.2}x blocked, {proposal_speedup:.2}x cached proposals");
+    }
+}
+
 fn substrate(quick: bool) {
     section("substrate: space sampling / encoding");
     let samples = if quick { 10 } else { 30 };
@@ -218,7 +357,14 @@ fn ablations(scorer: &Arc<Scorer>, quick: bool) {
 }
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let gate = args.iter().any(|a| a == "--gate");
+    let scorer_only = args.iter().any(|a| a == "--scorer-only");
+    if scorer_only {
+        scorer_duel(quick, gate);
+        return;
+    }
     let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
     println!(
         "scorer backend: {}",
@@ -226,6 +372,7 @@ fn main() {
     );
     l2_cost_analysis();
     hot_path(&scorer, quick);
+    scorer_duel(quick, gate);
     substrate(quick);
     ablations(&scorer, quick);
 }

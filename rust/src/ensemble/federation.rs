@@ -93,9 +93,17 @@ pub struct ShardSpec {
 
 impl ShardSpec {
     /// Does `cfg` belong to this shard's partition? With one shard the
-    /// answer is always yes (the unsharded special case).
+    /// answer is always yes (the unsharded special case) — short-circuit
+    /// before paying the `index_of` walk.
     pub fn contains(&self, space: &ConfigSpace, cfg: &Configuration) -> bool {
-        self.shards <= 1 || shard_of_index(self.seed, space.index_of(cfg), self.shards) == self.shard
+        self.shards <= 1 || self.contains_index(space.index_of(cfg))
+    }
+
+    /// Membership by flat configuration index — for callers that already
+    /// hold the index (the BO candidate path dedups by it), sparing the
+    /// second `index_of` walk.
+    pub fn contains_index(&self, flat: u128) -> bool {
+        self.shards <= 1 || shard_of_index(self.seed, flat, self.shards) == self.shard
     }
 
     fn stride(&self) -> usize {
@@ -537,7 +545,7 @@ impl ContinuousShard {
             if !replayed && inflight_target > 1 {
                 if let Some(bo) = strat.as_bo_mut() {
                     let lie = setup.liar.impute(
-                        Some(&*bo),
+                        Some(&mut *bo),
                         cfg,
                         &real_objectives,
                         baseline_objective,
@@ -677,7 +685,7 @@ impl ContinuousShard {
             if self.inflight_target > 1 {
                 if let Some(bo) = self.strat.as_bo_mut() {
                     let lie = self.setup.liar.impute(
-                        Some(&*bo),
+                        Some(&mut *bo),
                         &cfg,
                         &self.real_objectives,
                         self.baseline_objective,

@@ -59,10 +59,15 @@ impl LiarStrategy {
     /// `real_ys` are the finite real measurements so far; `fallback` (the
     /// baseline objective) is used before any exist. The kriging believer
     /// consults the optimizer's surrogate and degrades to `cl-mean` when
-    /// the posterior is unavailable (fewer than two observations).
+    /// the posterior is unavailable (fewer than two observations). The
+    /// optimizer is `&mut` because the believer reuses — or, on the
+    /// first model use of an epoch, fits — the epoch-cached surrogate
+    /// (`BayesianOptimizer::predict_mean`): on the continuous manager's
+    /// per-completion path this removes the throwaway per-lie forest fit
+    /// entirely.
     pub fn impute(
         &self,
-        bo: Option<&BayesianOptimizer>,
+        bo: Option<&mut BayesianOptimizer>,
         cfg: &Configuration,
         real_ys: &[f64],
         fallback: f64,

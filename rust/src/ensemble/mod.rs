@@ -16,7 +16,9 @@
 //!   the observation they belong to through the index-keyed
 //!   `BayesianOptimizer::observe_pending` / `resolve_pending` pair —
 //!   never positionally, which would corrupt the surrogate the moment a
-//!   completion lands out of proposal order.
+//!   completion lands out of proposal order. The believer reads the
+//!   epoch-cached surrogate (the same fit the proposal scored with), so
+//!   a per-completion imputation costs a tree descent, not a refit.
 //! * manager cycle ([`ManagerCycle`]) — **continuous** (the default):
 //!   an event-driven loop that blocks on the result channel and, on
 //!   every single completion, amends that result's pending lie by
@@ -622,7 +624,7 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
                     if let Some(bo) = strat.as_bo_mut() {
                         if batch > 1 {
                             let lie = setup.liar.impute(
-                                Some(&*bo),
+                                Some(&mut *bo),
                                 &cfg,
                                 &real_objectives,
                                 baseline_objective,

@@ -1,0 +1,307 @@
+//! Blocked lockstep batch scorer — the Pallas-equivalent forest kernel
+//! in pure Rust (ROADMAP: "a Pallas-equivalent batch scorer in pure
+//! Rust with SIMD" was the open item behind the `xla`-gated runtime).
+//!
+//! The scalar reference ([`super::fallback::forest_score_cpu`]) walks
+//! one candidate through one tree at a time with a data-dependent
+//! branch per node — every `x <= thresh` is a coin-flip the branch
+//! predictor loses, and each candidate re-streams all 64 trees' node
+//! tensors through the cache. This kernel flips the loop nest the same
+//! way the Pallas artifact does:
+//!
+//! * **trees outer, candidates inner** — one tree's five SoA node
+//!   arrays (≤ 512 nodes × 4 B each ≈ 10 KiB) stay L1-resident while a
+//!   whole block of candidates descends through them;
+//! * **depth-step lockstep** — all candidates in a block take one
+//!   descent step per pass over the block, so the inner loop is a flat
+//!   `idx = if x <= thresh { left } else { right }` select over
+//!   contiguous `f32`/`i32` lanes with no early-out branch per node
+//!   (conditional moves, autovectorizable), exactly the kernel's
+//!   `jnp.where` step;
+//! * **self-looping leaves** — the export encodes every leaf (and pad
+//!   node) with `left == right == own index`, so a settled lane is a
+//!   fixed point of the step and extra steps are the identity. A block
+//!   stops stepping as soon as no lane moved (bounded by
+//!   `nodes_per_tree` against degenerate tensors), which restores the
+//!   scalar walker's early exit without its per-node branch.
+//!
+//! Per-candidate accumulation runs in tree order with the same `f64`
+//! sum / sum-of-squares reduction as the scalar reference, so the
+//! output is **bit-identical** to `forest_score_cpu` — for every block
+//! size, thread count, and batch shape (pinned by
+//! `tests/property_invariants.rs`). The optional `std::thread::scope`
+//! parallelism splits candidates into disjoint block-aligned ranges;
+//! each lane's reduction is private to one thread, so parallelism can
+//! never reorder a candidate's sum.
+
+use super::fallback::ScoreOut;
+use crate::surrogate::ForestTensors;
+
+/// Candidates per lockstep block: 128 rows × 32 features × 4 B = 16 KiB
+/// of encoded rows plus the per-lane index/accumulator arrays — sized so
+/// a block and one tree's node tensors co-reside in L1.
+pub const BLOCK: usize = 128;
+
+/// Candidate count below which spawning scoped threads costs more than
+/// it saves; smaller batches run the blocked kernel inline.
+const PAR_MIN_CANDIDATES: usize = 2 * BLOCK;
+
+/// Score one block of `b <= BLOCK` candidates (rows at `rows`, row-major
+/// `[b, dim]`) through every tree, writing the per-candidate outputs.
+fn score_block(
+    rows: &[f32],
+    dim: usize,
+    tensors: &ForestTensors,
+    kappa: f32,
+    mean: &mut [f32],
+    std: &mut [f32],
+    lcb: &mut [f32],
+) {
+    let b = mean.len();
+    debug_assert!(b <= BLOCK);
+    debug_assert_eq!(rows.len(), b * dim);
+    let npt = tensors.nodes_per_tree;
+    let mut idx = [0u32; BLOCK];
+    let mut sum = [0f64; BLOCK];
+    let mut sq = [0f64; BLOCK];
+    for ti in 0..tensors.trees {
+        let base = ti * npt;
+        let feat = &tensors.feat[base..base + npt];
+        let thresh = &tensors.thresh[base..base + npt];
+        let left = &tensors.left[base..base + npt];
+        let right = &tensors.right[base..base + npt];
+        let leaf = &tensors.leaf[base..base + npt];
+        idx[..b].fill(0);
+        // lockstep descent: every lane takes one step per pass; leaves
+        // self-loop so settled lanes are fixed points. `npt` passes
+        // bound the loop even against degenerate (cyclic) tensors.
+        for _ in 0..npt {
+            let mut moved = 0u32;
+            for c in 0..b {
+                let i = idx[c] as usize;
+                let f = feat[i];
+                // leaves carry f == -1: read column 0, the self-loop
+                // makes the comparison irrelevant. Columns beyond the
+                // row width read 0.0, matching the scalar walker's
+                // defensive `row.get(..).unwrap_or(0.0)`.
+                let col = if f < 0 { 0 } else { f as usize };
+                let x = if col < dim { rows[c * dim + col] } else { 0.0 };
+                let next = if x <= thresh[i] { left[i] } else { right[i] } as u32;
+                moved |= next ^ idx[c];
+                idx[c] = next;
+            }
+            if moved == 0 {
+                break;
+            }
+        }
+        for c in 0..b {
+            let p = leaf[idx[c] as usize] as f64;
+            sum[c] += p;
+            sq[c] += p * p;
+        }
+    }
+    // identical reduction arithmetic to the scalar reference
+    let k = tensors.trees as f64;
+    for c in 0..b {
+        let m = sum[c] / k;
+        let var = (sq[c] / k - m * m).max(0.0);
+        let s = var.sqrt();
+        mean[c] = m as f32;
+        std[c] = s as f32;
+        lcb[c] = (m - kappa as f64 * s) as f32;
+    }
+}
+
+/// Score a contiguous candidate range block by block.
+fn score_range(
+    rows: &[f32],
+    dim: usize,
+    tensors: &ForestTensors,
+    kappa: f32,
+    mean: &mut [f32],
+    std: &mut [f32],
+    lcb: &mut [f32],
+) {
+    let n = mean.len();
+    let mut c0 = 0;
+    while c0 < n {
+        let b = (n - c0).min(BLOCK);
+        score_block(
+            &rows[c0 * dim..(c0 + b) * dim],
+            dim,
+            tensors,
+            kappa,
+            &mut mean[c0..c0 + b],
+            &mut std[c0..c0 + b],
+            &mut lcb[c0..c0 + b],
+        );
+        c0 += b;
+    }
+}
+
+/// Blocked lockstep forest scoring, single-threaded. Bit-identical to
+/// [`super::fallback::forest_score_cpu`] on the same inputs.
+pub fn forest_score_blocked(
+    features: &[f32],
+    dim: usize,
+    tensors: &ForestTensors,
+    kappa: f32,
+) -> ScoreOut {
+    forest_score_blocked_par(features, dim, tensors, kappa, 1)
+}
+
+/// Blocked lockstep forest scoring over up to `threads` scoped threads.
+///
+/// Candidates split into disjoint, block-aligned contiguous ranges; each
+/// range's per-candidate reduction runs entirely on one thread in tree
+/// order, so the output is bit-identical to the single-threaded kernel —
+/// and to the scalar reference — for every thread count.
+pub fn forest_score_blocked_par(
+    features: &[f32],
+    dim: usize,
+    tensors: &ForestTensors,
+    kappa: f32,
+    threads: usize,
+) -> ScoreOut {
+    assert_eq!(features.len() % dim, 0);
+    let n = features.len() / dim;
+    let mut out = ScoreOut {
+        mean: vec![0.0; n],
+        std: vec![0.0; n],
+        lcb: vec![0.0; n],
+    };
+    let blocks = n.div_ceil(BLOCK).max(1);
+    let threads = threads.clamp(1, blocks);
+    if threads == 1 || n == 0 {
+        score_range(features, dim, tensors, kappa, &mut out.mean, &mut out.std, &mut out.lcb);
+        return out;
+    }
+    // block-aligned contiguous chunk per thread
+    let chunk = blocks.div_ceil(threads) * BLOCK;
+    std::thread::scope(|s| {
+        let mut rest_rows = features;
+        let mut rest_mean: &mut [f32] = &mut out.mean;
+        let mut rest_std: &mut [f32] = &mut out.std;
+        let mut rest_lcb: &mut [f32] = &mut out.lcb;
+        while !rest_mean.is_empty() {
+            let take = rest_mean.len().min(chunk);
+            let (rows, rr) = rest_rows.split_at(take * dim);
+            let (m, rm) = rest_mean.split_at_mut(take);
+            let (sd, rs) = rest_std.split_at_mut(take);
+            let (l, rl) = rest_lcb.split_at_mut(take);
+            rest_rows = rr;
+            rest_mean = rm;
+            rest_std = rs;
+            rest_lcb = rl;
+            s.spawn(move || score_range(rows, dim, tensors, kappa, m, sd, l));
+        }
+    });
+    out
+}
+
+/// The production fallback entry point: blocked lockstep, with scoped
+/// threads once the batch is large enough to amortize the spawns.
+pub fn forest_score_blocked_auto(
+    features: &[f32],
+    dim: usize,
+    tensors: &ForestTensors,
+    kappa: f32,
+) -> ScoreOut {
+    let n = if dim > 0 { features.len() / dim } else { 0 };
+    let threads = if n >= PAR_MIN_CANDIDATES {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        1
+    };
+    forest_score_blocked_par(features, dim, tensors, kappa, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::fallback::forest_score_cpu;
+    use crate::surrogate::{export_forest, ForestConfig, RandomForest};
+    use crate::util::Pcg32;
+
+    fn fitted_tensors(seed: u64, dim: usize, trees: usize) -> ForestTensors {
+        let mut rng = Pcg32::seeded(seed);
+        let n = 160;
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+            y.push(row[0] * 2.0 - row[dim - 1] + (row[dim / 2] * 5.0).sin());
+            x.extend(row);
+        }
+        let cfg = ForestConfig { n_trees: trees, ..Default::default() };
+        let rf = RandomForest::fit(&x, &y, dim, &cfg, &mut rng);
+        export_forest(&rf, trees, 512, 32, 16).unwrap()
+    }
+
+    fn probe_rows(seed: u64, n: usize, dim: usize, width: usize) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut rows = vec![0.0f32; n * width];
+        for i in 0..n {
+            for j in 0..dim {
+                rows[i * width + j] = rng.f32() * 1.4 - 0.2;
+            }
+        }
+        rows
+    }
+
+    fn assert_bit_identical(a: &ScoreOut, b: &ScoreOut) {
+        assert_eq!(a.mean.len(), b.mean.len());
+        for i in 0..a.mean.len() {
+            assert_eq!(a.mean[i].to_bits(), b.mean[i].to_bits(), "mean[{i}]");
+            assert_eq!(a.std[i].to_bits(), b.std[i].to_bits(), "std[{i}]");
+            assert_eq!(a.lcb[i].to_bits(), b.lcb[i].to_bits(), "lcb[{i}]");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_scalar_across_batch_shapes() {
+        let t = fitted_tensors(1, 6, 64);
+        for n in [0usize, 1, 2, BLOCK - 1, BLOCK, BLOCK + 1, 3 * BLOCK + 7] {
+            let rows = probe_rows(7 + n as u64, n, 6, 32);
+            let scalar = forest_score_cpu(&rows, 32, &t, 1.96);
+            let blocked = forest_score_blocked(&rows, 32, &t, 1.96);
+            assert_bit_identical(&scalar, &blocked);
+        }
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_for_every_thread_count() {
+        let t = fitted_tensors(2, 9, 64);
+        let n = 4 * BLOCK + 33;
+        let rows = probe_rows(11, n, 9, 32);
+        let scalar = forest_score_cpu(&rows, 32, &t, 0.5);
+        for threads in [1usize, 2, 3, 5, 16, 64] {
+            let par = forest_score_blocked_par(&rows, 32, &t, 0.5, threads);
+            assert_bit_identical(&scalar, &par);
+        }
+        let auto = forest_score_blocked_auto(&rows, 32, &t, 0.5);
+        assert_bit_identical(&scalar, &auto);
+    }
+
+    #[test]
+    fn kappa_flows_into_lcb() {
+        let t = fitted_tensors(3, 4, 8);
+        let rows = probe_rows(13, 40, 4, 32);
+        for kappa in [0.0f32, 0.5, 1.96, 4.0] {
+            let blocked = forest_score_blocked(&rows, 32, &t, kappa);
+            let scalar = forest_score_cpu(&rows, 32, &t, kappa);
+            assert_bit_identical(&scalar, &blocked);
+            for i in 0..40 {
+                let want = (blocked.mean[i] as f64 - kappa as f64 * blocked.std[i] as f64) as f32;
+                assert_eq!(blocked.lcb[i].to_bits(), want.to_bits(), "lcb[{i}] kappa {kappa}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_yields_empty_output() {
+        let t = fitted_tensors(4, 3, 8);
+        let out = forest_score_blocked_auto(&[], 32, &t, 1.0);
+        assert!(out.mean.is_empty() && out.std.is_empty() && out.lcb.is_empty());
+    }
+}

@@ -1,9 +1,10 @@
-//! Pure-Rust reference implementations of both AOT computations.
+//! Pure-Rust scalar reference implementations of both AOT computations.
 //!
 //! Exactly the semantics of `python/compile/kernels/{forest,energy}.py`:
-//! used (a) as the no-artifacts execution path, (b) to cross-check the
-//! PJRT executables in rust/tests/, and (c) as the perf baseline the AOT
-//! scorer is benchmarked against.
+//! used (a) to cross-check the PJRT executables in rust/tests/, (b) as
+//! the bit-identity oracle for the blocked lockstep kernel in
+//! [`super::batch`] (which is the production no-artifacts path), and
+//! (c) as the perf baseline both accelerated scorers duel against.
 
 use crate::surrogate::ForestTensors;
 

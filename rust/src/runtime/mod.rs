@@ -6,12 +6,17 @@
 //! parser reassigns ids (see python/compile/aot.py and DESIGN.md).
 //!
 //! [`Scorer`] is the dispatch point the search loop uses: the XLA path
-//! when artifacts are present, the bit-compatible pure-Rust [`fallback`]
-//! otherwise (also used for cross-checking in rust/tests/).
+//! when artifacts are present, the pure-Rust blocked lockstep kernel in
+//! [`batch`] otherwise (with the scalar [`fallback`] walker kept as the
+//! bit-identical reference for cross-checking in rust/tests/ and as the
+//! perf-bench baseline). Both pure-Rust paths chunk candidate batches at
+//! the manifest's batch width, mirroring the AOT artifact's fixed shape.
 
+pub mod batch;
 pub mod fallback;
 pub mod manifest;
 
+pub use batch::{forest_score_blocked, forest_score_blocked_auto, forest_score_blocked_par};
 pub use fallback::{energy_reduce_cpu, forest_score_cpu, ScoreOut};
 pub use manifest::{EnergyShape, ForestShape, Manifest};
 
@@ -138,11 +143,17 @@ impl XlaRuntime {
 }
 
 /// Execution backend for the search loop: AOT XLA artifacts when
-/// available, the pure-Rust reference otherwise.
+/// available, the pure-Rust blocked lockstep kernel otherwise.
 pub enum Scorer {
     #[cfg(feature = "xla")]
     Xla(Box<XlaRuntime>),
+    /// Pure-Rust production path: the blocked lockstep kernel in
+    /// [`batch`] (scoped-thread parallel on large batches).
     Fallback(Manifest),
+    /// Pure-Rust scalar reference walker ([`forest_score_cpu`]): the
+    /// oracle the blocked kernel is pinned bit-identical against, and
+    /// the "cold" side of the perf-bench scorer duel.
+    FallbackScalar(Manifest),
 }
 
 impl Scorer {
@@ -167,11 +178,18 @@ impl Scorer {
         Scorer::Fallback(Manifest::default_shapes())
     }
 
+    /// The scalar reference walker — for cross-checking the blocked
+    /// kernel and benchmarking the pre-blocked pipeline. Numerically
+    /// identical to [`Scorer::fallback`]; only slower.
+    pub fn fallback_scalar() -> Scorer {
+        Scorer::FallbackScalar(Manifest::default_shapes())
+    }
+
     pub fn manifest(&self) -> &Manifest {
         match self {
             #[cfg(feature = "xla")]
             Scorer::Xla(rt) => &rt.manifest,
-            Scorer::Fallback(m) => m,
+            Scorer::Fallback(m) | Scorer::FallbackScalar(m) => m,
         }
     }
 
@@ -189,6 +207,10 @@ impl Scorer {
     /// Score `n` encoded candidates (row-major, `dim` == manifest feature
     /// width required from the caller via padding) — handles batching to
     /// the artifact's fixed candidate count and trims the padded tail.
+    /// The pure-Rust paths chunk at the same manifest batch width as the
+    /// AOT artifact, so every kernel invocation — accelerated or not —
+    /// sees at most `manifest.forest.candidates` rows per call (the
+    /// `BoConfig::n_candidates` "larger batches loop" contract).
     pub fn score_candidates(
         &self,
         rows: &[f32],
@@ -199,7 +221,30 @@ impl Scorer {
         let f = self.manifest().forest.features;
         anyhow::ensure!(rows.len() == n * f, "rows buffer mismatch: {} != {n}*{f}", rows.len());
         match self {
-            Scorer::Fallback(_) => Ok(forest_score_cpu(rows, f, tensors, kappa)),
+            Scorer::Fallback(m) | Scorer::FallbackScalar(m) => {
+                let blocked = matches!(self, Scorer::Fallback(_));
+                let c = m.forest.candidates.max(1);
+                let mut out = ScoreOut {
+                    mean: Vec::with_capacity(n),
+                    std: Vec::with_capacity(n),
+                    lcb: Vec::with_capacity(n),
+                };
+                let mut i = 0;
+                while i < n {
+                    let take = (n - i).min(c);
+                    let chunk = &rows[i * f..(i + take) * f];
+                    let s = if blocked {
+                        batch::forest_score_blocked_auto(chunk, f, tensors, kappa)
+                    } else {
+                        forest_score_cpu(chunk, f, tensors, kappa)
+                    };
+                    out.mean.extend_from_slice(&s.mean);
+                    out.std.extend_from_slice(&s.std);
+                    out.lcb.extend_from_slice(&s.lcb);
+                    i += take;
+                }
+                Ok(out)
+            }
             #[cfg(feature = "xla")]
             Scorer::Xla(rt) => {
                 let c = rt.manifest.forest.candidates;
@@ -239,7 +284,7 @@ impl Scorer {
     ) -> Result<(Vec<f32>, f32, f32)> {
         anyhow::ensure!(pkg.len() == nodes * samples && dram.len() == nodes * samples);
         match self {
-            Scorer::Fallback(_) => {
+            Scorer::Fallback(_) | Scorer::FallbackScalar(_) => {
                 let active = vec![1.0f32; nodes];
                 Ok(energy_reduce_cpu(pkg, dram, &active, samples, n_samples, dt, runtime))
             }

@@ -91,8 +91,18 @@ pub fn export_forest(
         for (i, n) in tree.nodes.iter().enumerate() {
             out.feat[base + i] = n.feature;
             out.thresh[base + i] = n.threshold;
-            out.left[base + i] = n.left as i32;
-            out.right[base + i] = n.right as i32;
+            // normalize every leaf to a self-loop regardless of how the
+            // tree stored its children: lockstep descent (the Pallas
+            // kernel and runtime::batch) relies on settled lanes being
+            // fixed points of `idx = if x <= thresh { left } else
+            // { right }`, with no feat >= 0 guard in the hot loop
+            if n.feature < 0 {
+                out.left[base + i] = i as i32;
+                out.right[base + i] = i as i32;
+            } else {
+                out.left[base + i] = n.left as i32;
+                out.right[base + i] = n.right as i32;
+            }
             out.leaf[base + i] = n.value;
         }
         // pad nodes: leaves that self-loop (feat already -1, value 0)
@@ -166,6 +176,28 @@ mod tests {
                 assert_eq!(t.leaf[base + idx], tree.predict_one(&row));
             }
         }
+    }
+
+    /// Every node with `feature < 0` — real leaves, not just padding —
+    /// must self-loop: the blocked lockstep kernel steps settled lanes
+    /// through `left`/`right` unconditionally and depends on leaves
+    /// being fixed points.
+    #[test]
+    fn real_leaves_self_loop_in_the_export() {
+        let f = small_forest(4);
+        let t = export_forest(&f, 4, 512, 32, 16).unwrap();
+        let mut leaves = 0;
+        for ti in 0..4 {
+            let base = ti * 512;
+            for i in 0..f.trees[ti].n_nodes() {
+                if t.feat[base + i] < 0 {
+                    leaves += 1;
+                    assert_eq!(t.left[base + i], i as i32, "tree {ti} node {i}");
+                    assert_eq!(t.right[base + i], i as i32, "tree {ti} node {i}");
+                }
+            }
+        }
+        assert!(leaves > 0, "fitted trees must contain real leaves");
     }
 
     #[test]

@@ -51,9 +51,33 @@ pub struct RandomForest {
 
 impl RandomForest {
     /// Fit on `n` rows of `dim` features (row-major x).
+    ///
+    /// Draws exactly one `u64` from `rng` per tree (the per-tree stream
+    /// seed, as [`Pcg32::split`] would) and delegates to
+    /// [`Self::fit_with_seeds`] — so a caller that pre-draws the seeds
+    /// itself consumes the stream identically and fits the identical
+    /// forest. That equivalence is what lets the BO surrogate epoch
+    /// cache key its fitted forest on the drawn seeds and stay
+    /// seed-for-seed bit-identical with an uncached refit.
     pub fn fit(x: &[f32], y: &[f32], dim: usize, cfg: &ForestConfig, rng: &mut Pcg32) -> Self {
+        let seeds: Vec<u64> = (0..cfg.n_trees).map(|_| rng.next_u64()).collect();
+        Self::fit_with_seeds(x, y, dim, cfg, &seeds)
+    }
+
+    /// Fit with pre-drawn per-tree stream seeds. Tree `t` runs on the
+    /// stream `Pcg32::split` would have derived for `(seeds[t], t)`, so
+    /// `fit` and `fit_with_seeds` produce bit-identical forests for the
+    /// same seed values.
+    pub fn fit_with_seeds(
+        x: &[f32],
+        y: &[f32],
+        dim: usize,
+        cfg: &ForestConfig,
+        seeds: &[u64],
+    ) -> Self {
         assert!(!y.is_empty());
         assert_eq!(x.len(), y.len() * dim);
+        assert_eq!(seeds.len(), cfg.n_trees, "one stream seed per tree");
         let n = y.len();
         let mut tree_cfg = cfg.tree.clone();
         if tree_cfg.max_features.is_none() {
@@ -62,7 +86,12 @@ impl RandomForest {
         }
         let trees = (0..cfg.n_trees)
             .map(|t| {
-                let mut trng = rng.split(t as u64);
+                // the exact Pcg32::split(t) derivation, from the
+                // pre-drawn seed
+                let mut trng = Pcg32::new(
+                    seeds[t],
+                    (t as u64).wrapping_mul(2654435769).wrapping_add(1),
+                );
                 let rows: Vec<usize> = if cfg.bootstrap {
                     (0..n).map(|_| trng.index(n)).collect()
                 } else {
@@ -117,7 +146,24 @@ pub struct GbrtLite {
 }
 
 impl GbrtLite {
+    /// Fit, drawing one stream seed per boosting stage from `rng` (see
+    /// [`RandomForest::fit`] for why the draws are hoisted: pre-drawing
+    /// the seeds consumes the stream identically).
     pub fn fit(x: &[f32], y: &[f32], dim: usize, n_stages: usize, rng: &mut Pcg32) -> Self {
+        let seeds: Vec<u64> = (0..n_stages).map(|_| rng.next_u64()).collect();
+        Self::fit_with_seeds(x, y, dim, n_stages, &seeds)
+    }
+
+    /// Fit with pre-drawn per-stage stream seeds; bit-identical to
+    /// [`Self::fit`] for the same seed values.
+    pub fn fit_with_seeds(
+        x: &[f32],
+        y: &[f32],
+        dim: usize,
+        n_stages: usize,
+        seeds: &[u64],
+    ) -> Self {
+        assert_eq!(seeds.len(), n_stages, "one stream seed per stage");
         let n = y.len();
         let base = y.iter().sum::<f32>() / n as f32;
         let lr = 0.15f32;
@@ -128,7 +174,11 @@ impl GbrtLite {
         for s in 0..n_stages {
             resid.clear();
             resid.extend(y.iter().zip(pred.iter()).map(|(yy, pp)| yy - pp));
-            let mut trng = rng.split(1000 + s as u64);
+            // the exact Pcg32::split(1000 + s) derivation
+            let mut trng = Pcg32::new(
+                seeds[s],
+                (1000 + s as u64).wrapping_mul(2654435769).wrapping_add(1),
+            );
             let t = Tree::fit(x, &resid, dim, &cfg, &mut trng);
             for (i, p) in pred.iter_mut().enumerate() {
                 *p += lr * t.predict_one(&x[i * dim..(i + 1) * dim]);
@@ -210,6 +260,35 @@ mod tests {
         let mut rng = Pcg32::seeded(6);
         let rf = RandomForest::fit(&x, &y, 2, &ForestConfig::default(), &mut rng);
         assert_eq!(rf.trees.len(), 64);
+    }
+
+    /// Pre-drawing the per-tree seeds must be indistinguishable from
+    /// letting `fit` split the stream itself: identical forest AND
+    /// identical stream position afterwards — the equivalence the BO
+    /// epoch cache's seed-for-seed guarantee stands on.
+    #[test]
+    fn fit_with_seeds_matches_fit_and_stream_position() {
+        let (x, y) = make_data(90, 3, 15, |r| r[0] * r[2] - r[1]);
+        let cfg = ForestConfig::default();
+        let mut r1 = Pcg32::seeded(77);
+        let a = RandomForest::fit(&x, &y, 3, &cfg, &mut r1);
+        let mut r2 = Pcg32::seeded(77);
+        let seeds: Vec<u64> = (0..cfg.n_trees).map(|_| r2.next_u64()).collect();
+        let b = RandomForest::fit_with_seeds(&x, &y, 3, &cfg, &seeds);
+        assert_eq!(r1.state(), r2.state(), "stream positions diverged");
+        let probe = [0.25f32, 0.5, 0.75];
+        let (ma, sa) = a.predict_one(&probe);
+        let (mb, sb) = b.predict_one(&probe);
+        assert_eq!(ma.to_bits(), mb.to_bits());
+        assert_eq!(sa.to_bits(), sb.to_bits());
+
+        let mut g1 = Pcg32::seeded(78);
+        let ga = GbrtLite::fit(&x, &y, 3, 12, &mut g1);
+        let mut g2 = Pcg32::seeded(78);
+        let gseeds: Vec<u64> = (0..12).map(|_| g2.next_u64()).collect();
+        let gb = GbrtLite::fit_with_seeds(&x, &y, 3, 12, &gseeds);
+        assert_eq!(g1.state(), g2.state());
+        assert_eq!(ga.predict_one(&probe).0.to_bits(), gb.predict_one(&probe).0.to_bits());
     }
 
     #[test]

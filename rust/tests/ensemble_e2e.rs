@@ -501,6 +501,32 @@ fn federated_resume_under_a_different_policy_is_refused() {
     }
 }
 
+/// The kriging believer now reuses the epoch-cached surrogate (one fit
+/// per completion instead of a throwaway forest per in-flight lie):
+/// the full continuous-manager engine must stay seed-for-seed
+/// deterministic under it, with real worker-pool interleavings, and
+/// still tune.
+#[test]
+fn kriging_believer_continuous_runs_are_deterministic_with_believer_reuse() {
+    let mut s = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+    s.max_evals = 24;
+    s.wallclock_budget_s = 1e9;
+    s.seed = 19;
+    s.ensemble_workers = 6;
+    s.liar = LiarStrategy::KrigingBeliever;
+    let a = run(&s);
+    let b = run(&s);
+    assert_eq!(a.evaluations, 24);
+    assert_eq!(history(&a), history(&b), "believer reuse broke seed-for-seed determinism");
+    assert_eq!(a.best_objective.to_bits(), b.best_objective.to_bits());
+    assert!(
+        a.best_objective < a.baseline_objective * 1.05,
+        "believer run went backwards: {} vs baseline {}",
+        a.best_objective,
+        a.baseline_objective
+    );
+}
+
 #[test]
 fn liar_strategies_all_reach_comparable_quality() {
     let mut setup = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);

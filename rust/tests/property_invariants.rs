@@ -6,7 +6,7 @@ use ytopt::apps::AppKind;
 use ytopt::platform::PlatformKind;
 use ytopt::power::GeopmReport;
 use ytopt::proptest_lite::for_all;
-use ytopt::runtime::forest_score_cpu;
+use ytopt::runtime::{forest_score_blocked, forest_score_blocked_par, forest_score_cpu};
 use ytopt::space::{paper, Configuration};
 use ytopt::surrogate::{export_forest, ForestConfig, RandomForest};
 use ytopt::util::{Json, Pcg32};
@@ -157,6 +157,62 @@ fn prop_forest_export_preserves_predictions() {
                 let (m, s) = forest.predict_one(&probe[i * dim..(i + 1) * dim]);
                 (out.mean[i] - m).abs() < 1e-4 && (out.std[i] - s).abs() < 1e-3
             })
+        },
+    );
+}
+
+/// The blocked lockstep scorer (and its scoped-thread parallel variant)
+/// is bit-identical to the scalar reference walker — across random
+/// forests, feature dimensionalities, kappa values, thread counts, and
+/// batch sizes including n = 0, n = 1, and n not a multiple of the
+/// 128-candidate block. This is the invariant that lets the production
+/// fallback path swap kernels without perturbing a single trajectory.
+#[test]
+fn prop_blocked_scorer_bit_identical_to_scalar() {
+    for_all(
+        "blocked lockstep == scalar walker, bit for bit",
+        20,
+        47,
+        |rng| {
+            let dim = 1 + rng.index(16);
+            let n_obs = 25 + rng.index(120);
+            let mut x = Vec::with_capacity(n_obs * dim);
+            let mut y = Vec::with_capacity(n_obs);
+            for _ in 0..n_obs {
+                let row: Vec<f32> = (0..dim).map(|_| rng.f32()).collect();
+                y.push(row.iter().sum::<f32>() * 2.0 + rng.f32() * 0.3);
+                x.extend(row);
+            }
+            let trees = *rng.choose(&[1usize, 8, 64]);
+            let cfg = ForestConfig { n_trees: trees, ..Default::default() };
+            let mut frng = rng.split(13);
+            let forest = RandomForest::fit(&x, &y, dim, &cfg, &mut frng);
+            let tensors = export_forest(&forest, trees, 512, 32, 16).unwrap();
+            let n = *rng.choose(&[0usize, 1, 2, 127, 128, 129, 200, 300]);
+            let mut rows = vec![0.0f32; n * 32];
+            for i in 0..n {
+                for j in 0..dim {
+                    rows[i * 32 + j] = rng.f32() * 1.6 - 0.3;
+                }
+            }
+            let kappa = *rng.choose(&[0.0f32, 0.5, 1.96, 4.0]);
+            let threads = 1 + rng.index(6);
+            (tensors, rows, kappa, threads)
+        },
+        |(tensors, rows, kappa, threads)| {
+            let scalar = forest_score_cpu(rows, 32, tensors, *kappa);
+            let blocked = forest_score_blocked(rows, 32, tensors, *kappa);
+            let par = forest_score_blocked_par(rows, 32, tensors, *kappa, *threads);
+            let n = rows.len() / 32;
+            scalar.mean.len() == n
+                && (0..n).all(|i| {
+                    scalar.mean[i].to_bits() == blocked.mean[i].to_bits()
+                        && scalar.std[i].to_bits() == blocked.std[i].to_bits()
+                        && scalar.lcb[i].to_bits() == blocked.lcb[i].to_bits()
+                        && scalar.mean[i].to_bits() == par.mean[i].to_bits()
+                        && scalar.std[i].to_bits() == par.std[i].to_bits()
+                        && scalar.lcb[i].to_bits() == par.lcb[i].to_bits()
+                })
         },
     );
 }
