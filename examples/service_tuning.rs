@@ -1,0 +1,117 @@
+//! Tuning-as-a-service: an in-process daemon on a loopback socket, two
+//! concurrent campaigns submitted through the framed wire client, live
+//! event streaming, and an automatic shared-history warm start for the
+//! follow-up campaign.
+//!
+//! ```bash
+//! cargo run --release --example service_tuning
+//! ```
+//!
+//! This is the long-lived deployment mode of the paper's tuner: instead
+//! of one batch job per campaign, `ytopt-rs serve` keeps a scheduler,
+//! worker substrate, and cross-run history store resident, and clients
+//! submit campaigns over a length-prefixed framed protocol (`submit`,
+//! `watch`, `status`, `cancel`, `shutdown`). Every completed campaign
+//! feeds the shared history store, so the *next* compatible campaign
+//! warm-starts from its predecessors' elites with no flags at all.
+
+use std::sync::Arc;
+
+use ytopt::runtime::Scorer;
+use ytopt::service::{CampaignSpec, Client, Daemon, Event, ServeConfig, ServiceConfig};
+
+fn main() -> anyhow::Result<()> {
+    let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
+    let history = std::env::temp_dir().join("ytopt-service-example-history");
+    let _ = std::fs::remove_dir_all(&history); // fresh store each invocation
+    std::fs::create_dir_all(&history)?;
+
+    // an ephemeral loopback daemon — in production this is `ytopt-rs
+    // serve --addr 127.0.0.1:7459 --history-dir ~/.ytopt/history`
+    let daemon = Daemon::start(
+        ServeConfig {
+            listen: "127.0.0.1:0".into(),
+            service: ServiceConfig {
+                max_active: 2,
+                history_dir: Some(history.clone()),
+                checkpoint_dir: None,
+                warm_start_elites: 8,
+            },
+        },
+        scorer,
+    )?;
+    let addr = daemon.addr().to_string();
+    println!("daemon listening on {addr}\n");
+
+    let mut client = Client::connect(&addr)?;
+
+    // two concurrent energy campaigns over different seeds
+    let first = client.submit(CampaignSpec {
+        metric: "energy".into(),
+        seed: 2023,
+        max_evals: 24,
+        workers: 4,
+        ..CampaignSpec::default()
+    })?;
+    let second = client.submit(CampaignSpec {
+        metric: "energy".into(),
+        seed: 2024,
+        max_evals: 24,
+        workers: 4,
+        ..CampaignSpec::default()
+    })?;
+    println!("submitted campaigns #{first} and #{second} (running concurrently)\n");
+
+    for id in [first, second] {
+        let terminal = client.watch(id, 0, &mut |ev| match ev {
+            Event::WarmStarted { elites, .. } => {
+                println!("campaign #{id}: warm-started from {elites} stored elites")
+            }
+            Event::Improved { best_objective, config_desc, .. } => {
+                println!("campaign #{id}: best -> {best_objective:.3} ({config_desc})")
+            }
+            _ => {}
+        })?;
+        if let Event::Done { summary, .. } = terminal {
+            println!(
+                "campaign #{id}: done — {} evals, best {:.3} ({:.2}% better than baseline)\n",
+                summary.evaluations, summary.best_objective, summary.improvement_pct
+            );
+        }
+    }
+
+    // the follow-up campaign warm-starts from the finished campaigns'
+    // records automatically: the only "flag" is the daemon's shared
+    // history dir, which it already owns
+    let third = client.submit(CampaignSpec {
+        metric: "energy".into(),
+        seed: 2025,
+        max_evals: 24,
+        workers: 4,
+        ..CampaignSpec::default()
+    })?;
+    println!("submitted follow-up campaign #{third} (auto warm start)\n");
+    let terminal = client.watch(third, 0, &mut |ev| {
+        if let Event::WarmStarted { elites, .. } = ev {
+            println!("campaign #{third}: warm-started from {elites} stored elites");
+        }
+    })?;
+    if let Event::Done { summary, .. } = terminal {
+        println!(
+            "campaign #{third}: done — best {:.3} ({:.2}% better than baseline)\n",
+            summary.best_objective, summary.improvement_pct
+        );
+    }
+
+    for row in client.status()? {
+        println!(
+            "  #{:<3} {:<11} {:<16} seed {:<6} evals {:<4} best {:.3}",
+            row.id, row.state, row.app, row.seed, row.evaluations, row.best_objective
+        );
+    }
+
+    client.shutdown()?;
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&history);
+    Ok(())
+}

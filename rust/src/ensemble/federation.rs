@@ -230,13 +230,14 @@ fn shard_rng_seed(seed: u64, shard: usize, shards: usize) -> u64 {
 /// falls back to sampling its partition directly.
 const PROPOSE_RETRIES_PER_STRIDE: usize = 32;
 
-/// What one finished shard hands back to the driver.
-struct ShardRun {
-    db: PerfDatabase,
-    stats: EnsembleStats,
-    wallclock: f64,
-    best: f64,
-    best_desc: String,
+/// What one finished shard hands back to the driver (`pub(crate)`: the
+/// service engine in [`crate::service`] drives shards too).
+pub(crate) struct ShardRun {
+    pub(crate) db: PerfDatabase,
+    pub(crate) stats: EnsembleStats,
+    pub(crate) wallclock: f64,
+    pub(crate) best: f64,
+    pub(crate) best_desc: String,
 }
 
 /// One manager shard running the PR-2 continuous cycle over its
@@ -298,7 +299,7 @@ impl ContinuousShard {
     /// shard checkpoint (completed records restore, in-flight re-queue
     /// under their original global eval ids), and spin up the pool.
     #[allow(clippy::too_many_arguments)]
-    fn new(
+    pub(crate) fn new(
         setup: &TuneSetup,
         lens: ShardSpec,
         space: Arc<ConfigSpace>,
@@ -613,14 +614,27 @@ impl ContinuousShard {
 
     /// Out of work (budget drained) *or* simulated-killed: either way
     /// this shard applies nothing more this session.
-    fn is_finished(&self) -> bool {
+    pub(crate) fn is_finished(&self) -> bool {
         self.done || self.killed
     }
 
     /// Completions applied so far, resumed history included — the
     /// absolute count the federation's exchange schedule is keyed on.
-    fn applied(&self) -> usize {
+    pub(crate) fn applied(&self) -> usize {
         self.db.len()
+    }
+
+    /// The applied history so far, in eval-id order (read-only view for
+    /// drivers that stream per-completion progress events).
+    pub(crate) fn records(&self) -> &[EvalRecord] {
+        &self.db.records
+    }
+
+    /// Global eval ids proposed so far (the next id this shard will
+    /// assign). The delta across a [`ContinuousShard::run_for`] call is
+    /// how many fresh proposals that step made.
+    pub(crate) fn proposed(&self) -> usize {
+        self.next_id
     }
 
     /// Propose the next configuration inside this shard's partition.
@@ -855,7 +869,7 @@ impl ContinuousShard {
     /// Run the continuous cycle for up to `max_apply` more completions
     /// (or until this shard's budget is exhausted and its in-flight work
     /// drained). Returns how many completions were applied.
-    fn run_for(&mut self, max_apply: usize) -> Result<usize> {
+    pub(crate) fn run_for(&mut self, max_apply: usize) -> Result<usize> {
         if self.is_finished() {
             return Ok(0);
         }
@@ -973,7 +987,7 @@ impl ContinuousShard {
     }
 
     /// Shut the pool down and hand back this shard's history.
-    fn finish(mut self) -> ShardRun {
+    pub(crate) fn finish(mut self) -> ShardRun {
         self.pool.shutdown();
         ShardRun {
             db: self.db,
@@ -1020,40 +1034,21 @@ pub(crate) fn validate_federation(setup: &TuneSetup) -> Result<usize> {
 
 /// The unsharded continuous manager: one [`ContinuousShard`] with
 /// `shards = 1`, run to completion. `ensemble::autotune_ensemble`
-/// delegates its continuous branch here, so the single manager and the
-/// federation share one engine.
+/// delegates its continuous branch here. The stepped engine itself lives
+/// in [`crate::service::engine::drive_continuous`] — the CLI one-shot
+/// path (this function) and the tuning daemon are two front-ends over
+/// that one engine, which is what pins a daemon campaign's trajectory to
+/// the solo run's: both step the identical state machine.
 pub(crate) fn autotune_continuous(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneResult> {
-    let space = Arc::new(paper::build_space(setup.app, setup.platform));
-    let (baseline, baseline_objective) = coordinator::measure_baseline(setup, &scorer)?;
-    let lens = ShardSpec { seed: setup.seed, shards: 1, shard: 0 };
-    let mut shard = ContinuousShard::new(
-        setup,
-        lens,
-        space.clone(),
-        scorer.clone(),
-        baseline_objective,
-        checkpoint::fingerprint(setup),
-        setup.checkpoint_path.clone(),
-    )?;
-    shard.run_for(usize::MAX)?;
-    let run = shard.finish();
-    let param_importance = coordinator::importance_from_db(&space, &run.db, setup.seed);
-    Ok(TuneResult {
-        setup: setup.clone(),
-        space_size: space.size(),
-        baseline,
-        baseline_objective,
-        best_objective: run.best,
-        best_config_desc: run.best_desc,
-        improvement_pct: improvement_pct(baseline_objective, run.best),
-        wallclock_s: run.wallclock,
-        evaluations: run.db.len(),
-        scorer_accelerated: scorer.is_accelerated(),
-        param_importance,
-        db: run.db,
-        ensemble: Some(run.stats),
-        federation: None,
-    })
+    use crate::service::engine::{drive_continuous, CampaignOutcome};
+    let never = std::sync::atomic::AtomicBool::new(false);
+    match drive_continuous(setup, scorer, &never, &mut |_| {})? {
+        CampaignOutcome::Finished(result) => Ok(*result),
+        // unreachable: the cancel flag above is never raised
+        CampaignOutcome::Interrupted { .. } => {
+            anyhow::bail!("continuous manager interrupted without a cancel request")
+        }
+    }
 }
 
 /// Run a federated campaign: K continuous manager shards over a

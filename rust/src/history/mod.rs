@@ -245,18 +245,98 @@ impl HistoryStore {
         &self.dir
     }
 
-    /// Append one run record atomically: write `run-<id>.json.tmp`, then
-    /// rename over `run-<id>.json`. A crash mid-write leaves only a temp
-    /// file, which the scan ignores; the store never holds a half
-    /// record under its final name.
+    /// Append one run record atomically, **safe under concurrent
+    /// writers** (a daemon finishes many campaigns at once): write a
+    /// writer-unique temp file, rename over the content-hashed final
+    /// name, then *audit* the installed file.
+    ///
+    /// * Same content racing itself is idempotent: both writers rename
+    ///   byte-identical files over the same name and both audits pass.
+    /// * A content-hash collision (different content, same `run_id`) is
+    ///   detected by the audit — never silently clobbered — and retried
+    ///   under a salted name (`run-<id>-<n>.json`), so both records
+    ///   survive in the store.
+    /// * A crash mid-write leaves only a temp file, which the scan
+    ///   ignores; the store never holds a half record under a final
+    ///   name.
     pub fn append(&self, rec: &RunRecord) -> Result<PathBuf> {
-        let path = self.dir.join(format!("run-{}.json", rec.run_id()));
-        let tmp = self.dir.join(format!("run-{}.json.tmp", rec.run_id()));
-        std::fs::write(&tmp, rec.to_json().to_string())
+        let text = rec.to_json().to_string();
+        let id = rec.run_id();
+        // writer-unique temp name: two threads (or processes) appending
+        // concurrently must never interleave writes into one temp file
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let tmp = self.dir.join(format!(
+            "run-{id}.{}-{}.tmp",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, &text)
             .with_context(|| format!("writing run record {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path)
-            .with_context(|| format!("installing run record {}", path.display()))?;
-        Ok(path)
+        let outcome = self.install(&tmp, &text, &id);
+        // the temp file never outlives the append: `install` only links
+        // it under final names, so success and failure both drop it here
+        let _ = std::fs::remove_file(&tmp);
+        outcome
+    }
+
+    /// Install an already-written temp file under its content-hashed
+    /// final name via `hard_link` — which *fails* on an existing
+    /// destination, so no interleaving of writers can ever clobber an
+    /// installed record (a plain rename-over would lose one side of a
+    /// same-name race). Occupied names are audited: identical bytes mean
+    /// an idempotent re-append (done); different bytes mean a content-
+    /// hash collision, retried under a salted `run-<id>-<n>.json` name
+    /// so both records survive.
+    fn install(&self, tmp: &Path, text: &str, id: &str) -> Result<PathBuf> {
+        for attempt in 0..16u32 {
+            let name = if attempt == 0 {
+                format!("run-{id}.json")
+            } else {
+                format!("run-{id}-{attempt}.json")
+            };
+            let path = self.dir.join(&name);
+            match std::fs::hard_link(tmp, &path) {
+                Ok(()) => {
+                    // audit: exclusive creation succeeded, so the link
+                    // target is our temp file by construction; verify
+                    // anyway so a broken filesystem can never plant a
+                    // wrong record silently
+                    let installed = std::fs::read_to_string(&path).with_context(|| {
+                        format!("auditing installed run record {}", path.display())
+                    })?;
+                    anyhow::ensure!(
+                        installed == text,
+                        "history append audit failed: {} does not hold the appended record",
+                        path.display()
+                    );
+                    return Ok(path);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    match std::fs::read_to_string(&path) {
+                        Ok(existing) if existing == text => return Ok(path), // idempotent
+                        Ok(_) => {
+                            log::warn!(
+                                "history store: {} occupied by different content \
+                                 (run_id collision); retrying under a salted name",
+                                path.display()
+                            );
+                            continue;
+                        }
+                        // racing writer mid-settle or unreadable file:
+                        // try the next salted name rather than abort
+                        Err(_) => continue,
+                    }
+                }
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("installing run record {}", path.display()))
+                }
+            }
+        }
+        anyhow::bail!(
+            "history store {}: could not place run {id} after 16 salted attempts",
+            self.dir.display()
+        )
     }
 
     /// Every readable run record, in file-name order (deterministic).
@@ -569,6 +649,74 @@ mod tests {
         assert!(leftovers.is_empty(), "append left temp files behind");
         let all = store.load_all().unwrap();
         assert_eq!(all, vec![rec]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Satellite: many campaigns finishing at once in one daemon must
+    /// not lose, duplicate, or corrupt records. 8 threads × 5 rounds all
+    /// appending the same 4 distinct records — maximal same-name racing
+    /// on every final file, both same-content (idempotence) and
+    /// cross-content (distinct ids) traffic.
+    #[test]
+    fn concurrent_appends_lose_nothing() {
+        let dir = tmpdir("concurrent-append");
+        let store = HistoryStore::open(&dir).unwrap();
+        let recs: Vec<RunRecord> = (0..4)
+            .map(|i| record(64 << i, i as u64 + 1, &[("0,0", 3.0 + i as f64), ("1,1", 9.0)]))
+            .collect();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let store = store.clone();
+                let recs = &recs;
+                s.spawn(move || {
+                    for _round in 0..5 {
+                        for r in recs {
+                            store.append(r).unwrap();
+                        }
+                    }
+                });
+            }
+        });
+        let all = store.load_all().unwrap();
+        assert_eq!(all.len(), recs.len(), "each distinct record exactly once: {all:?}");
+        for r in &recs {
+            assert!(all.contains(r), "record for seed {} lost in the race", r.seed);
+        }
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().map(|x| x == "tmp").unwrap_or(false))
+            .collect();
+        assert!(leftovers.is_empty(), "concurrent appends left temp files behind");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A `run_id` collision (different content, same hash — forced here
+    /// by planting an imposter under the final name) must never clobber:
+    /// the append lands under a salted name and both files survive.
+    #[test]
+    fn run_id_collision_salts_instead_of_clobbering() {
+        let dir = tmpdir("collision");
+        let store = HistoryStore::open(&dir).unwrap();
+        let rec = record(64, 1, &[("0,0", 3.0)]);
+        let id = rec.run_id();
+        let imposter = "imposter: not the appended record";
+        std::fs::write(dir.join(format!("run-{id}.json")), imposter).unwrap();
+        let p = store.append(&rec).unwrap();
+        assert_eq!(
+            p.file_name().and_then(|n| n.to_str()),
+            Some(format!("run-{id}-1.json").as_str()),
+            "collision must fall through to the first salted name"
+        );
+        assert_eq!(
+            std::fs::read_to_string(dir.join(format!("run-{id}.json"))).unwrap(),
+            imposter,
+            "the occupant must be left untouched"
+        );
+        // idempotent re-append resolves to the salted file, not a third
+        assert_eq!(store.append(&rec).unwrap(), p);
+        // the scan returns the real record (the imposter is skipped as corrupt)
+        assert_eq!(store.load_all().unwrap(), vec![rec]);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

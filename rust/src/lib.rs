@@ -30,6 +30,7 @@ pub mod platform;
 pub mod power;
 pub mod proptest_lite;
 pub mod runtime;
+pub mod service;
 pub mod space;
 pub mod surrogate;
 pub mod util;

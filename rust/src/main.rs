@@ -3,6 +3,10 @@
 //! ```text
 //! ytopt-rs tune   --app amg --platform summit --nodes 4096 [--metric runtime]
 //! ytopt-rs tune   --config configs/sw4lite_theta.toml
+//! ytopt-rs serve  --addr 127.0.0.1:7459 --history-dir runs/   # tuning daemon
+//! ytopt-rs submit --addr 127.0.0.1:7459 --app amg --seed 7    # queue a campaign
+//! ytopt-rs watch  --addr 127.0.0.1:7459 --campaign 1          # stream its events
+//! ytopt-rs status | cancel | shutdown                         # daemon control
 //! ytopt-rs spaces                 # Table III parameter spaces
 //! ytopt-rs platforms              # Table I system specs
 //! ```
@@ -12,12 +16,16 @@ use std::sync::Arc;
 use ytopt::apps::AppKind;
 use ytopt::cliargs::{Args, CliError, CliSpec};
 use ytopt::configfile::ConfigDoc;
-use ytopt::coordinator::{autotune_with_scorer, TuneSetup};
+use ytopt::coordinator::TuneSetup;
 use ytopt::ensemble::{LiarStrategy, ManagerCycle};
 use ytopt::metrics::Metric;
 use ytopt::platform::PlatformKind;
 use ytopt::runtime::Scorer;
 use ytopt::search::{StrategyKind, SurrogateKind};
+use ytopt::service::{
+    self, CampaignHandle, CampaignOutcome, CampaignSpec, Client, Daemon, ServeConfig,
+    ServiceConfig,
+};
 use ytopt::space::paper;
 use ytopt::util::Table;
 
@@ -33,7 +41,7 @@ const ALL_APPS: [AppKind; 7] = [
 
 fn spec() -> CliSpec {
     CliSpec::new("ytopt-rs", "autotuning framework (paper reproduction)")
-        .positional("command", "tune | spaces | platforms")
+        .positional("command", "tune | serve | submit | watch | status | cancel | shutdown | spaces | platforms")
         .opt("config", None, "TOML config file (section [tune])")
         .opt("app", Some("xsbench"), "application to tune")
         .opt("platform", Some("theta"), "theta | summit")
@@ -62,6 +70,12 @@ fn spec() -> CliSpec {
         .opt("warm-start-from", None, "history store to warm-start from (compatible space)")
         .opt("warm-elites", Some("8"), "top-K elites pulled from the warm-start store")
         .opt("out", None, "write the performance database CSV here")
+        .opt("addr", Some("127.0.0.1:7459"), "daemon address (serve listens; clients connect)")
+        .opt("max-active", Some("4"), "serve: campaigns running concurrently")
+        .opt("checkpoint-dir", None, "serve: per-campaign checkpoint directory")
+        .opt("campaign", None, "campaign id (watch / cancel)")
+        .opt("from", Some("0"), "watch: replay the event stream from this index")
+        .flag("no-warm-start", "submit: opt out of the daemon's shared-history warm start")
         .flag("trace", "print the per-evaluation trace")
 }
 
@@ -172,7 +186,18 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
 fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     let setup = setup_from_args(args)?;
     let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
-    let result = autotune_with_scorer(&setup, scorer)?;
+    // the one-shot path drives the same CampaignHandle the daemon's
+    // scheduler does — one engine, two front-ends
+    let mut handle = CampaignHandle::start(setup, scorer);
+    while handle.recv_event(std::time::Duration::from_millis(250)).is_some() || !handle.is_done()
+    {
+    }
+    let result = match handle.join()? {
+        CampaignOutcome::Finished(result) => *result,
+        CampaignOutcome::Interrupted { .. } => {
+            anyhow::bail!("one-shot campaign interrupted without a cancel request")
+        }
+    };
     println!("{}", result.summary());
     if args.has_flag("trace") {
         println!("{}", result.trace());
@@ -181,6 +206,158 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, result.db.to_csv())?;
         println!("performance database written to {path}");
     }
+    Ok(())
+}
+
+/// `[service]` config + CLI flags → the daemon's serve policy.
+fn serve_config_from_args(args: &Args) -> anyhow::Result<ServeConfig> {
+    let mut listen = args.get_or("addr", "127.0.0.1:7459").to_string();
+    let mut max_active = args.usize("max-active").unwrap_or(4);
+    let mut history_dir = args.path("history-dir");
+    let mut checkpoint_dir = args.path("checkpoint-dir");
+    let mut warm_elites = args.usize_in("warm-elites", 0, 64)?;
+    if let Some(path) = args.get("config") {
+        let doc = ConfigDoc::load(std::path::Path::new(path))?;
+        listen = doc.str_or("service", "listen", &listen).to_string();
+        max_active = doc.usize_or("service", "max_active", max_active);
+        if let Some(d) = doc.get("service", "history_dir").and_then(|v| v.as_str()) {
+            history_dir = Some(std::path::PathBuf::from(d));
+        }
+        if let Some(d) = doc.get("service", "checkpoint_dir").and_then(|v| v.as_str()) {
+            checkpoint_dir = Some(std::path::PathBuf::from(d));
+        }
+        warm_elites = doc.usize_or("service", "warm_elites", warm_elites);
+    }
+    anyhow::ensure!(max_active >= 1, "max-active must be >= 1");
+    Ok(ServeConfig {
+        listen,
+        service: ServiceConfig {
+            max_active,
+            history_dir,
+            checkpoint_dir,
+            warm_start_elites: warm_elites,
+        },
+    })
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = serve_config_from_args(args)?;
+    let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
+    service::daemon::install_sigterm_hook();
+    let daemon = Daemon::start(cfg, scorer)?;
+    println!("ytopt-serve listening on {}", daemon.addr());
+    while !daemon.stop_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("shutting down: interrupting live campaigns (checkpoints flush per apply)");
+    daemon.shutdown();
+    println!("daemon stopped");
+    Ok(())
+}
+
+fn cmd_submit(args: &Args) -> anyhow::Result<()> {
+    let setup = setup_from_args(args)?;
+    let mut spec = CampaignSpec::from_setup(&setup)?;
+    spec.warm_start = !args.has_flag("no-warm-start");
+    let addr = args.get_or("addr", "127.0.0.1:7459");
+    let mut client = Client::connect(addr)?;
+    let id = client.submit(spec)?;
+    println!("campaign {id} accepted by {addr}");
+    println!("stream it with: ytopt-rs watch --addr {addr} --campaign {id}");
+    Ok(())
+}
+
+fn render_event(ev: &service::Event) -> String {
+    use service::Event::*;
+    match ev {
+        Started { campaign, evals_planned } => {
+            format!("campaign {campaign}: started ({evals_planned} evals planned)")
+        }
+        WarmStarted { campaign, elites } => {
+            format!("campaign {campaign}: warm-started from {elites} shared-history elites")
+        }
+        Proposed { campaign, eval_id } => format!("campaign {campaign}: proposed eval {eval_id}"),
+        EvalCompleted { campaign, eval_id, objective, best_so_far, timed_out, cancelled, .. } => {
+            let flags = match (timed_out, cancelled) {
+                (true, _) => " [timeout]",
+                (_, true) => " [cancelled]",
+                _ => "",
+            };
+            format!(
+                "campaign {campaign}: eval {eval_id} -> {objective:.4} (best {best_so_far:.4}){flags}"
+            )
+        }
+        Improved { campaign, eval_id, best_objective, config_desc } => format!(
+            "campaign {campaign}: NEW BEST {best_objective:.4} at eval {eval_id} ({config_desc})"
+        ),
+        StragglerKilled { campaign, eval_id } => {
+            format!("campaign {campaign}: straggler eval {eval_id} killed")
+        }
+        Done { campaign, summary } => format!(
+            "campaign {campaign}: DONE — best {:.4} ({:.2}% better than baseline) after {} evals",
+            summary.best_objective, summary.improvement_pct, summary.evaluations
+        ),
+        Cancelled { campaign, applied } => {
+            format!("campaign {campaign}: CANCELLED after {applied} applied evals")
+        }
+        Interrupted { campaign, applied, checkpointed } => format!(
+            "campaign {campaign}: INTERRUPTED by daemon shutdown after {applied} applied evals{}",
+            if *checkpointed { " (checkpoint on disk; resumable)" } else { "" }
+        ),
+        Failed { campaign, message } => format!("campaign {campaign}: FAILED — {message}"),
+    }
+}
+
+fn cmd_watch(args: &Args) -> anyhow::Result<()> {
+    let campaign = args
+        .int("campaign")
+        .ok_or_else(|| anyhow::anyhow!("watch needs --campaign <id>"))? as u64;
+    let from = args.int("from").unwrap_or(0).max(0) as u64;
+    let mut client = Client::connect(args.get_or("addr", "127.0.0.1:7459"))?;
+    client.watch(campaign, from, &mut |ev| println!("{}", render_event(ev)))?;
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> anyhow::Result<()> {
+    let mut client = Client::connect(args.get_or("addr", "127.0.0.1:7459"))?;
+    let campaigns = client.status()?;
+    let mut t = Table::new(
+        "campaigns",
+        &["id", "state", "app", "seed", "evals", "best objective"],
+    );
+    for c in campaigns {
+        let best = if c.best_objective.is_finite() {
+            format!("{:.4}", c.best_objective)
+        } else {
+            "-".to_string()
+        };
+        t.row(&[
+            c.id.to_string(),
+            c.state,
+            c.app,
+            format!("{}", c.seed),
+            c.evaluations.to_string(),
+            best,
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> anyhow::Result<()> {
+    let campaign = args
+        .int("campaign")
+        .ok_or_else(|| anyhow::anyhow!("cancel needs --campaign <id>"))? as u64;
+    let mut client = Client::connect(args.get_or("addr", "127.0.0.1:7459"))?;
+    client.cancel(campaign)?;
+    println!("campaign {campaign}: cancellation requested");
+    Ok(())
+}
+
+fn cmd_shutdown(args: &Args) -> anyhow::Result<()> {
+    let mut client = Client::connect(args.get_or("addr", "127.0.0.1:7459"))?;
+    client.shutdown()?;
+    println!("daemon shutdown requested (campaigns checkpoint and interrupt)");
     Ok(())
 }
 
@@ -254,6 +431,12 @@ fn main() {
     };
     let result = match args.positional(0).unwrap_or("help") {
         "tune" => cmd_tune(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
+        "watch" => cmd_watch(&args),
+        "status" => cmd_status(&args),
+        "cancel" => cmd_cancel(&args),
+        "shutdown" => cmd_shutdown(&args),
         "spaces" => {
             cmd_spaces();
             Ok(())

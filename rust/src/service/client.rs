@@ -1,0 +1,137 @@
+//! Loopback client for the tuning daemon: a blocking [`TcpStream`]
+//! wrapped in the frame [`Decoder`]. Used by the CLI `submit`/`watch`/
+//! `status`/`cancel` subcommands, `examples/service_tuning.rs`, and the
+//! `tests/service_e2e.rs` harness.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::protocol::{
+    encode_frame, CampaignSpec, CampaignStatusInfo, Decoder, Event, Message, Request, Response,
+};
+
+pub struct Client {
+    stream: TcpStream,
+    dec: Decoder,
+    /// Frames decoded past the one a caller asked for (a watch stream
+    /// can arrive in bursts bigger than one read).
+    queue: VecDeque<Message>,
+}
+
+impl Client {
+    /// Connect to a daemon. The generous read timeout is the stall
+    /// detector: campaigns emit events continuously while running, so
+    /// two silent minutes means the daemon is gone.
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to tuning daemon at {addr}"))?;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .context("setting client read timeout")?;
+        Ok(Client { stream, dec: Decoder::new(), queue: VecDeque::new() })
+    }
+
+    fn send(&mut self, req: Request) -> Result<()> {
+        self.stream
+            .write_all(&encode_frame(&Message::Request(req)))
+            .and_then(|_| self.stream.flush())
+            .context("writing request frame")
+    }
+
+    /// Next message off the wire (or the local queue).
+    fn next_message(&mut self) -> Result<Message> {
+        if let Some(m) = self.queue.pop_front() {
+            return Ok(m);
+        }
+        let mut buf = [0u8; 4096];
+        loop {
+            let n = self.stream.read(&mut buf).context("reading from daemon")?;
+            anyhow::ensure!(n > 0, "daemon closed the connection");
+            let msgs = self.dec.push(&buf[..n]).context("decoding daemon frames")?;
+            self.queue.extend(msgs);
+            if let Some(m) = self.queue.pop_front() {
+                return Ok(m);
+            }
+        }
+    }
+
+    /// Send a request and take the daemon's (single) response,
+    /// surfacing `Error` responses as errors.
+    fn request(&mut self, req: Request) -> Result<Response> {
+        self.send(req)?;
+        match self.next_message()? {
+            Message::Response(Response::Error { message }) => {
+                anyhow::bail!("daemon refused: {message}")
+            }
+            Message::Response(r) => Ok(r),
+            other => anyhow::bail!("expected a response frame, got {other:?}"),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        match self.request(Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => anyhow::bail!("expected pong, got {other:?}"),
+        }
+    }
+
+    /// Submit a campaign; returns the assigned campaign id.
+    pub fn submit(&mut self, spec: CampaignSpec) -> Result<u64> {
+        match self.request(Request::Submit { spec })? {
+            Response::Accepted { campaign } => Ok(campaign),
+            other => anyhow::bail!("expected acceptance, got {other:?}"),
+        }
+    }
+
+    pub fn status(&mut self) -> Result<Vec<CampaignStatusInfo>> {
+        match self.request(Request::Status)? {
+            Response::Status { campaigns } => Ok(campaigns),
+            other => anyhow::bail!("expected a status listing, got {other:?}"),
+        }
+    }
+
+    pub fn cancel(&mut self, campaign: u64) -> Result<()> {
+        match self.request(Request::Cancel { campaign })? {
+            Response::Cancelling { .. } => Ok(()),
+            other => anyhow::bail!("expected a cancel acknowledgement, got {other:?}"),
+        }
+    }
+
+    /// Request graceful daemon shutdown (acknowledged before the daemon
+    /// begins interrupting campaigns).
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.request(Request::Shutdown)? {
+            Response::ShuttingDown => Ok(()),
+            other => anyhow::bail!("expected a shutdown acknowledgement, got {other:?}"),
+        }
+    }
+
+    /// Stream `campaign`'s events from index `from`, invoking `on_event`
+    /// for each, until the terminal event arrives — which is returned.
+    pub fn watch(
+        &mut self,
+        campaign: u64,
+        from: u64,
+        on_event: &mut dyn FnMut(&Event),
+    ) -> Result<Event> {
+        self.send(Request::Watch { campaign, from })?;
+        loop {
+            match self.next_message()? {
+                Message::Event(ev) => {
+                    on_event(&ev);
+                    if ev.is_terminal() {
+                        return Ok(ev);
+                    }
+                }
+                Message::Response(Response::Error { message }) => {
+                    anyhow::bail!("daemon refused watch: {message}")
+                }
+                other => anyhow::bail!("expected an event frame, got {other:?}"),
+            }
+        }
+    }
+}

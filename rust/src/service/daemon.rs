@@ -1,0 +1,308 @@
+//! `ytopt-serve`: the TCP front-end over [`Scheduler`].
+//!
+//! One accept loop (non-blocking listener polled alongside the stop
+//! flag), one thread per connection. A connection speaks the framed
+//! protocol: requests are answered in order; a `Watch` request turns
+//! the connection into an event stream until the campaign's terminal
+//! event has been written, then resumes request service. Framing junk
+//! poisons the stream, so a decode error drops the connection — the
+//! protocol cannot resynchronize mid-garbage.
+//!
+//! Graceful shutdown (satellite 2): a `Shutdown` request or SIGTERM
+//! stops the accept loop, refuses new submissions, and interrupts every
+//! live campaign through [`Scheduler::interrupt_all`] — running
+//! campaigns stop at their next apply boundary with their v3 checkpoint
+//! already on disk, and every watcher receives a terminal
+//! [`Event::Interrupted`](super::protocol::Event::Interrupted) frame
+//! instead of a dropped socket.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::protocol::{encode_frame, Decoder, Message, Request, Response};
+use super::scheduler::{Scheduler, ServiceConfig};
+use crate::runtime::Scorer;
+
+/// The `[service]` config section plus the listen address.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP listen address; port 0 binds an ephemeral port (the loopback
+    /// e2e harness uses this).
+    pub listen: String,
+    pub service: ServiceConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { listen: "127.0.0.1:7459".into(), service: ServiceConfig::default() }
+    }
+}
+
+/// Raised by the SIGTERM handler; polled by every daemon's accept loop.
+static TERM_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+/// Install the SIGTERM hook (idempotent). Signal-handler discipline: the
+/// handler only stores to an atomic; the accept loop does the actual
+/// shutdown work at poll granularity. No `libc` crate in the offline
+/// set — std already links the platform libc, so the raw `signal(2)`
+/// symbol resolves.
+#[cfg(unix)]
+pub fn install_sigterm_hook() {
+    extern "C" fn on_term(_signum: i32) {
+        TERM_REQUESTED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_term as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigterm_hook() {}
+
+/// True once SIGTERM has been delivered (test hooks may set it too).
+pub fn sigterm_requested() -> bool {
+    TERM_REQUESTED.load(Ordering::SeqCst)
+}
+
+/// A running daemon: listener + scheduler + connection threads.
+pub struct Daemon {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    scheduler: Arc<Scheduler>,
+    accept_thread: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Daemon {
+    /// Bind and start serving. Returns once the listener is live (the
+    /// bound address — with the resolved ephemeral port — is available
+    /// immediately via [`Daemon::addr`]).
+    pub fn start(cfg: ServeConfig, scorer: Arc<Scorer>) -> Result<Daemon> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding service listener on {}", cfg.listen))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let scheduler = Scheduler::new(scorer, cfg.service);
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept_stop = stop.clone();
+        let accept_sched = scheduler.clone();
+        let accept_conns = conns.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("ytopt-serve-accept".into())
+            .spawn(move || loop {
+                if sigterm_requested() && !accept_stop.swap(true, Ordering::SeqCst) {
+                    log::info!("SIGTERM: interrupting live campaigns, refusing new work");
+                    accept_sched.interrupt_all();
+                }
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, peer)) => {
+                        log::debug!("service connection from {peer}");
+                        let sched = accept_sched.clone();
+                        let stop = accept_stop.clone();
+                        let handle = std::thread::Builder::new()
+                            .name("ytopt-serve-conn".into())
+                            .spawn(move || serve_connection(stream, sched, stop))
+                            .expect("spawn connection thread");
+                        accept_conns.lock().unwrap().push(handle);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                    Err(e) => {
+                        log::warn!("service accept failed: {e}");
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                }
+            })
+            .expect("spawn accept thread");
+
+        Ok(Daemon { addr, stop, scheduler, accept_thread: Some(accept_thread), conns })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn scheduler(&self) -> Arc<Scheduler> {
+        self.scheduler.clone()
+    }
+
+    /// Has a stop (Shutdown request, SIGTERM, or [`Daemon::request_stop`])
+    /// been initiated?
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Initiate a graceful stop without blocking: accept loop winds
+    /// down, live campaigns are interrupted.
+    pub fn request_stop(&self) {
+        if !self.stop.swap(true, Ordering::SeqCst) {
+            self.scheduler.interrupt_all();
+        }
+    }
+
+    /// Graceful stop, run to completion: every campaign terminal (and
+    /// checkpointed, when configured), every connection drained, every
+    /// thread joined.
+    pub fn shutdown(mut self) {
+        self.request_stop();
+        self.scheduler.shutdown();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Serve one connection until the peer hangs up, framing breaks, or the
+/// daemon stops.
+fn serve_connection(mut stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<AtomicBool>) {
+    if stream.set_read_timeout(Some(Duration::from_millis(250))).is_err() {
+        return;
+    }
+    let mut dec = Decoder::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => return, // peer closed
+            Ok(n) => {
+                let msgs = match dec.push(&buf[..n]) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        log::warn!("dropping connection on framing error: {e}");
+                        let _ = write_msg(
+                            &mut stream,
+                            &Message::Response(Response::Error { message: e.to_string() }),
+                        );
+                        return;
+                    }
+                };
+                for msg in msgs {
+                    if !handle_message(&mut stream, &sched, &stop, msg) {
+                        return;
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // idle: once the daemon is stopping, close idle
+                // connections (watchers were served synchronously above
+                // and have their terminal events already)
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Dispatch one request; returns false when the connection should close.
+fn handle_message(
+    stream: &mut TcpStream,
+    sched: &Arc<Scheduler>,
+    stop: &Arc<AtomicBool>,
+    msg: Message,
+) -> bool {
+    let req = match msg {
+        Message::Request(r) => r,
+        _ => {
+            let _ = write_msg(
+                stream,
+                &Message::Response(Response::Error {
+                    message: "clients send request frames".into(),
+                }),
+            );
+            return false;
+        }
+    };
+    match req {
+        Request::Ping => write_msg(stream, &Message::Response(Response::Pong)),
+        Request::Submit { spec } => {
+            let resp = match sched.submit(spec) {
+                Ok(campaign) => Response::Accepted { campaign },
+                Err(e) => Response::Error { message: format!("{e:#}") },
+            };
+            write_msg(stream, &Message::Response(resp))
+        }
+        Request::Status => {
+            write_msg(stream, &Message::Response(Response::Status { campaigns: sched.status() }))
+        }
+        Request::Cancel { campaign } => {
+            let resp = match sched.cancel(campaign) {
+                Ok(()) => Response::Cancelling { campaign },
+                Err(e) => Response::Error { message: format!("{e:#}") },
+            };
+            write_msg(stream, &Message::Response(resp))
+        }
+        Request::Shutdown => {
+            let ok = write_msg(stream, &Message::Response(Response::ShuttingDown));
+            if !stop.swap(true, Ordering::SeqCst) {
+                log::info!("shutdown requested over the wire");
+                sched.interrupt_all();
+            }
+            ok
+        }
+        Request::Watch { campaign, from } => {
+            // stream events until the terminal one has been written;
+            // wait_events returning empty on a terminal campaign means
+            // the log is fully drained
+            let mut idx = from as usize;
+            loop {
+                let evs = match sched.wait_events(campaign, idx, Duration::from_secs(1)) {
+                    Ok(evs) => evs,
+                    Err(e) => {
+                        let _ = write_msg(
+                            stream,
+                            &Message::Response(Response::Error { message: format!("{e:#}") }),
+                        );
+                        return false;
+                    }
+                };
+                let drained = evs.is_empty();
+                for ev in evs {
+                    idx += 1;
+                    let terminal = ev.is_terminal();
+                    if !write_msg(stream, &Message::Event(ev)) {
+                        return false;
+                    }
+                    if terminal {
+                        return true;
+                    }
+                }
+                // an empty batch on a terminal campaign means the
+                // watcher attached past the terminal event: the log is
+                // complete and nothing more will ever arrive
+                if drained && matches!(sched.is_terminal(campaign), Ok(true)) {
+                    return true;
+                }
+            }
+        }
+    }
+}
+
+fn write_msg(stream: &mut TcpStream, msg: &Message) -> bool {
+    stream.write_all(&encode_frame(msg)).and_then(|_| stream.flush()).is_ok()
+}

@@ -1,0 +1,302 @@
+//! The campaign engine behind both front-ends.
+//!
+//! `ytopt-rs tune` (one-shot CLI) and `ytopt-rs serve` (the daemon) run
+//! the *same* continuous-manager state machine: [`drive_continuous`]
+//! steps a K=1 [`ContinuousShard`] one applied completion at a time,
+//! emitting progress events and honoring a cancel flag between steps.
+//! `federation::autotune_continuous` — the function the classic
+//! `autotune_with_scorer` dispatch chain lands on — is now a thin
+//! delegate over this driver with a never-raised cancel flag and a
+//! discarding event sink. That shared core is what makes a daemon
+//! campaign's trajectory bit-identical to the solo CLI run with the
+//! same seed/policy: there is only one engine to diverge from.
+//!
+//! [`CampaignHandle`] is the start / poll-events / cancel / join facade
+//! over a campaign running on its own thread; the daemon's scheduler
+//! holds one per running campaign, and `cmd_tune` drives its one-shot
+//! campaign through the identical handle.
+//!
+//! [`ContinuousShard`]: crate::ensemble::federation::ContinuousShard
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::coordinator::{self, TuneResult, TuneSetup};
+use crate::ensemble::federation::{ContinuousShard, ShardSpec};
+use crate::ensemble::{checkpoint, ManagerCycle};
+use crate::metrics::improvement_pct;
+use crate::runtime::Scorer;
+use crate::space::paper;
+
+/// Progress notification from a running campaign. Protocol-agnostic
+/// (no campaign id, no wire types) — the daemon's scheduler tags these
+/// with the campaign id and lowers them to `protocol::Event` frames;
+/// the CLI front-end renders them as trace lines.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CampaignEvent {
+    /// The campaign thread is up; evaluation budget attached.
+    Started { evals_planned: u64 },
+    /// `elites` prior observations were absorbed from the history store
+    /// before the first proposal.
+    WarmStarted { elites: u64 },
+    /// A fresh configuration was proposed under global eval id `eval_id`.
+    Proposed { eval_id: u64 },
+    /// Eval `eval_id` completed and was applied in order.
+    EvalCompleted {
+        eval_id: u64,
+        config_key: String,
+        objective: f64,
+        runtime_s: f64,
+        best_so_far: f64,
+        timed_out: bool,
+        cancelled: bool,
+    },
+    /// `eval_id`'s result improved the campaign's best-so-far.
+    Improved { eval_id: u64, best_objective: f64, config_desc: String },
+    /// `eval_id` was cancelled by the straggler policy.
+    StragglerKilled { eval_id: u64 },
+}
+
+/// How a campaign ended.
+#[derive(Debug)]
+pub enum CampaignOutcome {
+    /// Budget drained normally.
+    Finished(Box<TuneResult>),
+    /// The cancel flag was honored between applies: `applied`
+    /// completions are in the books, and — when the setup carried a
+    /// checkpoint path — on disk via the v3 checkpoint written with
+    /// every apply, ready for a later resume.
+    Interrupted { applied: usize, checkpointed: bool },
+}
+
+/// Does this setup run on the stepped continuous engine? (The dispatch
+/// conditions `autotune_with_scorer` uses to land on
+/// `autotune_continuous`, restated.)
+pub fn steppable(setup: &TuneSetup) -> bool {
+    setup.federation_shards == 0
+        && setup.ensemble_workers >= 2
+        && setup.manager_cycle == ManagerCycle::Continuous
+}
+
+/// Step one unsharded continuous-manager campaign to completion (or
+/// cancellation), emitting a [`CampaignEvent`] stream through `sink`.
+///
+/// The shard is stepped one *applied completion* at a time
+/// (`run_for(1)` repeated is pinned elsewhere to evolve state
+/// identically to `run_for(MAX)`), with the cancel flag sampled between
+/// steps — so a cancel never tears mid-apply and the applied prefix is
+/// always a valid checkpointed trajectory.
+pub fn drive_continuous(
+    setup: &TuneSetup,
+    scorer: Arc<Scorer>,
+    cancel: &AtomicBool,
+    sink: &mut dyn FnMut(CampaignEvent),
+) -> Result<CampaignOutcome> {
+    let space = Arc::new(paper::build_space(setup.app, setup.platform));
+    let (baseline, baseline_objective) = coordinator::measure_baseline(setup, &scorer)?;
+    let lens = ShardSpec { seed: setup.seed, shards: 1, shard: 0 };
+    let mut shard = ContinuousShard::new(
+        setup,
+        lens,
+        space.clone(),
+        scorer.clone(),
+        baseline_objective,
+        checkpoint::fingerprint(setup),
+        setup.checkpoint_path.clone(),
+    )?;
+
+    let mut best = f64::INFINITY;
+    let mut interrupted = false;
+    loop {
+        if cancel.load(Ordering::SeqCst) {
+            interrupted = true;
+            break;
+        }
+        let proposed_before = shard.proposed();
+        let applied_before = shard.applied();
+        let n = shard.run_for(1)?;
+        for id in proposed_before..shard.proposed() {
+            sink(CampaignEvent::Proposed { eval_id: id as u64 });
+        }
+        for r in &shard.records()[applied_before..] {
+            sink(CampaignEvent::EvalCompleted {
+                eval_id: r.id as u64,
+                config_key: r.config_key.clone(),
+                objective: r.objective,
+                runtime_s: r.measured.runtime_s,
+                best_so_far: r.best_so_far,
+                timed_out: r.timed_out,
+                cancelled: r.cancelled,
+            });
+            if r.cancelled {
+                sink(CampaignEvent::StragglerKilled { eval_id: r.id as u64 });
+            }
+            if r.best_so_far.is_finite() && r.best_so_far < best {
+                best = r.best_so_far;
+                sink(CampaignEvent::Improved {
+                    eval_id: r.id as u64,
+                    best_objective: r.best_so_far,
+                    config_desc: r.config_desc.clone(),
+                });
+            }
+        }
+        if n == 0 {
+            break;
+        }
+    }
+
+    if interrupted {
+        let applied = shard.applied();
+        // the v3 checkpoint is written with every apply; an applied
+        // prefix plus a configured path means it is on disk already
+        let checkpointed = setup.checkpoint_path.is_some() && applied > 0;
+        shard.finish(); // shuts the worker pool down
+        return Ok(CampaignOutcome::Interrupted { applied, checkpointed });
+    }
+
+    let run = shard.finish();
+    let param_importance = coordinator::importance_from_db(&space, &run.db, setup.seed);
+    Ok(CampaignOutcome::Finished(Box::new(TuneResult {
+        setup: setup.clone(),
+        space_size: space.size(),
+        baseline,
+        baseline_objective,
+        best_objective: run.best,
+        best_config_desc: run.best_desc,
+        improvement_pct: improvement_pct(baseline_objective, run.best),
+        wallclock_s: run.wallclock,
+        evaluations: run.db.len(),
+        scorer_accelerated: scorer.is_accelerated(),
+        param_importance,
+        db: run.db,
+        ensemble: Some(run.stats),
+        federation: None,
+    })))
+}
+
+/// A campaign running on its own thread: start / poll events / cancel /
+/// join. Both front-ends hold one of these per campaign.
+pub struct CampaignHandle {
+    events: Receiver<CampaignEvent>,
+    cancel: Arc<AtomicBool>,
+    thread: Option<JoinHandle<Result<CampaignOutcome>>>,
+}
+
+impl CampaignHandle {
+    /// Launch `setup` on a fresh thread. The thread resolves the
+    /// history-database warm start first (exactly as the classic
+    /// dispatch does, so the resolved prior lands in the checkpoint
+    /// fingerprint), emits `Started`/`WarmStarted`, then either steps
+    /// the continuous engine (cancellable, event-streaming) or — for
+    /// setups outside it (serial, generational, federated) — falls back
+    /// to the blocking `autotune_with_scorer` dispatch, which appends
+    /// history itself.
+    pub fn start(setup: TuneSetup, scorer: Arc<Scorer>) -> CampaignHandle {
+        let (tx, rx): (Sender<CampaignEvent>, Receiver<CampaignEvent>) =
+            std::sync::mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let flag = cancel.clone();
+        let thread = std::thread::Builder::new()
+            .name("campaign".into())
+            .spawn(move || -> Result<CampaignOutcome> {
+                let mut setup = setup;
+                setup.parallel_evals = setup.parallel_evals.max(1);
+                crate::history::apply_warm_start(&mut setup, scorer.as_ref())?;
+                // sends are best-effort: a front-end that dropped its
+                // receiver still deserves a completed campaign
+                let _ = tx.send(CampaignEvent::Started {
+                    evals_planned: setup.max_evals as u64,
+                });
+                if let Some(prior) = &setup.foreign_warm {
+                    let _ = tx.send(CampaignEvent::WarmStarted {
+                        elites: prior.len() as u64,
+                    });
+                }
+                if steppable(&setup) {
+                    let mut sink = |ev: CampaignEvent| {
+                        let _ = tx.send(ev);
+                    };
+                    let outcome = drive_continuous(&setup, scorer, &flag, &mut sink)?;
+                    // the classic dispatch appends completed runs to the
+                    // history store; the stepped path owns that duty here
+                    // (interrupted campaigns are NOT completed runs)
+                    if let CampaignOutcome::Finished(result) = &outcome {
+                        if let (Some(dir), None) = (&setup.history_dir, setup.kill_after_evals) {
+                            let appended = crate::history::HistoryStore::open(dir).and_then(
+                                |store| {
+                                    store.append(&crate::history::RunRecord::from_result(result))
+                                },
+                            );
+                            match appended {
+                                Ok(path) => {
+                                    log::info!("tuning history appended to {}", path.display())
+                                }
+                                Err(e) => log::warn!(
+                                    "tuning history NOT recorded to {}: {e:#} (the run result \
+                                     is unaffected)",
+                                    dir.display()
+                                ),
+                            }
+                        }
+                    }
+                    Ok(outcome)
+                } else {
+                    let result = coordinator::autotune_with_scorer(&setup, scorer)?;
+                    Ok(CampaignOutcome::Finished(Box::new(result)))
+                }
+            })
+            .expect("spawn campaign thread");
+        CampaignHandle { events: rx, cancel, thread: Some(thread) }
+    }
+
+    /// Drain any events emitted since the last poll (non-blocking).
+    pub fn poll_events(&self) -> Vec<CampaignEvent> {
+        let mut out = Vec::new();
+        loop {
+            match self.events.try_recv() {
+                Ok(ev) => out.push(ev),
+                Err(TryRecvError::Empty | TryRecvError::Disconnected) => break,
+            }
+        }
+        out
+    }
+
+    /// Block up to `timeout` for the next event. `None` once the
+    /// campaign thread is done and the channel drained.
+    pub fn recv_event(&self, timeout: std::time::Duration) -> Option<CampaignEvent> {
+        self.events.recv_timeout(timeout).ok()
+    }
+
+    /// Has the campaign thread exited? (Events may still be queued.)
+    pub fn is_done(&self) -> bool {
+        self.thread.as_ref().map(|t| t.is_finished()).unwrap_or(true)
+    }
+
+    /// Request cancellation; honored between applied completions.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// The shared cancel flag (the daemon's SIGTERM hook raises many of
+    /// these at once).
+    pub fn cancel_flag(&self) -> Arc<AtomicBool> {
+        self.cancel.clone()
+    }
+
+    /// Wait for the campaign thread and take its outcome. Idempotent
+    /// callers beware: the outcome moves out; a second join errors.
+    pub fn join(&mut self) -> Result<CampaignOutcome> {
+        let t = self
+            .thread
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("campaign already joined"))?;
+        match t.join() {
+            Ok(res) => res,
+            Err(_) => anyhow::bail!("campaign thread panicked"),
+        }
+    }
+}

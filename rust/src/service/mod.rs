@@ -1,0 +1,36 @@
+//! Tuning-as-a-service: a multi-campaign daemon over the shared
+//! federation substrate (ISSUE 6; the ytopt+libEnsemble persistent-
+//! manager direction from PAPERS.md, arXiv:2402.09222).
+//!
+//! The paper runs one batch job per tuning campaign. This subsystem
+//! turns the engine into a long-lived service:
+//!
+//! * [`protocol`] — the framed wire protocol (pure codec, versioned
+//!   `YT` frames, request/response/event families).
+//! * [`engine`] — the shared campaign engine: [`engine::drive_continuous`]
+//!   steps one continuous-manager campaign at a time with cancel +
+//!   event hooks, and [`engine::CampaignHandle`] is the
+//!   start/poll/cancel/join facade both front-ends use. The classic
+//!   `coordinator::autotune` dispatch lands on the *same* function —
+//!   daemon and CLI cannot diverge.
+//! * [`scheduler`] — FIFO admission onto a bounded set of concurrent
+//!   campaigns, per-campaign event logs, and the shared history store
+//!   that warm-starts each compatible campaign from its predecessors'
+//!   elites.
+//! * [`daemon`] — the TCP listener (`ytopt-rs serve`), with graceful
+//!   SIGTERM/shutdown semantics: checkpoint, terminal `Interrupted`
+//!   events, no dropped sockets.
+//! * [`client`] — the loopback client the CLI subcommands, the example,
+//!   and the e2e tests use.
+
+pub mod client;
+pub mod daemon;
+pub mod engine;
+pub mod protocol;
+pub mod scheduler;
+
+pub use client::Client;
+pub use daemon::{Daemon, ServeConfig};
+pub use engine::{CampaignEvent, CampaignHandle, CampaignOutcome};
+pub use protocol::{CampaignSpec, Decoder, Event, Message, Request, Response};
+pub use scheduler::{Scheduler, ServiceConfig};

@@ -1,0 +1,955 @@
+//! The tuning service's wire protocol: versioned, length-prefixed frames
+//! carrying JSON payloads, with a **pure codec** — [`encode_frame`] /
+//! [`decode_frame`] work on byte slices, no I/O in sight, so every
+//! protocol invariant is property-testable (`tests/service_protocol.rs`).
+//!
+//! Frame layout (network byte order):
+//!
+//! ```text
+//! offset 0..2   magic  b"YT"
+//!        2      protocol version (PROTOCOL_VERSION)
+//!        3      frame kind: 1 = request, 2 = response, 3 = event
+//!        4..8   payload length, u32 big-endian (<= MAX_FRAME_BYTES)
+//!        8..    payload: one UTF-8 JSON object with a "type" tag
+//! ```
+//!
+//! The codec is incremental: [`decode_frame`] returns `Ok(None)` while a
+//! frame is still incomplete (partial reads reassemble for free through
+//! [`Decoder`]), and rejects bad magic, foreign versions, and oversized
+//! lengths *before* buffering a payload — a junk-spewing peer can never
+//! make the daemon allocate unbounded memory or panic.
+//!
+//! Numbers follow the repo's JSON conventions: non-finite `f64` writes
+//! as `null` and reads back as `+inf`; full-width `u64` seeds travel as
+//! hex strings (JSON numbers are f64 and would truncate them).
+
+use crate::coordinator::TuneSetup;
+use crate::util::Json;
+use std::fmt;
+
+/// Protocol revision spoken by this build. A daemon refuses frames from
+/// any other revision (the version byte sits before the length, so the
+/// refusal happens before any payload is trusted).
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Frame header length: magic(2) + version(1) + kind(1) + len(4).
+pub const FRAME_HEADER_BYTES: usize = 8;
+
+/// Upper bound on one frame's payload. Status listings and event frames
+/// are small; this exists so a corrupt or hostile length field cannot
+/// drive an allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+const MAGIC: [u8; 2] = *b"YT";
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+const KIND_EVENT: u8 = 3;
+
+/// Codec failure. Every variant is a protocol-level rejection — the
+/// decoder never panics on hostile input (pinned by property test).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProtocolError {
+    /// First bytes are not the `b"YT"` magic.
+    BadMagic([u8; 2]),
+    /// Version byte differs from [`PROTOCOL_VERSION`].
+    BadVersion(u8),
+    /// Unknown frame-kind byte.
+    BadKind(u8),
+    /// Declared payload length exceeds [`MAX_FRAME_BYTES`].
+    Oversized(usize),
+    /// Payload failed to parse as the declared message shape.
+    Malformed(String),
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtocolError::BadMagic(m) => write!(f, "bad frame magic {m:02x?} (expected \"YT\")"),
+            ProtocolError::BadVersion(v) => {
+                write!(f, "protocol version {v} (this build speaks {PROTOCOL_VERSION})")
+            }
+            ProtocolError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            ProtocolError::Oversized(n) => {
+                write!(f, "frame payload of {n} bytes exceeds the {MAX_FRAME_BYTES}-byte cap")
+            }
+            ProtocolError::Malformed(m) => write!(f, "malformed frame payload: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+// ---------------------------------------------------------------------------
+// campaign request / status / summary payloads
+
+/// A client's campaign request: the search policy subset of
+/// [`TuneSetup`] that the daemon accepts over the wire. Everything the
+/// daemon itself owns (history store, checkpoint placement) is absent by
+/// design — clients describe *what* to tune, the service decides *where*
+/// state lives.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignSpec {
+    pub app: String,
+    pub platform: String,
+    pub nodes: u64,
+    pub metric: String,
+    pub max_evals: usize,
+    pub wallclock_budget_s: f64,
+    pub seed: u64,
+    pub strategy: String,
+    pub surrogate: String,
+    pub kappa: f64,
+    pub n_init: usize,
+    /// Ensemble worker threads for this campaign (the service runs every
+    /// campaign on the continuous manager engine, so 2..=64).
+    pub workers: usize,
+    /// In-flight proposals (0 = worker count).
+    pub batch: usize,
+    pub liar: String,
+    pub fault_rate: f64,
+    pub max_retries: usize,
+    pub straggler_factor: Option<f64>,
+    pub eval_timeout_s: Option<f64>,
+    /// Opt out of the daemon's automatic shared-history warm start.
+    pub warm_start: bool,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> CampaignSpec {
+        CampaignSpec {
+            app: "xsbench".into(),
+            platform: "theta".into(),
+            nodes: 1,
+            metric: "runtime".into(),
+            max_evals: 16,
+            wallclock_budget_s: 1800.0,
+            seed: 42,
+            strategy: "bo".into(),
+            surrogate: "rf".into(),
+            kappa: crate::acquisition::DEFAULT_KAPPA,
+            n_init: 8,
+            workers: 4,
+            batch: 0,
+            liar: "cl-min".into(),
+            fault_rate: 0.0,
+            max_retries: 2,
+            straggler_factor: None,
+            eval_timeout_s: None,
+            warm_start: true,
+        }
+    }
+}
+
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map(Json::Num).unwrap_or(Json::Null)
+}
+
+fn get_f(v: &Json, key: &str, default: f64) -> f64 {
+    v.get(key).and_then(Json::as_f64).unwrap_or(default)
+}
+
+fn get_u(v: &Json, key: &str, default: u64) -> u64 {
+    v.get(key).and_then(Json::as_u64).unwrap_or(default)
+}
+
+fn get_s(v: &Json, key: &str, default: &str) -> String {
+    v.get(key).and_then(Json::as_str).unwrap_or(default).to_string()
+}
+
+fn get_b(v: &Json, key: &str, default: bool) -> bool {
+    v.get(key).and_then(Json::as_bool).unwrap_or(default)
+}
+
+/// `f64` objective off the wire: JSON `null` (non-finite on encode)
+/// reads back as `+inf`, the same convention checkpoints use.
+fn get_obj(v: &Json, key: &str) -> f64 {
+    v.get(key).and_then(Json::as_f64).unwrap_or(f64::INFINITY)
+}
+
+fn seed_to_json(seed: u64) -> Json {
+    Json::Str(format!("{seed:016x}"))
+}
+
+fn seed_from_json(v: &Json, key: &str, default: u64) -> u64 {
+    v.get(key)
+        .and_then(Json::as_str)
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .unwrap_or(default)
+}
+
+impl CampaignSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", self.app.as_str().into()),
+            ("platform", self.platform.as_str().into()),
+            ("nodes", self.nodes.into()),
+            ("metric", self.metric.as_str().into()),
+            ("max_evals", (self.max_evals as u64).into()),
+            ("wallclock_budget_s", num_or_null(self.wallclock_budget_s)),
+            ("seed", seed_to_json(self.seed)),
+            ("strategy", self.strategy.as_str().into()),
+            ("surrogate", self.surrogate.as_str().into()),
+            ("kappa", num_or_null(self.kappa)),
+            ("n_init", (self.n_init as u64).into()),
+            ("workers", (self.workers as u64).into()),
+            ("batch", (self.batch as u64).into()),
+            ("liar", self.liar.as_str().into()),
+            ("fault_rate", num_or_null(self.fault_rate)),
+            ("max_retries", (self.max_retries as u64).into()),
+            ("straggler_factor", opt_num(self.straggler_factor)),
+            ("eval_timeout_s", opt_num(self.eval_timeout_s)),
+            ("warm_start", self.warm_start.into()),
+        ])
+    }
+
+    /// Lenient field-wise parse: absent fields take the defaults, so a
+    /// newer client talking to this daemon degrades gracefully instead
+    /// of being refused outright (the version byte still gates frame
+    /// *layout* changes).
+    pub fn from_json(v: &Json) -> CampaignSpec {
+        let d = CampaignSpec::default();
+        CampaignSpec {
+            app: get_s(v, "app", &d.app),
+            platform: get_s(v, "platform", &d.platform),
+            nodes: get_u(v, "nodes", d.nodes),
+            metric: get_s(v, "metric", &d.metric),
+            max_evals: get_u(v, "max_evals", d.max_evals as u64) as usize,
+            wallclock_budget_s: get_f(v, "wallclock_budget_s", d.wallclock_budget_s),
+            seed: seed_from_json(v, "seed", d.seed),
+            strategy: get_s(v, "strategy", &d.strategy),
+            surrogate: get_s(v, "surrogate", &d.surrogate),
+            kappa: get_f(v, "kappa", d.kappa),
+            n_init: get_u(v, "n_init", d.n_init as u64) as usize,
+            workers: get_u(v, "workers", d.workers as u64) as usize,
+            batch: get_u(v, "batch", d.batch as u64) as usize,
+            liar: get_s(v, "liar", &d.liar),
+            fault_rate: get_f(v, "fault_rate", d.fault_rate),
+            max_retries: get_u(v, "max_retries", d.max_retries as u64) as usize,
+            straggler_factor: v.get("straggler_factor").and_then(Json::as_f64),
+            eval_timeout_s: v.get("eval_timeout_s").and_then(Json::as_f64),
+            warm_start: get_b(v, "warm_start", d.warm_start),
+        }
+    }
+
+    /// Validate and lower into a [`TuneSetup`] the service engine can
+    /// run. The service runs every campaign on the continuous manager
+    /// engine — the same engine `ytopt-rs tune` uses at `workers >= 2` —
+    /// which is what makes a daemon campaign's trajectory bit-identical
+    /// to the solo CLI run with the same spec.
+    pub fn to_setup(&self) -> anyhow::Result<TuneSetup> {
+        use crate::apps::AppKind;
+        use crate::ensemble::LiarStrategy;
+        use crate::metrics::Metric;
+        use crate::platform::PlatformKind;
+        use crate::search::{StrategyKind, SurrogateKind};
+
+        let app = AppKind::parse(&self.app)
+            .ok_or_else(|| anyhow::anyhow!("unknown app `{}`", self.app))?;
+        let platform = match self.platform.to_ascii_lowercase().as_str() {
+            "theta" => PlatformKind::Theta,
+            "summit" => PlatformKind::Summit,
+            other => anyhow::bail!("unknown platform `{other}`"),
+        };
+        let metric = Metric::parse(&self.metric)
+            .ok_or_else(|| anyhow::anyhow!("unknown metric `{}`", self.metric))?;
+        anyhow::ensure!(self.nodes >= 1, "nodes must be >= 1 (got {})", self.nodes);
+        anyhow::ensure!(
+            (1..=100_000).contains(&self.max_evals),
+            "max_evals must be in 1..=100000 (got {})",
+            self.max_evals
+        );
+        anyhow::ensure!(
+            (2..=64).contains(&self.workers),
+            "service campaigns need 2..=64 ensemble workers (got {}); the continuous \
+             manager engine is the only campaign engine the daemon runs",
+            self.workers
+        );
+        anyhow::ensure!(
+            self.wallclock_budget_s > 0.0,
+            "wallclock budget must be positive (got {})",
+            self.wallclock_budget_s
+        );
+        anyhow::ensure!(self.kappa.is_finite(), "kappa must be finite");
+        let mut setup = TuneSetup::new(app, platform, self.nodes, metric);
+        setup.max_evals = self.max_evals;
+        setup.wallclock_budget_s = self.wallclock_budget_s;
+        setup.seed = self.seed;
+        setup.strategy = StrategyKind::parse(&self.strategy)
+            .ok_or_else(|| anyhow::anyhow!("unknown strategy `{}`", self.strategy))?;
+        setup.surrogate = SurrogateKind::parse(&self.surrogate)
+            .ok_or_else(|| anyhow::anyhow!("unknown surrogate `{}`", self.surrogate))?;
+        setup.kappa = self.kappa;
+        setup.n_init = self.n_init;
+        setup.ensemble_workers = self.workers;
+        setup.ensemble_batch = self.batch;
+        setup.liar = LiarStrategy::parse(&self.liar)
+            .ok_or_else(|| anyhow::anyhow!("unknown liar strategy `{}`", self.liar))?;
+        setup.fault_rate = self.fault_rate.clamp(0.0, 1.0);
+        setup.max_retries = self.max_retries;
+        setup.straggler_factor = self.straggler_factor;
+        setup.eval_timeout_s = self.eval_timeout_s;
+        Ok(setup)
+    }
+
+    /// Capture a `TuneSetup`'s wire-transferable policy (the CLI
+    /// `submit` front-end builds its setup with the `tune` flags, then
+    /// ships this). Fails on setups the service does not run.
+    pub fn from_setup(setup: &TuneSetup) -> anyhow::Result<CampaignSpec> {
+        use crate::search::{StrategyKind, SurrogateKind};
+        anyhow::ensure!(
+            setup.federation_shards == 0,
+            "federated campaigns are not submittable over the service protocol"
+        );
+        anyhow::ensure!(
+            setup.manager_cycle == crate::ensemble::ManagerCycle::Continuous,
+            "service campaigns run the continuous manager cycle"
+        );
+        let strategy = match setup.strategy {
+            StrategyKind::Bo => "bo",
+            StrategyKind::Random => "random",
+            StrategyKind::Grid => "grid",
+            StrategyKind::Mctree => "mctree",
+        };
+        let surrogate = match setup.surrogate {
+            SurrogateKind::RandomForest => "rf",
+            SurrogateKind::ExtraTrees => "et",
+            SurrogateKind::Gbrt => "gbrt",
+        };
+        // canonical lowercase tokens: every enum's `parse` accepts the
+        // lowercased `name`, but `name` itself is display-cased
+        Ok(CampaignSpec {
+            app: setup.app.name().to_ascii_lowercase(),
+            platform: setup.platform.name().to_ascii_lowercase(),
+            nodes: setup.nodes,
+            metric: setup.metric.name().to_ascii_lowercase(),
+            max_evals: setup.max_evals,
+            wallclock_budget_s: setup.wallclock_budget_s,
+            seed: setup.seed,
+            strategy: strategy.into(),
+            surrogate: surrogate.into(),
+            kappa: setup.kappa,
+            n_init: setup.n_init,
+            workers: setup.ensemble_workers.max(2),
+            batch: setup.ensemble_batch,
+            liar: setup.liar.name().to_string(),
+            fault_rate: setup.fault_rate,
+            max_retries: setup.max_retries,
+            straggler_factor: setup.straggler_factor,
+            eval_timeout_s: setup.eval_timeout_s,
+            warm_start: true,
+        })
+    }
+}
+
+/// One campaign's terminal report, carried by [`Event::Done`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignSummary {
+    pub evaluations: u64,
+    pub baseline_objective: f64,
+    pub best_objective: f64,
+    pub best_config_desc: String,
+    pub improvement_pct: f64,
+    pub wallclock_s: f64,
+}
+
+impl CampaignSummary {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("evaluations", self.evaluations.into()),
+            ("baseline_objective", num_or_null(self.baseline_objective)),
+            ("best_objective", num_or_null(self.best_objective)),
+            ("best_config_desc", self.best_config_desc.as_str().into()),
+            ("improvement_pct", num_or_null(self.improvement_pct)),
+            ("wallclock_s", num_or_null(self.wallclock_s)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> CampaignSummary {
+        CampaignSummary {
+            evaluations: get_u(v, "evaluations", 0),
+            baseline_objective: get_obj(v, "baseline_objective"),
+            best_objective: get_obj(v, "best_objective"),
+            best_config_desc: get_s(v, "best_config_desc", ""),
+            improvement_pct: get_f(v, "improvement_pct", 0.0),
+            wallclock_s: get_f(v, "wallclock_s", 0.0),
+        }
+    }
+}
+
+/// One row of a [`Response::Status`] listing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignStatusInfo {
+    pub id: u64,
+    /// `queued | running | done | cancelled | interrupted | failed`.
+    pub state: String,
+    pub app: String,
+    pub seed: u64,
+    pub evaluations: u64,
+    pub best_objective: f64,
+}
+
+impl CampaignStatusInfo {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", self.id.into()),
+            ("state", self.state.as_str().into()),
+            ("app", self.app.as_str().into()),
+            ("seed", seed_to_json(self.seed)),
+            ("evaluations", self.evaluations.into()),
+            ("best_objective", num_or_null(self.best_objective)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> CampaignStatusInfo {
+        CampaignStatusInfo {
+            id: get_u(v, "id", 0),
+            state: get_s(v, "state", "unknown"),
+            app: get_s(v, "app", ""),
+            seed: seed_from_json(v, "seed", 0),
+            evaluations: get_u(v, "evaluations", 0),
+            best_objective: get_obj(v, "best_objective"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the three frame families
+
+/// Client → daemon.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    /// Submit a campaign; answered with [`Response::Accepted`].
+    Submit { spec: CampaignSpec },
+    /// Stream `campaign`'s events starting at index `from`; the daemon
+    /// writes [`Event`] frames until a terminal event has been sent.
+    Watch { campaign: u64, from: u64 },
+    Status,
+    Cancel { campaign: u64 },
+    /// Graceful daemon shutdown: running campaigns checkpoint and every
+    /// watcher receives a terminal [`Event::Interrupted`].
+    Shutdown,
+}
+
+/// Daemon → client, one per request (watch additionally streams events).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Pong,
+    Accepted { campaign: u64 },
+    Status { campaigns: Vec<CampaignStatusInfo> },
+    Cancelling { campaign: u64 },
+    ShuttingDown,
+    Error { message: String },
+}
+
+/// Daemon → client, streamed to watchers. `Done`, `Cancelled`,
+/// `Interrupted`, and `Failed` are terminal: nothing follows them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Started { campaign: u64, evals_planned: u64 },
+    /// The campaign absorbed `elites` prior observations from the
+    /// daemon's shared history store before its first proposal.
+    WarmStarted { campaign: u64, elites: u64 },
+    Proposed { campaign: u64, eval_id: u64 },
+    EvalCompleted {
+        campaign: u64,
+        eval_id: u64,
+        config_key: String,
+        objective: f64,
+        runtime_s: f64,
+        best_so_far: f64,
+        timed_out: bool,
+        cancelled: bool,
+    },
+    Improved { campaign: u64, eval_id: u64, best_objective: f64, config_desc: String },
+    StragglerKilled { campaign: u64, eval_id: u64 },
+    Done { campaign: u64, summary: CampaignSummary },
+    Cancelled { campaign: u64, applied: u64 },
+    /// Daemon shutdown overtook the campaign: the applied prefix is
+    /// checkpointed (when the daemon runs with a checkpoint dir) and the
+    /// campaign can resume in a later daemon life.
+    Interrupted { campaign: u64, applied: u64, checkpointed: bool },
+    Failed { campaign: u64, message: String },
+}
+
+impl Event {
+    /// Terminal events end a watch stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            Event::Done { .. }
+                | Event::Cancelled { .. }
+                | Event::Interrupted { .. }
+                | Event::Failed { .. }
+        )
+    }
+
+    /// The campaign this event belongs to.
+    pub fn campaign(&self) -> u64 {
+        match self {
+            Event::Started { campaign, .. }
+            | Event::WarmStarted { campaign, .. }
+            | Event::Proposed { campaign, .. }
+            | Event::EvalCompleted { campaign, .. }
+            | Event::Improved { campaign, .. }
+            | Event::StragglerKilled { campaign, .. }
+            | Event::Done { campaign, .. }
+            | Event::Cancelled { campaign, .. }
+            | Event::Interrupted { campaign, .. }
+            | Event::Failed { campaign, .. } => *campaign,
+        }
+    }
+}
+
+/// Any frame payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    Request(Request),
+    Response(Response),
+    Event(Event),
+}
+
+// ---------------------------------------------------------------------------
+// payload (de)serialization
+
+fn tagged(t: &str, mut fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("type", Json::Str(t.to_string()))];
+    all.append(&mut fields);
+    Json::obj(all)
+}
+
+impl Request {
+    fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => tagged("ping", vec![]),
+            Request::Submit { spec } => tagged("submit", vec![("spec", spec.to_json())]),
+            Request::Watch { campaign, from } => tagged(
+                "watch",
+                vec![("campaign", (*campaign).into()), ("from", (*from).into())],
+            ),
+            Request::Status => tagged("status", vec![]),
+            Request::Cancel { campaign } => {
+                tagged("cancel", vec![("campaign", (*campaign).into())])
+            }
+            Request::Shutdown => tagged("shutdown", vec![]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Request, ProtocolError> {
+        let t = v.get("type").and_then(Json::as_str).unwrap_or("");
+        match t {
+            "ping" => Ok(Request::Ping),
+            "submit" => {
+                let spec = v
+                    .get("spec")
+                    .ok_or_else(|| ProtocolError::Malformed("submit missing `spec`".into()))?;
+                Ok(Request::Submit { spec: CampaignSpec::from_json(spec) })
+            }
+            "watch" => Ok(Request::Watch {
+                campaign: get_u(v, "campaign", 0),
+                from: get_u(v, "from", 0),
+            }),
+            "status" => Ok(Request::Status),
+            "cancel" => Ok(Request::Cancel { campaign: get_u(v, "campaign", 0) }),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(ProtocolError::Malformed(format!("unknown request type `{other}`"))),
+        }
+    }
+}
+
+impl Response {
+    fn to_json(&self) -> Json {
+        match self {
+            Response::Pong => tagged("pong", vec![]),
+            Response::Accepted { campaign } => {
+                tagged("accepted", vec![("campaign", (*campaign).into())])
+            }
+            Response::Status { campaigns } => tagged(
+                "status",
+                vec![(
+                    "campaigns",
+                    Json::Arr(campaigns.iter().map(CampaignStatusInfo::to_json).collect()),
+                )],
+            ),
+            Response::Cancelling { campaign } => {
+                tagged("cancelling", vec![("campaign", (*campaign).into())])
+            }
+            Response::ShuttingDown => tagged("shutting_down", vec![]),
+            Response::Error { message } => {
+                tagged("error", vec![("message", message.as_str().into())])
+            }
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Response, ProtocolError> {
+        let t = v.get("type").and_then(Json::as_str).unwrap_or("");
+        match t {
+            "pong" => Ok(Response::Pong),
+            "accepted" => Ok(Response::Accepted { campaign: get_u(v, "campaign", 0) }),
+            "status" => {
+                let campaigns = v
+                    .get("campaigns")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().map(CampaignStatusInfo::from_json).collect())
+                    .unwrap_or_default();
+                Ok(Response::Status { campaigns })
+            }
+            "cancelling" => Ok(Response::Cancelling { campaign: get_u(v, "campaign", 0) }),
+            "shutting_down" => Ok(Response::ShuttingDown),
+            "error" => Ok(Response::Error { message: get_s(v, "message", "") }),
+            other => Err(ProtocolError::Malformed(format!("unknown response type `{other}`"))),
+        }
+    }
+}
+
+impl Event {
+    fn to_json(&self) -> Json {
+        let c = |campaign: u64| ("campaign", campaign.into());
+        match self {
+            Event::Started { campaign, evals_planned } => tagged(
+                "started",
+                vec![c(*campaign), ("evals_planned", (*evals_planned).into())],
+            ),
+            Event::WarmStarted { campaign, elites } => {
+                tagged("warm_started", vec![c(*campaign), ("elites", (*elites).into())])
+            }
+            Event::Proposed { campaign, eval_id } => {
+                tagged("proposed", vec![c(*campaign), ("eval_id", (*eval_id).into())])
+            }
+            Event::EvalCompleted {
+                campaign,
+                eval_id,
+                config_key,
+                objective,
+                runtime_s,
+                best_so_far,
+                timed_out,
+                cancelled,
+            } => tagged(
+                "eval_completed",
+                vec![
+                    c(*campaign),
+                    ("eval_id", (*eval_id).into()),
+                    ("config_key", config_key.as_str().into()),
+                    ("objective", num_or_null(*objective)),
+                    ("runtime_s", num_or_null(*runtime_s)),
+                    ("best_so_far", num_or_null(*best_so_far)),
+                    ("timed_out", (*timed_out).into()),
+                    ("cancelled", (*cancelled).into()),
+                ],
+            ),
+            Event::Improved { campaign, eval_id, best_objective, config_desc } => tagged(
+                "improved",
+                vec![
+                    c(*campaign),
+                    ("eval_id", (*eval_id).into()),
+                    ("best_objective", num_or_null(*best_objective)),
+                    ("config_desc", config_desc.as_str().into()),
+                ],
+            ),
+            Event::StragglerKilled { campaign, eval_id } => {
+                tagged("straggler_killed", vec![c(*campaign), ("eval_id", (*eval_id).into())])
+            }
+            Event::Done { campaign, summary } => {
+                tagged("done", vec![c(*campaign), ("summary", summary.to_json())])
+            }
+            Event::Cancelled { campaign, applied } => {
+                tagged("cancelled", vec![c(*campaign), ("applied", (*applied).into())])
+            }
+            Event::Interrupted { campaign, applied, checkpointed } => tagged(
+                "interrupted",
+                vec![
+                    c(*campaign),
+                    ("applied", (*applied).into()),
+                    ("checkpointed", (*checkpointed).into()),
+                ],
+            ),
+            Event::Failed { campaign, message } => {
+                tagged("failed", vec![c(*campaign), ("message", message.as_str().into())])
+            }
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Event, ProtocolError> {
+        let t = v.get("type").and_then(Json::as_str).unwrap_or("");
+        let campaign = get_u(v, "campaign", 0);
+        match t {
+            "started" => {
+                Ok(Event::Started { campaign, evals_planned: get_u(v, "evals_planned", 0) })
+            }
+            "warm_started" => Ok(Event::WarmStarted { campaign, elites: get_u(v, "elites", 0) }),
+            "proposed" => Ok(Event::Proposed { campaign, eval_id: get_u(v, "eval_id", 0) }),
+            "eval_completed" => Ok(Event::EvalCompleted {
+                campaign,
+                eval_id: get_u(v, "eval_id", 0),
+                config_key: get_s(v, "config_key", ""),
+                objective: get_obj(v, "objective"),
+                runtime_s: get_obj(v, "runtime_s"),
+                best_so_far: get_obj(v, "best_so_far"),
+                timed_out: get_b(v, "timed_out", false),
+                cancelled: get_b(v, "cancelled", false),
+            }),
+            "improved" => Ok(Event::Improved {
+                campaign,
+                eval_id: get_u(v, "eval_id", 0),
+                best_objective: get_obj(v, "best_objective"),
+                config_desc: get_s(v, "config_desc", ""),
+            }),
+            "straggler_killed" => {
+                Ok(Event::StragglerKilled { campaign, eval_id: get_u(v, "eval_id", 0) })
+            }
+            "done" => {
+                let summary = v
+                    .get("summary")
+                    .map(CampaignSummary::from_json)
+                    .ok_or_else(|| ProtocolError::Malformed("done missing `summary`".into()))?;
+                Ok(Event::Done { campaign, summary })
+            }
+            "cancelled" => Ok(Event::Cancelled { campaign, applied: get_u(v, "applied", 0) }),
+            "interrupted" => Ok(Event::Interrupted {
+                campaign,
+                applied: get_u(v, "applied", 0),
+                checkpointed: get_b(v, "checkpointed", false),
+            }),
+            "failed" => Ok(Event::Failed { campaign, message: get_s(v, "message", "") }),
+            other => Err(ProtocolError::Malformed(format!("unknown event type `{other}`"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the pure codec
+
+/// Serialize one message into a complete frame.
+pub fn encode_frame(msg: &Message) -> Vec<u8> {
+    let (kind, payload) = match msg {
+        Message::Request(r) => (KIND_REQUEST, r.to_json()),
+        Message::Response(r) => (KIND_RESPONSE, r.to_json()),
+        Message::Event(e) => (KIND_EVENT, e.to_json()),
+    };
+    let body = payload.to_string().into_bytes();
+    debug_assert!(body.len() <= MAX_FRAME_BYTES, "outgoing frame exceeds the payload cap");
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(PROTOCOL_VERSION);
+    out.push(kind);
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode the first complete frame at the head of `buf`.
+///
+/// * `Ok(Some((message, consumed)))` — one frame decoded; the caller
+///   should drop `consumed` bytes and call again.
+/// * `Ok(None)` — the head is a *valid prefix* of a frame; read more.
+/// * `Err(_)` — the head can never become a valid frame (bad magic,
+///   foreign version, oversized length, malformed payload). The
+///   connection should be dropped. Never panics, for any input.
+pub fn decode_frame(buf: &[u8]) -> Result<Option<(Message, usize)>, ProtocolError> {
+    // validate header bytes as they arrive, so junk is rejected at the
+    // earliest byte that can prove it junk
+    if !buf.is_empty() && buf[0] != MAGIC[0] {
+        return Err(ProtocolError::BadMagic([buf[0], *buf.get(1).unwrap_or(&0)]));
+    }
+    if buf.len() >= 2 && buf[1] != MAGIC[1] {
+        return Err(ProtocolError::BadMagic([buf[0], buf[1]]));
+    }
+    if buf.len() >= 3 && buf[2] != PROTOCOL_VERSION {
+        return Err(ProtocolError::BadVersion(buf[2]));
+    }
+    if buf.len() >= 4 && !matches!(buf[3], KIND_REQUEST | KIND_RESPONSE | KIND_EVENT) {
+        return Err(ProtocolError::BadKind(buf[3]));
+    }
+    if buf.len() < FRAME_HEADER_BYTES {
+        return Ok(None);
+    }
+    let len = u32::from_be_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(ProtocolError::Oversized(len));
+    }
+    if buf.len() < FRAME_HEADER_BYTES + len {
+        return Ok(None);
+    }
+    let body = &buf[FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + len];
+    let text = std::str::from_utf8(body)
+        .map_err(|e| ProtocolError::Malformed(format!("payload is not UTF-8: {e}")))?;
+    let v = Json::parse(text).map_err(|e| ProtocolError::Malformed(e.to_string()))?;
+    let msg = match buf[3] {
+        KIND_REQUEST => Message::Request(Request::from_json(&v)?),
+        KIND_RESPONSE => Message::Response(Response::from_json(&v)?),
+        _ => Message::Event(Event::from_json(&v)?),
+    };
+    Ok(Some((msg, FRAME_HEADER_BYTES + len)))
+}
+
+/// Incremental frame reassembler over [`decode_frame`]: push whatever
+/// byte chunks the transport hands you, collect whole messages.
+#[derive(Debug, Default)]
+pub struct Decoder {
+    buf: Vec<u8>,
+}
+
+impl Decoder {
+    pub fn new() -> Decoder {
+        Decoder { buf: Vec::new() }
+    }
+
+    /// Bytes currently buffered (a partial frame, possibly empty).
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Append `bytes` and drain every complete frame at the head. On
+    /// error the stream is poisoned — the caller should drop the
+    /// connection (framing cannot resynchronize after junk).
+    pub fn push(&mut self, bytes: &[u8]) -> Result<Vec<Message>, ProtocolError> {
+        self.buf.extend_from_slice(bytes);
+        let mut out = Vec::new();
+        let mut consumed = 0usize;
+        loop {
+            match decode_frame(&self.buf[consumed..]) {
+                Ok(Some((msg, used))) => {
+                    out.push(msg);
+                    consumed += used;
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    self.buf.clear();
+                    return Err(e);
+                }
+            }
+        }
+        if consumed > 0 {
+            self.buf.drain(..consumed);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_messages() -> Vec<Message> {
+        vec![
+            Message::Request(Request::Ping),
+            Message::Request(Request::Submit { spec: CampaignSpec::default() }),
+            Message::Request(Request::Watch { campaign: 3, from: 17 }),
+            Message::Response(Response::Accepted { campaign: 9 }),
+            Message::Response(Response::Error { message: "no such campaign".into() }),
+            Message::Event(Event::EvalCompleted {
+                campaign: 2,
+                eval_id: 11,
+                config_key: "1,4,0,2".into(),
+                objective: 12.75,
+                runtime_s: f64::INFINITY, // travels as null, reads as +inf
+                best_so_far: 12.75,
+                timed_out: true,
+                cancelled: false,
+            }),
+            Message::Event(Event::Done {
+                campaign: 2,
+                summary: CampaignSummary {
+                    evaluations: 16,
+                    baseline_objective: 20.0,
+                    best_objective: 12.75,
+                    best_config_desc: "OMP_NUM_THREADS=64".into(),
+                    improvement_pct: 36.25,
+                    wallclock_s: 480.5,
+                },
+            }),
+        ]
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        for msg in sample_messages() {
+            let bytes = encode_frame(&msg);
+            let (back, used) = decode_frame(&bytes).unwrap().unwrap();
+            assert_eq!(used, bytes.len());
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn decoder_reassembles_byte_at_a_time() {
+        let msgs = sample_messages();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            wire.extend_from_slice(&encode_frame(m));
+        }
+        let mut dec = Decoder::new();
+        let mut got = Vec::new();
+        for b in wire {
+            got.extend(dec.push(&[b]).unwrap());
+        }
+        assert_eq!(got, msgs);
+        assert_eq!(dec.pending(), 0);
+    }
+
+    #[test]
+    fn junk_and_oversized_frames_are_rejected() {
+        assert!(matches!(decode_frame(b"xx"), Err(ProtocolError::BadMagic(_))));
+        assert!(matches!(decode_frame(b"Yx"), Err(ProtocolError::BadMagic(_))));
+        assert!(matches!(decode_frame(&[b'Y', b'T', 99]), Err(ProtocolError::BadVersion(99))));
+        assert!(matches!(
+            decode_frame(&[b'Y', b'T', PROTOCOL_VERSION, 7]),
+            Err(ProtocolError::BadKind(7))
+        ));
+        let mut oversized = vec![b'Y', b'T', PROTOCOL_VERSION, 1];
+        oversized.extend_from_slice(&(MAX_FRAME_BYTES as u32 + 1).to_be_bytes());
+        assert!(matches!(decode_frame(&oversized), Err(ProtocolError::Oversized(_))));
+        // a valid prefix is not an error
+        let frame = encode_frame(&Message::Request(Request::Ping));
+        for cut in 0..frame.len() {
+            assert_eq!(decode_frame(&frame[..cut]).unwrap(), None, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn spec_lowers_to_a_runnable_setup_and_back() {
+        let spec = CampaignSpec { seed: u64::MAX - 5, workers: 3, ..CampaignSpec::default() };
+        let setup = spec.to_setup().unwrap();
+        assert_eq!(setup.seed, u64::MAX - 5);
+        assert_eq!(setup.ensemble_workers, 3);
+        // from_setup emits canonical tokens ("xsbench-history", not
+        // "xsbench"); lowering again must land on the identical setup
+        let back = CampaignSpec::from_setup(&setup).unwrap();
+        let setup2 = back.to_setup().unwrap();
+        assert_eq!(setup2.app, setup.app);
+        assert_eq!(setup2.platform, setup.platform);
+        assert_eq!(setup2.metric, setup.metric);
+        assert_eq!(setup2.seed, setup.seed);
+        assert_eq!(setup2.ensemble_workers, setup.ensemble_workers);
+        assert_eq!(setup2.liar, setup.liar);
+        // wire roundtrip preserves the full-width seed
+        let wire = CampaignSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap());
+        assert_eq!(wire, spec);
+    }
+
+    #[test]
+    fn spec_validation_rejects_unrunnable_campaigns() {
+        let bad = |f: &dyn Fn(&mut CampaignSpec)| {
+            let mut s = CampaignSpec::default();
+            f(&mut s);
+            s.to_setup().is_err()
+        };
+        assert!(bad(&|s| s.app = "no-such-app".into()));
+        assert!(bad(&|s| s.platform = "frontier".into()));
+        assert!(bad(&|s| s.metric = "latency".into()));
+        assert!(bad(&|s| s.workers = 1), "serial campaigns are not the service engine");
+        assert!(bad(&|s| s.workers = 65));
+        assert!(bad(&|s| s.max_evals = 0));
+        assert!(bad(&|s| s.strategy = "annealing".into()));
+        assert!(bad(&|s| s.liar = "truth".into()));
+    }
+}

@@ -1,0 +1,456 @@
+//! Multi-campaign scheduler: N campaigns on a bounded shared substrate.
+//!
+//! Admission is FIFO with a concurrency cap (`max_active`): each running
+//! campaign is a [`CampaignHandle`] — its own [`ContinuousShard`] state
+//! machine with its own worker pool, RNG stream, and surrogate — so a
+//! campaign's trajectory depends only on its own seed/policy, never on
+//! what else is co-scheduled (pinned by `tests/service_e2e.rs` against
+//! solo CLI runs). Fairness is therefore wholly an admission property:
+//! the cap bounds the substrate, the queue order is submission order,
+//! and nothing a running campaign does can perturb a neighbour's search.
+//!
+//! The scheduler owns the daemon's **shared history store**: every
+//! completed campaign appends its run record, and every submitted
+//! campaign (unless it opts out) is probed against the store *at
+//! admission time* — if compatible-fingerprint elites exist, the warm
+//! start is resolved eagerly under the admission lock, so the prior a
+//! campaign absorbs is pinned the moment it is accepted, not whenever a
+//! worker thread happens to start it.
+//!
+//! [`ContinuousShard`]: crate::ensemble::federation::ContinuousShard
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::TuneSetup;
+use crate::runtime::Scorer;
+
+use super::engine::{CampaignEvent, CampaignHandle, CampaignOutcome};
+use super::protocol::{CampaignSpec, CampaignStatusInfo, CampaignSummary, Event};
+
+/// Daemon-side service policy (the `[service]` config section).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Campaigns running concurrently; further submissions queue.
+    pub max_active: usize,
+    /// Shared cross-run history store: completed campaigns append here,
+    /// new compatible campaigns warm-start from here.
+    pub history_dir: Option<PathBuf>,
+    /// Directory for per-campaign v3 checkpoints (`campaign-<id>.json`);
+    /// what makes a graceful shutdown resumable.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Elites to absorb when a warm start resolves.
+    pub warm_start_elites: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            max_active: 4,
+            history_dir: None,
+            checkpoint_dir: None,
+            warm_start_elites: 8,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Queued,
+    Running,
+    Done,
+    Cancelled,
+    Interrupted,
+    Failed,
+}
+
+impl Phase {
+    fn name(self) -> &'static str {
+        match self {
+            Phase::Queued => "queued",
+            Phase::Running => "running",
+            Phase::Done => "done",
+            Phase::Cancelled => "cancelled",
+            Phase::Interrupted => "interrupted",
+            Phase::Failed => "failed",
+        }
+    }
+
+    fn is_terminal(self) -> bool {
+        matches!(self, Phase::Done | Phase::Cancelled | Phase::Interrupted | Phase::Failed)
+    }
+}
+
+/// One campaign's scheduler-side record. The full event log is kept for
+/// the campaign's lifetime so a watcher can attach at any point (or
+/// re-attach after a dropped connection) and replay from any index.
+struct Campaign {
+    id: u64,
+    spec: CampaignSpec,
+    /// `Some` while waiting to run; taken at dispatch.
+    setup: Option<TuneSetup>,
+    phase: Phase,
+    events: Vec<Event>,
+    evaluations: u64,
+    best_objective: f64,
+    /// Raised to stop the running campaign (user cancel or shutdown).
+    cancel: Option<Arc<AtomicBool>>,
+    /// True when the stop came from daemon shutdown, not a user cancel —
+    /// decides whether the terminal event is `Interrupted` or
+    /// `Cancelled`.
+    interrupt_requested: bool,
+    /// Checkpoint path handed to the setup (reported in `Interrupted`).
+    checkpointed_to: Option<PathBuf>,
+}
+
+struct SchedState {
+    campaigns: Vec<Campaign>,
+    next_id: u64,
+    running: usize,
+    shutting_down: bool,
+}
+
+impl SchedState {
+    fn campaign_mut(&mut self, id: u64) -> Option<&mut Campaign> {
+        self.campaigns.iter_mut().find(|c| c.id == id)
+    }
+
+    fn campaign(&self, id: u64) -> Option<&Campaign> {
+        self.campaigns.iter().find(|c| c.id == id)
+    }
+}
+
+/// The daemon's campaign scheduler. All methods take `&Arc<Self>`
+/// because dispatch spawns pump threads holding a scheduler reference.
+pub struct Scheduler {
+    scorer: Arc<Scorer>,
+    cfg: ServiceConfig,
+    state: Mutex<SchedState>,
+    /// Notified on every event append and phase change (watchers block
+    /// here; `shutdown` waits here for the running count to drain).
+    wake: Condvar,
+}
+
+impl Scheduler {
+    pub fn new(scorer: Arc<Scorer>, cfg: ServiceConfig) -> Arc<Scheduler> {
+        Arc::new(Scheduler {
+            scorer,
+            cfg,
+            state: Mutex::new(SchedState {
+                campaigns: Vec::new(),
+                next_id: 1,
+                running: 0,
+                shutting_down: false,
+            }),
+            wake: Condvar::new(),
+        })
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Admit a campaign: validate the spec, resolve the shared-history
+    /// warm start (eagerly, under the admission lock — see module docs),
+    /// assign an id, queue, and dispatch if a slot is free.
+    pub fn submit(self: &Arc<Self>, spec: CampaignSpec) -> Result<u64> {
+        let mut setup = spec.to_setup()?;
+        if let Some(dir) = &self.cfg.history_dir {
+            setup.history_dir = Some(dir.clone());
+        }
+
+        let mut st = self.state.lock().unwrap();
+        anyhow::ensure!(!st.shutting_down, "daemon is shutting down; submissions refused");
+        let id = st.next_id;
+        st.next_id += 1;
+
+        if let Some(dir) = &self.cfg.checkpoint_dir {
+            setup.checkpoint_path = Some(dir.join(format!("campaign-{id}.json")));
+        }
+
+        // eager warm-start resolution: `apply_warm_start` refuses when
+        // the store holds nothing compatible — that refusal is this
+        // campaign's cold start, not an error (first campaigns into an
+        // empty store, or a different app/platform/metric)
+        if spec.warm_start && self.cfg.history_dir.is_some() {
+            let mut warm = setup.clone();
+            warm.warm_start_from = self.cfg.history_dir.clone();
+            warm.warm_start_elites = self.cfg.warm_start_elites;
+            match crate::history::apply_warm_start(&mut warm, self.scorer.as_ref()) {
+                Ok(()) => setup = warm,
+                Err(e) => log::info!("campaign {id}: cold start ({e:#})"),
+            }
+        }
+
+        st.campaigns.push(Campaign {
+            id,
+            spec,
+            setup: Some(setup),
+            phase: Phase::Queued,
+            events: Vec::new(),
+            evaluations: 0,
+            best_objective: f64::INFINITY,
+            cancel: None,
+            interrupt_requested: false,
+            checkpointed_to: None,
+        });
+        self.dispatch_locked(&mut st);
+        drop(st);
+        self.wake.notify_all();
+        Ok(id)
+    }
+
+    /// Start queued campaigns while slots are free. Caller holds the lock.
+    fn dispatch_locked(self: &Arc<Self>, st: &mut SchedState) {
+        while st.running < self.cfg.max_active.max(1) {
+            let Some(c) =
+                st.campaigns.iter_mut().find(|c| c.phase == Phase::Queued && c.setup.is_some())
+            else {
+                break;
+            };
+            let id = c.id;
+            let setup = c.setup.take().expect("queued campaign has a setup");
+            c.checkpointed_to = setup.checkpoint_path.clone();
+            c.phase = Phase::Running;
+            let handle = CampaignHandle::start(setup, self.scorer.clone());
+            c.cancel = Some(handle.cancel_flag());
+            // a stop requested while this campaign was still queued
+            // (cancel-then-dispatch race) applies immediately
+            if c.interrupt_requested {
+                handle.cancel();
+            }
+            st.running += 1;
+            let sched = self.clone();
+            std::thread::Builder::new()
+                .name(format!("campaign-{id}-pump"))
+                .spawn(move || sched.pump(id, handle))
+                .expect("spawn campaign pump thread");
+        }
+    }
+
+    /// Per-running-campaign event pump: forward engine events into the
+    /// campaign's log, then translate the join outcome into the terminal
+    /// event and free the slot.
+    fn pump(self: Arc<Self>, id: u64, mut handle: CampaignHandle) {
+        loop {
+            match handle.recv_event(Duration::from_millis(100)) {
+                Some(ev) => self.push_event(id, ev),
+                None => {
+                    if handle.is_done() {
+                        for ev in handle.poll_events() {
+                            self.push_event(id, ev);
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        let outcome = handle.join();
+        let mut st = self.state.lock().unwrap();
+        if let Some(c) = st.campaign_mut(id) {
+            let (phase, terminal) = match outcome {
+                Ok(CampaignOutcome::Finished(result)) => {
+                    let summary = CampaignSummary {
+                        evaluations: result.evaluations as u64,
+                        baseline_objective: result.baseline_objective,
+                        best_objective: result.best_objective,
+                        best_config_desc: result.best_config_desc.clone(),
+                        improvement_pct: result.improvement_pct,
+                        wallclock_s: result.wallclock_s,
+                    };
+                    (Phase::Done, Event::Done { campaign: id, summary })
+                }
+                Ok(CampaignOutcome::Interrupted { applied, checkpointed }) => {
+                    if c.interrupt_requested {
+                        (
+                            Phase::Interrupted,
+                            Event::Interrupted { campaign: id, applied: applied as u64, checkpointed },
+                        )
+                    } else {
+                        (Phase::Cancelled, Event::Cancelled { campaign: id, applied: applied as u64 })
+                    }
+                }
+                Err(e) => (Phase::Failed, Event::Failed { campaign: id, message: format!("{e:#}") }),
+            };
+            c.phase = phase;
+            c.events.push(terminal);
+        }
+        st.running = st.running.saturating_sub(1);
+        if !st.shutting_down {
+            self.dispatch_locked(&mut st);
+        }
+        drop(st);
+        self.wake.notify_all();
+    }
+
+    /// Append one engine event to a campaign's log (tagging it with the
+    /// campaign id) and update the live counters.
+    fn push_event(&self, id: u64, ev: CampaignEvent) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(c) = st.campaign_mut(id) {
+            let wire = match ev {
+                CampaignEvent::Started { evals_planned } => {
+                    Event::Started { campaign: id, evals_planned }
+                }
+                CampaignEvent::WarmStarted { elites } => Event::WarmStarted { campaign: id, elites },
+                CampaignEvent::Proposed { eval_id } => Event::Proposed { campaign: id, eval_id },
+                CampaignEvent::EvalCompleted {
+                    eval_id,
+                    config_key,
+                    objective,
+                    runtime_s,
+                    best_so_far,
+                    timed_out,
+                    cancelled,
+                } => {
+                    c.evaluations += 1;
+                    Event::EvalCompleted {
+                        campaign: id,
+                        eval_id,
+                        config_key,
+                        objective,
+                        runtime_s,
+                        best_so_far,
+                        timed_out,
+                        cancelled,
+                    }
+                }
+                CampaignEvent::Improved { eval_id, best_objective, config_desc } => {
+                    c.best_objective = best_objective;
+                    Event::Improved { campaign: id, eval_id, best_objective, config_desc }
+                }
+                CampaignEvent::StragglerKilled { eval_id } => {
+                    Event::StragglerKilled { campaign: id, eval_id }
+                }
+            };
+            c.events.push(wire);
+        }
+        drop(st);
+        self.wake.notify_all();
+    }
+
+    /// Events `from..` for `campaign`, blocking up to `timeout` while the
+    /// log has nothing new **and** the campaign is not terminal. An empty
+    /// return with a terminal campaign means the watcher has everything.
+    pub fn wait_events(&self, campaign: u64, from: usize, timeout: Duration) -> Result<Vec<Event>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let Some(c) = st.campaign(campaign) else {
+                anyhow::bail!("no such campaign: {campaign}");
+            };
+            if c.events.len() > from {
+                return Ok(c.events[from..].to_vec());
+            }
+            if c.phase.is_terminal() {
+                return Ok(Vec::new());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(Vec::new());
+            }
+            let (guard, _) = self.wake.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Is this campaign terminal (done, cancelled, interrupted, failed)?
+    pub fn is_terminal(&self, campaign: u64) -> Result<bool> {
+        let st = self.state.lock().unwrap();
+        let Some(c) = st.campaign(campaign) else {
+            anyhow::bail!("no such campaign: {campaign}");
+        };
+        Ok(c.phase.is_terminal())
+    }
+
+    /// Request cancellation. A queued campaign goes terminal at once; a
+    /// running one stops at its next applied completion. Idempotent on
+    /// terminal campaigns.
+    pub fn cancel(&self, campaign: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let Some(c) = st.campaign_mut(campaign) else {
+            anyhow::bail!("no such campaign: {campaign}");
+        };
+        match c.phase {
+            Phase::Queued => {
+                c.phase = Phase::Cancelled;
+                c.events.push(Event::Cancelled { campaign, applied: 0 });
+            }
+            Phase::Running => {
+                if let Some(flag) = &c.cancel {
+                    flag.store(true, std::sync::atomic::Ordering::SeqCst);
+                }
+            }
+            _ => {}
+        }
+        drop(st);
+        self.wake.notify_all();
+        Ok(())
+    }
+
+    /// Graceful-stop entry (shutdown request or SIGTERM): refuse new
+    /// submissions, mark every live campaign interrupted, raise every
+    /// running campaign's cancel flag. Running campaigns checkpoint at
+    /// their next apply boundary and their watchers get a terminal
+    /// `Interrupted` event from the pump.
+    pub fn interrupt_all(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutting_down = true;
+        for c in st.campaigns.iter_mut() {
+            match c.phase {
+                Phase::Queued => {
+                    c.interrupt_requested = true;
+                    c.phase = Phase::Interrupted;
+                    c.events.push(Event::Interrupted {
+                        campaign: c.id,
+                        applied: 0,
+                        checkpointed: false,
+                    });
+                }
+                Phase::Running => {
+                    c.interrupt_requested = true;
+                    if let Some(flag) = &c.cancel {
+                        flag.store(true, std::sync::atomic::Ordering::SeqCst);
+                    }
+                }
+                _ => {}
+            }
+        }
+        drop(st);
+        self.wake.notify_all();
+    }
+
+    /// [`Scheduler::interrupt_all`], then block until every running
+    /// campaign has gone terminal (pumps push the terminal events before
+    /// freeing their slot, so returning here means every watcher can
+    /// drain a complete log).
+    pub fn shutdown(&self) {
+        self.interrupt_all();
+        let mut st = self.state.lock().unwrap();
+        while st.running > 0 {
+            let (guard, _) =
+                self.wake.wait_timeout(st, Duration::from_millis(200)).unwrap();
+            st = guard;
+        }
+    }
+
+    /// One status row per campaign, submission order.
+    pub fn status(&self) -> Vec<CampaignStatusInfo> {
+        let st = self.state.lock().unwrap();
+        st.campaigns
+            .iter()
+            .map(|c| CampaignStatusInfo {
+                id: c.id,
+                state: c.phase.name().to_string(),
+                app: c.spec.app.clone(),
+                seed: c.spec.seed,
+                evaluations: c.evaluations,
+                best_objective: c.best_objective,
+            })
+            .collect()
+    }
+}

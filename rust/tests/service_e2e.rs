@@ -1,0 +1,351 @@
+//! End-to-end tuning-as-a-service tests (ISSUE 6 acceptance): a real
+//! daemon on a loopback socket, driven through the framed client.
+//!
+//! * K=3 concurrent daemon campaigns, each bit-identical to the solo
+//!   CLI-path run (`autotune_with_scorer`) with the same seed/policy —
+//!   co-scheduling must not perturb any campaign's trajectory.
+//! * A fourth campaign is cancelled mid-run: terminal `Cancelled` with
+//!   a partial applied prefix, and no history record for the partial run.
+//! * A compatible follow-up campaign auto-warm-starts from the finished
+//!   campaigns' elites in the daemon's shared history store — no flag
+//!   beyond the shared directory — and its trajectory equals the solo
+//!   run with the same warm-start store pinned explicitly.
+//! * Graceful shutdown: a `Shutdown` request interrupts the running
+//!   campaign at an apply boundary; its watcher receives a terminal
+//!   `Interrupted` frame (not a dropped socket), the v3 checkpoint is on
+//!   disk, and new submissions are refused.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ytopt::coordinator::{autotune_with_scorer, TuneResult};
+use ytopt::runtime::Scorer;
+use ytopt::service::{CampaignSpec, Client, Daemon, Event, ServeConfig, ServiceConfig};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ytopt-svc-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The host-timing-free digest of a trajectory (the `ensemble_e2e`
+/// convention): everything that must be bit-identical across
+/// deterministic replays, whether it arrived over the wire or from an
+/// in-process run.
+type Digest = Vec<(u64, String, u64, u64, u64, bool, bool)>;
+
+fn digest_result(r: &TuneResult) -> Digest {
+    r.db.records
+        .iter()
+        .map(|x| {
+            (
+                x.id as u64,
+                x.config_key.clone(),
+                x.objective.to_bits(),
+                x.measured.runtime_s.to_bits(),
+                x.best_so_far.to_bits(),
+                x.timed_out,
+                x.cancelled,
+            )
+        })
+        .collect()
+}
+
+fn digest_events(events: &[Event]) -> Digest {
+    events
+        .iter()
+        .filter_map(|ev| match ev {
+            Event::EvalCompleted {
+                eval_id,
+                config_key,
+                objective,
+                runtime_s,
+                best_so_far,
+                timed_out,
+                cancelled,
+                ..
+            } => Some((
+                *eval_id,
+                config_key.clone(),
+                objective.to_bits(),
+                runtime_s.to_bits(),
+                best_so_far.to_bits(),
+                *timed_out,
+                *cancelled,
+            )),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Watch a campaign from event 0, returning (full event log, terminal).
+fn watch_all(client: &mut Client, campaign: u64) -> (Vec<Event>, Event) {
+    let mut log = Vec::new();
+    let terminal = client
+        .watch(campaign, 0, &mut |ev| log.push(ev.clone()))
+        .expect("watch stream must end in a terminal event");
+    (log, terminal)
+}
+
+/// Poll `status` until `campaign` reports at least `want` applied
+/// evaluations (bounded wait — campaigns make continuous progress).
+fn wait_for_evals(client: &mut Client, campaign: u64, want: u64) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let rows = client.status().unwrap();
+        let row = rows.iter().find(|r| r.id == campaign).expect("campaign listed in status");
+        if row.evaluations >= want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "campaign {campaign} stuck at {} evaluations (wanted {want})",
+            row.evaluations
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn history_record_count(dir: &PathBuf) -> usize {
+    std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            name.starts_with("run-") && name.ends_with(".json")
+        })
+        .count()
+}
+
+#[test]
+fn concurrent_daemon_campaigns_match_solo_runs_cancel_and_warm_start() {
+    let hist = tmpdir("hist");
+    let ckpt = tmpdir("ckpt");
+    let daemon = Daemon::start(
+        ServeConfig {
+            listen: "127.0.0.1:0".into(),
+            service: ServiceConfig {
+                max_active: 4,
+                history_dir: Some(hist.clone()),
+                checkpoint_dir: Some(ckpt.clone()),
+                warm_start_elites: 8,
+            },
+        },
+        Arc::new(Scorer::fallback()),
+    )
+    .unwrap();
+    let addr = daemon.addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    client.ping().unwrap();
+
+    // three concurrent campaigns with distinct seeds and policies;
+    // warm_start off so each solo reference is exactly reproducible
+    // regardless of which neighbour finishes (and appends) first
+    let parity_specs: Vec<CampaignSpec> = [(1001u64, 2usize, "cl-min"), (2002, 3, "cl-mean"), (3003, 4, "kriging")]
+        .iter()
+        .map(|&(seed, workers, liar)| CampaignSpec {
+            seed,
+            workers,
+            liar: liar.into(),
+            max_evals: 12,
+            wallclock_budget_s: 1e9,
+            warm_start: false,
+            ..CampaignSpec::default()
+        })
+        .collect();
+    let parity_ids: Vec<u64> =
+        parity_specs.iter().map(|s| client.submit(s.clone()).unwrap()).collect();
+
+    // a long fourth campaign, to be cancelled mid-run (random strategy:
+    // proposal cost stays flat over a long horizon)
+    let cancel_spec = CampaignSpec {
+        seed: 4004,
+        workers: 2,
+        strategy: "random".into(),
+        max_evals: 20_000,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        ..CampaignSpec::default()
+    };
+    let cancel_id = client.submit(cancel_spec).unwrap();
+
+    // all four are now co-scheduled (max_active = 4); cancel the long
+    // one once it has visibly made progress
+    wait_for_evals(&mut client, cancel_id, 2);
+    client.cancel(cancel_id).unwrap();
+
+    let (cancel_log, cancel_terminal) = watch_all(&mut client, cancel_id);
+    match cancel_terminal {
+        Event::Cancelled { campaign, applied } => {
+            assert_eq!(campaign, cancel_id);
+            assert!(applied >= 2, "cancel landed after {applied} applies");
+            assert!(applied < 20_000, "the campaign must not have run to completion");
+        }
+        other => panic!("cancelled campaign ended with {other:?}"),
+    }
+    assert!(
+        !cancel_log.iter().any(|e| matches!(e, Event::Done { .. })),
+        "a cancelled campaign must not report Done"
+    );
+
+    // each parity campaign: bit-identical to the solo CLI-path run with
+    // the same seed/policy, despite three neighbours on the substrate
+    for (spec, &id) in parity_specs.iter().zip(&parity_ids) {
+        let (log, terminal) = watch_all(&mut client, id);
+        assert!(log.iter().all(|e| e.campaign() == id), "event stream leaked across campaigns");
+        assert!(
+            !log.iter().any(|e| matches!(e, Event::WarmStarted { .. })),
+            "warm_start=false campaigns must start cold"
+        );
+        assert!(
+            log.iter().any(|e| matches!(e, Event::Started { .. })),
+            "watch from 0 must replay the Started event"
+        );
+
+        let solo = autotune_with_scorer(&spec.to_setup().unwrap(), Arc::new(Scorer::fallback()))
+            .unwrap();
+        assert_eq!(solo.evaluations, 12);
+        assert_eq!(
+            digest_events(&log),
+            digest_result(&solo),
+            "campaign {id} (seed {}) diverged from its solo run",
+            spec.seed
+        );
+        match terminal {
+            Event::Done { campaign, summary } => {
+                assert_eq!(campaign, id);
+                assert_eq!(summary.evaluations, 12);
+                assert_eq!(
+                    summary.best_objective.to_bits(),
+                    solo.best_objective.to_bits(),
+                    "campaign {id} summary best diverged from solo"
+                );
+            }
+            other => panic!("campaign {id} ended with {other:?}"),
+        }
+    }
+
+    // the three finished campaigns appended to the shared store; the
+    // cancelled one must not have (a partial run is not transferable)
+    assert_eq!(history_record_count(&hist), 3, "exactly the finished campaigns in the store");
+
+    // solo warm-start reference FIRST (the store must hold exactly those
+    // 3 records when the trajectory is pinned), explicitly pointing at
+    // the daemon's store without appending to it
+    let warm_spec = CampaignSpec {
+        seed: 5005,
+        workers: 2,
+        max_evals: 12,
+        wallclock_budget_s: 1e9,
+        warm_start: true,
+        ..CampaignSpec::default()
+    };
+    let mut warm_solo_setup = warm_spec.to_setup().unwrap();
+    warm_solo_setup.warm_start_from = Some(hist.clone());
+    warm_solo_setup.warm_start_elites = 8;
+    let warm_solo = autotune_with_scorer(&warm_solo_setup, Arc::new(Scorer::fallback())).unwrap();
+
+    // the daemon campaign warm-starts automatically: no flag beyond the
+    // shared history dir the daemon already owns
+    let warm_id = client.submit(warm_spec).unwrap();
+    let (warm_log, warm_terminal) = watch_all(&mut client, warm_id);
+    let elites = warm_log
+        .iter()
+        .find_map(|e| match e {
+            Event::WarmStarted { elites, .. } => Some(*elites),
+            _ => None,
+        })
+        .expect("compatible follow-up campaign must warm-start");
+    assert!(elites > 0, "warm start must absorb at least one elite");
+    assert_eq!(
+        digest_events(&warm_log),
+        digest_result(&warm_solo),
+        "daemon auto-warm-start diverged from the explicitly-pinned solo run"
+    );
+    assert!(matches!(warm_terminal, Event::Done { .. }));
+
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&hist);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn graceful_shutdown_interrupts_checkpoints_and_refuses_new_work() {
+    let hist = tmpdir("shutdown-hist");
+    let ckpt = tmpdir("shutdown-ckpt");
+    let daemon = Daemon::start(
+        ServeConfig {
+            listen: "127.0.0.1:0".into(),
+            service: ServiceConfig {
+                max_active: 2,
+                history_dir: Some(hist.clone()),
+                checkpoint_dir: Some(ckpt.clone()),
+                warm_start_elites: 8,
+            },
+        },
+        Arc::new(Scorer::fallback()),
+    )
+    .unwrap();
+    let addr = daemon.addr().to_string();
+    let scheduler = daemon.scheduler();
+    let mut client = Client::connect(&addr).unwrap();
+
+    let spec = CampaignSpec {
+        seed: 7007,
+        workers: 2,
+        strategy: "random".into(),
+        max_evals: 20_000,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        ..CampaignSpec::default()
+    };
+    let id = client.submit(spec.clone()).unwrap();
+
+    // a watcher attached over the wire BEFORE the shutdown: satellite 2's
+    // contract is that it receives a terminal Interrupted frame, not a
+    // dropped socket
+    let watch_addr = addr.clone();
+    let watcher = std::thread::spawn(move || {
+        let mut wc = Client::connect(&watch_addr).unwrap();
+        watch_all(&mut wc, id)
+    });
+
+    wait_for_evals(&mut client, id, 1);
+    client.shutdown().unwrap();
+
+    // the scheduler refuses new work the moment shutdown begins
+    let refused = scheduler.submit(spec);
+    assert!(refused.is_err(), "submissions during shutdown must be refused");
+    assert!(format!("{:#}", refused.unwrap_err()).contains("shutting down"));
+
+    let (log, terminal) = watcher.join().expect("watcher thread must not panic");
+    match terminal {
+        Event::Interrupted { campaign, applied, checkpointed } => {
+            assert_eq!(campaign, id);
+            assert!(applied >= 1, "the interrupt honored at least one applied completion");
+            assert!(applied < 20_000);
+            assert!(checkpointed, "a daemon with a checkpoint dir must report the checkpoint");
+        }
+        other => panic!("interrupted campaign ended with {other:?}"),
+    }
+    assert!(
+        log.iter().any(|e| matches!(e, Event::EvalCompleted { .. })),
+        "the watcher saw live progress before the interrupt"
+    );
+    let ckpt_file = ckpt.join(format!("campaign-{id}.json"));
+    assert!(ckpt_file.exists(), "v3 checkpoint must be on disk at {}", ckpt_file.display());
+
+    // an interrupted campaign is not a completed run: nothing appended
+    assert_eq!(history_record_count(&hist), 0);
+    assert_eq!(
+        scheduler.status().iter().find(|r| r.id == id).unwrap().state,
+        "interrupted"
+    );
+
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&hist);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
