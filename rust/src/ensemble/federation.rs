@@ -36,7 +36,7 @@
 //!   the policy fingerprint; resume restores every shard exactly and
 //!   refuses manifests from a different federation policy.
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
@@ -275,7 +275,7 @@ pub(crate) struct ContinuousShard {
     /// Configuration keys of foreign elites already absorbed (dedup
     /// across exchange rounds; seeded with warm-start elites and, on
     /// resume, with the checkpoint log's `Foreign` events).
-    received_foreign: HashSet<String>,
+    received_foreign: BTreeSet<String>,
     /// Strategy event log (proposals with their planted lies, applies,
     /// foreign absorptions) persisted with every checkpoint so a
     /// resumed shard's *fresh* proposals are bit-identical to an
@@ -340,7 +340,7 @@ impl ContinuousShard {
         // round can never re-absorb an elite the warm start already
         // planted — and so fresh and resumed sessions agree on the
         // real-objective pool's contents and order.
-        let mut received_foreign: HashSet<String> = HashSet::new();
+        let mut received_foreign: BTreeSet<String> = BTreeSet::new();
         if let Some(prior) = &setup.foreign_warm {
             for (c, y) in prior {
                 received_foreign.insert(c.key());
@@ -693,6 +693,7 @@ impl ContinuousShard {
                     break;
                 }
             }
+            // detlint: allow(wall-clock) -- search-overhead stat only; simulated time drives the trajectory
             let t_search = std::time::Instant::now();
             let cfg = self.propose_in_shard();
             let mut planted_lie = None;

@@ -76,7 +76,7 @@ pub use federation::{
 pub use liar::LiarStrategy;
 pub use worker::WorkerPool;
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -617,6 +617,7 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
                 let batch = batch_target.min(setup.max_evals - eval_id);
 
                 // ---- Step 1: propose a batch, lying about in-flight points
+                // detlint: allow(wall-clock) -- search-overhead stat only; simulated time drives the trajectory
                 let t_search = std::time::Instant::now();
                 let mut jobs: Vec<EvalJob> = Vec::with_capacity(batch);
                 for b in 0..batch {
@@ -665,7 +666,7 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
 
                 // ---- straggler cancellation (batch median, min 4 samples)
                 let mut straggler_cutoff = f64::INFINITY;
-                let mut cancelled_ids: HashSet<usize> = HashSet::new();
+                let mut cancelled_ids: BTreeSet<usize> = BTreeSet::new();
                 if let Some(factor) = setup.straggler_factor {
                     let mut runtimes: Vec<f64> = resolved
                         .iter()

@@ -664,6 +664,7 @@ mod tests {
         let recs: Vec<RunRecord> = (0..4)
             .map(|i| record(64 << i, i as u64 + 1, &[("0,0", 3.0 + i as f64), ("1,1", 9.0)]))
             .collect();
+        // detlint: allow(par-float-accum) -- append stress test; no float reduction, outcome is order-independent by design
         std::thread::scope(|s| {
             for _ in 0..8 {
                 let store = store.clone();

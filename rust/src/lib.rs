@@ -23,6 +23,7 @@ pub mod codegen;
 pub mod coordinator;
 pub mod ensemble;
 pub mod history;
+pub mod lint;
 pub mod search;
 pub mod configfile;
 pub mod metrics;

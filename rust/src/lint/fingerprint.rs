@@ -1,0 +1,238 @@
+//! Fingerprint-coverage: every tuning knob is part of run identity.
+//!
+//! `checkpoint::fingerprint` derives the identity string that guards
+//! resume (a checkpoint from a different setup must be refused) and the
+//! cross-run history database (transfer only warm-starts from
+//! compatible campaigns). A field added to `TuneSetup` — or to the
+//! service-layer `CampaignSpec` that maps onto it — without a matching
+//! fingerprint component silently aliases two different campaigns into
+//! one identity, which is exactly the class of bug no e2e test notices
+//! until a resume goes wrong.
+//!
+//! The check is structural, not name-list-based: it extracts the field
+//! names of `struct TuneSetup` (and `struct CampaignSpec`) from
+//! whichever scanned file defines them, extracts every `setup.<field>`
+//! reference from the body of `fn fingerprint`, and requires each field
+//! to be referenced or carry an annotated exclusion
+//! (capacity/continuation knobs like `max_evals` are legal exclusions —
+//! resuming with a larger budget is the same campaign).
+
+use std::collections::BTreeSet;
+
+use super::lexer::Scan;
+use super::rules::needle_lines;
+use super::{Diagnostic, Rule, SourceFile};
+
+/// `CampaignSpec` fields that feed `TuneSetup` under a different name
+/// (see `CampaignSpec::to_setup`).
+const SPEC_ALIASES: &[(&str, &str)] =
+    &[("workers", "ensemble_workers"), ("batch", "ensemble_batch")];
+
+struct StructFields {
+    file_idx: usize,
+    decl_line: usize,
+    /// `(field_name, line)` per top-level field.
+    fields: Vec<(String, usize)>,
+}
+
+/// Cross-check struct fields against fingerprint references. Engages
+/// only when a scanned file defines `struct TuneSetup`, so single-file
+/// fixtures stay independent of the real tree.
+pub fn check(files: &[SourceFile], scans: &[Scan]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let Some(setup) = find_struct(scans, "TuneSetup") else {
+        return out;
+    };
+    let Some(covered) = fingerprint_refs(scans) else {
+        out.push(Diagnostic {
+            path: files[setup.file_idx].path.clone(),
+            line: setup.decl_line,
+            rule: Rule::FingerprintCoverage,
+            message: "found `struct TuneSetup` but no `fn fingerprint` body to check \
+                      coverage against — the checkpoint identity function is missing"
+                .into(),
+        });
+        return out;
+    };
+    for (name, line) in &setup.fields {
+        if !covered.contains(name.as_str()) {
+            out.push(Diagnostic {
+                path: files[setup.file_idx].path.clone(),
+                line: *line,
+                rule: Rule::FingerprintCoverage,
+                message: format!(
+                    "`TuneSetup::{name}` is not a component of checkpoint::fingerprint — a \
+                     knob that shapes the trajectory must be part of run identity; add it \
+                     to the fingerprint or annotate the exclusion with a reason"
+                ),
+            });
+        }
+    }
+    if let Some(spec) = find_struct(scans, "CampaignSpec") {
+        for (name, line) in &spec.fields {
+            let target = SPEC_ALIASES
+                .iter()
+                .find(|(alias, _)| alias == name)
+                .map(|(_, t)| *t)
+                .unwrap_or(name.as_str());
+            if !covered.contains(target) {
+                out.push(Diagnostic {
+                    path: files[spec.file_idx].path.clone(),
+                    line: *line,
+                    rule: Rule::FingerprintCoverage,
+                    message: format!(
+                        "`CampaignSpec::{name}` (-> `TuneSetup::{target}`) is not a \
+                         component of checkpoint::fingerprint — a submitted knob must be \
+                         part of run identity; add it or annotate the exclusion"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Locate `struct <name>` in any scanned file and extract its top-level
+/// field names with their lines.
+fn find_struct(scans: &[Scan], name: &str) -> Option<StructFields> {
+    let needle = format!("struct {name}");
+    for (file_idx, scan) in scans.iter().enumerate() {
+        let Some(&decl_line) = needle_lines(&scan.code, &needle).first() else {
+            continue;
+        };
+        let mut fields = Vec::new();
+        let mut depth = 0i32;
+        let mut opened = false;
+        for (idx, line) in scan.code.iter().enumerate().skip(decl_line - 1) {
+            let line_no = idx + 1;
+            if opened && depth == 1 && line_no > decl_line {
+                if let Some(field) = field_on_line(line) {
+                    fields.push((field, line_no));
+                }
+            }
+            for c in line.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+        }
+        return Some(StructFields { file_idx, decl_line, fields });
+    }
+    None
+}
+
+/// A struct-body line declaring a field: optional `pub`/`pub(...)`,
+/// an identifier, then a single `:` (not `::`).
+fn field_on_line(code_line: &str) -> Option<String> {
+    let trimmed = code_line.trim();
+    let rest = match trimmed.strip_prefix("pub") {
+        Some(r) if r.starts_with(' ') => r.trim_start(),
+        Some(r) if r.starts_with('(') => r.split_once(')')?.1.trim_start(),
+        _ => trimmed,
+    };
+    let ident: String =
+        rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+    if ident.is_empty() {
+        return None;
+    }
+    let tail = rest[ident.len()..].trim_start();
+    if tail.starts_with(':') && !tail.starts_with("::") {
+        Some(ident)
+    } else {
+        None
+    }
+}
+
+/// Every `setup.<field>` referenced inside the body of `fn fingerprint`
+/// (first definition found wins); `None` when no fingerprint exists.
+fn fingerprint_refs(scans: &[Scan]) -> Option<BTreeSet<String>> {
+    for scan in scans {
+        let Some(&decl_line) = needle_lines(&scan.code, "fn fingerprint").first() else {
+            continue;
+        };
+        let mut covered = BTreeSet::new();
+        let mut depth = 0i32;
+        let mut opened = false;
+        for line in scan.code.iter().skip(decl_line - 1) {
+            if opened && depth >= 1 {
+                harvest_refs(line, &mut covered);
+            }
+            for c in line.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+        }
+        return Some(covered);
+    }
+    None
+}
+
+fn harvest_refs(line: &str, out: &mut BTreeSet<String>) {
+    let bytes = line.as_bytes();
+    for (pos, _) in line.match_indices("setup.") {
+        if pos > 0 && (bytes[pos - 1].is_ascii_alphanumeric() || bytes[pos - 1] == b'_') {
+            continue;
+        }
+        let ident: String = line[pos + "setup.".len()..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !ident.is_empty() {
+            out.insert(ident);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer;
+
+    #[test]
+    fn field_lines_parse() {
+        assert_eq!(field_on_line("    pub app: AppId,"), Some("app".into()));
+        assert_eq!(field_on_line("    seed: u64,"), Some("seed".into()));
+        assert_eq!(field_on_line("    pub(crate) inner: u32,"), Some("inner".into()));
+        assert_eq!(field_on_line("    published: bool,"), Some("published".into()));
+        assert_eq!(field_on_line("}"), None);
+        assert_eq!(field_on_line("    #[allow(dead_code)]"), None);
+        assert_eq!(field_on_line("    path::to::thing();"), None);
+    }
+
+    #[test]
+    fn struct_extraction_finds_fields_at_their_lines() {
+        let scan = lexer::scan(
+            "pub struct TuneSetup {\n    pub app: u32,\n    // a comment\n    pub seed: u64,\n}\nfn after() {}\n",
+        );
+        let got = find_struct(&[scan], "TuneSetup").expect("struct found");
+        assert_eq!(got.decl_line, 1);
+        assert_eq!(got.fields, vec![("app".into(), 2), ("seed".into(), 4)]);
+    }
+
+    #[test]
+    fn refs_are_harvested_from_the_fingerprint_body_only() {
+        let scan = lexer::scan(
+            "pub fn fingerprint(setup: &TuneSetup) -> String {\n    let _ = (setup.app, setup.seed.wrapping_add(1));\n    String::new()\n}\nfn other(setup: &TuneSetup) { let _ = setup.not_counted; }\n",
+        );
+        let covered = fingerprint_refs(&[scan]).expect("fingerprint found");
+        assert!(covered.contains("app") && covered.contains("seed"));
+        assert!(!covered.contains("not_counted"));
+    }
+}

@@ -1,0 +1,245 @@
+//! Comment/string-aware source scanner for the detlint engine.
+//!
+//! Rust needs very little lexing before token-level rules become
+//! trustworthy: the only places a rule needle may legally appear
+//! without meaning anything are comments and literals. `scan` walks a
+//! source file once and produces (a) the code text per line with every
+//! comment and every string/char-literal *content* removed — string
+//! delimiters survive as a bare `"` so "a literal was here" remains
+//! visible — and (b) the text of every `//` comment with its line, from
+//! which the allow-directive parser reads `detlint:` escapes.
+//!
+//! Handled: line comments (`//`, `///`, `//!`), nested block comments,
+//! plain/byte strings with escapes and `\`-newline continuations, raw
+//! strings (`r"…"`, `r#"…"#`, `br"…"`), char literals (escaped and
+//! plain), and lifetimes (`'a` is code, not an unterminated char).
+//! Directives must be line comments; block comments are dropped whole.
+
+/// One scanned source file.
+pub struct Scan {
+    /// Per-line code, comments and literal contents blanked. `code[i]`
+    /// is line `i + 1`.
+    pub code: Vec<String>,
+    /// `(line, text)` for every line comment, 1-based; `text` excludes
+    /// the leading `//` but keeps any further `/`/`!` doc markers.
+    pub comments: Vec<(usize, String)>,
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    LineComment,
+    /// Nested block comment depth.
+    Block(u32),
+    /// Plain or byte string literal.
+    Str,
+    /// Raw string; the payload is the `#` count of its delimiter.
+    RawStr(usize),
+}
+
+/// Does a raw-string literal (`r"`, `r#"`, `br"`, …) start at `i`?
+/// Returns `(chars_consumed_by_the_opener, hash_count)`.
+fn raw_string_start(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// Length in chars of a char literal starting at `i` (which holds `'`),
+/// or `None` when the quote is a lifetime instead.
+fn char_literal_len(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1) {
+        Some('\\') => {
+            // escaped char: the escapee at i+2 is consumed blind, then
+            // the closing quote must arrive within a short window
+            // (covers \u{10FFFF}); a newline first means "not a char"
+            let mut j = i + 3;
+            let limit = (i + 13).min(chars.len());
+            while j < limit {
+                if chars[j] == '\'' {
+                    return Some(j + 1 - i);
+                }
+                if chars[j] == '\n' {
+                    return None;
+                }
+                j += 1;
+            }
+            None
+        }
+        Some(&c2) => {
+            if c2 != '\'' && chars.get(i + 2) == Some(&'\'') {
+                Some(3)
+            } else {
+                None
+            }
+        }
+        None => None,
+    }
+}
+
+/// Scan `text` into blanked code lines + captured line comments.
+pub fn scan(text: &str) -> Scan {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut code: Vec<String> = vec![String::new()];
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut mode = Mode::Code;
+    let mut line = 0usize; // 0-based index into `code`
+    let mut comment_line = 0usize;
+    let mut comment_buf = String::new();
+    let mut i = 0usize;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(mode, Mode::LineComment) {
+                comments.push((comment_line + 1, std::mem::take(&mut comment_buf)));
+                mode = Mode::Code;
+            }
+            line += 1;
+            code.push(String::new());
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    comment_line = line;
+                    comment_buf.clear();
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code[line].push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if let Some((consumed, hashes)) = raw_string_start(&chars, i) {
+                    code[line].push('"');
+                    mode = Mode::RawStr(hashes);
+                    i += consumed;
+                } else if c == '\'' {
+                    if let Some(len) = char_literal_len(&chars, i) {
+                        i += len; // contents dropped
+                    } else {
+                        code[line].push('\''); // a lifetime: plain code
+                        i += 1;
+                    }
+                } else {
+                    code[line].push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment_buf.push(c);
+                i += 1;
+            }
+            Mode::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // a \<newline> continuation leaves the newline for
+                    // the line counter at the top of the loop
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    code[line].push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                let closed = c == '"'
+                    && chars[i + 1..].iter().take_while(|&&x| x == '#').count() >= hashes;
+                if closed {
+                    code[line].push('"');
+                    mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if matches!(mode, Mode::LineComment) {
+        comments.push((comment_line + 1, comment_buf));
+    }
+    Scan { code, comments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_captured_and_blanked() {
+        let s = scan("let a = 1; // trailing note\n/// doc line\nlet b = 2;\n");
+        assert_eq!(s.code[0], "let a = 1; ");
+        assert_eq!(s.code[1], "");
+        assert_eq!(s.code[2], "let b = 2;");
+        assert_eq!(s.comments, vec![(1, " trailing note".into()), (2, "/ doc line".into())]);
+    }
+
+    #[test]
+    fn string_contents_vanish_but_delimiters_stay() {
+        let s = scan("let x = \"HashMap // not a comment\"; call(x);\n");
+        assert_eq!(s.code[0], "let x = \"\"; call(x);");
+        assert!(s.comments.is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let s = scan("let p = r#\"Instant::now \"quoted\"\"#;\nlet q = \"a\\\"b\";\n");
+        assert_eq!(s.code[0], "let p = \"\";");
+        assert_eq!(s.code[1], "let q = \"\";");
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let s = scan("fn f<'a>(x: &'a str) { let c = 'x'; let d = '\\n'; let e = '\\''; }\n");
+        // lifetimes survive as code; char contents are dropped
+        assert!(s.code[0].contains("fn f<'a>(x: &'a str)"));
+        assert!(!s.code[0].contains('x') || !s.code[0].contains("'x'"));
+    }
+
+    #[test]
+    fn nested_block_comments_are_dropped() {
+        let s = scan("a(); /* outer /* inner */ still out */ b();\n");
+        assert_eq!(s.code[0], "a();  b();");
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_numbers() {
+        let s = scan("let a = \"line one\nline two\";\nuse std::collections::HashMap;\n");
+        assert_eq!(s.code.len(), 4); // 3 lines + trailing empty
+        assert_eq!(s.code[2], "use std::collections::HashMap;");
+    }
+}

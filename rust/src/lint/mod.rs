@@ -1,0 +1,340 @@
+//! The detlint pass: the crate's in-house determinism & concurrency
+//! static analysis.
+//!
+//! The crate's value rests on bit-identity contracts — K=1 federation
+//! matches the single manager, cached proposals match uncached,
+//! SIGKILL-resume matches an uninterrupted run. Those contracts are
+//! proven by e2e tests, but an e2e failure arrives hours after the
+//! regression is written. detlint guards the same invariants at the
+//! source level: it scans the tree (comment- and string-aware, see
+//! [`lexer`]) and rejects constructs that are known to break
+//! reproducibility — unordered-map iteration, wall-clock reads in the
+//! deterministic core, ambient RNG, unblessed parallel float
+//! accumulation, tuning knobs missing from the checkpoint fingerprint,
+//! and callers of deprecated API surfaces.
+//!
+//! The full contract, one rule at a time with rationale, lives in
+//! DESIGN.md ("Determinism contract"). Every diagnostic points there.
+//!
+//! Escape hatch: a line comment of the form
+//! `detlint: allow(<rule>) -- <reason>` (after the usual `//`)
+//! suppresses that rule on its own line when trailing code, or on the
+//! next code line when it stands alone. The reason is mandatory and an
+//! unknown rule name is itself an error (`allow-syntax`), so escapes
+//! stay auditable and cannot rot silently.
+//!
+//! Engine shape, in the spirit of `proptest_lite`: no dependencies, no
+//! syn/proc-macro machinery — a small scanner plus token-level rules is
+//! enough to make the contract enforceable, and the engine itself stays
+//! reviewable in one sitting.
+
+pub mod fingerprint;
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use lexer::Scan;
+
+/// Every rule the engine knows. Kebab-case names are the public
+/// identity: they appear in diagnostics and in allow directives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// `HashMap`/`HashSet`/`RandomState` in the deterministic core.
+    HashOrder,
+    /// `Instant::now`/`SystemTime::now`/`thread::current` in the core.
+    WallClock,
+    /// Ambient randomness (`thread_rng`, `OsRng`, …) anywhere near the
+    /// core; all randomness flows through seeded `util::rng::Pcg32`.
+    RngSource,
+    /// Fork-join float accumulation outside the blessed blocked scorer.
+    ParFloatAccum,
+    /// A `TuneSetup`/`CampaignSpec` field missing from
+    /// `checkpoint::fingerprint`.
+    FingerprintCoverage,
+    /// A caller of a deprecated API outside its pinned home files.
+    DeprecatedApi,
+    /// `unwrap()`/`.expect(` on the daemon's connection-handling path.
+    DaemonUnwrap,
+    /// A malformed `detlint:` directive; never suppressible.
+    AllowSyntax,
+}
+
+impl Rule {
+    /// The rules an allow directive may name (everything but
+    /// `allow-syntax`, which guards the directives themselves).
+    pub const ALLOWABLE: [Rule; 7] = [
+        Rule::HashOrder,
+        Rule::WallClock,
+        Rule::RngSource,
+        Rule::ParFloatAccum,
+        Rule::FingerprintCoverage,
+        Rule::DeprecatedApi,
+        Rule::DaemonUnwrap,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::HashOrder => "hash-order",
+            Rule::WallClock => "wall-clock",
+            Rule::RngSource => "rng-source",
+            Rule::ParFloatAccum => "par-float-accum",
+            Rule::FingerprintCoverage => "fingerprint-coverage",
+            Rule::DeprecatedApi => "deprecated-api",
+            Rule::DaemonUnwrap => "daemon-unwrap",
+            Rule::AllowSyntax => "allow-syntax",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Rule> {
+        Rule::ALLOWABLE.into_iter().find(|r| r.name() == name)
+    }
+
+    fn known_names() -> String {
+        Rule::ALLOWABLE.map(Rule::name).join(", ")
+    }
+}
+
+/// One violation: where, which rule, and what to do about it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the source root, `/`-separated.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: [{}] {} (contract: DESIGN.md \u{00a7} Determinism contract)",
+            self.path,
+            self.line,
+            self.rule.name(),
+            self.message
+        )
+    }
+}
+
+/// A source file handed to the engine: root-relative path + full text.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// Allow directives of one file: target line -> rules suppressed there.
+type Allows = BTreeMap<usize, Vec<Rule>>;
+
+/// Parse every `detlint:` directive out of a file's line comments.
+///
+/// Grammar: the comment text (doc markers and leading whitespace
+/// stripped) must start with `detlint:`; what follows must be
+/// `allow(<rule>[, <rule>…]) -- <reason>` with a non-empty reason.
+/// Anything else starting with `detlint:` is an `allow-syntax` error —
+/// a typo in a directive must never silently change what is enforced.
+fn parse_allows(scan: &Scan) -> (Allows, Vec<(usize, String)>) {
+    let mut map: Allows = BTreeMap::new();
+    let mut errors: Vec<(usize, String)> = Vec::new();
+    for (line, text) in &scan.comments {
+        let t = text.trim_start_matches(['/', '!', '*', ' ', '\t']);
+        let Some(rest) = t.strip_prefix("detlint:") else { continue };
+        let rest = rest.trim();
+        let Some(after_open) = rest.strip_prefix("allow(") else {
+            errors.push((
+                *line,
+                format!("unrecognized detlint directive `{rest}`; expected `allow(<rule>) -- <reason>`"),
+            ));
+            continue;
+        };
+        let Some(close) = after_open.find(')') else {
+            errors.push((*line, "unterminated `allow(` in detlint directive".into()));
+            continue;
+        };
+        let inner = &after_open[..close];
+        let tail = after_open[close + 1..].trim();
+        let reason_ok = tail.strip_prefix("--").map(str::trim).is_some_and(|r| !r.is_empty());
+        if !reason_ok {
+            errors.push((
+                *line,
+                "a detlint allow must carry a reason: `allow(<rule>) -- <why this is safe>`".into(),
+            ));
+            continue;
+        }
+        let mut listed: Vec<Rule> = Vec::new();
+        let mut all_known = true;
+        for name in inner.split(',') {
+            let name = name.trim();
+            match Rule::parse(name) {
+                Some(rule) => listed.push(rule),
+                None => {
+                    all_known = false;
+                    errors.push((
+                        *line,
+                        format!(
+                            "unknown detlint rule `{name}` (known: {})",
+                            Rule::known_names()
+                        ),
+                    ));
+                }
+            }
+        }
+        if !all_known || listed.is_empty() {
+            continue;
+        }
+        map.entry(directive_target(scan, *line)).or_default().extend(listed);
+    }
+    (map, errors)
+}
+
+/// The code line a directive shields: its own line when the comment
+/// trails code, otherwise the next line that carries code.
+fn directive_target(scan: &Scan, line: usize) -> usize {
+    let own = scan.code.get(line - 1).map(|l| !l.trim().is_empty()).unwrap_or(false);
+    if own {
+        return line;
+    }
+    scan.code
+        .iter()
+        .enumerate()
+        .skip(line)
+        .find(|(_, l)| !l.trim().is_empty())
+        .map(|(idx, _)| idx + 1)
+        .unwrap_or(line)
+}
+
+/// Run every rule over an in-memory file set and return the surviving
+/// diagnostics, sorted by (path, line, rule).
+///
+/// The cross-file rules (fingerprint coverage, deprecated-API surface
+/// presence) only engage when the files they anchor on are present in
+/// the set, so fixtures can exercise single rules in isolation.
+pub fn check_files(files: &[SourceFile]) -> Vec<Diagnostic> {
+    let scans: Vec<Scan> = files.iter().map(|f| lexer::scan(&f.text)).collect();
+    let mut allows: Vec<Allows> = Vec::with_capacity(files.len());
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    for (file, scan) in files.iter().zip(&scans) {
+        let (map, errors) = parse_allows(scan);
+        for (line, message) in errors {
+            diags.push(Diagnostic { path: file.path.clone(), line, rule: Rule::AllowSyntax, message });
+        }
+        allows.push(map);
+    }
+
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    for (file, scan) in files.iter().zip(&scans) {
+        raw.extend(rules::check_needles(&file.path, scan));
+    }
+    raw.extend(rules::check_deprecated_surface(files, &scans));
+    raw.extend(fingerprint::check(files, &scans));
+
+    let allowed = |d: &Diagnostic| -> bool {
+        files
+            .iter()
+            .position(|f| f.path == d.path)
+            .and_then(|idx| allows[idx].get(&d.line))
+            .is_some_and(|rules| rules.contains(&d.rule))
+    };
+    diags.extend(raw.into_iter().filter(|d| !allowed(d)));
+    diags.sort_by(|a, b| (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule)));
+    diags
+}
+
+/// Collect every `.rs` file under `src_root` (sorted, `/`-separated
+/// relative paths) and run [`check_files`] over the lot.
+pub fn check_tree(src_root: &Path) -> Result<Vec<Diagnostic>> {
+    let mut found: Vec<(String, PathBuf)> = Vec::new();
+    walk(src_root, "", &mut found)
+        .with_context(|| format!("walking source root {}", src_root.display()))?;
+    found.sort();
+    let mut files: Vec<SourceFile> = Vec::with_capacity(found.len());
+    for (rel, abs) in found {
+        let text = std::fs::read_to_string(&abs)
+            .with_context(|| format!("reading {}", abs.display()))?;
+        files.push(SourceFile { path: rel, text });
+    }
+    Ok(check_files(&files))
+}
+
+fn walk(dir: &Path, prefix: &str, out: &mut Vec<(String, PathBuf)>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let rel = if prefix.is_empty() { name.clone() } else { format!("{prefix}/{name}") };
+        if path.is_dir() {
+            walk(&path, &rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fx(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.into(), text: text.into() }
+    }
+
+    #[test]
+    fn rule_names_round_trip() {
+        for rule in Rule::ALLOWABLE {
+            assert_eq!(Rule::parse(rule.name()), Some(rule));
+        }
+        assert_eq!(Rule::parse("allow-syntax"), None);
+        assert_eq!(Rule::parse("no-such"), None);
+    }
+
+    #[test]
+    fn trailing_directive_targets_its_own_line() {
+        let scan = lexer::scan("let x = 1; // detlint: allow(hash-order) -- reason\n");
+        let (map, errors) = parse_allows(&scan);
+        assert!(errors.is_empty());
+        assert_eq!(map.get(&1), Some(&vec![Rule::HashOrder]));
+    }
+
+    #[test]
+    fn standalone_directive_targets_next_code_line() {
+        let src = "// detlint: allow(wall-clock) -- reason\n// another comment\n\nlet t = now();\n";
+        let scan = lexer::scan(src);
+        let (map, errors) = parse_allows(&scan);
+        assert!(errors.is_empty());
+        assert_eq!(map.get(&4), Some(&vec![Rule::WallClock]));
+    }
+
+    #[test]
+    fn directive_without_reason_is_an_error() {
+        let diags = check_files(&[fx("search/x.rs", "// detlint: allow(hash-order)\nlet a = 1;\n")]);
+        assert!(diags.iter().any(|d| d.rule == Rule::AllowSyntax && d.line == 1), "{diags:?}");
+    }
+
+    #[test]
+    fn backticked_mentions_are_not_directives() {
+        // prose referring to `detlint: allow(...)` (as this crate's own
+        // docs do) must not parse as a directive
+        let scan = lexer::scan("/// see `detlint: allow(hash-order) -- why` for the escape\nfn f() {}\n");
+        let (map, errors) = parse_allows(&scan);
+        assert!(map.is_empty() && errors.is_empty());
+    }
+
+    #[test]
+    fn diagnostics_are_sorted_and_rendered_with_location() {
+        let diags = check_files(&[fx(
+            "search/x.rs",
+            "use std::collections::HashMap;\nlet t = std::time::Instant::now();\n",
+        )]);
+        assert_eq!(diags.len(), 2);
+        assert!(diags[0].line <= diags[1].line);
+        let shown = diags[0].render();
+        assert!(shown.starts_with("search/x.rs:1:"), "{shown}");
+        assert!(shown.contains("DESIGN.md"), "{shown}");
+    }
+}

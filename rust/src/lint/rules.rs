@@ -1,0 +1,300 @@
+//! The token-level rules of the determinism contract.
+//!
+//! Each rule is a set of needles searched in blanked code (comments and
+//! literal contents already removed by [`super::lexer`]) with
+//! identifier-boundary checks, plus a scope: the deterministic core for
+//! the reproducibility rules, `service/daemon.rs` alone for the panic
+//! rule, the whole tree for deprecated-API callers. Rationale for every
+//! rule lives in DESIGN.md ("Determinism contract").
+
+use super::lexer::Scan;
+use super::{Diagnostic, Rule, SourceFile};
+
+/// The deterministic core: every module whose behaviour must be a pure
+/// function of `(setup, seed)`. Entries ending in `/` are directory
+/// prefixes; the rest are exact file paths. `service/daemon.rs` and
+/// `service/client.rs` are deliberately outside — they own the wall
+/// clock and the sockets.
+pub const CORE_SCOPE: &[&str] = &[
+    "coordinator/",
+    "ensemble/",
+    "history/",
+    "runtime/",
+    "search/",
+    "service/engine.rs",
+    "service/scheduler.rs",
+];
+
+/// The one module blessed to accumulate floats under thread
+/// parallelism: its blocked reduction is pinned to a scalar oracle by
+/// the `blocked_matches_scalar_oracle` tests, so its sum order is fixed
+/// regardless of thread count.
+pub const BLESSED_PARALLEL_SCORER: &str = "runtime/batch.rs";
+
+/// Is `path` (root-relative, `/`-separated) inside the deterministic
+/// core?
+pub fn in_core(path: &str) -> bool {
+    CORE_SCOPE.iter().any(|scope| {
+        if scope.ends_with('/') { path.starts_with(scope) } else { path == *scope }
+    })
+}
+
+struct NeedleSpec {
+    rule: Rule,
+    needles: &'static [&'static str],
+    hint: &'static str,
+}
+
+/// Rules enforced over every file in [`CORE_SCOPE`].
+const CORE_RULES: &[NeedleSpec] = &[
+    NeedleSpec {
+        rule: Rule::HashOrder,
+        needles: &["HashMap", "HashSet", "RandomState"],
+        hint: "unordered-map iteration is nondeterministic; use BTreeMap/BTreeSet or sort \
+               before iterating (annotate membership-only uses that are never iterated)",
+    },
+    NeedleSpec {
+        rule: Rule::WallClock,
+        needles: &["Instant::now", "SystemTime::now", "thread::current"],
+        hint: "the core runs on simulated time; wall-clock and thread identity belong to the \
+               daemon and overhead layers (annotate overhead-stat and blocking-wait uses)",
+    },
+    NeedleSpec {
+        rule: Rule::RngSource,
+        needles: &[
+            "thread_rng",
+            "from_entropy",
+            "getrandom",
+            "fastrand",
+            "OsRng",
+            "StdRng",
+            "SmallRng",
+            "rand::",
+            "rand_core",
+        ],
+        hint: "ambient randomness breaks replay; all randomness flows through seeded \
+               util::rng::Pcg32 derived from (seed, eval_id, attempt)",
+    },
+];
+
+/// Fork-join parallelism markers; enforced over the core minus the
+/// blessed scorer.
+const PAR_FLOAT: NeedleSpec = NeedleSpec {
+    rule: Rule::ParFloatAccum,
+    needles: &["thread::scope", "rayon", "par_iter", "par_chunks"],
+    hint: "parallel float accumulation reorders rounding; only the blocked scorer in \
+           runtime/batch.rs (pinned to its scalar oracle) may reduce across threads",
+};
+
+/// Panic-on-hostile-input markers; enforced over `service/daemon.rs`
+/// only, where one malformed client must never take down co-scheduled
+/// campaigns.
+const DAEMON_RULE: NeedleSpec = NeedleSpec {
+    rule: Rule::DaemonUnwrap,
+    needles: &["unwrap()", ".expect("],
+    hint: "the daemon's accept/read path must log and drop the offending connection, not \
+           panic; recover poisoned locks with PoisonError::into_inner",
+};
+
+/// Deprecated API surfaces: callers outside the pinned home files are
+/// violations (the definitions themselves stay, deprecated-not-deleted,
+/// with their pinned tests).
+struct DeprecatedSpec {
+    needle: &'static str,
+    homes: &'static [&'static str],
+    hint: &'static str,
+}
+
+const DEPRECATED: &[DeprecatedSpec] = &[
+    DeprecatedSpec {
+        needle: "amend_last",
+        homes: &["search/bo.rs"],
+        hint: "use the index-keyed observe_pending/resolve_pending instead",
+    },
+    DeprecatedSpec {
+        needle: "transfer::warm_start",
+        homes: &["search/transfer.rs", "search/mod.rs"],
+        hint: "use history::rescale / history::apply_warm_start",
+    },
+    DeprecatedSpec {
+        needle: "warm_start(",
+        homes: &["search/transfer.rs", "search/mod.rs"],
+        hint: "use history::rescale / history::apply_warm_start",
+    },
+];
+
+/// Deprecated-but-kept definitions: while the home file exists, exactly
+/// one definition of the surface must exist in the tree (deleting it or
+/// duplicating it both break the deprecation contract).
+struct SurfaceSpec {
+    def: &'static str,
+    home: &'static str,
+}
+
+const SURFACES: &[SurfaceSpec] = &[
+    SurfaceSpec { def: "pub fn amend_last", home: "search/bo.rs" },
+    SurfaceSpec { def: "pub fn warm_start", home: "search/transfer.rs" },
+];
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// 1-based lines of `code` where `needle` occurs at identifier
+/// boundaries (at most one hit reported per line per needle). Boundary
+/// checks only apply on ends of the needle that are themselves
+/// identifier characters, so `.expect(` still anchors to any receiver
+/// while `HashMap` does not match inside `HashMapLike`.
+pub fn needle_lines(code: &[String], needle: &str) -> Vec<usize> {
+    let nb = needle.as_bytes();
+    let check_prefix = is_ident_byte(nb[0]);
+    let check_suffix = is_ident_byte(nb[nb.len() - 1]);
+    let mut out = Vec::new();
+    for (idx, line) in code.iter().enumerate() {
+        let bytes = line.as_bytes();
+        for (pos, _) in line.match_indices(needle) {
+            if check_prefix && pos > 0 && is_ident_byte(bytes[pos - 1]) {
+                continue;
+            }
+            let end = pos + nb.len();
+            if check_suffix && end < bytes.len() && is_ident_byte(bytes[end]) {
+                continue;
+            }
+            out.push(idx + 1);
+            break;
+        }
+    }
+    out
+}
+
+fn emit(out: &mut Vec<Diagnostic>, path: &str, scan: &Scan, spec: &NeedleSpec) {
+    for needle in spec.needles {
+        for line in needle_lines(&scan.code, needle) {
+            out.push(Diagnostic {
+                path: path.into(),
+                line,
+                rule: spec.rule,
+                message: format!("`{needle}` — {}", spec.hint),
+            });
+        }
+    }
+}
+
+/// All single-file needle rules for one scanned file.
+pub fn check_needles(path: &str, scan: &Scan) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if in_core(path) {
+        for spec in CORE_RULES {
+            emit(&mut out, path, scan, spec);
+        }
+        if path != BLESSED_PARALLEL_SCORER {
+            emit(&mut out, path, scan, &PAR_FLOAT);
+        }
+    }
+    if path == "service/daemon.rs" {
+        emit(&mut out, path, scan, &DAEMON_RULE);
+    }
+    for spec in DEPRECATED {
+        if spec.homes.contains(&path) {
+            continue;
+        }
+        for line in needle_lines(&scan.code, spec.needle) {
+            out.push(Diagnostic {
+                path: path.into(),
+                line,
+                rule: Rule::DeprecatedApi,
+                message: format!("caller of deprecated `{}` — {}", spec.needle, spec.hint),
+            });
+        }
+    }
+    out
+}
+
+/// Cross-file presence check for the deprecated-but-kept surfaces; only
+/// engages when the surface's home file is part of the checked set, so
+/// single-file fixtures stay independent.
+pub fn check_deprecated_surface(files: &[SourceFile], scans: &[Scan]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for surface in SURFACES {
+        if !files.iter().any(|f| f.path == surface.home) {
+            continue;
+        }
+        let mut defs: Vec<(usize, usize)> = Vec::new();
+        for (file_idx, scan) in scans.iter().enumerate() {
+            for line in needle_lines(&scan.code, surface.def) {
+                defs.push((file_idx, line));
+            }
+        }
+        let mut home_def_seen = false;
+        for (file_idx, line) in &defs {
+            if files[*file_idx].path == surface.home && !home_def_seen {
+                home_def_seen = true;
+                continue;
+            }
+            out.push(Diagnostic {
+                path: files[*file_idx].path.clone(),
+                line: *line,
+                rule: Rule::DeprecatedApi,
+                message: format!(
+                    "extra definition of deprecated `{}` — the shim keeps exactly one \
+                     definition in {}",
+                    surface.def, surface.home
+                ),
+            });
+        }
+        if !home_def_seen {
+            out.push(Diagnostic {
+                path: surface.home.into(),
+                line: 1,
+                rule: Rule::DeprecatedApi,
+                message: format!(
+                    "deprecated surface `{}` has been removed from {} — it is deprecated, \
+                     not deleted; remove the pin and its tests together or restore the shim",
+                    surface.def, surface.home
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer;
+
+    #[test]
+    fn scope_covers_the_core_and_spares_the_edges() {
+        assert!(in_core("search/bo.rs"));
+        assert!(in_core("ensemble/federation.rs"));
+        assert!(in_core("service/scheduler.rs"));
+        assert!(!in_core("service/daemon.rs"));
+        assert!(!in_core("power/rapl.rs"));
+        assert!(!in_core("util/rng.rs"));
+    }
+
+    #[test]
+    fn boundaries_respect_identifier_edges() {
+        let code = vec![
+            "struct HashMapLike;".to_string(),
+            "let m = HashMap::new();".to_string(),
+            "call(apply_warm_start(x));".to_string(),
+            "call(warm_start(x));".to_string(),
+        ];
+        assert_eq!(needle_lines(&code, "HashMap"), vec![2]);
+        assert_eq!(needle_lines(&code, "warm_start("), vec![4]);
+    }
+
+    #[test]
+    fn dotted_needles_anchor_to_any_receiver() {
+        let code = vec!["let v = st.expect(msg);".to_string()];
+        assert_eq!(needle_lines(&code, ".expect("), vec![1]);
+    }
+
+    #[test]
+    fn needles_in_literals_do_not_fire() {
+        let scan = lexer::scan("let label = \"HashMap iteration order\";\n");
+        let diags = check_needles("search/x.rs", &scan);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+}

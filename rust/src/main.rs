@@ -7,6 +7,7 @@
 //! ytopt-rs submit --addr 127.0.0.1:7459 --app amg --seed 7    # queue a campaign
 //! ytopt-rs watch  --addr 127.0.0.1:7459 --campaign 1          # stream its events
 //! ytopt-rs status | cancel | shutdown                         # daemon control
+//! ytopt-rs lint                   # determinism-contract static analysis
 //! ytopt-rs spaces                 # Table III parameter spaces
 //! ytopt-rs platforms              # Table I system specs
 //! ```
@@ -41,7 +42,7 @@ const ALL_APPS: [AppKind; 7] = [
 
 fn spec() -> CliSpec {
     CliSpec::new("ytopt-rs", "autotuning framework (paper reproduction)")
-        .positional("command", "tune | serve | submit | watch | status | cancel | shutdown | spaces | platforms")
+        .positional("command", "tune | serve | submit | watch | status | cancel | shutdown | lint | spaces | platforms")
         .opt("config", None, "TOML config file (section [tune])")
         .opt("app", Some("xsbench"), "application to tune")
         .opt("platform", Some("theta"), "theta | summit")
@@ -75,6 +76,7 @@ fn spec() -> CliSpec {
         .opt("checkpoint-dir", None, "serve: per-campaign checkpoint directory")
         .opt("campaign", None, "campaign id (watch / cancel)")
         .opt("from", Some("0"), "watch: replay the event stream from this index")
+        .opt("src", None, "lint: source root to check (default: this crate's src/)")
         .flag("no-warm-start", "submit: opt out of the daemon's shared-history warm start")
         .flag("trace", "print the per-evaluation trace")
 }
@@ -384,6 +386,39 @@ fn cmd_spaces() {
     println!("{}", t.render());
 }
 
+/// `ytopt-rs lint`: run the detlint determinism contract over a source
+/// tree. Exit 0 with a summary when clean; print every diagnostic and
+/// fail otherwise. The same engine runs as a tier-1 test on every
+/// `cargo test`, so this entry point exists for editors, hooks, and CI
+/// annotations.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    let root = match args.get("src") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            // resolve the crate's own sources whether invoked from the
+            // workspace root, the crate dir, or an installed binary
+            let workspace = std::path::Path::new("rust/src");
+            let local = std::path::Path::new("src");
+            if workspace.is_dir() {
+                workspace.to_path_buf()
+            } else if local.join("lint").is_dir() {
+                local.to_path_buf()
+            } else {
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+            }
+        }
+    };
+    let diags = ytopt::lint::check_tree(&root)?;
+    if diags.is_empty() {
+        println!("detlint: clean over {}", root.display());
+        return Ok(());
+    }
+    for d in &diags {
+        eprintln!("{}", d.render());
+    }
+    anyhow::bail!("detlint: {} violation(s) under {}", diags.len(), root.display());
+}
+
 fn cmd_platforms() {
     let mut t = Table::new(
         "Table I: system platform specifications and tools",
@@ -437,6 +472,7 @@ fn main() {
         "status" => cmd_status(&args),
         "cancel" => cmd_cancel(&args),
         "shutdown" => cmd_shutdown(&args),
+        "lint" => cmd_lint(&args),
         "spaces" => {
             cmd_spaces();
             Ok(())

@@ -40,7 +40,7 @@
 //! * the candidate pool dedups by **flat configuration index**
 //!   (`u128`), not by cloning `Configuration`s into hash sets.
 
-use std::collections::HashSet;
+use std::collections::HashSet; // detlint: allow(hash-order) -- u128 membership sets below; never iterated
 use std::sync::Arc;
 
 use super::SearchStrategy;
@@ -176,6 +176,8 @@ pub struct BayesianOptimizer {
     /// from future proposals. Keyed by `ConfigSpace::index_of`, which is
     /// a bijection onto the flat index space, so membership is identical
     /// to configuration equality without cloning `Configuration`s.
+    /// Membership-only on the hot path (PR 5); never iterated.
+    // detlint: allow(hash-order) -- membership-only set; never iterated
     seen: HashSet<u128>,
     /// In-flight lies awaiting their real measurement, keyed by eval id.
     pending: PendingSet,
@@ -228,7 +230,7 @@ impl BayesianOptimizer {
             scorer,
             xs: Vec::new(),
             ys: Vec::new(),
-            seen: HashSet::new(),
+            seen: HashSet::new(), // detlint: allow(hash-order) -- membership-only set; never iterated
             pending: PendingSet::new(),
             foreign: 0,
             shard: None,
@@ -485,6 +487,7 @@ impl BayesianOptimizer {
             self.last_fit_s = 0.0;
             return;
         }
+        // detlint: allow(wall-clock) -- fit-overhead stat (last_fit_s) only; simulated time drives the trajectory
         let t0 = std::time::Instant::now();
         let (mean, scale) = self.standardization();
         let dim = self.space.dim();
@@ -606,7 +609,7 @@ impl BayesianOptimizer {
         let n = self.cfg.n_candidates;
         let n_random = ((n as f64) * self.cfg.explore_fraction) as usize;
         let mut out: Vec<Configuration> = Vec::with_capacity(n);
-        let mut dedup: HashSet<u128> = HashSet::with_capacity(n);
+        let mut dedup: HashSet<u128> = HashSet::with_capacity(n); // detlint: allow(hash-order) -- membership-only set; never iterated
         while out.len() < n_random {
             let c = self.space.sample(rng);
             let flat = self.space.index_of(&c);
@@ -653,6 +656,7 @@ impl BayesianOptimizer {
         // from the running accumulators
         self.ensure_surrogate(rng);
         let cands = self.candidates(rng);
+        // detlint: allow(wall-clock) -- score-overhead stat (last_score_s) only; simulated time drives the trajectory
         let t1 = std::time::Instant::now();
         let fshape = self.scorer.manifest().forest.clone();
         let kappa = match self.cfg.acquisition {
@@ -805,7 +809,7 @@ mod tests {
         let space = toy_space();
         let mut bo = BayesianOptimizer::new(space.clone(), BoConfig::default(), Arc::new(Scorer::fallback()));
         let mut rng = Pcg32::seeded(3);
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         for _ in 0..50 {
             let c = bo.propose(&mut rng);
             assert!(seen.insert(c.clone()), "repeated proposal {c:?}");

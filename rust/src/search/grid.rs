@@ -53,7 +53,7 @@ mod tests {
         let space = Arc::new(s);
         let mut g = GridSearch::new(space.clone(), 16);
         let mut rng = Pcg32::seeded(1);
-        let mut firsts = std::collections::HashSet::new();
+        let mut firsts = std::collections::BTreeSet::new();
         for _ in 0..16 {
             let c = g.propose(&mut rng);
             assert!(space.is_valid(&c));

@@ -9,7 +9,7 @@
 //!
 //! Minimization: rewards are negated objectives normalized online.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use super::SearchStrategy;
@@ -26,8 +26,11 @@ pub struct McTreeSearch {
     space: Arc<ConfigSpace>,
     /// UCT exploration constant.
     c: f64,
-    /// Stats per (depth, partial-assignment-key, value-index).
-    stats: HashMap<(usize, String, u32), NodeStats>,
+    /// Stats per (depth, partial-assignment-key, value-index). Ordered
+    /// map: the table is keyed, never iterated today, but a BTreeMap
+    /// keeps any future iteration (debug dumps, serialization)
+    /// deterministic by construction.
+    stats: BTreeMap<(usize, String, u32), NodeStats>,
     /// Online objective normalization.
     obs_min: f64,
     obs_max: f64,
@@ -40,7 +43,7 @@ impl McTreeSearch {
         McTreeSearch {
             space,
             c: std::f64::consts::SQRT_2,
-            stats: HashMap::new(),
+            stats: BTreeMap::new(),
             obs_min: f64::INFINITY,
             obs_max: f64::NEG_INFINITY,
             last_path: None,

@@ -1,6 +1,6 @@
 //! Random-search baseline (uniform valid sampling without repetition).
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use super::SearchStrategy;
@@ -9,12 +9,12 @@ use crate::util::Pcg32;
 
 pub struct RandomSearch {
     space: Arc<ConfigSpace>,
-    seen: HashSet<Configuration>,
+    seen: BTreeSet<Configuration>,
 }
 
 impl RandomSearch {
     pub fn new(space: Arc<ConfigSpace>) -> Self {
-        RandomSearch { space, seen: HashSet::new() }
+        RandomSearch { space, seen: BTreeSet::new() }
     }
 }
 
@@ -50,7 +50,7 @@ mod tests {
         s.add(Param::new("b", ParamDomain::Toggle));
         let mut rs = RandomSearch::new(Arc::new(s));
         let mut rng = Pcg32::seeded(1);
-        let mut seen = HashSet::new();
+        let mut seen = BTreeSet::new();
         for _ in 0..6 {
             let c = rs.propose(&mut rng);
             assert!(seen.insert(c.clone()));

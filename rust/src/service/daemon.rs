@@ -114,11 +114,21 @@ impl Daemon {
                         log::debug!("service connection from {peer}");
                         let sched = accept_sched.clone();
                         let stop = accept_stop.clone();
-                        let handle = std::thread::Builder::new()
+                        match std::thread::Builder::new()
                             .name("ytopt-serve-conn".into())
                             .spawn(move || serve_connection(stream, sched, stop))
-                            .expect("spawn connection thread");
-                        accept_conns.lock().unwrap().push(handle);
+                        {
+                            Ok(handle) => accept_conns
+                                .lock()
+                                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                                .push(handle),
+                            Err(e) => {
+                                // refuse this connection (its stream drops
+                                // here) rather than panic the accept loop
+                                // and take every campaign down with it
+                                log::warn!("could not spawn a connection thread: {e}");
+                            }
+                        }
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(Duration::from_millis(25));
@@ -129,7 +139,7 @@ impl Daemon {
                     }
                 }
             })
-            .expect("spawn accept thread");
+            .context("spawning the service accept thread")?;
 
         Ok(Daemon { addr, stop, scheduler, accept_thread: Some(accept_thread), conns })
     }
@@ -165,7 +175,11 @@ impl Daemon {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conns.lock().unwrap());
+        // a connection thread that panicked poisons this lock; drain the
+        // survivors anyway instead of double-panicking the shutdown
+        let handles: Vec<JoinHandle<()>> = std::mem::take(
+            &mut *self.conns.lock().unwrap_or_else(std::sync::PoisonError::into_inner),
+        );
         for h in handles {
             let _ = h.join();
         }

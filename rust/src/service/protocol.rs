@@ -93,7 +93,9 @@ pub struct CampaignSpec {
     pub platform: String,
     pub nodes: u64,
     pub metric: String,
+    // detlint: allow(fingerprint-coverage) -- capacity knob: resuming with a larger budget continues the same campaign
     pub max_evals: usize,
+    // detlint: allow(fingerprint-coverage) -- capacity knob: resuming with a larger budget continues the same campaign
     pub wallclock_budget_s: f64,
     pub seed: u64,
     pub strategy: String,

@@ -337,7 +337,10 @@ impl Scheduler {
     /// log has nothing new **and** the campaign is not terminal. An empty
     /// return with a terminal campaign means the watcher has everything.
     pub fn wait_events(&self, campaign: u64, from: usize, timeout: Duration) -> Result<Vec<Event>> {
-        let deadline = std::time::Instant::now() + timeout;
+        // real-time blocking wait only: what a watcher sees depends on
+        // when it asks, but the event log itself is append-only and
+        // deterministic
+        let deadline = std::time::Instant::now() + timeout; // detlint: allow(wall-clock) -- condvar deadline, not trajectory state
         let mut st = self.state.lock().unwrap();
         loop {
             let Some(c) = st.campaign(campaign) else {
@@ -349,7 +352,7 @@ impl Scheduler {
             if c.phase.is_terminal() {
                 return Ok(Vec::new());
             }
-            let now = std::time::Instant::now();
+            let now = std::time::Instant::now(); // detlint: allow(wall-clock) -- condvar deadline, not trajectory state
             if now >= deadline {
                 return Ok(Vec::new());
             }

@@ -8,7 +8,9 @@ use crate::util::Pcg32;
 ///
 /// Storing *indices* (not values) makes hashing, encoding, and neighbour
 /// moves O(1) per axis; values are materialized through the space.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+/// `Ord` (lexicographic over indices) lets deduplication live in ordered
+/// sets, keeping any iteration over seen-configurations deterministic.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Configuration {
     idx: Vec<u32>,
 }

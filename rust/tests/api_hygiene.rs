@@ -1,95 +1,73 @@
 //! Source-level hygiene gates: the deprecated `amend_last`-era API
 //! surface (`BayesianOptimizer::amend_last`, the `search::transfer`
 //! warm-start shim) stays available — with its pinned tests — but no
-//! runtime caller may creep back onto the hot path. Enforced by
-//! grepping the crate sources, so a reintroduction fails CI with a
-//! pointer to this contract instead of silently resurrecting the
-//! positional-amendment bug class.
+//! runtime caller may creep back onto the hot path. Enforced by the
+//! detlint engine's `deprecated-api` rule (`ytopt::lint`), so a
+//! reintroduction fails CI with a pointer to this contract instead of
+//! silently resurrecting the positional-amendment bug class.
+//!
+//! This file is a thin wrapper: the hand-rolled grep/comment-stripping
+//! code it used to carry now lives (comment- and string-aware) in
+//! `rust/src/lint/`, shared with `ytopt-rs lint` and `tests/detlint.rs`.
 
 use std::path::{Path, PathBuf};
 
-/// Every `.rs` file under `rust/src`, recursively.
-fn source_files(dir: &Path, out: &mut Vec<PathBuf>) {
-    for entry in std::fs::read_dir(dir).expect("readable source tree") {
-        let path = entry.expect("readable dir entry").path();
-        if path.is_dir() {
-            source_files(&path, out);
-        } else if path.extension().is_some_and(|e| e == "rs") {
-            out.push(path);
-        }
-    }
-}
-
-/// Strip line comments (`//`, `///`, `//!`) so documentation may keep
-/// referring to the deprecated names; only code counts.
-fn strip_comments(source: &str) -> String {
-    source
-        .lines()
-        .map(|l| l.split("//").next().unwrap_or(""))
-        .collect::<Vec<_>>()
-        .join("\n")
-}
-
-/// Occurrences of `needle` in the comment-stripped source of `path`,
-/// counting only matches that start at an identifier boundary (so
-/// `apply_warm_start(` does not count as `warm_start(`).
-fn code_occurrences(path: &Path, needle: &str) -> usize {
-    let text = std::fs::read_to_string(path).expect("readable source file");
-    let code = strip_comments(&text);
-    code.match_indices(needle)
-        .filter(|(i, _)| {
-            *i == 0
-                || !code[..*i]
-                    .chars()
-                    .next_back()
-                    .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
-        })
-        .count()
-}
+use ytopt::lint::{check_files, check_tree, Diagnostic, Rule, SourceFile};
 
 fn src_root() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
 }
 
+/// The tree's `deprecated-api` diagnostics whose message names `needle`.
+fn deprecated_mentioning(needle: &str) -> Vec<Diagnostic> {
+    check_tree(&src_root())
+        .expect("lintable source tree")
+        .into_iter()
+        .filter(|d| d.rule == Rule::DeprecatedApi && d.message.contains(needle))
+        .collect()
+}
+
+fn render(diags: &[Diagnostic]) -> String {
+    diags.iter().map(Diagnostic::render).collect::<Vec<_>>().join("\n")
+}
+
 #[test]
 fn amend_last_has_no_caller_outside_its_definition_and_pinned_tests() {
-    let mut files = Vec::new();
-    source_files(&src_root(), &mut files);
-    assert!(files.len() > 20, "source walk looks broken: {} files", files.len());
-    for f in &files {
-        let hits = code_occurrences(f, "amend_last");
-        let allowed = f.ends_with("search/bo.rs");
-        assert!(
-            hits == 0 || allowed,
-            "{}: `amend_last` referenced {hits}x outside its #[deprecated] home — \
-             use the index-keyed observe_pending/resolve_pending instead",
-            f.display()
-        );
-    }
-    // the definition and its pinned tests still exist (the API surface
-    // contract: deprecated, not deleted)
-    let bo = files.iter().find(|f| f.ends_with("search/bo.rs")).expect("bo.rs present");
-    assert!(code_occurrences(bo, "pub fn amend_last") == 1, "deprecated API surface removed");
+    let diags = deprecated_mentioning("amend_last");
+    assert!(
+        diags.is_empty(),
+        "`amend_last` referenced outside its #[deprecated] home — \
+         use the index-keyed observe_pending/resolve_pending instead:\n{}",
+        render(&diags)
+    );
+    // and the engine would catch a regression: a planted caller fires
+    let planted = check_files(&[SourceFile {
+        path: "ensemble/planted.rs".into(),
+        text: "fn f(bo: &mut B) {\n    bo.amend_last(0.0);\n}\n".into(),
+    }]);
+    assert!(
+        planted.iter().any(|d| d.rule == Rule::DeprecatedApi && d.line == 2),
+        "deprecated-api rule lost its teeth:\n{}",
+        render(&planted)
+    );
 }
 
 #[test]
 fn transfer_warm_start_shim_has_no_runtime_caller() {
-    let mut files = Vec::new();
-    source_files(&src_root(), &mut files);
-    for f in &files {
-        let hits = code_occurrences(f, "transfer::warm_start")
-            + code_occurrences(f, "warm_start(");
-        // the shim's own file (definition + pinned delegation tests) and
-        // the search/mod.rs re-export are the whole allowed surface
-        let allowed = f.ends_with("search/transfer.rs") || f.ends_with("search/mod.rs");
-        assert!(
-            hits == 0 || allowed,
-            "{}: deprecated transfer warm-start referenced {hits}x — \
-             use history::rescale / history::apply_warm_start",
-            f.display()
-        );
-    }
-    let shim =
-        files.iter().find(|f| f.ends_with("search/transfer.rs")).expect("shim present");
-    assert!(code_occurrences(shim, "pub fn warm_start") == 1, "deprecated shim removed");
+    let diags = deprecated_mentioning("warm_start");
+    assert!(
+        diags.is_empty(),
+        "deprecated transfer warm-start referenced outside its shim — \
+         use history::rescale / history::apply_warm_start:\n{}",
+        render(&diags)
+    );
+    let planted = check_files(&[SourceFile {
+        path: "coordinator/planted.rs".into(),
+        text: "fn f() {\n    let _ = ytopt::search::transfer::warm_start(&[]);\n}\n".into(),
+    }]);
+    assert!(
+        planted.iter().any(|d| d.rule == Rule::DeprecatedApi && d.line == 2),
+        "deprecated-api rule lost its teeth:\n{}",
+        render(&planted)
+    );
 }

@@ -1,0 +1,289 @@
+//! detlint, tier-1: the determinism contract holds over the whole tree
+//! on every `cargo test`, and the engine itself is proven against
+//! planted-violation fixtures — each rule fires at the right line, the
+//! `detlint: allow` escape works only with a reason, and a malformed or
+//! unknown directive is itself an error. The contract text lives in
+//! DESIGN.md ("Determinism contract").
+
+use std::path::{Path, PathBuf};
+
+use ytopt::lint::{check_files, check_tree, Diagnostic, Rule, SourceFile};
+
+fn src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+fn fx(path: &str, text: &str) -> SourceFile {
+    SourceFile { path: path.into(), text: text.into() }
+}
+
+/// The (line, rule) pairs of every diagnostic, for exact-position
+/// assertions.
+fn hits(diags: &[Diagnostic]) -> Vec<(usize, Rule)> {
+    diags.iter().map(|d| (d.line, d.rule)).collect()
+}
+
+fn render(diags: &[Diagnostic]) -> String {
+    diags.iter().map(Diagnostic::render).collect::<Vec<_>>().join("\n")
+}
+
+// ---------------------------------------------------------------------------
+// the gate: the real tree is clean
+
+#[test]
+fn the_tree_upholds_the_determinism_contract() {
+    let diags = check_tree(&src_root()).expect("lintable source tree");
+    assert!(diags.is_empty(), "determinism contract violations:\n{}", render(&diags));
+}
+
+#[test]
+fn the_tree_walk_sees_the_whole_crate() {
+    // guard against a silently-empty walk making the gate vacuous
+    fn count(dir: &Path, n: &mut usize) {
+        for entry in std::fs::read_dir(dir).expect("readable source tree") {
+            let path = entry.expect("readable dir entry").path();
+            if path.is_dir() {
+                count(&path, n);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                *n += 1;
+            }
+        }
+    }
+    let mut n = 0;
+    count(&src_root(), &mut n);
+    assert!(n > 20, "source walk looks broken: {n} files");
+}
+
+// ---------------------------------------------------------------------------
+// hash-order
+
+#[test]
+fn hash_order_fires_in_the_core_at_the_right_lines() {
+    let diags = check_files(&[fx(
+        "search/fixture.rs",
+        "use std::collections::HashMap;\nfn f() {\n    let m: HashMap<u32, u32> = HashMap::new();\n}\n",
+    )]);
+    assert_eq!(hits(&diags), vec![(1, Rule::HashOrder), (3, Rule::HashOrder)], "{}", render(&diags));
+}
+
+#[test]
+fn hash_order_does_not_fire_outside_the_core() {
+    let diags = check_files(&[fx("power/fixture.rs", "use std::collections::HashMap;\n")]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+}
+
+#[test]
+fn needles_in_comments_and_strings_are_ignored() {
+    let diags = check_files(&[fx(
+        "search/fixture.rs",
+        "// HashMap in prose is fine\nfn f() -> &'static str {\n    \"HashMap Instant::now thread_rng\"\n}\n",
+    )]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+}
+
+#[test]
+fn identifier_boundaries_prevent_substring_hits() {
+    let diags = check_files(&[fx("search/fixture.rs", "struct HashMapLike;\nfn f(x: &HashMapLike) {}\n")]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+}
+
+// ---------------------------------------------------------------------------
+// wall-clock
+
+#[test]
+fn wall_clock_fires_on_instant_and_thread_identity() {
+    let diags = check_files(&[fx(
+        "ensemble/fixture.rs",
+        "fn f() {\n    let t = std::time::Instant::now();\n    let id = std::thread::current().id();\n}\n",
+    )]);
+    assert_eq!(hits(&diags), vec![(2, Rule::WallClock), (3, Rule::WallClock)], "{}", render(&diags));
+}
+
+// ---------------------------------------------------------------------------
+// rng-source
+
+#[test]
+fn rng_source_fires_on_ambient_randomness() {
+    let diags = check_files(&[fx("search/fixture.rs", "fn f() {\n    let mut r = rand::thread_rng();\n}\n")]);
+    assert!(!diags.is_empty());
+    assert!(diags.iter().all(|d| d.rule == Rule::RngSource && d.line == 2), "{}", render(&diags));
+}
+
+// ---------------------------------------------------------------------------
+// par-float-accum
+
+#[test]
+fn par_float_accum_fires_in_the_core_but_not_in_the_blessed_scorer() {
+    let body = "fn f(xs: &[f64]) {\n    std::thread::scope(|s| {\n        s.spawn(|| xs.iter().sum::<f64>());\n    });\n}\n";
+    let in_core = check_files(&[fx("search/fixture.rs", body)]);
+    assert_eq!(hits(&in_core), vec![(2, Rule::ParFloatAccum)], "{}", render(&in_core));
+    let blessed = check_files(&[fx("runtime/batch.rs", body)]);
+    assert!(blessed.is_empty(), "{}", render(&blessed));
+}
+
+// ---------------------------------------------------------------------------
+// daemon-unwrap
+
+#[test]
+fn daemon_unwrap_fires_only_in_the_daemon() {
+    let body = "fn f(m: std::sync::Mutex<u32>) {\n    let g = m.lock().unwrap();\n    drop(g);\n}\n";
+    let daemon = check_files(&[fx("service/daemon.rs", body)]);
+    assert_eq!(hits(&daemon), vec![(2, Rule::DaemonUnwrap)], "{}", render(&daemon));
+    let client = check_files(&[fx("service/client.rs", body)]);
+    assert!(client.is_empty(), "{}", render(&client));
+}
+
+// ---------------------------------------------------------------------------
+// deprecated-api
+
+#[test]
+fn deprecated_api_fires_on_callers_outside_the_home_files() {
+    let diags = check_files(&[fx(
+        "ensemble/fixture.rs",
+        "fn g(bo: &mut ytopt::search::BayesianOptimizer) {\n    bo.amend_last(1.0);\n}\n",
+    )]);
+    assert_eq!(hits(&diags), vec![(2, Rule::DeprecatedApi)], "{}", render(&diags));
+}
+
+#[test]
+fn deprecated_api_allows_the_pinned_home_definition() {
+    let diags = check_files(&[fx("search/bo.rs", "pub fn amend_last(y: f64) {\n    let _ = y;\n}\n")]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+}
+
+#[test]
+fn deprecated_api_fires_when_the_pinned_surface_is_removed() {
+    // deprecated-not-deleted: bo.rs without `pub fn amend_last` breaks
+    // the surface contract
+    let diags = check_files(&[fx("search/bo.rs", "fn something_else() {}\n")]);
+    assert_eq!(hits(&diags), vec![(1, Rule::DeprecatedApi)], "{}", render(&diags));
+    assert!(diags[0].message.contains("amend_last"), "{}", render(&diags));
+}
+
+// ---------------------------------------------------------------------------
+// fingerprint-coverage
+
+const MINI_SETUP_COVERED: &str =
+    "pub struct TuneSetup {\n    pub app: u32,\n    pub seed: u64,\n}\n";
+const MINI_FP: &str = "pub fn fingerprint(setup: &TuneSetup) -> String {\n    let _ = (setup.app, setup.seed);\n    String::new()\n}\n";
+
+#[test]
+fn fingerprint_coverage_is_clean_when_every_field_is_a_component() {
+    let diags = check_files(&[
+        fx("coordinator/mod.rs", MINI_SETUP_COVERED),
+        fx("ensemble/checkpoint.rs", MINI_FP),
+    ]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+}
+
+#[test]
+fn a_new_tune_setup_field_without_a_fingerprint_component_fails() {
+    // the acceptance fixture: add a knob, forget the fingerprint, and
+    // the lint points at the new field's line
+    let setup = "pub struct TuneSetup {\n    pub app: u32,\n    pub seed: u64,\n    pub shiny_new_knob: bool,\n}\n";
+    let diags = check_files(&[
+        fx("coordinator/mod.rs", setup),
+        fx("ensemble/checkpoint.rs", MINI_FP),
+    ]);
+    assert_eq!(hits(&diags), vec![(4, Rule::FingerprintCoverage)], "{}", render(&diags));
+    assert!(diags[0].message.contains("shiny_new_knob"), "{}", render(&diags));
+    assert_eq!(diags[0].path, "coordinator/mod.rs");
+}
+
+#[test]
+fn an_annotated_exclusion_with_a_reason_is_accepted() {
+    let setup = "pub struct TuneSetup {\n    pub app: u32,\n    pub seed: u64,\n    // detlint: allow(fingerprint-coverage) -- capacity knob, not identity\n    pub max_widgets: usize,\n}\n";
+    let diags = check_files(&[
+        fx("coordinator/mod.rs", setup),
+        fx("ensemble/checkpoint.rs", MINI_FP),
+    ]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+}
+
+#[test]
+fn a_missing_fingerprint_function_is_itself_a_violation() {
+    let diags = check_files(&[fx("coordinator/mod.rs", MINI_SETUP_COVERED)]);
+    assert_eq!(hits(&diags), vec![(1, Rule::FingerprintCoverage)], "{}", render(&diags));
+}
+
+#[test]
+fn campaign_spec_fields_are_checked_through_the_alias_map() {
+    // `workers` maps onto the fingerprinted `ensemble_workers`; an
+    // unmapped, unreferenced spec field fails at its line
+    let spec = "pub struct CampaignSpec {\n    pub workers: usize,\n    pub sneaky_knob: bool,\n}\n";
+    let fp = "pub fn fingerprint(setup: &TuneSetup) -> String {\n    let _ = (setup.app, setup.seed, setup.ensemble_workers);\n    String::new()\n}\n";
+    let diags = check_files(&[
+        fx("coordinator/mod.rs", MINI_SETUP_COVERED),
+        fx("ensemble/checkpoint.rs", fp),
+        fx("service/protocol.rs", spec),
+    ]);
+    assert_eq!(hits(&diags), vec![(3, Rule::FingerprintCoverage)], "{}", render(&diags));
+    assert!(diags[0].message.contains("sneaky_knob"), "{}", render(&diags));
+    assert_eq!(diags[0].path, "service/protocol.rs");
+}
+
+// ---------------------------------------------------------------------------
+// the allow escape hatch
+
+#[test]
+fn a_trailing_allow_with_a_reason_suppresses_its_line() {
+    let diags = check_files(&[fx(
+        "search/fixture.rs",
+        "use std::collections::HashSet; // detlint: allow(hash-order) -- membership only; never iterated\n",
+    )]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+}
+
+#[test]
+fn a_standalone_allow_with_a_reason_shields_the_next_code_line() {
+    let diags = check_files(&[fx(
+        "search/fixture.rs",
+        "// detlint: allow(hash-order) -- membership only; never iterated\nuse std::collections::HashSet;\n",
+    )]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+}
+
+#[test]
+fn an_allow_without_a_reason_is_rejected_and_suppresses_nothing() {
+    let diags = check_files(&[fx(
+        "search/fixture.rs",
+        "use std::collections::HashSet; // detlint: allow(hash-order)\n",
+    )]);
+    assert_eq!(
+        hits(&diags),
+        vec![(1, Rule::HashOrder), (1, Rule::AllowSyntax)],
+        "{}",
+        render(&diags)
+    );
+}
+
+#[test]
+fn an_unknown_rule_name_in_an_allow_is_an_error() {
+    let diags = check_files(&[fx(
+        "search/fixture.rs",
+        "use std::collections::HashSet; // detlint: allow(hash-disorder) -- sounds right\n",
+    )]);
+    assert_eq!(
+        hits(&diags),
+        vec![(1, Rule::HashOrder), (1, Rule::AllowSyntax)],
+        "{}",
+        render(&diags)
+    );
+    assert!(diags.iter().any(|d| d.message.contains("hash-disorder")), "{}", render(&diags));
+}
+
+#[test]
+fn an_allow_does_not_leak_to_other_lines_or_rules() {
+    // shielded line 1, unshielded line 2; and a hash-order allow must
+    // not hide a wall-clock hit on its own line
+    let diags = check_files(&[fx(
+        "search/fixture.rs",
+        "use std::collections::HashSet; // detlint: allow(hash-order) -- pinned\nlet s: HashSet<u32> = HashSet::new();\nlet t = std::time::Instant::now(); // detlint: allow(hash-order) -- wrong rule\n",
+    )]);
+    assert_eq!(
+        hits(&diags),
+        vec![(2, Rule::HashOrder), (3, Rule::WallClock)],
+        "{}",
+        render(&diags)
+    );
+}
