@@ -10,6 +10,11 @@
 //!                epoch-cached continuous-manager proposal loop; emits
 //!                BENCH_scorer.json and (with --gate) enforces the CI
 //!                acceptance ratios. `--scorer-only` runs just this.
+//!   stats duel — the identical continuous-manager campaign with the
+//!                observability sink detached vs attached; emits
+//!                BENCH_stats.json and (with --gate) enforces the
+//!                near-free overhead bound. `--stats-only` runs just
+//!                this.
 //!   substrate  — space sampling/encoding throughput
 //!   ablations  — kappa sweep, surrogate family, sequential vs parallel
 //!                evaluation, BO vs random vs grid
@@ -22,6 +27,7 @@ use ytopt::bench_support::{run, section};
 use ytopt::coordinator::{autotune_with_scorer, TuneSetup};
 use ytopt::ensemble::LiarStrategy;
 use ytopt::metrics::Metric;
+use ytopt::obs::ObsSink;
 use ytopt::platform::PlatformKind;
 use ytopt::runtime::Scorer;
 use ytopt::search::{BayesianOptimizer, BoConfig, SearchStrategy, StrategyKind, SurrogateKind};
@@ -267,6 +273,83 @@ fn scorer_duel(quick: bool, gate: bool) {
     }
 }
 
+/// One full continuous-manager campaign (the engine `tune --stats`
+/// runs), timed end to end, with the observability sink detached or
+/// attached. Min-of-`reps` wall time divided by the eval count: seconds
+/// per applied completion.
+fn stats_campaign_s(with_stats: bool, evals: usize, reps: usize) -> f64 {
+    let scorer = Arc::new(Scorer::fallback());
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let mut s = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+        s.max_evals = evals;
+        s.wallclock_budget_s = 1e9;
+        s.seed = 77;
+        s.n_init = 4;
+        s.ensemble_workers = 4;
+        if with_stats {
+            s.obs = Some(Arc::new(ObsSink::default()));
+        }
+        let t = Instant::now();
+        let r = autotune_with_scorer(&s, scorer.clone()).unwrap();
+        let dt = t.elapsed().as_secs_f64();
+        std::hint::black_box(&r);
+        best = best.min(dt);
+    }
+    best / evals as f64
+}
+
+/// Stats duel: the same seed-77 continuous campaign with the sink
+/// detached vs attached (every proposal/dispatch/completion recorded
+/// into the ring + counters). Emits `BENCH_stats.json`; with `gate`,
+/// enforces the ISSUE-8 acceptance bound (stats-on <= 1.05x stats-off
+/// per completion).
+fn stats_duel(quick: bool, gate: bool) {
+    section("stats duel: observability sink detached vs attached (continuous manager)");
+    let evals = if quick { 24 } else { 64 };
+    let reps = if quick { 2 } else { 5 };
+    let off_s = stats_campaign_s(false, evals, reps);
+    let on_s = stats_campaign_s(true, evals, reps);
+    let overhead = on_s / off_s - 1.0;
+    println!(
+        "stats-off {:.3} ms/completion | stats-on {:.3} ms/completion | overhead {:+.2}%",
+        off_s * 1e3,
+        on_s * 1e3,
+        overhead * 100.0
+    );
+
+    let doc = Json::obj(vec![
+        (
+            "shape",
+            Json::obj(vec![
+                ("evals", (evals as u64).into()),
+                ("workers", 4u64.into()),
+                ("reps", (reps as u64).into()),
+            ]),
+        ),
+        ("stats_off_s", Json::Num(off_s)),
+        ("stats_on_s", Json::Num(on_s)),
+        ("overhead_frac", Json::Num(overhead)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_stats.json");
+    std::fs::write(&path, doc.to_string()).expect("writing BENCH_stats.json");
+    println!("wrote {}", path.display());
+
+    if gate {
+        assert!(
+            on_s <= 1.05 * off_s,
+            "CI gate: stats-on per-completion cost must be <= 1.05x stats-off \
+             (got {:.3} ms vs {:.3} ms)",
+            on_s * 1e3,
+            off_s * 1e3
+        );
+        println!(
+            "stats gate passed: {:+.2}% overhead with the sink attached",
+            overhead * 100.0
+        );
+    }
+}
+
 fn substrate(quick: bool) {
     section("substrate: space sampling / encoding");
     let samples = if quick { 10 } else { 30 };
@@ -361,8 +444,13 @@ fn main() {
     let quick = args.iter().any(|a| a == "--quick");
     let gate = args.iter().any(|a| a == "--gate");
     let scorer_only = args.iter().any(|a| a == "--scorer-only");
+    let stats_only = args.iter().any(|a| a == "--stats-only");
     if scorer_only {
         scorer_duel(quick, gate);
+        return;
+    }
+    if stats_only {
+        stats_duel(quick, gate);
         return;
     }
     let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
@@ -373,6 +461,7 @@ fn main() {
     l2_cost_analysis();
     hot_path(&scorer, quick);
     scorer_duel(quick, gate);
+    stats_duel(quick, gate);
     substrate(quick);
     ablations(&scorer, quick);
 }

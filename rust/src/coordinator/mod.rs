@@ -147,6 +147,13 @@ pub struct TuneSetup {
     /// `max_evals`: resuming past the kill point is the normal use).
     // detlint: allow(fingerprint-coverage) -- capacity knob: resuming past the kill point is the normal use
     pub kill_after_evals: Option<usize>,
+    /// Observability sink (`--stats`): the engines record manager events
+    /// and counters here when present. Strictly write-only from the
+    /// engine's side — recording never feeds back into the trajectory,
+    /// and seed-for-seed runs are pinned bit-identical with it on or
+    /// off, so it must stay outside the checkpoint fingerprint.
+    // detlint: allow(fingerprint-coverage) -- write-only telemetry sink; trajectories are pinned bit-identical with stats on vs. off
+    pub obs: Option<std::sync::Arc<crate::obs::ObsSink>>,
 }
 
 impl TuneSetup {
@@ -186,6 +193,7 @@ impl TuneSetup {
             foreign_warm: None,
             baseline_memo: None,
             kill_after_evals: None,
+            obs: None,
         }
     }
 }

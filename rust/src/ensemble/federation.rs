@@ -292,6 +292,11 @@ pub(crate) struct ContinuousShard {
     /// shard stopped right after a checkpointed apply, leaving its
     /// dispatched-but-unfinished evaluations behind.
     killed: bool,
+    /// Observability sink (`--stats`). Strictly write-only: every
+    /// recording site below emits already-computed values; nothing in
+    /// this shard ever reads the sink, so trajectories stay
+    /// bit-identical with it present or absent (pinned by e2e).
+    obs: Option<Arc<crate::obs::ObsSink>>,
 }
 
 impl ContinuousShard {
@@ -324,6 +329,10 @@ impl ContinuousShard {
             if let Some(bo) = strat.as_bo_mut() {
                 bo.restrict_to_shard(lens);
             }
+        }
+        let obs = setup.obs.clone();
+        if let (Some(sink), Some(bo)) = (&obs, strat.as_bo_mut()) {
+            bo.set_obs(sink.clone(), lens.shard);
         }
 
         let mut db = PerfDatabase::new();
@@ -609,6 +618,7 @@ impl ContinuousShard {
             checkpoint_path,
             done: false,
             killed: false,
+            obs,
         })
     }
 
@@ -730,6 +740,17 @@ impl ContinuousShard {
                 }),
                 "ensemble worker pool rejected a job"
             );
+            if let Some(obs) = &self.obs {
+                obs.record(crate::obs::ObsEvent::Proposed {
+                    eval_id: self.next_id as u64,
+                    shard: self.lens.shard,
+                    search_us: crate::obs::secs_to_us(search_s),
+                });
+                obs.record(crate::obs::ObsEvent::Dispatched {
+                    eval_id: self.next_id as u64,
+                    shard: self.lens.shard,
+                });
+            }
             self.next_id += self.lens.stride();
         }
         Ok(())
@@ -835,6 +856,31 @@ impl ContinuousShard {
         self.inflight.remove(&self.next_apply);
         self.next_apply += self.lens.stride();
         self.stats.batches += 1;
+
+        if let Some(obs) = &self.obs {
+            obs.record(crate::obs::ObsEvent::Completed {
+                eval_id: job.eval_id as u64,
+                shard: self.lens.shard,
+                objective: s.objective,
+                best_so_far: if self.best.is_finite() { self.best } else { s.objective },
+                sim_wallclock_s: completion,
+            });
+            if cancelled {
+                obs.record(crate::obs::ObsEvent::StragglerKilled {
+                    eval_id: job.eval_id as u64,
+                    shard: self.lens.shard,
+                });
+            }
+            obs.set_shard_gauges(crate::obs::ShardGauges {
+                shard: self.lens.shard,
+                workers: self.workers as u64,
+                in_flight: self.inflight.len() as u64,
+                applied: self.db.len() as u64,
+                best_objective: self.best,
+                sim_wallclock_s: self.wallclock,
+                busy_s: self.stats.serial_equivalent_s,
+            });
+        }
 
         if let Some(alloc) = &mut self.allocation {
             let advance = self.wallclock - self.charged_wallclock;
@@ -973,6 +1019,18 @@ impl ContinuousShard {
             absorbed += 1;
         }
         absorbed
+    }
+
+    /// Record one elite-exchange round on the observability sink
+    /// (write-only; the exchange itself is unaffected).
+    fn record_exchange(&self, round: u64, absorbed: u64) {
+        if let Some(obs) = &self.obs {
+            obs.record(crate::obs::ObsEvent::EliteExchange {
+                round,
+                shard: self.lens.shard,
+                absorbed,
+            });
+        }
     }
 
     /// Charge one exchange round's synchronization cost to this shard's
@@ -1146,12 +1204,15 @@ pub fn autotune_federation(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tun
                     if !at_boundary(sh) {
                         continue;
                     }
+                    let mut absorbed = 0usize;
                     for (j, es) in all_elites.iter().enumerate() {
                         if i != j {
-                            fstats.elites_absorbed += sh.absorb_foreign(es);
+                            absorbed += sh.absorb_foreign(es);
                         }
                     }
+                    fstats.elites_absorbed += absorbed;
                     sh.charge_exchange(exch_s);
+                    sh.record_exchange(round as u64, absorbed as u64);
                 }
                 fstats.exchanges += 1;
                 fstats.exchange_s += exch_s;

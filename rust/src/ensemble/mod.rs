@@ -773,13 +773,57 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
                     });
                 }
                 let makespan = worker_free.iter().cloned().fold(0.0, f64::max);
-                // the barrier: every worker waits out the batch makespan
+                // the barrier: every worker waits out the batch makespan.
+                // Clamped at zero: `worker_free` restarts from 0.0 each
+                // batch, so a resumed run (or any future schedule change
+                // that seeds workers past the makespan fold's 0.0 floor)
+                // can never report negative — and thereby double-counted —
+                // idle time (ISSUE 8 audit; pinned by kill/resume
+                // stats-equality test).
                 for w in &worker_free {
-                    stats.worker_idle_s += makespan - *w;
+                    stats.worker_idle_s += (makespan - *w).max(0.0);
                 }
                 wallclock += makespan;
                 eval_id += batch;
                 stats.batches += 1;
+
+                if let Some(obs) = &setup.obs {
+                    let search_us =
+                        crate::obs::secs_to_us(search_s / batch_n as f64);
+                    for r in &db.records[db.len() - resolved.len()..] {
+                        obs.record(crate::obs::ObsEvent::Proposed {
+                            eval_id: r.id as u64,
+                            shard: 0,
+                            search_us,
+                        });
+                        obs.record(crate::obs::ObsEvent::Dispatched {
+                            eval_id: r.id as u64,
+                            shard: 0,
+                        });
+                        obs.record(crate::obs::ObsEvent::Completed {
+                            eval_id: r.id as u64,
+                            shard: 0,
+                            objective: r.objective,
+                            best_so_far: r.best_so_far,
+                            sim_wallclock_s: r.wallclock_s,
+                        });
+                        if r.cancelled {
+                            obs.record(crate::obs::ObsEvent::StragglerKilled {
+                                eval_id: r.id as u64,
+                                shard: 0,
+                            });
+                        }
+                    }
+                    obs.set_shard_gauges(crate::obs::ShardGauges {
+                        shard: 0,
+                        workers: workers as u64,
+                        in_flight: 0,
+                        applied: db.len() as u64,
+                        best_objective: best,
+                        sim_wallclock_s: wallclock,
+                        busy_s: stats.serial_equivalent_s,
+                    });
+                }
 
                 if let Some(alloc) = &mut allocation {
                     if alloc.charge(setup.nodes, makespan).is_err() {

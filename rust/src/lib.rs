@@ -27,6 +27,7 @@ pub mod lint;
 pub mod search;
 pub mod configfile;
 pub mod metrics;
+pub mod obs;
 pub mod platform;
 pub mod power;
 pub mod proptest_lite;

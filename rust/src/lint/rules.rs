@@ -19,6 +19,12 @@ pub const CORE_SCOPE: &[&str] = &[
     "coordinator/",
     "ensemble/",
     "history/",
+    // in core deliberately: the observability layer must stay off the
+    // deterministic path, so its only clock is the viewer-time repaint
+    // cadence in obs/monitor.rs (under a reasoned allow) and everything
+    // else it records is measured by the engines' existing overhead
+    // stats and passed in
+    "obs/",
     "runtime/",
     "search/",
     "service/engine.rs",
@@ -268,6 +274,8 @@ mod tests {
         assert!(in_core("search/bo.rs"));
         assert!(in_core("ensemble/federation.rs"));
         assert!(in_core("service/scheduler.rs"));
+        assert!(in_core("obs/mod.rs"));
+        assert!(in_core("obs/monitor.rs"));
         assert!(!in_core("service/daemon.rs"));
         assert!(!in_core("power/rapl.rs"));
         assert!(!in_core("util/rng.rs"));

@@ -6,6 +6,9 @@
 //! ytopt-rs serve  --addr 127.0.0.1:7459 --history-dir runs/   # tuning daemon
 //! ytopt-rs submit --addr 127.0.0.1:7459 --app amg --seed 7    # queue a campaign
 //! ytopt-rs watch  --addr 127.0.0.1:7459 --campaign 1          # stream its events
+//! ytopt-rs stats  --addr 127.0.0.1:7459 --campaign 1          # live counters + event ring
+//! ytopt-rs top    --addr 127.0.0.1:7459 --campaign 1          # terminal monitor (ytop)
+//! ytopt-rs top    --stats-file /tmp/stats.json                # monitor a solo `tune --stats`
 //! ytopt-rs status | cancel | shutdown                         # daemon control
 //! ytopt-rs lint                   # determinism-contract static analysis
 //! ytopt-rs spaces                 # Table III parameter spaces
@@ -42,7 +45,7 @@ const ALL_APPS: [AppKind; 7] = [
 
 fn spec() -> CliSpec {
     CliSpec::new("ytopt-rs", "autotuning framework (paper reproduction)")
-        .positional("command", "tune | serve | submit | watch | status | cancel | shutdown | lint | spaces | platforms")
+        .positional("command", "tune | serve | submit | watch | stats | top | status | cancel | shutdown | lint | spaces | platforms")
         .opt("config", None, "TOML config file (section [tune])")
         .opt("app", Some("xsbench"), "application to tune")
         .opt("platform", Some("theta"), "theta | summit")
@@ -74,10 +77,15 @@ fn spec() -> CliSpec {
         .opt("addr", Some("127.0.0.1:7459"), "daemon address (serve listens; clients connect)")
         .opt("max-active", Some("4"), "serve: campaigns running concurrently")
         .opt("checkpoint-dir", None, "serve: per-campaign checkpoint directory")
-        .opt("campaign", None, "campaign id (watch / cancel)")
-        .opt("from", Some("0"), "watch: replay the event stream from this index")
+        .opt("campaign", None, "campaign id (watch / stats / top / cancel)")
+        .opt("from", Some("0"), "watch/stats: replay the stream from this index")
+        .opt("stats-file", None, "tune: refresh a stats snapshot JSON here; top: monitor it")
+        .opt("interval-ms", Some("500"), "stats --follow / top: poll interval")
+        .opt("frames", Some("0"), "top: stop after this many repaints (0 = run until source ends)")
         .opt("src", None, "lint: source root to check (default: this crate's src/)")
         .flag("no-warm-start", "submit: opt out of the daemon's shared-history warm start")
+        .flag("stats", "tune: record live observability (SIGUSR1 or exit dumps the snapshot)")
+        .flag("follow", "stats: keep tailing the event ring until the campaign ends")
         .flag("trace", "print the per-evaluation trace")
 }
 
@@ -185,14 +193,52 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     Ok(setup)
 }
 
+/// Refresh the solo snapshot file atomically (write-then-rename) so a
+/// concurrent `ytopt-rs top --stats-file` never reads a torn JSON.
+fn write_stats_file(path: &std::path::Path, snap: &ytopt::obs::StatsSnapshot) {
+    let tmp = path.with_extension("json.tmp");
+    if std::fs::write(&tmp, snap.to_json().to_string()).is_ok() {
+        let _ = std::fs::rename(&tmp, path);
+    }
+}
+
+fn print_stats_frame(title: &str, snap: &ytopt::obs::StatsSnapshot) {
+    for line in ytopt::obs::monitor::render_frame(title, snap, &[]) {
+        println!("{line}");
+    }
+}
+
 fn cmd_tune(args: &Args) -> anyhow::Result<()> {
-    let setup = setup_from_args(args)?;
+    let mut setup = setup_from_args(args)?;
+    let stats_file = args.path("stats-file");
+    // `--stats` (or a stats file) attaches the observability sink; the
+    // engine records into it write-only, so the trajectory is pinned
+    // bit-identical with it on or off
+    let obs = if args.has_flag("stats") || stats_file.is_some() {
+        let sink = Arc::new(ytopt::obs::ObsSink::default());
+        setup.obs = Some(sink.clone());
+        service::daemon::install_sigusr1_hook();
+        Some(sink)
+    } else {
+        None
+    };
     let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
     // the one-shot path drives the same CampaignHandle the daemon's
     // scheduler does — one engine, two front-ends
     let mut handle = CampaignHandle::start(setup, scorer);
-    while handle.recv_event(std::time::Duration::from_millis(250)).is_some() || !handle.is_done()
-    {
+    loop {
+        let got = handle.recv_event(std::time::Duration::from_millis(250)).is_some();
+        if let Some(sink) = &obs {
+            if service::daemon::take_sigusr1() {
+                print_stats_frame("tune (SIGUSR1)", &sink.snapshot());
+            }
+            if let Some(path) = &stats_file {
+                write_stats_file(path, &sink.snapshot());
+            }
+        }
+        if !got && handle.is_done() {
+            break;
+        }
     }
     let result = match handle.join()? {
         CampaignOutcome::Finished(result) => *result,
@@ -201,6 +247,15 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
         }
     };
     println!("{}", result.summary());
+    if let Some(sink) = &obs {
+        // the at-exit dump ISSUE 8 specifies: same snapshot the daemon
+        // would serve over `stats`
+        if let Some(path) = &stats_file {
+            write_stats_file(path, &sink.snapshot());
+            println!("stats snapshot written to {}", path.display());
+        }
+        print_stats_frame("tune (final)", &sink.snapshot());
+    }
     if args.has_flag("trace") {
         println!("{}", result.trace());
     }
@@ -317,6 +372,126 @@ fn cmd_watch(args: &Args) -> anyhow::Result<()> {
     let from = args.int("from").unwrap_or(0).max(0) as u64;
     let mut client = Client::connect(args.get_or("addr", "127.0.0.1:7459"))?;
     client.watch(campaign, from, &mut |ev| println!("{}", render_event(ev)))?;
+    Ok(())
+}
+
+fn render_ring_event(e: &ytopt::obs::RingEvent) -> String {
+    use ytopt::obs::ObsEvent::*;
+    let body = match &e.ev {
+        Proposed { eval_id, shard, search_us } => {
+            format!("proposed eval {eval_id} (shard {shard}, search {search_us} us)")
+        }
+        Dispatched { eval_id, shard } => format!("dispatched eval {eval_id} (shard {shard})"),
+        Completed { eval_id, shard, objective, best_so_far, sim_wallclock_s } => format!(
+            "completed eval {eval_id} (shard {shard}) -> {objective:.4} (best {best_so_far:.4}) \
+             at t={sim_wallclock_s:.1}s"
+        ),
+        StragglerKilled { eval_id, shard } => {
+            format!("straggler eval {eval_id} killed (shard {shard})")
+        }
+        EliteExchange { round, shard, absorbed } => {
+            format!("elite exchange round {round}: shard {shard} absorbed {absorbed}")
+        }
+        SurrogateFit { shard, cache_hit, fit_us } => {
+            if *cache_hit {
+                format!("surrogate cache hit (shard {shard})")
+            } else {
+                format!("surrogate fit {fit_us} us (shard {shard})")
+            }
+        }
+    };
+    format!("[{:>6}] {body}", e.seq)
+}
+
+/// `ytopt-rs stats`: one snapshot + ring tail from a live daemon
+/// campaign; `--follow` keeps tailing the ring until the campaign ends.
+fn cmd_stats(args: &Args) -> anyhow::Result<()> {
+    let campaign = args
+        .int("campaign")
+        .ok_or_else(|| anyhow::anyhow!("stats needs --campaign <id>"))? as u64;
+    let mut from = args.int("from").unwrap_or(0).max(0) as u64;
+    let interval = args.int("interval-ms").unwrap_or(500).max(50) as u64;
+    let addr = args.get_or("addr", "127.0.0.1:7459");
+    let mut client = Client::connect(addr)?;
+    let (snap, events, next) = client.stats(campaign, from)?;
+    print_stats_frame(&format!("campaign {campaign} @ {addr}"), &snap);
+    for e in &events {
+        println!("{}", render_ring_event(e));
+    }
+    from = next;
+    if !args.has_flag("follow") {
+        return Ok(());
+    }
+    loop {
+        // stop once the campaign is terminal *and* the tail just drained
+        // (the terminal check races new events otherwise)
+        let state = client
+            .status()?
+            .into_iter()
+            .find(|c| c.id == campaign)
+            .map(|c| c.state)
+            .unwrap_or_default();
+        let terminal = matches!(state.as_str(), "done" | "cancelled" | "interrupted" | "failed");
+        let (_, events, next) = client.stats(campaign, from)?;
+        for e in &events {
+            println!("{}", render_ring_event(e));
+        }
+        let drained = next == from;
+        from = next;
+        if terminal && drained {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval));
+    }
+}
+
+/// `ytopt-rs top`: the ytop terminal monitor — against a daemon
+/// campaign (`--campaign`) or a solo `tune --stats --stats-file` run
+/// (`--stats-file`).
+fn cmd_top(args: &Args) -> anyhow::Result<()> {
+    let interval = args.int("interval-ms").unwrap_or(500).max(50) as u64;
+    let frames = args.int("frames").unwrap_or(0).max(0) as u64;
+    if let Some(path) = args.path("stats-file") {
+        anyhow::ensure!(
+            path.exists(),
+            "no stats file at {} (start `ytopt-rs tune --stats --stats-file {}` first)",
+            path.display(),
+            path.display()
+        );
+        let title = path.display().to_string();
+        let mut last: Option<ytopt::obs::StatsSnapshot> = None;
+        ytopt::obs::monitor::run(
+            &title,
+            || match std::fs::read_to_string(&path) {
+                Ok(text) => match ytopt::util::Json::parse(&text) {
+                    Ok(v) => {
+                        let snap = ytopt::obs::StatsSnapshot::from_json(&v);
+                        last = Some(snap.clone());
+                        Some(snap)
+                    }
+                    // mid-refresh read: repaint the previous snapshot
+                    Err(_) => last.clone(),
+                },
+                Err(_) => last.clone(),
+            },
+            interval,
+            frames,
+        );
+        return Ok(());
+    }
+    let campaign = args.int("campaign").ok_or_else(|| {
+        anyhow::anyhow!("top needs --campaign <id> (daemon) or --stats-file <path> (solo)")
+    })? as u64;
+    let addr = args.get_or("addr", "127.0.0.1:7459").to_string();
+    let mut client = Client::connect(&addr)?;
+    let title = format!("campaign {campaign} @ {addr}");
+    // from=MAX: the monitor only needs the snapshot, never the tail
+    ytopt::obs::monitor::run(
+        &title,
+        || client.stats(campaign, u64::MAX).ok().map(|(snap, _, _)| snap),
+        interval,
+        frames,
+    );
     Ok(())
 }
 
@@ -469,6 +644,8 @@ fn main() {
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
         "watch" => cmd_watch(&args),
+        "stats" => cmd_stats(&args),
+        "top" => cmd_top(&args),
         "status" => cmd_status(&args),
         "cancel" => cmd_cancel(&args),
         "shutdown" => cmd_shutdown(&args),

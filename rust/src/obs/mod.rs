@@ -1,0 +1,705 @@
+//! Always-cheap live observability (ISSUE 8): the event ring and the
+//! stats counters every front-end reads.
+//!
+//! The paper's §IV argument is that autotuning at scale works because
+//! the framework's own overhead is low and *measured*. This module is
+//! where the fleet measures itself while running: the continuous
+//! manager, every federation shard, and the surrogate cache record
+//! [`ObsEvent`]s into a fixed-capacity [`EventRing`] and bump the
+//! monotonic counters behind [`StatsSnapshot`] — which `ytopt-rs stats`
+//! and `ytopt-rs top` read over the service protocol (daemon) or from a
+//! snapshot file (solo `tune --stats`).
+//!
+//! # Off the deterministic path
+//!
+//! Recording is strictly write-only from the engine's point of view:
+//! events carry eval ids, simulated timestamps, and a ring sequence
+//! number (the logical clock) — never decisions — and nothing in the
+//! core ever reads a sink. The sink is optional (`TuneSetup::obs`), and
+//! seed-for-seed trajectories are pinned bit-identical with stats on
+//! vs. off. All wall-clock durations recorded here are measured *by the
+//! core's existing overhead stats* (`search_s`, `last_fit_s`, under
+//! their own detlint allows) and passed in; `obs/` itself only touches
+//! the wall clock in the [`monitor`] renderer, under reasoned allows.
+//!
+//! # Ring semantics
+//!
+//! The writer never blocks and never allocates per event: [`EventRing::
+//! record`] takes the ring lock with `try_lock`, and a contended record
+//! increments the `dropped` counter instead of waiting (manager progress
+//! is worth more than a perfect event tail). Sequence numbers are
+//! assigned under the lock, so delivered events are totally ordered;
+//! when the ring wraps, readers see a gap between their cursor and the
+//! oldest retained sequence — visible, never silent.
+
+pub mod monitor;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::Json;
+
+/// Default ring capacity: enough to tail a busy campaign for a while,
+/// small enough to be memory-irrelevant.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// One manager event, as recorded by the engines. Durations are carried
+/// in integer microseconds (atomically summable); simulated timestamps
+/// stay in seconds like the rest of the engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ObsEvent {
+    /// A fresh configuration was proposed; `search_us` is the measured
+    /// proposal-loop overhead (surrogate fit + acquisition scoring).
+    Proposed { eval_id: u64, shard: u32, search_us: u64 },
+    /// The proposal was handed to the worker pool.
+    Dispatched { eval_id: u64, shard: u32 },
+    /// An evaluation completed and was applied in eval-id order.
+    Completed { eval_id: u64, shard: u32, objective: f64, best_so_far: f64, sim_wallclock_s: f64 },
+    /// The straggler policy cancelled this in-flight evaluation.
+    StragglerKilled { eval_id: u64, shard: u32 },
+    /// One federation elite-exchange absorption at a round boundary.
+    EliteExchange { round: u64, shard: u32, absorbed: u64 },
+    /// The surrogate epoch cache answered a model use: a hit reuses the
+    /// epoch's fitted forest (`fit_us == 0`), a miss pays a fit.
+    SurrogateFit { shard: u32, cache_hit: bool, fit_us: u64 },
+}
+
+impl ObsEvent {
+    /// Short tag for rendering and the wire encoding.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ObsEvent::Proposed { .. } => "proposed",
+            ObsEvent::Dispatched { .. } => "dispatched",
+            ObsEvent::Completed { .. } => "completed",
+            ObsEvent::StragglerKilled { .. } => "straggler_killed",
+            ObsEvent::EliteExchange { .. } => "elite_exchange",
+            ObsEvent::SurrogateFit { .. } => "surrogate_fit",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let t = |t: &'static str| ("type", Json::Str(t.to_string()));
+        match self {
+            ObsEvent::Proposed { eval_id, shard, search_us } => Json::obj(vec![
+                t("proposed"),
+                ("eval_id", (*eval_id).into()),
+                ("shard", (*shard as u64).into()),
+                ("search_us", (*search_us).into()),
+            ]),
+            ObsEvent::Dispatched { eval_id, shard } => Json::obj(vec![
+                t("dispatched"),
+                ("eval_id", (*eval_id).into()),
+                ("shard", (*shard as u64).into()),
+            ]),
+            ObsEvent::Completed { eval_id, shard, objective, best_so_far, sim_wallclock_s } => {
+                Json::obj(vec![
+                    t("completed"),
+                    ("eval_id", (*eval_id).into()),
+                    ("shard", (*shard as u64).into()),
+                    ("objective", num_or_null(*objective)),
+                    ("best_so_far", num_or_null(*best_so_far)),
+                    ("sim_wallclock_s", num_or_null(*sim_wallclock_s)),
+                ])
+            }
+            ObsEvent::StragglerKilled { eval_id, shard } => Json::obj(vec![
+                t("straggler_killed"),
+                ("eval_id", (*eval_id).into()),
+                ("shard", (*shard as u64).into()),
+            ]),
+            ObsEvent::EliteExchange { round, shard, absorbed } => Json::obj(vec![
+                t("elite_exchange"),
+                ("round", (*round).into()),
+                ("shard", (*shard as u64).into()),
+                ("absorbed", (*absorbed).into()),
+            ]),
+            ObsEvent::SurrogateFit { shard, cache_hit, fit_us } => Json::obj(vec![
+                t("surrogate_fit"),
+                ("shard", (*shard as u64).into()),
+                ("cache_hit", (*cache_hit).into()),
+                ("fit_us", (*fit_us).into()),
+            ]),
+        }
+    }
+
+    /// Lenient parse (absent fields default), `None` on unknown type.
+    pub fn from_json(v: &Json) -> Option<ObsEvent> {
+        let eval_id = get_u(v, "eval_id");
+        let shard = get_u(v, "shard") as u32;
+        match v.get("type").and_then(Json::as_str).unwrap_or("") {
+            "proposed" => {
+                Some(ObsEvent::Proposed { eval_id, shard, search_us: get_u(v, "search_us") })
+            }
+            "dispatched" => Some(ObsEvent::Dispatched { eval_id, shard }),
+            "completed" => Some(ObsEvent::Completed {
+                eval_id,
+                shard,
+                objective: get_obj(v, "objective"),
+                best_so_far: get_obj(v, "best_so_far"),
+                sim_wallclock_s: get_f(v, "sim_wallclock_s"),
+            }),
+            "straggler_killed" => Some(ObsEvent::StragglerKilled { eval_id, shard }),
+            "elite_exchange" => Some(ObsEvent::EliteExchange {
+                round: get_u(v, "round"),
+                shard,
+                absorbed: get_u(v, "absorbed"),
+            }),
+            "surrogate_fit" => Some(ObsEvent::SurrogateFit {
+                shard,
+                cache_hit: v.get("cache_hit").and_then(Json::as_bool).unwrap_or(false),
+                fit_us: get_u(v, "fit_us"),
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// An [`ObsEvent`] with its ring sequence number — the logical clock
+/// readers cursor by.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RingEvent {
+    pub seq: u64,
+    pub ev: ObsEvent,
+}
+
+impl RingEvent {
+    pub fn to_json(&self) -> Json {
+        match self.ev.to_json() {
+            Json::Obj(mut fields) => {
+                fields.insert("seq".to_string(), self.seq.into());
+                Json::Obj(fields)
+            }
+            other => other,
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<RingEvent> {
+        Some(RingEvent { seq: get_u(v, "seq"), ev: ObsEvent::from_json(v)? })
+    }
+}
+
+struct RingInner {
+    next_seq: u64,
+    buf: VecDeque<RingEvent>,
+}
+
+/// Fixed-capacity event ring. The writer side never blocks (`try_lock`;
+/// a contended record is counted, not waited for) and readers copy the
+/// tail under a short lock.
+pub struct EventRing {
+    capacity: usize,
+    inner: Mutex<RingInner>,
+    dropped: AtomicU64,
+}
+
+impl std::fmt::Debug for EventRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventRing")
+            .field("capacity", &self.capacity)
+            .field("next_seq", &self.next_seq())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl EventRing {
+    pub fn new(capacity: usize) -> EventRing {
+        EventRing {
+            capacity: capacity.max(1),
+            inner: Mutex::new(RingInner { next_seq: 0, buf: VecDeque::new() }),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Record one event. Never blocks: if a reader holds the lock this
+    /// instant, the event is dropped and counted instead.
+    pub fn record(&self, ev: ObsEvent) {
+        match self.inner.try_lock() {
+            Ok(mut inner) => {
+                let seq = inner.next_seq;
+                inner.next_seq += 1;
+                inner.buf.push_back(RingEvent { seq, ev });
+                if inner.buf.len() > self.capacity {
+                    inner.buf.pop_front();
+                }
+            }
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Copy every retained event with `seq >= from`, plus the cursor to
+    /// pass next time. A `from` older than the oldest retained sequence
+    /// means the reader fell behind the wraparound; the gap is visible
+    /// in the returned sequence numbers.
+    pub fn tail(&self, from: u64) -> (Vec<RingEvent>, u64) {
+        let inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let evs = inner.buf.iter().filter(|e| e.seq >= from).cloned().collect();
+        (evs, inner.next_seq)
+    }
+
+    /// The next sequence number to be assigned (== events recorded so
+    /// far, drops excluded).
+    pub fn next_seq(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner).next_seq
+    }
+
+    /// Events lost to writer-side lock contention.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-shard gauges, refreshed on every applied completion.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ShardGauges {
+    pub shard: u32,
+    pub workers: u64,
+    pub in_flight: u64,
+    pub applied: u64,
+    pub best_objective: f64,
+    pub sim_wallclock_s: f64,
+    /// Sum of simulated spans charged to workers (serial-equivalent
+    /// time); utilization = busy / (workers * wallclock).
+    pub busy_s: f64,
+}
+
+impl ShardGauges {
+    /// Worker utilization in `[0, 1]` under the simulated schedule.
+    pub fn utilization(&self) -> f64 {
+        let denom = self.workers as f64 * self.sim_wallclock_s;
+        if denom > 0.0 {
+            (self.busy_s / denom).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", (self.shard as u64).into()),
+            ("workers", self.workers.into()),
+            ("in_flight", self.in_flight.into()),
+            ("applied", self.applied.into()),
+            ("best_objective", num_or_null(self.best_objective)),
+            ("sim_wallclock_s", num_or_null(self.sim_wallclock_s)),
+            ("busy_s", num_or_null(self.busy_s)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> ShardGauges {
+        ShardGauges {
+            shard: get_u(v, "shard") as u32,
+            workers: get_u(v, "workers"),
+            in_flight: get_u(v, "in_flight"),
+            applied: get_u(v, "applied"),
+            best_objective: get_obj(v, "best_objective"),
+            sim_wallclock_s: get_f(v, "sim_wallclock_s"),
+            busy_s: get_f(v, "busy_s"),
+        }
+    }
+}
+
+/// A point-in-time copy of every counter and gauge, serializable for
+/// the `StatsReply` frame and the solo snapshot file.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StatsSnapshot {
+    pub proposals: u64,
+    pub dispatches: u64,
+    pub completions: u64,
+    pub straggler_kills: u64,
+    pub exchange_rounds: u64,
+    /// Surrogate fits actually paid (epoch-cache misses).
+    pub surrogate_fits: u64,
+    pub surrogate_cache_hits: u64,
+    /// Total measured proposal-loop overhead, microseconds.
+    pub search_us_total: u64,
+    /// Total measured surrogate-fit time, microseconds.
+    pub fit_us_total: u64,
+    /// Ring logical clock (events recorded so far).
+    pub ring_next: u64,
+    pub ring_dropped: u64,
+    pub best_objective: f64,
+    pub shards: Vec<ShardGauges>,
+}
+
+impl StatsSnapshot {
+    /// Mean framework overhead per applied completion, microseconds
+    /// (proposal loop + surrogate fits) — the paper-§IV-style number the
+    /// bench gate holds near-free.
+    pub fn overhead_us_per_completion(&self) -> f64 {
+        if self.completions == 0 {
+            return 0.0;
+        }
+        (self.search_us_total + self.fit_us_total) as f64 / self.completions as f64
+    }
+
+    /// Epoch-cache hit rate over all surrogate model uses.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let uses = self.surrogate_fits + self.surrogate_cache_hits;
+        if uses == 0 {
+            0.0
+        } else {
+            self.surrogate_cache_hits as f64 / uses as f64
+        }
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.shards.iter().map(|s| s.in_flight).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("proposals", self.proposals.into()),
+            ("dispatches", self.dispatches.into()),
+            ("completions", self.completions.into()),
+            ("straggler_kills", self.straggler_kills.into()),
+            ("exchange_rounds", self.exchange_rounds.into()),
+            ("surrogate_fits", self.surrogate_fits.into()),
+            ("surrogate_cache_hits", self.surrogate_cache_hits.into()),
+            ("search_us_total", self.search_us_total.into()),
+            ("fit_us_total", self.fit_us_total.into()),
+            ("ring_next", self.ring_next.into()),
+            ("ring_dropped", self.ring_dropped.into()),
+            ("best_objective", num_or_null(self.best_objective)),
+            ("shards", Json::Arr(self.shards.iter().map(ShardGauges::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> StatsSnapshot {
+        StatsSnapshot {
+            proposals: get_u(v, "proposals"),
+            dispatches: get_u(v, "dispatches"),
+            completions: get_u(v, "completions"),
+            straggler_kills: get_u(v, "straggler_kills"),
+            exchange_rounds: get_u(v, "exchange_rounds"),
+            surrogate_fits: get_u(v, "surrogate_fits"),
+            surrogate_cache_hits: get_u(v, "surrogate_cache_hits"),
+            search_us_total: get_u(v, "search_us_total"),
+            fit_us_total: get_u(v, "fit_us_total"),
+            ring_next: get_u(v, "ring_next"),
+            ring_dropped: get_u(v, "ring_dropped"),
+            best_objective: get_obj(v, "best_objective"),
+            shards: v
+                .get("shards")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().map(ShardGauges::from_json).collect())
+                .unwrap_or_default(),
+        }
+    }
+}
+
+/// The shared recording handle: one per campaign, cloned (via `Arc`)
+/// into every shard, the generational manager, and the Bayesian
+/// optimizer. Counters are atomics; the per-shard gauge table and the
+/// ring take `try_lock` on the write side so the engine never waits on
+/// a reader.
+pub struct ObsSink {
+    ring: EventRing,
+    proposals: AtomicU64,
+    dispatches: AtomicU64,
+    completions: AtomicU64,
+    straggler_kills: AtomicU64,
+    exchange_rounds: AtomicU64,
+    surrogate_fits: AtomicU64,
+    surrogate_cache_hits: AtomicU64,
+    search_us_total: AtomicU64,
+    fit_us_total: AtomicU64,
+    /// f64 bits of the best finite objective seen (init +inf).
+    best_bits: AtomicU64,
+    shards: Mutex<BTreeMap<u32, ShardGauges>>,
+}
+
+impl std::fmt::Debug for ObsSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsSink").field("snapshot", &self.snapshot()).finish()
+    }
+}
+
+impl Default for ObsSink {
+    fn default() -> ObsSink {
+        ObsSink::new(DEFAULT_RING_CAPACITY)
+    }
+}
+
+impl ObsSink {
+    pub fn new(ring_capacity: usize) -> ObsSink {
+        ObsSink {
+            ring: EventRing::new(ring_capacity),
+            proposals: AtomicU64::new(0),
+            dispatches: AtomicU64::new(0),
+            completions: AtomicU64::new(0),
+            straggler_kills: AtomicU64::new(0),
+            exchange_rounds: AtomicU64::new(0),
+            surrogate_fits: AtomicU64::new(0),
+            surrogate_cache_hits: AtomicU64::new(0),
+            search_us_total: AtomicU64::new(0),
+            fit_us_total: AtomicU64::new(0),
+            best_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            shards: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Record one event: bump the matching counters, then push it onto
+    /// the ring. Write-only — nothing here is ever read back by the
+    /// engine, so recording cannot perturb a trajectory.
+    pub fn record(&self, ev: ObsEvent) {
+        match &ev {
+            ObsEvent::Proposed { search_us, .. } => {
+                self.proposals.fetch_add(1, Ordering::Relaxed);
+                self.search_us_total.fetch_add(*search_us, Ordering::Relaxed);
+            }
+            ObsEvent::Dispatched { .. } => {
+                self.dispatches.fetch_add(1, Ordering::Relaxed);
+            }
+            ObsEvent::Completed { best_so_far, .. } => {
+                self.completions.fetch_add(1, Ordering::Relaxed);
+                if best_so_far.is_finite() {
+                    let bits = best_so_far.to_bits();
+                    // monotonic min over positive finite f64s: their bit
+                    // patterns order like the values
+                    let _ = self.best_bits.fetch_update(
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                        |cur| (f64::from_bits(cur) > *best_so_far).then_some(bits),
+                    );
+                }
+            }
+            ObsEvent::StragglerKilled { .. } => {
+                self.straggler_kills.fetch_add(1, Ordering::Relaxed);
+            }
+            ObsEvent::EliteExchange { .. } => {
+                self.exchange_rounds.fetch_add(1, Ordering::Relaxed);
+            }
+            ObsEvent::SurrogateFit { cache_hit, fit_us, .. } => {
+                if *cache_hit {
+                    self.surrogate_cache_hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.surrogate_fits.fetch_add(1, Ordering::Relaxed);
+                    self.fit_us_total.fetch_add(*fit_us, Ordering::Relaxed);
+                }
+            }
+        }
+        self.ring.record(ev);
+    }
+
+    /// Refresh one shard's gauges. Skipped (not waited for) if a reader
+    /// holds the table this instant — gauges are refreshed every apply,
+    /// so one stale tick is invisible.
+    pub fn set_shard_gauges(&self, g: ShardGauges) {
+        if let Ok(mut shards) = self.shards.try_lock() {
+            shards.insert(g.shard, g);
+        }
+    }
+
+    /// Copy the tail of the event ring from sequence `from`.
+    pub fn tail(&self, from: u64) -> (Vec<RingEvent>, u64) {
+        self.ring.tail(from)
+    }
+
+    pub fn ring(&self) -> &EventRing {
+        &self.ring
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let shards: Vec<ShardGauges> = self
+            .shards
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .values()
+            .cloned()
+            .collect();
+        StatsSnapshot {
+            proposals: self.proposals.load(Ordering::Relaxed),
+            dispatches: self.dispatches.load(Ordering::Relaxed),
+            completions: self.completions.load(Ordering::Relaxed),
+            straggler_kills: self.straggler_kills.load(Ordering::Relaxed),
+            exchange_rounds: self.exchange_rounds.load(Ordering::Relaxed),
+            surrogate_fits: self.surrogate_fits.load(Ordering::Relaxed),
+            surrogate_cache_hits: self.surrogate_cache_hits.load(Ordering::Relaxed),
+            search_us_total: self.search_us_total.load(Ordering::Relaxed),
+            fit_us_total: self.fit_us_total.load(Ordering::Relaxed),
+            ring_next: self.ring.next_seq(),
+            ring_dropped: self.ring.dropped(),
+            best_objective: f64::from_bits(self.best_bits.load(Ordering::Relaxed)),
+            shards,
+        }
+    }
+}
+
+/// Seconds → whole microseconds, saturating (stat durations only).
+pub fn secs_to_us(s: f64) -> u64 {
+    if s.is_finite() && s > 0.0 {
+        (s * 1e6) as u64
+    } else {
+        0
+    }
+}
+
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn get_u(v: &Json, key: &str) -> u64 {
+    v.get(key).and_then(Json::as_u64).unwrap_or(0)
+}
+
+fn get_f(v: &Json, key: &str) -> f64 {
+    v.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// Objective off the wire: `null` (non-finite on encode) reads as +inf.
+fn get_obj(v: &Json, key: &str) -> f64 {
+    v.get(key).and_then(Json::as_f64).unwrap_or(f64::INFINITY)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::for_all;
+    use crate::util::Pcg32;
+
+    fn ev(eval_id: u64) -> ObsEvent {
+        ObsEvent::Dispatched { eval_id, shard: 0 }
+    }
+
+    #[test]
+    fn ring_retains_the_newest_capacity_events() {
+        let ring = EventRing::new(4);
+        for i in 0..10 {
+            ring.record(ev(i));
+        }
+        let (evs, next) = ring.tail(0);
+        assert_eq!(next, 10);
+        assert_eq!(evs.len(), 4);
+        let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn tail_cursors_resume_without_gaps_or_duplicates() {
+        let ring = EventRing::new(64);
+        for i in 0..5 {
+            ring.record(ev(i));
+        }
+        let (first, cursor) = ring.tail(0);
+        for i in 5..9 {
+            ring.record(ev(i));
+        }
+        let (second, cursor2) = ring.tail(cursor);
+        let mut seqs: Vec<u64> = first.iter().chain(second.iter()).map(|e| e.seq).collect();
+        assert_eq!(seqs, (0..9).collect::<Vec<u64>>());
+        seqs.dedup();
+        assert_eq!(seqs.len() as u64, cursor2);
+    }
+
+    #[test]
+    fn prop_ring_wraparound_keeps_a_contiguous_newest_suffix() {
+        // proptest_lite sweep of (capacity, pushes): whatever the
+        // wraparound point, the retained events are exactly the newest
+        // min(pushes, capacity) with contiguous ascending sequences
+        for_all(
+            "ring_wraparound",
+            200,
+            0x0b5e5eed,
+            |rng: &mut Pcg32| {
+                let capacity = 1 + (rng.next_u64() % 16) as usize;
+                let pushes = (rng.next_u64() % 64) as usize;
+                (capacity, pushes)
+            },
+            |&(capacity, pushes)| {
+                let ring = EventRing::new(capacity);
+                for i in 0..pushes {
+                    ring.record(ev(i as u64));
+                }
+                let (evs, next) = ring.tail(0);
+                let expect_len = pushes.min(capacity);
+                let first = pushes - expect_len;
+                next == pushes as u64
+                    && evs.len() == expect_len
+                    && evs.iter().enumerate().all(|(i, e)| e.seq == (first + i) as u64)
+            },
+        );
+    }
+
+    #[test]
+    fn sink_counters_and_best_track_events() {
+        let sink = ObsSink::new(16);
+        sink.record(ObsEvent::Proposed { eval_id: 0, shard: 0, search_us: 120 });
+        sink.record(ObsEvent::Dispatched { eval_id: 0, shard: 0 });
+        sink.record(ObsEvent::SurrogateFit { shard: 0, cache_hit: false, fit_us: 900 });
+        sink.record(ObsEvent::SurrogateFit { shard: 0, cache_hit: true, fit_us: 0 });
+        sink.record(ObsEvent::Completed {
+            eval_id: 0,
+            shard: 0,
+            objective: 12.5,
+            best_so_far: 12.5,
+            sim_wallclock_s: 3.0,
+        });
+        sink.record(ObsEvent::Completed {
+            eval_id: 1,
+            shard: 0,
+            objective: 15.0,
+            best_so_far: 12.5,
+            sim_wallclock_s: 6.0,
+        });
+        sink.record(ObsEvent::StragglerKilled { eval_id: 1, shard: 0 });
+        sink.record(ObsEvent::EliteExchange { round: 1, shard: 0, absorbed: 2 });
+        let snap = sink.snapshot();
+        assert_eq!(snap.proposals, 1);
+        assert_eq!(snap.dispatches, 1);
+        assert_eq!(snap.completions, 2);
+        assert_eq!(snap.straggler_kills, 1);
+        assert_eq!(snap.exchange_rounds, 1);
+        assert_eq!(snap.surrogate_fits, 1);
+        assert_eq!(snap.surrogate_cache_hits, 1);
+        assert_eq!(snap.search_us_total, 120);
+        assert_eq!(snap.fit_us_total, 900);
+        assert_eq!(snap.best_objective, 12.5);
+        assert_eq!(snap.ring_next, 8);
+        assert_eq!(snap.cache_hit_rate(), 0.5);
+        assert_eq!(snap.overhead_us_per_completion(), 510.0);
+    }
+
+    #[test]
+    fn snapshot_and_events_roundtrip_through_json() {
+        let sink = ObsSink::new(8);
+        sink.record(ObsEvent::Proposed { eval_id: 3, shard: 1, search_us: 42 });
+        sink.record(ObsEvent::Completed {
+            eval_id: 3,
+            shard: 1,
+            objective: f64::INFINITY, // travels as null, reads as +inf
+            best_so_far: 9.25,
+            sim_wallclock_s: 1.5,
+        });
+        sink.set_shard_gauges(ShardGauges {
+            shard: 1,
+            workers: 4,
+            in_flight: 3,
+            applied: 7,
+            best_objective: 9.25,
+            sim_wallclock_s: 20.0,
+            busy_s: 60.0,
+        });
+        let snap = sink.snapshot();
+        let back =
+            StatsSnapshot::from_json(&Json::parse(&snap.to_json().to_string()).unwrap());
+        assert_eq!(back, snap);
+        assert_eq!(back.shards[0].utilization(), 0.75);
+        let (evs, _) = sink.tail(0);
+        for e in evs {
+            let rt = RingEvent::from_json(&Json::parse(&e.to_json().to_string()).unwrap());
+            assert_eq!(rt, Some(e));
+        }
+    }
+}

@@ -220,6 +220,11 @@ pub struct BayesianOptimizer {
     /// (0.0 when the epoch cache made the fit free).
     pub last_fit_s: f64,
     pub last_score_s: f64,
+    /// Observability sink (`--stats`): surrogate cache hits/misses are
+    /// recorded here. Write-only — never read back into proposals.
+    obs: Option<std::sync::Arc<crate::obs::ObsSink>>,
+    /// Shard tag stamped on recorded events (0 unsharded).
+    obs_shard: u32,
 }
 
 impl BayesianOptimizer {
@@ -247,7 +252,16 @@ impl BayesianOptimizer {
             y_std: Vec::new(),
             last_fit_s: 0.0,
             last_score_s: 0.0,
+            obs: None,
+            obs_shard: 0,
         }
+    }
+
+    /// Attach the observability sink (`--stats`): every surrogate model
+    /// use records an epoch-cache hit or a paid fit, tagged `shard`.
+    pub fn set_obs(&mut self, sink: std::sync::Arc<crate::obs::ObsSink>, shard: u32) {
+        self.obs = Some(sink);
+        self.obs_shard = shard;
     }
 
     pub fn observations(&self) -> usize {
@@ -485,6 +499,13 @@ impl BayesianOptimizer {
         self.refresh_epoch_seeds(rng);
         if self.cache_enabled && self.cache.as_ref().is_some_and(|c| c.epoch == self.epoch) {
             self.last_fit_s = 0.0;
+            if let Some(obs) = &self.obs {
+                obs.record(crate::obs::ObsEvent::SurrogateFit {
+                    shard: self.obs_shard,
+                    cache_hit: true,
+                    fit_us: 0,
+                });
+            }
             return;
         }
         // detlint: allow(wall-clock) -- fit-overhead stat (last_fit_s) only; simulated time drives the trajectory
@@ -535,6 +556,13 @@ impl BayesianOptimizer {
         self.y_std = y_std;
         self.cache = Some(SurrogateCache { epoch: self.epoch, model, tensors, mean, scale });
         self.last_fit_s = t0.elapsed().as_secs_f64();
+        if let Some(obs) = &self.obs {
+            obs.record(crate::obs::ObsEvent::SurrogateFit {
+                shard: self.obs_shard,
+                cache_hit: false,
+                fit_us: crate::obs::secs_to_us(self.last_fit_s),
+            });
+        }
     }
 
     /// Surrogate posterior mean at `cfg` in objective units — the

@@ -1,7 +1,7 @@
 //! Loopback client for the tuning daemon: a blocking [`TcpStream`]
 //! wrapped in the frame [`Decoder`]. Used by the CLI `submit`/`watch`/
-//! `status`/`cancel` subcommands, `examples/service_tuning.rs`, and the
-//! `tests/service_e2e.rs` harness.
+//! `status`/`cancel`/`stats`/`top` subcommands,
+//! `examples/service_tuning.rs`, and the `tests/service_e2e.rs` harness.
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -98,6 +98,22 @@ impl Client {
         match self.request(Request::Cancel { campaign })? {
             Response::Cancelling { .. } => Ok(()),
             other => anyhow::bail!("expected a cancel acknowledgement, got {other:?}"),
+        }
+    }
+
+    /// Query a campaign's live observability state: the counter
+    /// snapshot, the event-ring tail from logical clock `from`, and the
+    /// cursor to pass on the next poll. Read-only on the daemon side —
+    /// safe to poll a running campaign at any rate (`ytopt-rs top` does
+    /// exactly that).
+    pub fn stats(
+        &mut self,
+        campaign: u64,
+        from: u64,
+    ) -> Result<(crate::obs::StatsSnapshot, Vec<crate::obs::RingEvent>, u64)> {
+        match self.request(Request::Stats { campaign, from })? {
+            Response::StatsReply { snapshot, events, next, .. } => Ok((snapshot, events, next)),
+            other => anyhow::bail!("expected a stats reply, got {other:?}"),
         }
     }
 

@@ -2,11 +2,14 @@
 //!
 //! One accept loop (non-blocking listener polled alongside the stop
 //! flag), one thread per connection. A connection speaks the framed
-//! protocol: requests are answered in order; a `Watch` request turns
-//! the connection into an event stream until the campaign's terminal
-//! event has been written, then resumes request service. Framing junk
-//! poisons the stream, so a decode error drops the connection — the
-//! protocol cannot resynchronize mid-garbage.
+//! protocol: requests are answered in order; a `Watch` request starts a
+//! dedicated streaming thread over the connection's frame-atomic shared
+//! writer, so the request path keeps answering submit/status/cancel/
+//! stats while events flow — a slow or stalled watcher costs only its
+//! own stream (writes carry a stall timeout), never the request path
+//! and never daemon shutdown. Framing junk poisons the stream, so a
+//! decode error drops the connection — the protocol cannot
+//! resynchronize mid-garbage.
 //!
 //! Graceful shutdown (satellite 2): a `Shutdown` request or SIGTERM
 //! stops the accept loop, refuses new submissions, and interrupts every
@@ -72,6 +75,36 @@ pub fn install_sigterm_hook() {}
 /// True once SIGTERM has been delivered (test hooks may set it too).
 pub fn sigterm_requested() -> bool {
     TERM_REQUESTED.load(Ordering::SeqCst)
+}
+
+/// Raised by the SIGUSR1 handler; consumed by the solo CLI's event loop
+/// to dump a live stats snapshot (`ytopt-rs tune --stats`).
+static USR1_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+/// Install the SIGUSR1 hook (idempotent); same raw-`signal(2)`
+/// discipline as [`install_sigterm_hook`] — the handler only stores to
+/// an atomic, the event loop does the dump at poll granularity.
+#[cfg(unix)]
+pub fn install_sigusr1_hook() {
+    extern "C" fn on_usr1(_signum: i32) {
+        USR1_REQUESTED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGUSR1: i32 = 10;
+    unsafe {
+        signal(SIGUSR1, on_usr1 as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigusr1_hook() {}
+
+/// True if SIGUSR1 arrived since the last call (consumes the flag, so
+/// each delivery triggers exactly one dump).
+pub fn take_sigusr1() -> bool {
+    USR1_REQUESTED.swap(false, Ordering::SeqCst)
 }
 
 /// A running daemon: listener + scheduler + connection threads.
@@ -186,32 +219,51 @@ impl Daemon {
     }
 }
 
+/// Writes from the request loop and any live watch threads interleave
+/// on one socket; the mutex keeps each frame atomic on the wire.
+type SharedWriter = Arc<Mutex<TcpStream>>;
+
+/// A peer that stops draining its socket is disconnected once a frame
+/// write has been stuck this long, instead of pinning a daemon thread
+/// (and daemon shutdown, which joins them all) in `write_all` forever.
+const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(5);
+
 /// Serve one connection until the peer hangs up, framing breaks, or the
-/// daemon stops.
+/// daemon stops. Watch streams run on their own threads and are joined
+/// on the way out — by then their campaigns are terminal (shutdown
+/// interrupts them) or their writes have failed/stalled out.
 fn serve_connection(mut stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<AtomicBool>) {
     if stream.set_read_timeout(Some(Duration::from_millis(250))).is_err() {
         return;
     }
+    if stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT)).is_err() {
+        return;
+    }
+    let writer: SharedWriter = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut watchers: Vec<JoinHandle<()>> = Vec::new();
     let mut dec = Decoder::new();
     let mut buf = [0u8; 4096];
-    loop {
+    'serve: loop {
         match stream.read(&mut buf) {
-            Ok(0) => return, // peer closed
+            Ok(0) => break, // peer closed
             Ok(n) => {
                 let msgs = match dec.push(&buf[..n]) {
                     Ok(m) => m,
                     Err(e) => {
                         log::warn!("dropping connection on framing error: {e}");
                         let _ = write_msg(
-                            &mut stream,
+                            &writer,
                             &Message::Response(Response::Error { message: e.to_string() }),
                         );
-                        return;
+                        break;
                     }
                 };
                 for msg in msgs {
-                    if !handle_message(&mut stream, &sched, &stop, msg) {
-                        return;
+                    if !handle_message(&writer, &sched, &stop, &mut watchers, msg) {
+                        break 'serve;
                     }
                 }
             }
@@ -221,30 +273,35 @@ fn serve_connection(mut stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<Atom
                     std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
                 ) =>
             {
-                // idle: once the daemon is stopping, close idle
-                // connections (watchers were served synchronously above
-                // and have their terminal events already)
+                // idle: once the daemon is stopping, stop reading new
+                // requests; live watch threads drain below (shutdown
+                // interrupts their campaigns, which pushes the terminal
+                // events they are waiting on)
                 if stop.load(Ordering::SeqCst) {
-                    return;
+                    break;
                 }
             }
-            Err(_) => return,
+            Err(_) => break,
         }
+    }
+    for w in watchers {
+        let _ = w.join();
     }
 }
 
 /// Dispatch one request; returns false when the connection should close.
 fn handle_message(
-    stream: &mut TcpStream,
+    writer: &SharedWriter,
     sched: &Arc<Scheduler>,
     stop: &Arc<AtomicBool>,
+    watchers: &mut Vec<JoinHandle<()>>,
     msg: Message,
 ) -> bool {
     let req = match msg {
         Message::Request(r) => r,
         _ => {
             let _ = write_msg(
-                stream,
+                writer,
                 &Message::Response(Response::Error {
                     message: "clients send request frames".into(),
                 }),
@@ -253,26 +310,35 @@ fn handle_message(
         }
     };
     match req {
-        Request::Ping => write_msg(stream, &Message::Response(Response::Pong)),
+        Request::Ping => write_msg(writer, &Message::Response(Response::Pong)),
         Request::Submit { spec } => {
             let resp = match sched.submit(spec) {
                 Ok(campaign) => Response::Accepted { campaign },
                 Err(e) => Response::Error { message: format!("{e:#}") },
             };
-            write_msg(stream, &Message::Response(resp))
+            write_msg(writer, &Message::Response(resp))
         }
         Request::Status => {
-            write_msg(stream, &Message::Response(Response::Status { campaigns: sched.status() }))
+            write_msg(writer, &Message::Response(Response::Status { campaigns: sched.status() }))
         }
         Request::Cancel { campaign } => {
             let resp = match sched.cancel(campaign) {
                 Ok(()) => Response::Cancelling { campaign },
                 Err(e) => Response::Error { message: format!("{e:#}") },
             };
-            write_msg(stream, &Message::Response(resp))
+            write_msg(writer, &Message::Response(resp))
+        }
+        Request::Stats { campaign, from } => {
+            let resp = match sched.stats(campaign, from) {
+                Ok((snapshot, events, next)) => {
+                    Response::StatsReply { campaign, snapshot, events, next }
+                }
+                Err(e) => Response::Error { message: format!("{e:#}") },
+            };
+            write_msg(writer, &Message::Response(resp))
         }
         Request::Shutdown => {
-            let ok = write_msg(stream, &Message::Response(Response::ShuttingDown));
+            let ok = write_msg(writer, &Message::Response(Response::ShuttingDown));
             if !stop.swap(true, Ordering::SeqCst) {
                 log::info!("shutdown requested over the wire");
                 sched.interrupt_all();
@@ -280,43 +346,66 @@ fn handle_message(
             ok
         }
         Request::Watch { campaign, from } => {
-            // stream events until the terminal one has been written;
-            // wait_events returning empty on a terminal campaign means
-            // the log is fully drained
-            let mut idx = from as usize;
-            loop {
-                let evs = match sched.wait_events(campaign, idx, Duration::from_secs(1)) {
-                    Ok(evs) => evs,
-                    Err(e) => {
-                        let _ = write_msg(
-                            stream,
-                            &Message::Response(Response::Error { message: format!("{e:#}") }),
-                        );
-                        return false;
-                    }
-                };
-                let drained = evs.is_empty();
-                for ev in evs {
-                    idx += 1;
-                    let terminal = ev.is_terminal();
-                    if !write_msg(stream, &Message::Event(ev)) {
-                        return false;
-                    }
-                    if terminal {
-                        return true;
-                    }
+            // streaming runs on its own thread over the frame-atomic
+            // shared writer, so this connection keeps answering
+            // submit/status/cancel/stats while events flow — the old
+            // inline loop parked the request path here until the
+            // campaign went terminal
+            let watch_sched = sched.clone();
+            let watch_writer = writer.clone();
+            match std::thread::Builder::new()
+                .name("ytopt-serve-watch".into())
+                .spawn(move || stream_watch(&watch_writer, &watch_sched, campaign, from))
+            {
+                Ok(handle) => {
+                    watchers.push(handle);
+                    true
                 }
-                // an empty batch on a terminal campaign means the
-                // watcher attached past the terminal event: the log is
-                // complete and nothing more will ever arrive
-                if drained && matches!(sched.is_terminal(campaign), Ok(true)) {
-                    return true;
-                }
+                Err(e) => write_msg(
+                    writer,
+                    &Message::Response(Response::Error {
+                        message: format!("could not start a watch stream: {e}"),
+                    }),
+                ),
             }
         }
     }
 }
 
-fn write_msg(stream: &mut TcpStream, msg: &Message) -> bool {
+/// Stream one watch to its conclusion: replay from `from`, then follow
+/// live until the terminal event. [`WatchChunk::complete`] is decided by
+/// the scheduler under the same lock acquisition that reads the tail,
+/// so the replay→live handoff can never drop a terminal event appended
+/// between polls — a watcher attached at any point gets the full
+/// remainder of the log, exactly once.
+///
+/// [`WatchChunk::complete`]: super::scheduler::WatchChunk
+fn stream_watch(writer: &SharedWriter, sched: &Arc<Scheduler>, campaign: u64, from: u64) {
+    let mut idx = from as usize;
+    loop {
+        let chunk = match sched.wait_events(campaign, idx, Duration::from_secs(1)) {
+            Ok(chunk) => chunk,
+            Err(e) => {
+                let _ = write_msg(
+                    writer,
+                    &Message::Response(Response::Error { message: format!("{e:#}") }),
+                );
+                return;
+            }
+        };
+        idx += chunk.events.len();
+        for ev in chunk.events {
+            if !write_msg(writer, &Message::Event(ev)) {
+                return; // peer gone, or a write stalled past the timeout
+            }
+        }
+        if chunk.complete {
+            return;
+        }
+    }
+}
+
+fn write_msg(writer: &SharedWriter, msg: &Message) -> bool {
+    let mut stream = writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     stream.write_all(&encode_frame(msg)).and_then(|_| stream.flush()).is_ok()
 }

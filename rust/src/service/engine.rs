@@ -183,6 +183,10 @@ pub fn drive_continuous(
 pub struct CampaignHandle {
     events: Receiver<CampaignEvent>,
     cancel: Arc<AtomicBool>,
+    /// The setup's observability sink, if one was attached (`--stats` /
+    /// daemon campaigns) — held here so front-ends can snapshot live
+    /// state without reaching into the campaign thread.
+    obs: Option<Arc<crate::obs::ObsSink>>,
     thread: Option<JoinHandle<Result<CampaignOutcome>>>,
 }
 
@@ -200,6 +204,7 @@ impl CampaignHandle {
             std::sync::mpsc::channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let flag = cancel.clone();
+        let obs = setup.obs.clone();
         let thread = std::thread::Builder::new()
             .name("campaign".into())
             .spawn(move || -> Result<CampaignOutcome> {
@@ -250,7 +255,13 @@ impl CampaignHandle {
                 }
             })
             .expect("spawn campaign thread");
-        CampaignHandle { events: rx, cancel, thread: Some(thread) }
+        CampaignHandle { events: rx, cancel, obs, thread: Some(thread) }
+    }
+
+    /// The campaign's observability sink, when the setup carried one.
+    /// Reading it (snapshot/tail) never perturbs the running trajectory.
+    pub fn obs_sink(&self) -> Option<Arc<crate::obs::ObsSink>> {
+        self.obs.clone()
     }
 
     /// Drain any events emitted since the last poll (non-blocking).

@@ -436,6 +436,13 @@ pub enum Request {
     Watch { campaign: u64, from: u64 },
     Status,
     Cancel { campaign: u64 },
+    /// Query `campaign`'s live observability state: a counter snapshot
+    /// plus the event-ring tail from logical clock `from`. Answered
+    /// with [`Response::StatsReply`]. Read-only — stats queries never
+    /// perturb a running trajectory (the sink is write-only for the
+    /// engine), so `ytopt-rs stats` and `ytopt-rs top` can poll any
+    /// live campaign freely.
+    Stats { campaign: u64, from: u64 },
     /// Graceful daemon shutdown: running campaigns checkpoint and every
     /// watcher receives a terminal [`Event::Interrupted`].
     Shutdown,
@@ -448,6 +455,15 @@ pub enum Response {
     Accepted { campaign: u64 },
     Status { campaigns: Vec<CampaignStatusInfo> },
     Cancelling { campaign: u64 },
+    /// One campaign's observability state: the counter snapshot, the
+    /// event-ring tail from the requested cursor, and the cursor to
+    /// pass on the next poll (`next`).
+    StatsReply {
+        campaign: u64,
+        snapshot: crate::obs::StatsSnapshot,
+        events: Vec<crate::obs::RingEvent>,
+        next: u64,
+    },
     ShuttingDown,
     Error { message: String },
 }
@@ -541,6 +557,10 @@ impl Request {
             Request::Cancel { campaign } => {
                 tagged("cancel", vec![("campaign", (*campaign).into())])
             }
+            Request::Stats { campaign, from } => tagged(
+                "stats",
+                vec![("campaign", (*campaign).into()), ("from", (*from).into())],
+            ),
             Request::Shutdown => tagged("shutdown", vec![]),
         }
     }
@@ -561,6 +581,10 @@ impl Request {
             }),
             "status" => Ok(Request::Status),
             "cancel" => Ok(Request::Cancel { campaign: get_u(v, "campaign", 0) }),
+            "stats" => Ok(Request::Stats {
+                campaign: get_u(v, "campaign", 0),
+                from: get_u(v, "from", 0),
+            }),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(ProtocolError::Malformed(format!("unknown request type `{other}`"))),
         }
@@ -584,6 +608,15 @@ impl Response {
             Response::Cancelling { campaign } => {
                 tagged("cancelling", vec![("campaign", (*campaign).into())])
             }
+            Response::StatsReply { campaign, snapshot, events, next } => tagged(
+                "stats_reply",
+                vec![
+                    ("campaign", (*campaign).into()),
+                    ("snapshot", snapshot.to_json()),
+                    ("events", Json::Arr(events.iter().map(crate::obs::RingEvent::to_json).collect())),
+                    ("next", (*next).into()),
+                ],
+            ),
             Response::ShuttingDown => tagged("shutting_down", vec![]),
             Response::Error { message } => {
                 tagged("error", vec![("message", message.as_str().into())])
@@ -605,6 +638,23 @@ impl Response {
                 Ok(Response::Status { campaigns })
             }
             "cancelling" => Ok(Response::Cancelling { campaign: get_u(v, "campaign", 0) }),
+            "stats_reply" => {
+                let snapshot = v
+                    .get("snapshot")
+                    .map(crate::obs::StatsSnapshot::from_json)
+                    .unwrap_or_default();
+                let events = v
+                    .get("events")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(crate::obs::RingEvent::from_json).collect())
+                    .unwrap_or_default();
+                Ok(Response::StatsReply {
+                    campaign: get_u(v, "campaign", 0),
+                    snapshot,
+                    events,
+                    next: get_u(v, "next", 0),
+                })
+            }
             "shutting_down" => Ok(Response::ShuttingDown),
             "error" => Ok(Response::Error { message: get_s(v, "message", "") }),
             other => Err(ProtocolError::Malformed(format!("unknown response type `{other}`"))),
@@ -846,7 +896,32 @@ mod tests {
             Message::Request(Request::Ping),
             Message::Request(Request::Submit { spec: CampaignSpec::default() }),
             Message::Request(Request::Watch { campaign: 3, from: 17 }),
+            Message::Request(Request::Stats { campaign: 3, from: 42 }),
             Message::Response(Response::Accepted { campaign: 9 }),
+            Message::Response(Response::StatsReply {
+                campaign: 3,
+                snapshot: {
+                    let sink = crate::obs::ObsSink::new(8);
+                    sink.record(crate::obs::ObsEvent::Proposed {
+                        eval_id: 1,
+                        shard: 0,
+                        search_us: 250,
+                    });
+                    sink.record(crate::obs::ObsEvent::Completed {
+                        eval_id: 1,
+                        shard: 0,
+                        objective: 12.75,
+                        best_so_far: 12.75,
+                        sim_wallclock_s: 30.0,
+                    });
+                    sink.snapshot()
+                },
+                events: vec![crate::obs::RingEvent {
+                    seq: 41,
+                    ev: crate::obs::ObsEvent::StragglerKilled { eval_id: 7, shard: 1 },
+                }],
+                next: 42,
+            }),
             Message::Response(Response::Error { message: "no such campaign".into() }),
             Message::Event(Event::EvalCompleted {
                 campaign: 2,

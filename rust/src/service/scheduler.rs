@@ -105,6 +105,24 @@ struct Campaign {
     interrupt_requested: bool,
     /// Checkpoint path handed to the setup (reported in `Interrupted`).
     checkpointed_to: Option<PathBuf>,
+    /// Live observability sink, cloned into the setup before dispatch.
+    /// Always present for daemon campaigns: the engine records into it
+    /// write-only, so `stats` queries can read counters and tail the
+    /// event ring at any point in the lifecycle without perturbing the
+    /// trajectory.
+    obs: Arc<crate::obs::ObsSink>,
+}
+
+/// One atomic read of a campaign's event log: the tail from the caller's
+/// cursor plus — decided under the *same* lock acquisition — whether
+/// that tail reaches the end of a terminal campaign's log. Splitting
+/// those two reads across lock acquisitions loses terminal events
+/// appended in between (the watch replay→live handoff bug).
+pub struct WatchChunk {
+    pub events: Vec<Event>,
+    /// The campaign is terminal and `events` ends at the log's end: the
+    /// watcher now has everything it will ever get.
+    pub complete: bool,
 }
 
 struct SchedState {
@@ -186,6 +204,12 @@ impl Scheduler {
             }
         }
 
+        // every daemon campaign carries a sink; recording is write-only
+        // from the engine, so this cannot alter the trajectory (pinned
+        // by the stats on/off bit-identity e2e)
+        let obs = Arc::new(crate::obs::ObsSink::default());
+        setup.obs = Some(obs.clone());
+
         st.campaigns.push(Campaign {
             id,
             spec,
@@ -197,6 +221,7 @@ impl Scheduler {
             cancel: None,
             interrupt_requested: false,
             checkpointed_to: None,
+            obs,
         });
         self.dispatch_locked(&mut st);
         drop(st);
@@ -334,9 +359,13 @@ impl Scheduler {
     }
 
     /// Events `from..` for `campaign`, blocking up to `timeout` while the
-    /// log has nothing new **and** the campaign is not terminal. An empty
-    /// return with a terminal campaign means the watcher has everything.
-    pub fn wait_events(&self, campaign: u64, from: usize, timeout: Duration) -> Result<Vec<Event>> {
+    /// log has nothing new **and** the campaign is not terminal. The
+    /// returned chunk's `complete` flag is decided under the same lock
+    /// acquisition that read the tail, so "you have everything" can never
+    /// race a terminal event appended moments later — a watcher loops on
+    /// this until `complete` and is guaranteed the full log, attached at
+    /// any point in the campaign's lifecycle.
+    pub fn wait_events(&self, campaign: u64, from: usize, timeout: Duration) -> Result<WatchChunk> {
         // real-time blocking wait only: what a watcher sees depends on
         // when it asks, but the event log itself is append-only and
         // deterministic
@@ -346,19 +375,41 @@ impl Scheduler {
             let Some(c) = st.campaign(campaign) else {
                 anyhow::bail!("no such campaign: {campaign}");
             };
+            let terminal = c.phase.is_terminal();
             if c.events.len() > from {
-                return Ok(c.events[from..].to_vec());
+                return Ok(WatchChunk { events: c.events[from..].to_vec(), complete: terminal });
             }
-            if c.phase.is_terminal() {
-                return Ok(Vec::new());
+            if terminal {
+                return Ok(WatchChunk { events: Vec::new(), complete: true });
             }
             let now = std::time::Instant::now(); // detlint: allow(wall-clock) -- condvar deadline, not trajectory state
             if now >= deadline {
-                return Ok(Vec::new());
+                return Ok(WatchChunk { events: Vec::new(), complete: false });
             }
             let (guard, _) = self.wake.wait_timeout(st, deadline - now).unwrap();
             st = guard;
         }
+    }
+
+    /// One campaign's live observability state: the counter snapshot,
+    /// the event-ring tail from `from`, and the cursor for the next
+    /// poll. Read-only — the sink is recorded into by the engine and
+    /// never read back, so polling this perturbs nothing.
+    pub fn stats(
+        &self,
+        campaign: u64,
+        from: u64,
+    ) -> Result<(crate::obs::StatsSnapshot, Vec<crate::obs::RingEvent>, u64)> {
+        let obs = {
+            let st = self.state.lock().unwrap();
+            let Some(c) = st.campaign(campaign) else {
+                anyhow::bail!("no such campaign: {campaign}");
+            };
+            c.obs.clone()
+        };
+        let snapshot = obs.snapshot();
+        let (events, next) = obs.tail(from);
+        Ok((snapshot, events, next))
     }
 
     /// Is this campaign terminal (done, cancelled, interrupted, failed)?

@@ -213,6 +213,72 @@ mod tests {
     }
 
     #[test]
+    fn running_quantile_small_n_edge_cases() {
+        // n = 0: every quantile is None
+        let rq = RunningQuantile::new();
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(rq.quantile(q), None);
+        }
+        // n = 1: every quantile is the lone sample (pos is always 0)
+        let mut rq = RunningQuantile::new();
+        rq.push(7.5);
+        for q in [0.0, 0.25, 0.5, 1.0, -3.0, 42.0] {
+            assert_eq!(rq.quantile(q), Some(7.5), "q={q}");
+        }
+        // n = 2: endpoints are exact, the middle interpolates
+        let mut rq = RunningQuantile::new();
+        rq.push(10.0);
+        rq.push(2.0);
+        assert_eq!(rq.quantile(0.0), Some(2.0));
+        assert_eq!(rq.quantile(1.0), Some(10.0));
+        assert!((rq.median().unwrap() - 6.0).abs() < 1e-12);
+        // all-equal samples: every quantile collapses to that value
+        let mut rq = RunningQuantile::new();
+        for _ in 0..5 {
+            rq.push(3.25);
+        }
+        for q in [0.0, 0.1, 0.5, 0.9, 1.0] {
+            assert_eq!(rq.quantile(q), Some(3.25), "q={q}");
+        }
+    }
+
+    #[test]
+    fn prop_running_quantile_agrees_with_batch_and_is_bounded() {
+        crate::proptest_lite::for_all(
+            "running_quantile_matches_batch",
+            200,
+            0x5ca1ab1e,
+            |rng| {
+                let n = rng.index(12); // exercises n = 0, 1, 2 heavily
+                let equal = rng.bool(0.25);
+                let base = rng.uniform(-50.0, 50.0);
+                let xs: Vec<f64> = (0..n)
+                    .map(|_| if equal { base } else { rng.uniform(-50.0, 50.0) })
+                    .collect();
+                let q = rng.f64();
+                (xs, q)
+            },
+            |(xs, q)| {
+                let mut rq = RunningQuantile::new();
+                for &x in xs {
+                    rq.push(x);
+                }
+                match rq.quantile(*q) {
+                    None => xs.is_empty(),
+                    Some(v) => {
+                        // matches the batch percentile on the same data...
+                        let batch = percentile(xs, q * 100.0);
+                        (v - batch).abs() < 1e-9
+                            // ...and never escapes the sample range
+                            && v >= min(xs) - 1e-12
+                            && v <= max(xs) + 1e-12
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
     fn online_matches_batch() {
         let xs = [1.5, -2.0, 3.25, 0.0, 9.0, -4.5];
         let mut o = OnlineStats::new();

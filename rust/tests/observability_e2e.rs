@@ -1,0 +1,532 @@
+//! Observability-layer e2e tests (ISSUE 8 acceptance):
+//!
+//! * Stats recording is *off the deterministic path*: seed-for-seed
+//!   trajectories are bit-identical with the sink attached or absent,
+//!   across the continuous, generational, and federated engines — and
+//!   the sink's counters/ring agree with the run it watched.
+//! * `stats` over the wire: a live daemon campaign serves its counter
+//!   snapshot and event-ring tail, with a resumable cursor.
+//! * Satellite 1 regression: a `Watch` stream must not park its
+//!   connection's request path — submit/status/cancel/stats keep
+//!   answering while events flow, and a watcher that never drains its
+//!   socket stalls neither other clients nor daemon shutdown.
+//! * Satellite 2 regression: the watch replay→live handoff is atomic —
+//!   watchers attached before start, mid-run, and after the terminal
+//!   event all see the full log exactly once.
+//! * Satellite 3: `worker_idle_s` is clamped non-negative and stays
+//!   consistent across kill/resume sessions.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ytopt::apps::AppKind;
+use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
+use ytopt::ensemble::{LiarStrategy, ManagerCycle};
+use ytopt::metrics::Metric;
+use ytopt::obs::{ObsEvent, ObsSink};
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+use ytopt::service::protocol::encode_frame;
+use ytopt::service::{
+    CampaignSpec, Client, Daemon, Decoder, Event, Message, Request, Response, ServeConfig,
+    ServiceConfig,
+};
+
+fn run(setup: &TuneSetup) -> TuneResult {
+    autotune_with_scorer(setup, Arc::new(Scorer::fallback())).unwrap()
+}
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ytopt-obs-{tag}-{}.json", std::process::id()))
+}
+
+/// The host-timing-free digest of a run's history (the `ensemble_e2e`
+/// convention): everything that must be bit-identical across
+/// deterministic replays.
+fn history(r: &TuneResult) -> Vec<(usize, String, u64, u64, u64, bool, bool)> {
+    r.db.records
+        .iter()
+        .map(|x| {
+            (
+                x.id,
+                x.config_key.clone(),
+                x.objective.to_bits(),
+                x.measured.runtime_s.to_bits(),
+                x.best_so_far.to_bits(),
+                x.timed_out,
+                x.cancelled,
+            )
+        })
+        .collect()
+}
+
+fn base_setup(seed: u64, max_evals: usize, workers: usize) -> TuneSetup {
+    let mut s = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+    s.max_evals = max_evals;
+    s.wallclock_budget_s = 1e9;
+    s.seed = seed;
+    s.n_init = 4;
+    s.ensemble_workers = workers;
+    s
+}
+
+/// Run `setup` twice — sink absent, then attached — and require the two
+/// trajectories to be bit-identical. Returns the attached sink for
+/// counter checks.
+fn assert_stats_transparent(setup: &TuneSetup, what: &str) -> (TuneResult, Arc<ObsSink>) {
+    let off = run(setup);
+    let sink = Arc::new(ObsSink::default());
+    let mut on_setup = setup.clone();
+    on_setup.obs = Some(sink.clone());
+    let on = run(&on_setup);
+    assert_eq!(
+        history(&off),
+        history(&on),
+        "{what}: attaching the stats sink perturbed the trajectory"
+    );
+    assert_eq!(off.best_objective.to_bits(), on.best_objective.to_bits(), "{what}");
+    (on, sink)
+}
+
+#[test]
+fn stats_recording_is_bit_transparent_across_all_engines() {
+    // continuous manager, kriging believer: exercises SurrogateFit
+    // (hits and paid fits) alongside the proposal/completion events
+    let mut cont = base_setup(101, 16, 4);
+    cont.liar = LiarStrategy::KrigingBeliever;
+    let (r, sink) = assert_stats_transparent(&cont, "continuous");
+    let snap = sink.snapshot();
+    assert_eq!(snap.completions, 16);
+    assert_eq!(snap.dispatches, snap.proposals);
+    assert!(snap.proposals >= 16, "every completion was proposed first");
+    assert!(snap.surrogate_fits > 0, "a 16-eval BO run fits surrogates");
+    assert!(
+        snap.surrogate_cache_hits > 0,
+        "the believer must reuse the epoch-cached surrogate"
+    );
+    assert_eq!(snap.best_objective.to_bits(), r.best_objective.to_bits());
+    assert_eq!(snap.shards.len(), 1);
+    assert_eq!(snap.shards[0].applied, 16);
+    assert_eq!(snap.ring_dropped, 0);
+    let (events, next) = sink.tail(0);
+    assert_eq!(next, snap.ring_next);
+    assert_eq!(
+        events.iter().filter(|e| matches!(e.ev, ObsEvent::Completed { .. })).count(),
+        16,
+        "one Completed ring event per applied evaluation"
+    );
+    // seqs are the logical clock: strictly consecutive from 0
+    for (i, e) in events.iter().enumerate() {
+        assert_eq!(e.seq, i as u64);
+    }
+
+    // generational cycle records per-batch (shard 0)
+    let mut generational = base_setup(202, 16, 4);
+    generational.manager_cycle = ManagerCycle::Generational;
+    let (_, sink) = assert_stats_transparent(&generational, "generational");
+    let snap = sink.snapshot();
+    assert_eq!(snap.completions, 16);
+    assert_eq!(snap.proposals, 16);
+    assert_eq!(snap.shards.len(), 1);
+    assert_eq!(snap.shards[0].applied, 16);
+
+    // federated K=2: per-shard gauges plus elite-exchange rounds
+    let mut fed = base_setup(303, 16, 2);
+    fed.federation_shards = 2;
+    fed.elite_exchange_every = 2;
+    fed.federation_elites = 2;
+    let (_, sink) = assert_stats_transparent(&fed, "federation");
+    let snap = sink.snapshot();
+    assert_eq!(snap.completions, 16);
+    assert!(snap.exchange_rounds > 0, "K=2 at exchange-every-2 must exchange");
+    assert_eq!(snap.shards.len(), 2, "one gauge row per shard");
+    assert_eq!(snap.shards.iter().map(|g| g.applied).sum::<u64>(), 16);
+    let (events, _) = sink.tail(0);
+    assert!(
+        events.iter().any(|e| matches!(e.ev, ObsEvent::EliteExchange { .. })),
+        "exchange rounds must appear in the ring"
+    );
+}
+
+/// Satellite 3: `worker_idle_s` is clamped non-negative everywhere, and
+/// kill/resume leaves the idle accounting consistent — the continuous
+/// engine reports exactly zero in the killed session, the resumed
+/// session, and the uninterrupted reference alike, while the
+/// generational oracle's split sessions each report finite non-negative
+/// barrier idle.
+#[test]
+fn worker_idle_time_is_clamped_and_consistent_across_kill_and_resume() {
+    // continuous kill/resume: idle is identically zero on every side
+    let ckpt = tmpfile("idle-cont");
+    let _ = std::fs::remove_file(&ckpt);
+    let mut s = base_setup(41, 18, 4);
+    s.app = AppKind::Swfft;
+    s.nodes = 64;
+    let full = run(&s);
+    let full_idle = full.ensemble.as_ref().unwrap().worker_idle_s;
+    assert_eq!(full_idle, 0.0);
+
+    let mut killed = s.clone();
+    killed.checkpoint_path = Some(ckpt.clone());
+    killed.kill_after_evals = Some(6);
+    let partial = run(&killed);
+    assert_eq!(partial.evaluations, 6);
+    let killed_idle = partial.ensemble.as_ref().unwrap().worker_idle_s;
+
+    let mut resumed = s.clone();
+    resumed.checkpoint_path = Some(ckpt.clone());
+    let r = run(&resumed);
+    assert_eq!(r.evaluations, 18);
+    let resumed_idle = r.ensemble.as_ref().unwrap().worker_idle_s;
+
+    assert_eq!(killed_idle, 0.0, "a killed continuous session must not invent idle time");
+    assert_eq!(resumed_idle, 0.0, "a resumed continuous session must not invent idle time");
+    assert_eq!(
+        history(&full),
+        history(&r),
+        "kill/resume must replay the uninterrupted trajectory (stats equality rests on it)"
+    );
+    std::fs::remove_file(&ckpt).unwrap();
+
+    // generational split sessions: positive at the barriers, never
+    // negative (the clamp), finite in both halves
+    let ckpt = tmpfile("idle-gen");
+    let _ = std::fs::remove_file(&ckpt);
+    let mut g = base_setup(43, 20, 4);
+    g.manager_cycle = ManagerCycle::Generational;
+    g.checkpoint_path = Some(ckpt.clone());
+    let mut first = g.clone();
+    first.max_evals = 12;
+    let ra = run(&first);
+    assert_eq!(ra.evaluations, 12);
+    let a_idle = ra.ensemble.as_ref().unwrap().worker_idle_s;
+    assert!(a_idle.is_finite() && a_idle > 0.0, "generational barriers idle (got {a_idle})");
+
+    let rb = run(&g);
+    assert_eq!(rb.evaluations, 20);
+    assert_eq!(rb.ensemble.as_ref().unwrap().resumed_evals, 12);
+    let b_idle = rb.ensemble.as_ref().unwrap().worker_idle_s;
+    assert!(
+        b_idle.is_finite() && b_idle >= 0.0,
+        "resumed generational session reported negative idle ({b_idle})"
+    );
+    std::fs::remove_file(&ckpt).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// daemon-side tests: raw-frame helpers
+// ---------------------------------------------------------------------
+
+fn start_daemon() -> Daemon {
+    Daemon::start(
+        ServeConfig {
+            listen: "127.0.0.1:0".into(),
+            service: ServiceConfig {
+                max_active: 4,
+                history_dir: None,
+                checkpoint_dir: None,
+                warm_start_elites: 0,
+            },
+        },
+        Arc::new(Scorer::fallback()),
+    )
+    .unwrap()
+}
+
+fn long_campaign(seed: u64) -> CampaignSpec {
+    CampaignSpec {
+        seed,
+        workers: 2,
+        strategy: "random".into(),
+        max_evals: 20_000,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        ..CampaignSpec::default()
+    }
+}
+
+fn short_campaign(seed: u64) -> CampaignSpec {
+    CampaignSpec {
+        seed,
+        workers: 2,
+        max_evals: 12,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        ..CampaignSpec::default()
+    }
+}
+
+/// A deliberately low-level connection: send any frame at any time, read
+/// whatever arrives. The high-level [`Client`] can't interleave requests
+/// with a live watch stream — which is exactly what these tests need.
+struct RawConn {
+    stream: TcpStream,
+    dec: Decoder,
+    queue: std::collections::VecDeque<Message>,
+}
+
+impl RawConn {
+    fn connect(addr: &str) -> RawConn {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        RawConn { stream, dec: Decoder::new(), queue: std::collections::VecDeque::new() }
+    }
+
+    fn send(&mut self, req: Request) {
+        self.stream.write_all(&encode_frame(&Message::Request(req))).unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    /// Next frame within `deadline`, pumping the decoder.
+    fn next(&mut self, deadline: Instant) -> Option<Message> {
+        loop {
+            if let Some(m) = self.queue.pop_front() {
+                return Some(m);
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+            let mut buf = [0u8; 4096];
+            match self.stream.read(&mut buf) {
+                Ok(0) => return None,
+                Ok(n) => self.queue.extend(self.dec.push(&buf[..n]).unwrap()),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) => {}
+                Err(e) => panic!("raw read failed: {e}"),
+            }
+        }
+    }
+
+    /// Skip event frames until a `Response` arrives (watch streams
+    /// interleave events with responses on the shared writer).
+    fn next_response(&mut self, deadline: Instant) -> Option<Response> {
+        while let Some(m) = self.next(deadline) {
+            match m {
+                Message::Response(r) => return Some(r),
+                Message::Event(_) => continue,
+                other => panic!("unexpected frame: {other:?}"),
+            }
+        }
+        None
+    }
+}
+
+/// Satellite 1: a connection with a live watch stream keeps answering
+/// requests. Before the fix the daemon served the watch inline, so
+/// status/cancel on the same connection blocked until the campaign went
+/// terminal (here: 20k evals away).
+#[test]
+fn watch_stream_does_not_block_the_connections_request_path() {
+    let daemon = start_daemon();
+    let addr = daemon.addr().to_string();
+    let mut ctl = Client::connect(&addr).unwrap();
+    let id = ctl.submit(long_campaign(6001)).unwrap();
+
+    let mut raw = RawConn::connect(&addr);
+    raw.send(Request::Watch { campaign: id, from: 0 });
+    // the watch is streaming; the same connection must still answer
+    raw.send(Request::Status);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let resp = raw
+        .next_response(deadline)
+        .expect("status during a live watch must answer long before the campaign ends");
+    match resp {
+        Response::Status { campaigns } => {
+            let row = campaigns.iter().find(|c| c.id == id).unwrap();
+            assert!(
+                row.evaluations < 20_000,
+                "the answer arrived while the campaign was still running"
+            );
+        }
+        other => panic!("expected status, got {other:?}"),
+    }
+    // stats interleaves on the same connection too
+    raw.send(Request::Stats { campaign: id, from: 0 });
+    match raw.next_response(Instant::now() + Duration::from_secs(20)) {
+        Some(Response::StatsReply { campaign, .. }) => assert_eq!(campaign, id),
+        other => panic!("expected a stats reply, got {other:?}"),
+    }
+    // and cancel — after which the watch stream itself must conclude
+    // with the terminal frame on this very connection
+    raw.send(Request::Cancel { campaign: id });
+    match raw.next_response(Instant::now() + Duration::from_secs(20)) {
+        Some(Response::Cancelling { campaign }) => assert_eq!(campaign, id),
+        other => panic!("expected a cancel acknowledgement, got {other:?}"),
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut saw_terminal = false;
+    while let Some(m) = raw.next(deadline) {
+        if let Message::Event(ev) = m {
+            if ev.is_terminal() {
+                assert!(matches!(ev, Event::Cancelled { .. }));
+                saw_terminal = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_terminal, "the watch stream must still deliver the terminal event");
+    daemon.shutdown();
+}
+
+/// Satellite 1, the slow-reader half: a watcher that never drains its
+/// socket must not stall other clients' requests, and must not hang
+/// daemon shutdown (frame writes to it time out and drop the stream).
+#[test]
+fn a_watcher_that_never_reads_stalls_nobody() {
+    let daemon = start_daemon();
+    let addr = daemon.addr().to_string();
+    let mut ctl = Client::connect(&addr).unwrap();
+    let id = ctl.submit(long_campaign(6002)).unwrap();
+
+    // the deliberately slow reader: sends Watch, then never reads a byte
+    let mut slow = RawConn::connect(&addr);
+    slow.send(Request::Watch { campaign: id, from: 0 });
+
+    // while its stream backs up, another client's requests answer promptly
+    let t0 = Instant::now();
+    let mut other = Client::connect(&addr).unwrap();
+    other.ping().unwrap();
+    let rows = other.status().unwrap();
+    assert!(rows.iter().any(|r| r.id == id));
+    let (snap, _, _) = other.stats(id, u64::MAX).unwrap();
+    assert_eq!(snap.ring_dropped, 0);
+    other.cancel(id).unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "requests stalled behind a slow watcher ({:?})",
+        t0.elapsed()
+    );
+
+    // shutdown must complete despite the undrained watcher socket: its
+    // writes either fit the kernel buffer or stall out and disconnect
+    drop(slow.stream);
+    daemon.shutdown();
+}
+
+/// Satellite 2: the replay→live handoff is atomic. Watchers attached
+/// before the campaign starts, mid-run, and after the terminal event
+/// all see the identical full log, exactly once, ending in exactly one
+/// terminal frame.
+#[test]
+fn watchers_attached_at_adversarial_points_see_the_full_log_exactly_once() {
+    let daemon = start_daemon();
+    let addr = daemon.addr().to_string();
+    let mut ctl = Client::connect(&addr).unwrap();
+    let id = ctl.submit(short_campaign(6003)).unwrap();
+
+    // attached immediately after submit (usually before the first apply)
+    let early_addr = addr.clone();
+    let early = std::thread::spawn(move || {
+        let mut c = Client::connect(&early_addr).unwrap();
+        let mut log = Vec::new();
+        c.watch(id, 0, &mut |ev| log.push(ev.clone())).unwrap();
+        log
+    });
+
+    // attached mid-run (as soon as progress is visible)
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let rows = ctl.status().unwrap();
+        if rows.iter().find(|r| r.id == id).unwrap().evaluations >= 2 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "campaign made no progress");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mid_addr = addr.clone();
+    let mid = std::thread::spawn(move || {
+        let mut c = Client::connect(&mid_addr).unwrap();
+        let mut log = Vec::new();
+        c.watch(id, 0, &mut |ev| log.push(ev.clone())).unwrap();
+        log
+    });
+
+    let early_log = early.join().unwrap();
+    let mid_log = mid.join().unwrap();
+
+    // attached strictly after the terminal event is in the log
+    let mut late = Client::connect(&addr).unwrap();
+    let mut late_log = Vec::new();
+    late.watch(id, 0, &mut |ev| late_log.push(ev.clone())).unwrap();
+
+    for (what, log) in [("early", &early_log), ("mid", &mid_log), ("late", &late_log)] {
+        assert_eq!(
+            log.iter().filter(|e| e.is_terminal()).count(),
+            1,
+            "{what} watcher: exactly one terminal frame"
+        );
+        assert!(log.last().unwrap().is_terminal(), "{what} watcher: terminal frame last");
+        assert!(
+            log.iter().any(|e| matches!(e, Event::Started { .. })),
+            "{what} watcher: replay must include the Started event"
+        );
+    }
+    let render = |log: &[Event]| format!("{log:?}");
+    assert_eq!(render(&early_log), render(&mid_log), "mid-run attach lost or duplicated events");
+    assert_eq!(render(&early_log), render(&late_log), "post-terminal attach diverged");
+
+    // a replay cursor pointing mid-log gets exactly the suffix
+    let from = (late_log.len() - 3) as u64;
+    let mut suffix = Vec::new();
+    let mut c = Client::connect(&addr).unwrap();
+    c.watch(id, from, &mut |ev| suffix.push(ev.clone())).unwrap();
+    assert_eq!(render(&suffix), render(&late_log[from as usize..]));
+
+    daemon.shutdown();
+}
+
+/// The stats protocol end-to-end: a finished daemon campaign serves a
+/// coherent snapshot and a cursorable ring tail; unknown campaigns are
+/// refused with an error, not a dropped connection.
+#[test]
+fn stats_requests_serve_snapshot_and_ring_tail_with_a_cursor() {
+    let daemon = start_daemon();
+    let addr = daemon.addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let id = client.submit(short_campaign(6004)).unwrap();
+
+    // run to completion first, so counters are exact
+    let mut log = Vec::new();
+    let terminal = client.watch(id, 0, &mut |ev| log.push(ev.clone())).unwrap();
+    assert!(matches!(terminal, Event::Done { .. }));
+
+    let (snap, events, next) = client.stats(id, 0).unwrap();
+    assert_eq!(snap.completions, 12);
+    assert!(snap.proposals >= 12);
+    assert_eq!(snap.dispatches, snap.proposals);
+    assert!(snap.best_objective.is_finite());
+    assert_eq!(snap.shards.len(), 1);
+    assert_eq!(snap.shards[0].applied, 12);
+    assert_eq!(snap.shards[0].in_flight, 0, "a finished campaign has nothing in flight");
+    assert_eq!(snap.ring_dropped, 0);
+    assert_eq!(next, snap.ring_next);
+    assert!(!events.is_empty());
+    assert_eq!(events.first().unwrap().seq, 0, "from=0 replays the ring from its start");
+    assert_eq!(
+        events.iter().filter(|e| matches!(e.ev, ObsEvent::Completed { .. })).count(),
+        12
+    );
+    // ring completions agree with the wire-event history
+    let wire_completed = log
+        .iter()
+        .filter(|e| matches!(e, Event::EvalCompleted { .. }))
+        .count();
+    assert_eq!(wire_completed, 12);
+
+    // the cursor is resumable: polling from `next` drains nothing new
+    let (_, more, next2) = client.stats(id, next).unwrap();
+    assert!(more.is_empty(), "a drained cursor must stay drained");
+    assert_eq!(next2, next);
+
+    // unknown campaigns error without poisoning the connection
+    assert!(client.stats(id + 999, 0).is_err());
+    client.ping().unwrap();
+
+    daemon.shutdown();
+}
