@@ -15,6 +15,10 @@
 //!                BENCH_stats.json and (with --gate) enforces the
 //!                near-free overhead bound. `--stats-only` runs just
 //!                this.
+//!   drift duel — the drifting-substrate campaign with the continuous
+//!                controller off vs on; emits BENCH_drift.json and
+//!                (with --gate) enforces the near-free controller
+//!                overhead bound. `--drift-only` runs just this.
 //!   substrate  — space sampling/encoding throughput
 //!   ablations  — kappa sweep, surrogate family, sequential vs parallel
 //!                evaluation, BO vs random vs grid
@@ -350,6 +354,85 @@ fn stats_duel(quick: bool, gate: bool) {
     }
 }
 
+/// One continuous-manager campaign over the drifting substrate (the
+/// landscape phase-shifts halfway through the budget), with the
+/// continuous controller off (stationary tuner) or on (decayed window +
+/// residual CUSUM + authority limits). Min-of-`reps` wall time divided
+/// by the eval count: seconds per applied completion.
+fn drift_campaign_s(controller: bool, evals: usize, reps: usize) -> f64 {
+    let scorer = Arc::new(Scorer::fallback());
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let mut s = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+        s.max_evals = evals;
+        s.wallclock_budget_s = 1e9;
+        s.seed = 91;
+        s.n_init = 4;
+        s.ensemble_workers = 4;
+        s.drift_at_eval = Some(evals / 2);
+        s.drift_magnitude = 0.8;
+        s.controller = controller;
+        let t = Instant::now();
+        let r = autotune_with_scorer(&s, scorer.clone()).unwrap();
+        let dt = t.elapsed().as_secs_f64();
+        std::hint::black_box(&r);
+        best = best.min(dt);
+    }
+    best / evals as f64
+}
+
+/// Drift duel: the same drifting-substrate campaign with the controller
+/// off vs on. The controller's extra work per completion — one stale
+/// prediction, the CUSUM update, the authority-limit index walk — must
+/// stay near-free. Emits `BENCH_drift.json`; with `gate`, enforces the
+/// acceptance bound (controller <= 1.05x stationary per completion).
+fn drift_duel(quick: bool, gate: bool) {
+    section("drift duel: continuous controller vs stationary tuner (drifting substrate)");
+    let evals = if quick { 24 } else { 64 };
+    let reps = if quick { 2 } else { 5 };
+    let off_s = drift_campaign_s(false, evals, reps);
+    let on_s = drift_campaign_s(true, evals, reps);
+    let overhead = on_s / off_s - 1.0;
+    println!(
+        "stationary {:.3} ms/completion | controller {:.3} ms/completion | overhead {:+.2}%",
+        off_s * 1e3,
+        on_s * 1e3,
+        overhead * 100.0
+    );
+
+    let doc = Json::obj(vec![
+        (
+            "shape",
+            Json::obj(vec![
+                ("evals", (evals as u64).into()),
+                ("workers", 4u64.into()),
+                ("reps", (reps as u64).into()),
+                ("drift_at", ((evals / 2) as u64).into()),
+            ]),
+        ),
+        ("stationary_s", Json::Num(off_s)),
+        ("controller_s", Json::Num(on_s)),
+        ("overhead_frac", Json::Num(overhead)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_drift.json");
+    std::fs::write(&path, doc.to_string()).expect("writing BENCH_drift.json");
+    println!("wrote {}", path.display());
+
+    if gate {
+        assert!(
+            on_s <= 1.05 * off_s,
+            "CI gate: controller per-completion cost must be <= 1.05x the stationary \
+             tuner's (got {:.3} ms vs {:.3} ms)",
+            on_s * 1e3,
+            off_s * 1e3
+        );
+        println!(
+            "drift gate passed: {:+.2}% overhead with the controller engaged",
+            overhead * 100.0
+        );
+    }
+}
+
 fn substrate(quick: bool) {
     section("substrate: space sampling / encoding");
     let samples = if quick { 10 } else { 30 };
@@ -445,12 +528,17 @@ fn main() {
     let gate = args.iter().any(|a| a == "--gate");
     let scorer_only = args.iter().any(|a| a == "--scorer-only");
     let stats_only = args.iter().any(|a| a == "--stats-only");
+    let drift_only = args.iter().any(|a| a == "--drift-only");
     if scorer_only {
         scorer_duel(quick, gate);
         return;
     }
     if stats_only {
         stats_duel(quick, gate);
+        return;
+    }
+    if drift_only {
+        drift_duel(quick, gate);
         return;
     }
     let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
@@ -462,6 +550,7 @@ fn main() {
     hot_path(&scorer, quick);
     scorer_duel(quick, gate);
     stats_duel(quick, gate);
+    drift_duel(quick, gate);
     substrate(quick);
     ablations(&scorer, quick);
 }

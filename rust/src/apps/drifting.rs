@@ -1,0 +1,225 @@
+//! Deterministic drifting substrate: phase-shifted variants of the
+//! existing application models, keyed on the evaluation index.
+//!
+//! The continuous controller (ISSUE: online re-tuning under drift)
+//! needs a world that *moves* under the tuner — an input-phase change,
+//! a thermal derate, a co-scheduled neighbour — without giving up the
+//! determinism contract. [`DriftingModel`] wraps any [`AppModel`]: up
+//! to the planted drift evaluation it is a bit-exact pass-through;
+//! from that evaluation on, every run pays a configuration-dependent
+//! penalty proportional to its distance from a *seed-derived* new
+//! sweet spot. The optimum therefore relocates at the drift point —
+//! re-tuning has something real to find — while the whole trajectory
+//! remains a pure function of `(setup, seed)`.
+//!
+//! The drift is keyed on the **evaluation index**, which the model
+//! recovers from the per-eval noise seed the engines already thread
+//! through [`EvalContext`]: every engine computes
+//! `noise_seed = seed ^ eval_id * NOISE_MUL` (see
+//! `ensemble::evaluate_one`), and `NOISE_MUL` is odd, hence invertible
+//! mod 2^64 — so the wrapper inverts the mix instead of widening every
+//! engine's evaluation plumbing.
+
+use super::{AppKind, AppModel, AppRun, EvalContext};
+use crate::space::{ConfigSpace, Configuration};
+
+/// The per-eval noise-seed mixing constant every engine uses
+/// (`ensemble::evaluate_one` and the serial loop alike).
+pub const NOISE_MUL: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Multiplicative inverse of [`NOISE_MUL`] mod 2^64, computed at
+/// compile time by Newton–Raphson (each step doubles the number of
+/// correct low bits; an odd seed value is correct to 3 bits, so six
+/// steps reach 64+).
+pub const NOISE_MUL_INV: u64 = mul_inverse(NOISE_MUL);
+
+const fn mul_inverse(m: u64) -> u64 {
+    let mut x = m;
+    let mut i = 0;
+    while i < 6 {
+        x = x.wrapping_mul(2u64.wrapping_sub(m.wrapping_mul(x)));
+        i += 1;
+    }
+    x
+}
+
+/// Recover the evaluation index from a per-eval noise seed.
+pub fn eval_id_of_noise_seed(run_seed: u64, noise_seed: u64) -> u64 {
+    (noise_seed ^ run_seed).wrapping_mul(NOISE_MUL_INV)
+}
+
+/// splitmix64 finalizer → a unit-interval coordinate for axis `j`.
+fn target_coord(seed: u64, j: usize) -> f64 {
+    let mut h = seed ^ (j as u64 + 1).wrapping_mul(0xd6e8_feb8_6659_fd93);
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^= h >> 31;
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// A base application model whose landscape phase-shifts at a planted
+/// evaluation index. See the module docs for the contract.
+pub struct DriftingModel {
+    base: Box<dyn AppModel>,
+    run_seed: u64,
+    drift_at: usize,
+    magnitude: f64,
+}
+
+impl DriftingModel {
+    pub fn new(
+        base: Box<dyn AppModel>,
+        run_seed: u64,
+        drift_at: usize,
+        magnitude: f64,
+    ) -> DriftingModel {
+        DriftingModel { base, run_seed, drift_at, magnitude: magnitude.max(0.0) }
+    }
+
+    /// Post-drift runtime multiplier for `cfg`: `1 + magnitude * d`,
+    /// where `d` is the mean squared distance (per encoded axis, in
+    /// [0, 1]) from the seed-derived post-drift sweet spot. The old
+    /// optimum sits at a generic position relative to the new target,
+    /// so it pays a real penalty; re-tuning toward the target earns it
+    /// back.
+    pub fn drift_factor(&self, space: &ConfigSpace, cfg: &Configuration) -> f64 {
+        let mut dist = 0.0f64;
+        let mut dims = 0.0f64;
+        for (j, (p, &i)) in space.params().iter().zip(cfg.indices().iter()).enumerate() {
+            let card = p.domain.cardinality();
+            if card <= 1 {
+                continue;
+            }
+            let x = i as f64 / (card - 1) as f64;
+            let t = target_coord(self.run_seed, j);
+            dist += (x - t) * (x - t);
+            dims += 1.0;
+        }
+        let d = if dims > 0.0 { dist / dims } else { 0.0 };
+        1.0 + self.magnitude * d
+    }
+
+    /// Does the evaluation carrying `noise_seed` run on the drifted
+    /// substrate?
+    pub fn drifted(&self, noise_seed: u64) -> bool {
+        eval_id_of_noise_seed(self.run_seed, noise_seed) >= self.drift_at as u64
+    }
+}
+
+impl AppModel for DriftingModel {
+    fn kind(&self) -> AppKind {
+        self.base.kind()
+    }
+
+    /// The baseline is measured before the campaign starts — always the
+    /// pre-drift world (its noise seeds come from the baseline stream,
+    /// not the per-eval mix, so they must not be decoded).
+    fn baseline(&self, ctx: &EvalContext) -> AppRun {
+        self.base.baseline(ctx)
+    }
+
+    fn run(&self, space: &ConfigSpace, cfg: &Configuration, ctx: &EvalContext) -> AppRun {
+        let mut run = self.base.run(space, cfg, ctx);
+        if self.drifted(ctx.noise_seed) {
+            let f = self.drift_factor(space, cfg);
+            for phase in &mut run.phases {
+                phase.duration_s *= f;
+            }
+            run.runtime_s *= f;
+        }
+        run
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::model_for;
+    use crate::platform::PlatformKind;
+    use crate::space::paper;
+
+    #[test]
+    fn noise_mix_inverts_exactly() {
+        assert_eq!(NOISE_MUL.wrapping_mul(NOISE_MUL_INV), 1, "inverse mod 2^64");
+        for seed in [0u64, 7, 0xdead_beef, u64::MAX] {
+            for id in [0u64, 1, 2, 41, 1_000_000, u64::from(u32::MAX) + 3] {
+                let noise = seed ^ id.wrapping_mul(NOISE_MUL);
+                assert_eq!(eval_id_of_noise_seed(seed, noise), id, "seed {seed} id {id}");
+            }
+        }
+    }
+
+    fn ctx_for_eval(seed: u64, id: u64) -> EvalContext {
+        let mut ctx = EvalContext::new(PlatformKind::Theta, 1);
+        ctx.noise_seed = seed ^ id.wrapping_mul(NOISE_MUL);
+        ctx
+    }
+
+    #[test]
+    fn pass_through_before_the_drift_point_is_bit_exact() {
+        let seed = 33u64;
+        let space = paper::build_space(AppKind::XSBenchHistory, PlatformKind::Theta);
+        let plain = model_for(AppKind::XSBenchHistory);
+        let drifting =
+            DriftingModel::new(model_for(AppKind::XSBenchHistory), seed, 10, 0.8);
+        let cfg = space.config_at(123);
+        for id in 0..10u64 {
+            let ctx = ctx_for_eval(seed, id);
+            let a = plain.run(&space, &cfg, &ctx);
+            let b = drifting.run(&space, &cfg, &ctx);
+            assert_eq!(a.runtime_s.to_bits(), b.runtime_s.to_bits(), "eval {id} diverged");
+            assert_eq!(a.phases, b.phases);
+        }
+        // the baseline stays the pre-drift world
+        let bctx = EvalContext::new(PlatformKind::Theta, 1);
+        assert_eq!(
+            plain.baseline(&bctx).runtime_s.to_bits(),
+            drifting.baseline(&bctx).runtime_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn post_drift_penalty_is_deterministic_and_moves_the_landscape() {
+        let seed = 33u64;
+        let space = paper::build_space(AppKind::XSBenchHistory, PlatformKind::Theta);
+        let drifting =
+            DriftingModel::new(model_for(AppKind::XSBenchHistory), seed, 10, 0.8);
+        let cfg = space.config_at(123);
+        let ctx = ctx_for_eval(seed, 10);
+        let a = drifting.run(&space, &cfg, &ctx);
+        let b = drifting.run(&space, &cfg, &ctx);
+        assert_eq!(a.runtime_s.to_bits(), b.runtime_s.to_bits(), "drifted run not deterministic");
+        let plain = model_for(AppKind::XSBenchHistory).run(&space, &cfg, &ctx);
+        let f = drifting.drift_factor(&space, &cfg);
+        assert!(f >= 1.0 && f <= 1.8 + 1e-12, "factor {f} out of band");
+        assert!(
+            (a.runtime_s - plain.runtime_s * f).abs() < 1e-9,
+            "penalty must scale the whole run"
+        );
+        // the penalty is configuration-dependent (the optimum can move):
+        // scan a few points and require at least two distinct factors
+        let mut factors: Vec<u64> = (0..8u128)
+            .map(|i| drifting.drift_factor(&space, &space.config_at(i * 97)).to_bits())
+            .collect();
+        factors.dedup();
+        assert!(factors.len() > 1, "drift penalty is flat — the optimum cannot move");
+        // energy scales with the stretched phases
+        assert!(a.node_energy_j() > plain.node_energy_j());
+    }
+
+    #[test]
+    fn zero_magnitude_never_perturbs() {
+        let seed = 5u64;
+        let space = paper::build_space(AppKind::Amg, PlatformKind::Theta);
+        let plain = model_for(AppKind::Amg);
+        let drifting = DriftingModel::new(model_for(AppKind::Amg), seed, 0, 0.0);
+        let cfg = space.config_at(7);
+        let ctx = ctx_for_eval(seed, 99);
+        assert_eq!(
+            plain.run(&space, &cfg, &ctx).runtime_s.to_bits(),
+            drifting.run(&space, &cfg, &ctx).runtime_s.to_bits()
+        );
+    }
+}

@@ -12,6 +12,7 @@
 
 pub mod amg;
 pub mod common;
+pub mod drifting;
 pub mod sw4lite;
 pub mod swfft;
 pub mod xsbench;

@@ -121,7 +121,7 @@ impl PerfDatabase {
         self.records
             .iter()
             .filter(|r| !r.timed_out && r.objective.is_finite())
-            .min_by(|a, b| a.objective.partial_cmp(&b.objective).unwrap())
+            .min_by(|a, b| a.objective.total_cmp(&b.objective))
     }
 
     /// Maximum per-evaluation overhead (Table IV row entries).

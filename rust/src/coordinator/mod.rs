@@ -154,6 +154,31 @@ pub struct TuneSetup {
     /// off, so it must stay outside the checkpoint fingerprint.
     // detlint: allow(fingerprint-coverage) -- write-only telemetry sink; trajectories are pinned bit-identical with stats on vs. off
     pub obs: Option<std::sync::Arc<crate::obs::ObsSink>>,
+    /// Continuous-controller mode (`--controller`): the tuner never
+    /// stops — it watches predicted-vs-observed residuals through a
+    /// CUSUM detector, resets the surrogate's trust window when the
+    /// substrate drifts, and applies configuration changes under a
+    /// bounded per-update authority limit. Requires the unsharded
+    /// continuous manager cycle.
+    pub controller: bool,
+    /// Recency half-life, in observations, of the controller's decayed
+    /// objective standardization (`--decay-half-life`).
+    pub decay_half_life: f64,
+    /// CUSUM threshold (standard deviations of accumulated residual)
+    /// that declares drift (`--drift-threshold`).
+    pub drift_threshold: f64,
+    /// Authority limit: at most one parameter moves at most this many
+    /// ordinal steps per applied update (`--max-delta`).
+    pub max_delta: usize,
+    /// Drifting-substrate simulator: phase-shift the application model
+    /// starting at this evaluation index (`--drift-at`). Substrate
+    /// identity — what the recorded objectives measured — so it is in
+    /// the checkpoint fingerprint.
+    pub drift_at_eval: Option<usize>,
+    /// Magnitude of the simulated substrate drift (`--drift-magnitude`,
+    /// fraction of the model's baseline scale; 0 disables even with a
+    /// drift point set).
+    pub drift_magnitude: f64,
 }
 
 impl TuneSetup {
@@ -194,6 +219,12 @@ impl TuneSetup {
             baseline_memo: None,
             kill_after_evals: None,
             obs: None,
+            controller: false,
+            decay_half_life: 16.0,
+            drift_threshold: 8.0,
+            max_delta: 1,
+            drift_at_eval: None,
+            drift_magnitude: 0.0,
         }
     }
 }
@@ -314,10 +345,19 @@ pub(crate) fn build_strategy(
 }
 
 pub(crate) fn model_for_setup(setup: &TuneSetup) -> Box<dyn AppModel> {
-    if setup.app == AppKind::XSBenchMixed && setup.event_transport {
+    let base = if setup.app == AppKind::XSBenchMixed && setup.event_transport {
         Box::new(apps::xsbench::XsBenchCpu::mixed_event())
     } else {
         apps::model_for(setup.app)
+    };
+    // drifting-substrate simulator: phase-shift the model at the planted
+    // evaluation index (deterministic — keyed on the per-eval noise
+    // seed, so every engine sees the identical drifted world)
+    match setup.drift_at_eval {
+        Some(at) if setup.drift_magnitude != 0.0 => Box::new(
+            apps::drifting::DriftingModel::new(base, setup.seed, at, setup.drift_magnitude),
+        ),
+        _ => base,
     }
 }
 

@@ -1,0 +1,284 @@
+//! Continuous-controller primitives: drift detection and authority
+//! limits for online re-tuning (ROADMAP "continuous controller").
+//!
+//! The paper's campaigns tune, deploy the best configuration, and stop.
+//! At large scale the substrate under a deployed configuration *moves* —
+//! input phases shift, thermal envelopes change, co-scheduled jobs
+//! contend — and a tuner that never re-opens its eyes keeps serving a
+//! stale optimum. The continuous controller keeps the tuning loop alive
+//! after convergence, but a controller that adjusts a production
+//! application must be *governed*:
+//!
+//! * [`CusumDetector`] — two-sided CUSUM over standardized
+//!   predicted-vs-observed residuals. The surrogate is the controller's
+//!   world model; when reality walks away from it in a sustained
+//!   direction, the cumulative sum crosses its threshold and the
+//!   controller discards the stale window instead of averaging the old
+//!   world into the new one.
+//! * [`AuthorityLimiter`] — bounded per-update actuation: one apply may
+//!   move at most one parameter by at most `max_delta` ordinal steps
+//!   from the currently deployed configuration. A surrogate reset (or a
+//!   quarantined batch of garbage observations) can therefore never
+//!   slam a production app across the space in one step.
+//! * [`quarantine`] — data-quality gate in front of the surrogate:
+//!   non-finite, non-positive, or wildly out-of-band objectives are
+//!   recorded in the history but never trusted as model evidence.
+//!
+//! Everything here is pure arithmetic on values the caller already
+//! holds — no clock, no RNG, no I/O — so controller trajectories remain
+//! a pure function of `(setup, seed)` like every other core path.
+
+use crate::space::{ConfigSpace, Configuration};
+
+/// CUSUM slack (the "allowance" k): residuals within half a standard
+/// deviation of the model are treated as noise, not evidence of drift.
+pub const CUSUM_SLACK: f64 = 0.5;
+
+/// Objectives at or beyond this multiple of the baseline objective are
+/// quarantined as out-of-band (a faulted node or a mis-measured run,
+/// not a configuration this bad).
+pub const QUARANTINE_BAND: f64 = 3.0;
+
+/// Two-sided CUSUM detector over standardized residuals.
+///
+/// Feed it `z = (observed - predicted) / scale` per completion;
+/// [`CusumDetector::observe`] returns `true` when the accumulated
+/// one-sided sum (either direction) crosses the threshold, and resets
+/// both sums so detection re-arms for the next drift. State is exposed
+/// for checkpointing so a resumed controller re-arms mid-accumulation
+/// exactly where the killed one stood.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CusumDetector {
+    threshold: f64,
+    pos: f64,
+    neg: f64,
+}
+
+impl CusumDetector {
+    pub fn new(threshold: f64) -> CusumDetector {
+        CusumDetector { threshold: threshold.max(0.0), pos: 0.0, neg: 0.0 }
+    }
+
+    /// Accumulate one standardized residual; `true` means drift fired
+    /// (and the detector has reset itself). Non-finite residuals are
+    /// ignored — the quarantine gate upstream owns those.
+    pub fn observe(&mut self, z: f64) -> bool {
+        if !z.is_finite() {
+            return false;
+        }
+        self.pos = (self.pos + z - CUSUM_SLACK).max(0.0);
+        self.neg = (self.neg - z - CUSUM_SLACK).max(0.0);
+        if self.pos > self.threshold || self.neg > self.threshold {
+            self.pos = 0.0;
+            self.neg = 0.0;
+            return true;
+        }
+        false
+    }
+
+    /// Accumulator state `(pos, neg)` for checkpointing.
+    pub fn state(&self) -> (f64, f64) {
+        (self.pos, self.neg)
+    }
+
+    /// Restore checkpointed accumulator state.
+    pub fn restore(&mut self, pos: f64, neg: f64) {
+        self.pos = pos.max(0.0);
+        self.neg = neg.max(0.0);
+    }
+}
+
+/// Bounded per-update actuation authority.
+///
+/// Given the currently *deployed* configuration and the strategy's
+/// *proposed* one, [`AuthorityLimiter::limit`] returns the largest move
+/// the controller is allowed to actually apply: at most one parameter
+/// changes, by at most `max_delta` index steps, chosen as the axis where
+/// the proposal disagrees most (ties broken by lowest parameter index,
+/// so the choice is deterministic). If the limited move lands on an
+/// invalid configuration (constraint coupling), the deployed
+/// configuration is returned unchanged — a no-op is always safe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AuthorityLimiter {
+    max_delta: usize,
+}
+
+impl AuthorityLimiter {
+    pub fn new(max_delta: usize) -> AuthorityLimiter {
+        AuthorityLimiter { max_delta: max_delta.max(1) }
+    }
+
+    pub fn max_delta(&self) -> usize {
+        self.max_delta
+    }
+
+    /// Largest permitted step from `deployed` toward `proposed`.
+    pub fn limit(
+        &self,
+        space: &ConfigSpace,
+        deployed: &Configuration,
+        proposed: &Configuration,
+    ) -> Configuration {
+        let cur = deployed.indices();
+        let want = proposed.indices();
+        debug_assert_eq!(cur.len(), want.len());
+        // axis with the largest disagreement; ties -> lowest index
+        let mut axis: Option<(usize, u32)> = None;
+        for (j, (&a, &b)) in cur.iter().zip(want.iter()).enumerate() {
+            let d = a.abs_diff(b);
+            if d > 0 && axis.map_or(true, |(_, best)| d > best) {
+                axis = Some((j, d));
+            }
+        }
+        let Some((j, d)) = axis else {
+            return deployed.clone();
+        };
+        let step = (self.max_delta as u32).min(d);
+        let mut idx = cur.to_vec();
+        idx[j] = if want[j] > cur[j] { cur[j] + step } else { cur[j] - step };
+        let limited = Configuration::from_indices(idx);
+        if space.is_valid(&limited) {
+            limited
+        } else {
+            deployed.clone()
+        }
+    }
+
+    /// Number of index steps (summed over axes) between two
+    /// configurations — what the authority-limit acceptance test
+    /// asserts never exceeds `max_delta` across a whole event log.
+    pub fn step_distance(a: &Configuration, b: &Configuration) -> usize {
+        a.indices().iter().zip(b.indices().iter()).map(|(&x, &y)| x.abs_diff(y) as usize).sum()
+    }
+}
+
+/// Data-quality gate: `true` means the observation must not enter the
+/// surrogate as evidence (it is still recorded in the history database).
+/// Quarantined: non-finite, non-positive (objectives here are runtimes /
+/// energies — zero or negative means a broken measurement), or at least
+/// [`QUARANTINE_BAND`]× the baseline objective.
+pub fn quarantine(objective: f64, baseline_objective: f64) -> bool {
+    if !objective.is_finite() || objective <= 0.0 {
+        return true;
+    }
+    baseline_objective.is_finite()
+        && baseline_objective > 0.0
+        && objective >= QUARANTINE_BAND * baseline_objective
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Param, ParamDomain};
+
+    fn toy_space() -> ConfigSpace {
+        let mut s = ConfigSpace::new("toy");
+        s.add(Param::new("a", ParamDomain::ordinal(&[0, 1, 2, 3, 4, 5, 6, 7])));
+        s.add(Param::new("b", ParamDomain::ordinal(&[0, 1, 2, 3])));
+        s.add(Param::new("c", ParamDomain::Toggle));
+        s
+    }
+
+    #[test]
+    fn cusum_ignores_noise_and_fires_on_sustained_shift() {
+        let mut d = CusumDetector::new(8.0);
+        // zero-mean alternating noise never accumulates past the slack
+        for i in 0..200 {
+            let z = if i % 2 == 0 { 0.4 } else { -0.4 };
+            assert!(!d.observe(z), "noise fired at step {i}");
+        }
+        // a sustained +2 sigma shift fires after ~threshold/(2-k) steps
+        let mut fired_at = None;
+        for i in 0..32 {
+            if d.observe(2.0) {
+                fired_at = Some(i);
+                break;
+            }
+        }
+        let at = fired_at.expect("sustained shift must fire");
+        assert!((4..=8).contains(&at), "fired at {at}");
+        // detector re-armed after firing
+        assert_eq!(d.state(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn cusum_is_two_sided_and_skips_non_finite() {
+        let mut d = CusumDetector::new(4.0);
+        assert!(!d.observe(f64::NAN));
+        assert!(!d.observe(f64::INFINITY));
+        assert_eq!(d.state(), (0.0, 0.0));
+        let mut fired = false;
+        for _ in 0..16 {
+            fired |= d.observe(-1.5);
+        }
+        assert!(fired, "downward drift must fire too");
+    }
+
+    #[test]
+    fn cusum_state_roundtrips() {
+        let mut a = CusumDetector::new(8.0);
+        a.observe(1.2);
+        a.observe(0.9);
+        let (p, n) = a.state();
+        let mut b = CusumDetector::new(8.0);
+        b.restore(p, n);
+        assert_eq!(a, b);
+        // identical future trajectories
+        for z in [1.0, -0.3, 2.1] {
+            assert_eq!(a.observe(z), b.observe(z));
+        }
+        assert_eq!(a.state(), b.state());
+    }
+
+    #[test]
+    fn limiter_moves_one_axis_at_most_max_delta() {
+        let sp = toy_space();
+        let lim = AuthorityLimiter::new(1);
+        let cur = Configuration::from_indices(vec![2, 1, 0]);
+        let want = Configuration::from_indices(vec![7, 3, 1]);
+        let step = lim.limit(&sp, &cur, &want);
+        // axis 0 has the largest disagreement (5); moved exactly 1 step
+        assert_eq!(step.indices(), &[3, 1, 0]);
+        assert_eq!(AuthorityLimiter::step_distance(&cur, &step), 1);
+        // already-agreeing proposal is a no-op
+        assert_eq!(lim.limit(&sp, &cur, &cur), cur);
+    }
+
+    #[test]
+    fn limiter_steps_downward_and_breaks_ties_low() {
+        let sp = toy_space();
+        let lim = AuthorityLimiter::new(2);
+        let cur = Configuration::from_indices(vec![5, 3, 1]);
+        let want = Configuration::from_indices(vec![2, 0, 1]);
+        let step = lim.limit(&sp, &cur, &want);
+        // axes 0 and 1 both disagree by 3; tie -> axis 0, downward, 2 steps
+        assert_eq!(step.indices(), &[3, 3, 1]);
+        assert!(AuthorityLimiter::step_distance(&cur, &step) <= 2);
+    }
+
+    #[test]
+    fn limiter_never_leaves_the_valid_region() {
+        let mut sp = toy_space();
+        sp.constrain("a-even-when-c", |sp, c| {
+            sp.int_value(c, "c") == 0 || sp.int_value(c, "a") % 2 == 0
+        });
+        let lim = AuthorityLimiter::new(1);
+        let cur = Configuration::from_indices(vec![2, 0, 1]);
+        let want = Configuration::from_indices(vec![3, 0, 1]); // odd `a` with c=1: invalid
+        assert_eq!(lim.limit(&sp, &cur, &want), cur, "invalid step must be a no-op");
+    }
+
+    #[test]
+    fn quarantine_rejects_garbage_and_passes_plausible_objectives() {
+        assert!(quarantine(f64::NAN, 100.0));
+        assert!(quarantine(f64::INFINITY, 100.0));
+        assert!(quarantine(0.0, 100.0));
+        assert!(quarantine(-3.0, 100.0));
+        assert!(quarantine(300.0, 100.0), "3x baseline is out of band");
+        assert!(!quarantine(299.0, 100.0));
+        assert!(!quarantine(40.0, 100.0));
+        // no baseline yet: only the finite/positive gate applies
+        assert!(!quarantine(1e9, f64::NAN));
+        assert!(quarantine(f64::NAN, f64::NAN));
+    }
+}

@@ -54,6 +54,12 @@ pub enum StrategyEvent {
     Apply { eval_id: usize },
     /// A foreign elite was absorbed from a peer shard.
     Foreign { config_key: String, y: f64 },
+    /// The continuous controller's drift detector fired right after the
+    /// completion for `eval_id` was applied: the surrogate's trust
+    /// window was reset there. Replay re-applies the reset at the same
+    /// position, so a resumed controller's window (and every proposal
+    /// after it) matches the uninterrupted run's.
+    Drift { eval_id: usize },
 }
 
 impl StrategyEvent {
@@ -74,6 +80,9 @@ impl StrategyEvent {
                 ("config", config_key.as_str().into()),
                 ("y", num(*y)),
             ]),
+            StrategyEvent::Drift { eval_id } => {
+                Json::obj(vec![("t", "drift".into()), ("id", (*eval_id).into())])
+            }
         }
     }
 
@@ -100,6 +109,7 @@ impl StrategyEvent {
                 // null reads back as +inf defensively
                 y: v.get("y").and_then(Json::as_f64).unwrap_or(f64::INFINITY),
             }),
+            Some("drift") => Ok(StrategyEvent::Drift { eval_id: id()? }),
             other => anyhow::bail!("unknown strategy event kind {other:?}"),
         }
     }
@@ -115,6 +125,11 @@ pub struct ProposalState {
     pub rng_state: u64,
     pub rng_inc: u64,
     pub log: Vec<StrategyEvent>,
+    /// The continuous controller's CUSUM accumulators `(pos, neg)` at
+    /// save time (hex-encoded f64 bit patterns on disk — lossless).
+    /// `None` for non-controller runs and for checkpoints written
+    /// before the controller existed.
+    pub cusum: Option<(f64, f64)>,
 }
 
 impl ProposalState {
@@ -137,7 +152,22 @@ impl ProposalState {
             .iter()
             .map(StrategyEvent::from_json)
             .collect::<Result<_>>()?;
-        Ok(ProposalState { rng_state: hex("rng_state")?, rng_inc: hex("rng_inc")?, log })
+        // absent in pre-controller checkpoints: lenient
+        let cusum = match v.get("cusum").and_then(Json::as_str) {
+            Some(s) => match s.split_once(':') {
+                Some((p, n)) => Some((
+                    f64::from_bits(u64::from_str_radix(p, 16).with_context(|| {
+                        format!("proposal state `cusum` pos is not a hex word: `{s}`")
+                    })?),
+                    f64::from_bits(u64::from_str_radix(n, 16).with_context(|| {
+                        format!("proposal state `cusum` neg is not a hex word: `{s}`")
+                    })?),
+                )),
+                None => anyhow::bail!("proposal state `cusum` is not `pos:neg`: `{s}`"),
+            },
+            None => None,
+        };
+        Ok(ProposalState { rng_state: hex("rng_state")?, rng_inc: hex("rng_inc")?, log, cusum })
     }
 }
 
@@ -186,6 +216,12 @@ fn prior_hash(prior: Option<&Vec<(Configuration, f64)>>, salt: u64) -> u64 {
 /// the *resolved* history warm start (`foreign_warm`): the foreign
 /// observations it plants shape every proposal, so resuming against a
 /// store whose contents changed must be refused.
+///
+/// The continuous-controller policy (controller mode, decay half-life,
+/// drift threshold, authority limit) and the drifting-substrate
+/// identity (drift point and magnitude) are identity too: the first
+/// four shape every post-detection proposal and apply, and the last two
+/// change what the recorded objectives *measured*.
 pub fn fingerprint(setup: &TuneSetup) -> String {
     let warm_hash = prior_hash(setup.warm_start.as_ref(), 0);
     let fwarm_hash = prior_hash(setup.foreign_warm.as_ref(), 0x5ee3_9c1d);
@@ -194,7 +230,7 @@ pub fn fingerprint(setup: &TuneSetup) -> String {
     let batch_target =
         if setup.ensemble_batch == 0 { setup.ensemble_workers } else { setup.ensemble_batch };
     format!(
-        "{}|{}|n{}|{}|seed{}|{:?}|{:?}|init{}|k{}|t{:?}|liar:{}|fault{}|r{}|straggle{:?}|cap{:?}|evt{}|w{}|b{}|cycle:{}|warm{:x}|fed{}:ex{}:el{}|fwarm{:x}",
+        "{}|{}|n{}|{}|seed{}|{:?}|{:?}|init{}|k{}|t{:?}|liar:{}|fault{}|r{}|straggle{:?}|cap{:?}|evt{}|w{}|b{}|cycle:{}|warm{:x}|fed{}:ex{}:el{}|fwarm{:x}|ctl{}:hl{}:dt{}:md{}|drift{:?}:{}",
         setup.app.name(),
         setup.platform.name(),
         setup.nodes,
@@ -219,6 +255,12 @@ pub fn fingerprint(setup: &TuneSetup) -> String {
         setup.elite_exchange_every,
         setup.federation_elites,
         fwarm_hash,
+        setup.controller,
+        setup.decay_half_life,
+        setup.drift_threshold,
+        setup.max_delta,
+        setup.drift_at_eval,
+        setup.drift_magnitude,
     )
 }
 
@@ -244,7 +286,15 @@ impl InFlightEval {
 /// Borrowed view of a [`ProposalState`] for the hot save path: the
 /// continuous manager saves after every completion and must not clone
 /// its whole event log per event.
-pub type ProposalParts<'a> = (u64, u64, &'a [StrategyEvent]);
+pub struct ProposalParts<'a> {
+    pub rng_state: u64,
+    pub rng_inc: u64,
+    pub log: &'a [StrategyEvent],
+    /// Controller CUSUM accumulators (`None` for non-controller runs —
+    /// the key is then omitted, keeping pre-controller checkpoint bytes
+    /// unchanged).
+    pub cusum: Option<(f64, f64)>,
+}
 
 /// Serialize checkpoint parts without owning them — the continuous
 /// manager saves after every completion, so the hot path must not clone
@@ -263,15 +313,18 @@ fn parts_to_json(
         ("records", Json::Arr(records.iter().map(EvalRecord::to_json_full).collect())),
         ("in_flight", Json::Arr(in_flight.iter().map(InFlightEval::to_json).collect())),
     ];
-    if let Some((rng_state, rng_inc, log)) = proposal {
-        pairs.push((
-            "proposal",
-            Json::obj(vec![
-                ("rng_state", format!("{rng_state:016x}").into()),
-                ("rng_inc", format!("{rng_inc:016x}").into()),
-                ("log", Json::Arr(log.iter().map(StrategyEvent::to_json).collect())),
-            ]),
-        ));
+    if let Some(p) = proposal {
+        let mut fields = vec![
+            ("rng_state", format!("{:016x}", p.rng_state).into()),
+            ("rng_inc", format!("{:016x}", p.rng_inc).into()),
+            ("log", Json::Arr(p.log.iter().map(StrategyEvent::to_json).collect())),
+        ];
+        if let Some((pos, neg)) = p.cusum {
+            // f64 bit patterns, hex: JSON numbers are f64-parsed and
+            // could denormalize; the accumulators must resume exactly
+            fields.push(("cusum", format!("{:016x}:{:016x}", pos.to_bits(), neg.to_bits()).into()));
+        }
+        pairs.push(("proposal", Json::obj(fields)));
     }
     Json::obj(pairs)
 }
@@ -304,7 +357,12 @@ impl Checkpoint {
             self.wallclock_s,
             &self.records,
             &self.in_flight,
-            self.proposal.as_ref().map(|p| (p.rng_state, p.rng_inc, p.log.as_slice())),
+            self.proposal.as_ref().map(|p| ProposalParts {
+                rng_state: p.rng_state,
+                rng_inc: p.rng_inc,
+                log: p.log.as_slice(),
+                cusum: p.cusum,
+            }),
         )
     }
 
@@ -374,7 +432,12 @@ impl Checkpoint {
             self.wallclock_s,
             &self.records,
             &self.in_flight,
-            self.proposal.as_ref().map(|p| (p.rng_state, p.rng_inc, p.log.as_slice())),
+            self.proposal.as_ref().map(|p| ProposalParts {
+                rng_state: p.rng_state,
+                rng_inc: p.rng_inc,
+                log: p.log.as_slice(),
+                cusum: p.cusum,
+            }),
         )
     }
 }
@@ -457,7 +520,10 @@ mod tests {
                 StrategyEvent::Apply { eval_id: 0 },
                 StrategyEvent::Foreign { config_key: "7,7".into(), y: 0.1 + 0.2 },
                 StrategyEvent::Apply { eval_id: 3 },
+                StrategyEvent::Drift { eval_id: 3 },
             ],
+            // bit patterns JSON number round-tripping could mangle
+            cusum: Some((0.1 + 0.2, 5e-324)),
         };
         let cp = Checkpoint {
             fingerprint: "fp".into(),
@@ -615,5 +681,35 @@ mod tests {
         y.elite_exchange_every = 4;
         y.federation_elites = 4;
         assert_ne!(fingerprint(&x), fingerprint(&y));
+    }
+
+    /// The continuous-controller policy and the drifting-substrate
+    /// identity are both part of the fingerprint: resuming a controller
+    /// campaign under different authority/detection knobs — or against
+    /// a substrate that drifts differently — must be refused.
+    #[test]
+    fn fingerprint_covers_the_controller_policy_and_the_drifting_substrate() {
+        use crate::apps::AppKind;
+        use crate::metrics::Metric;
+        use crate::platform::PlatformKind;
+        let a = TuneSetup::new(AppKind::Amg, PlatformKind::Theta, 64, Metric::Runtime);
+        let mut c = a.clone();
+        c.controller = true;
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+        let mut h = a.clone();
+        h.decay_half_life = 32.0;
+        assert_ne!(fingerprint(&a), fingerprint(&h));
+        let mut t = a.clone();
+        t.drift_threshold = 4.0;
+        assert_ne!(fingerprint(&a), fingerprint(&t));
+        let mut m = a.clone();
+        m.max_delta = 2;
+        assert_ne!(fingerprint(&a), fingerprint(&m));
+        let mut d = a.clone();
+        d.drift_at_eval = Some(20);
+        assert_ne!(fingerprint(&a), fingerprint(&d));
+        let mut g = d.clone();
+        g.drift_magnitude = 0.5;
+        assert_ne!(fingerprint(&d), fingerprint(&g));
     }
 }

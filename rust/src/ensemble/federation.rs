@@ -240,6 +240,16 @@ pub(crate) struct ShardRun {
     pub(crate) best_desc: String,
 }
 
+/// Live state of the continuous controller (`TuneSetup::controller`):
+/// the drift detector over predicted-vs-observed residuals, the
+/// actuation authority limiter, and the configuration currently
+/// deployed on the substrate (the last dispatched proposal).
+struct ControllerState {
+    cusum: crate::drift::CusumDetector,
+    limiter: crate::drift::AuthorityLimiter,
+    deployed: Option<Configuration>,
+}
+
 /// One manager shard running the PR-2 continuous cycle over its
 /// partition of the candidate space. The unsharded continuous manager is
 /// exactly this struct with `ShardSpec { shards: 1, .. }` — which is
@@ -297,6 +307,10 @@ pub(crate) struct ContinuousShard {
     /// this shard ever reads the sink, so trajectories stay
     /// bit-identical with it present or absent (pinned by e2e).
     obs: Option<Arc<crate::obs::ObsSink>>,
+    /// Continuous-controller state (`--controller`): drift detection,
+    /// authority limits, quarantine. `None` runs the classic
+    /// tune-to-budget campaign unchanged, bit for bit.
+    ctl: Option<ControllerState>,
 }
 
 impl ContinuousShard {
@@ -334,6 +348,43 @@ impl ContinuousShard {
         if let (Some(sink), Some(bo)) = (&obs, strat.as_bo_mut()) {
             bo.set_obs(sink.clone(), lens.shard);
         }
+
+        // ---- continuous controller (`--controller`) ---------------------
+        // one governed tuner over the whole space: drift detection needs a
+        // single residual stream and authority limits a single deployed
+        // configuration, so the controller refuses sharded federations
+        let mut ctl = if setup.controller {
+            anyhow::ensure!(
+                lens.shards <= 1,
+                "the continuous controller drives a single manager (got {} federation shards)",
+                lens.shards
+            );
+            anyhow::ensure!(
+                setup.decay_half_life.is_finite() && setup.decay_half_life > 0.0,
+                "decay-half-life must be a positive number of observations (got {})",
+                setup.decay_half_life
+            );
+            anyhow::ensure!(
+                setup.drift_threshold.is_finite() && setup.drift_threshold > 0.0,
+                "drift-threshold must be a positive CUSUM threshold (got {})",
+                setup.drift_threshold
+            );
+            anyhow::ensure!(
+                setup.max_delta >= 1,
+                "max-delta must allow at least one ordinal step (got {})",
+                setup.max_delta
+            );
+            if let Some(bo) = strat.as_bo_mut() {
+                bo.set_decay(setup.decay_half_life);
+            }
+            Some(ControllerState {
+                cusum: crate::drift::CusumDetector::new(setup.drift_threshold),
+                limiter: crate::drift::AuthorityLimiter::new(setup.max_delta),
+                deployed: None,
+            })
+        } else {
+            None
+        };
 
         let mut db = PerfDatabase::new();
         let mut wallclock = 0.0f64;
@@ -392,6 +443,14 @@ impl ContinuousShard {
                                     config_key,
                                     lie,
                                 } => {
+                                    // the logged configuration is the one
+                                    // actually dispatched (post authority
+                                    // limit), so replaying it restores the
+                                    // controller's deployed state exactly
+                                    if let Some(c) = &mut ctl {
+                                        c.deployed =
+                                            Some(checkpoint::config_from_key(config_key)?);
+                                    }
                                     if let Some(lie) = lie {
                                         let cfg = checkpoint::config_from_key(config_key)?;
                                         if let Some(bo) = strat.as_bo_mut() {
@@ -408,14 +467,31 @@ impl ContinuousShard {
                                         )
                                     })?;
                                     let cfg = checkpoint::config_from_key(&rec.config_key)?;
+                                    // the quarantine decision is a pure
+                                    // function of (objective, baseline) —
+                                    // recomputing it here replays the live
+                                    // path's surrogate feed bit for bit
+                                    let quarantined = ctl.is_some()
+                                        && crate::drift::quarantine(
+                                            rec.objective,
+                                            baseline_objective,
+                                        );
+                                    let surrogate_y = if quarantined {
+                                        baseline_objective
+                                    } else {
+                                        rec.objective
+                                    };
                                     let amended = match strat.as_bo_mut() {
-                                        Some(bo) => bo.resolve_pending(*eval_id, rec.objective),
+                                        Some(bo) => bo.resolve_pending(*eval_id, surrogate_y),
                                         None => false,
                                     };
                                     if !amended {
-                                        strat.observe(&cfg, rec.objective);
+                                        strat.observe(&cfg, surrogate_y);
                                     }
-                                    if !rec.timed_out && rec.objective.is_finite() {
+                                    if !quarantined
+                                        && !rec.timed_out
+                                        && rec.objective.is_finite()
+                                    {
                                         real_objectives.push(rec.objective);
                                         if rec.objective < best {
                                             best = rec.objective;
@@ -423,6 +499,16 @@ impl ContinuousShard {
                                         }
                                     }
                                     applied += 1;
+                                }
+                                checkpoint::StrategyEvent::Drift { .. } => {
+                                    // a checkpointed drift fire: re-reset
+                                    // the surrogate window at the same
+                                    // point in the observation stream (the
+                                    // CUSUM accumulators themselves resume
+                                    // from the checkpointed state below)
+                                    if let Some(bo) = strat.as_bo_mut() {
+                                        bo.reset_window();
+                                    }
                                 }
                                 checkpoint::StrategyEvent::Foreign { config_key, y } => {
                                     let cfg = checkpoint::config_from_key(config_key)?;
@@ -441,6 +527,9 @@ impl ContinuousShard {
                             path.display(),
                             cp.records.len()
                         );
+                        if let (Some(c), Some((pos, neg))) = (&mut ctl, ps.cusum) {
+                            c.cusum.restore(pos, neg);
+                        }
                         restored_rng = Some(Pcg32::from_state(ps.rng_state, ps.rng_inc));
                         slog = ps.log;
                     }
@@ -454,6 +543,15 @@ impl ContinuousShard {
                         // log started mid-run would cover neither the
                         // restored records nor the re-imputed lies.
                         log_valid = cp.records.is_empty() && cp.in_flight.is_empty();
+                        // the controller cannot resume without it: the
+                        // CUSUM accumulators and the deployed
+                        // configuration live in the proposal state
+                        anyhow::ensure!(
+                            ctl.is_none() || log_valid,
+                            "checkpoint {} predates the proposal state the continuous \
+                             controller needs to resume",
+                            path.display()
+                        );
                         for rec in &cp.records {
                             let cfg = checkpoint::config_from_key(&rec.config_key)?;
                             strat.observe(&cfg, rec.objective);
@@ -619,6 +717,7 @@ impl ContinuousShard {
             done: false,
             killed: false,
             obs,
+            ctl,
         })
     }
 
@@ -706,6 +805,22 @@ impl ContinuousShard {
             // detlint: allow(wall-clock) -- search-overhead stat only; simulated time drives the trajectory
             let t_search = std::time::Instant::now();
             let cfg = self.propose_in_shard();
+            // authority limit: the dispatched configuration moves at most
+            // one parameter at most `max_delta` steps from the deployed
+            // one. The limited configuration — not the raw proposal — is
+            // what gets the lie, the log entry, and the dispatch, so a
+            // resumed run replays the governed trajectory verbatim.
+            let cfg = match &mut self.ctl {
+                Some(c) => {
+                    let limited = match &c.deployed {
+                        Some(dep) => c.limiter.limit(&self.space, dep, &cfg),
+                        None => cfg,
+                    };
+                    c.deployed = Some(limited.clone());
+                    limited
+                }
+                None => cfg,
+            };
             let mut planted_lie = None;
             if self.inflight_target > 1 {
                 if let Some(bo) = self.strat.as_bo_mut() {
@@ -807,22 +922,71 @@ impl ContinuousShard {
             self.stats.stragglers_cancelled += 1;
         }
 
-        // (a) amend this result's pending lie by index
+        // continuous controller: score the observation against the
+        // surrogate's *stale* forecast (the model as it stood before this
+        // result) and accumulate the standardized residual in the CUSUM.
+        // Quarantined measurements never reach the detector — the
+        // quarantine gate owns garbage; the CUSUM owns sustained shift.
+        let mut drift_fired = false;
+        let quarantined = self.ctl.is_some()
+            && crate::drift::quarantine(s.objective, self.baseline_objective);
+        if let Some(c) = &mut self.ctl {
+            if !quarantined {
+                if let Some(bo) = self.strat.as_bo_mut() {
+                    if let (Some(pred), Some(scale)) =
+                        (bo.predict_mean_stale(&job.cfg), bo.stale_scale())
+                    {
+                        if scale > 0.0 {
+                            drift_fired = c.cusum.observe((s.objective - pred) / scale);
+                        }
+                    }
+                }
+            }
+        }
+
+        // (a) amend this result's pending lie by index. A quarantined
+        // measurement is recorded in the history database below but
+        // never trusted as model evidence: the surrogate sees a neutral
+        // baseline-valued stand-in in its place (the replay path
+        // recomputes the same decision from the checkpointed record).
         if self.log_valid {
             self.slog.push(checkpoint::StrategyEvent::Apply { eval_id: job.eval_id });
         }
+        let surrogate_y = if quarantined { self.baseline_objective } else { s.objective };
         let amended = match self.strat.as_bo_mut() {
-            Some(bo) => bo.resolve_pending(job.eval_id, s.objective),
+            Some(bo) => bo.resolve_pending(job.eval_id, surrogate_y),
             None => false,
         };
         if !amended {
-            self.strat.observe(&job.cfg, s.objective);
+            self.strat.observe(&job.cfg, surrogate_y);
         }
-        if !s.timed_out && s.objective.is_finite() {
+        if !quarantined && !s.timed_out && s.objective.is_finite() {
             self.real_objectives.push(s.objective);
             if s.objective < self.best {
                 self.best = s.objective;
                 self.best_desc = self.space.describe(&job.cfg);
+            }
+        }
+        if drift_fired {
+            // the world moved: discard the stale window so the next fit
+            // sees only post-drift observations, log the fire so a
+            // resumed run resets at the same point, and surface it
+            if let Some(bo) = self.strat.as_bo_mut() {
+                bo.reset_window();
+            }
+            if self.log_valid {
+                self.slog.push(checkpoint::StrategyEvent::Drift { eval_id: job.eval_id });
+            }
+            log::info!(
+                "shard {}: drift detected at eval {} — surrogate window reset",
+                self.lens.shard,
+                job.eval_id
+            );
+            if let Some(obs) = &self.obs {
+                obs.record(crate::obs::ObsEvent::DriftDetected {
+                    eval_id: job.eval_id as u64,
+                    shard: self.lens.shard,
+                });
             }
         }
 
@@ -831,7 +995,7 @@ impl ContinuousShard {
         let span = s.processing_s + s.charged;
         self.stats.serial_equivalent_s += span;
         let w = (0..self.workers)
-            .min_by(|&a, &b| self.worker_free[a].partial_cmp(&self.worker_free[b]).unwrap())
+            .min_by(|&a, &b| self.worker_free[a].total_cmp(&self.worker_free[b]))
             .unwrap();
         self.worker_free[w] += span;
         let completion = self.worker_free[w];
@@ -899,8 +1063,12 @@ impl ContinuousShard {
         // mid-trajectory exactly as the uninterrupted run would
         if let Some(path) = &self.checkpoint_path {
             let (rng_state, rng_inc) = self.rng.state();
-            let proposal =
-                self.log_valid.then_some((rng_state, rng_inc, self.slog.as_slice()));
+            let proposal = self.log_valid.then(|| checkpoint::ProposalParts {
+                rng_state,
+                rng_inc,
+                log: self.slog.as_slice(),
+                cusum: self.ctl.as_ref().map(|c| c.cusum.state()),
+            });
             save_checkpoint(
                 path,
                 &self.fingerprint,
@@ -985,9 +1153,7 @@ impl ContinuousShard {
             .iter()
             .filter(|r| !r.timed_out && r.objective.is_finite())
             .collect();
-        fin.sort_by(|a, b| {
-            a.objective.partial_cmp(&b.objective).unwrap().then(a.id.cmp(&b.id))
-        });
+        fin.sort_by(|a, b| a.objective.total_cmp(&b.objective).then(a.id.cmp(&b.id)));
         fin.into_iter()
             .take(n)
             .filter_map(|r| {

@@ -248,6 +248,20 @@ impl Resolved {
 /// with a factor near 1.0 would cancel the only other in-flight run.
 const STRAGGLER_MIN_SAMPLES: usize = 4;
 
+/// Generational straggler cutoff from one batch's completed runtimes.
+/// Non-finite runtimes (a faulted evaluation can surface NaN) are
+/// excluded before the median — one poisoned sample must cost one
+/// evaluation, never panic the whole run — and the policy stays
+/// disarmed (`INFINITY`) below [`STRAGGLER_MIN_SAMPLES`] clean samples.
+fn batch_straggler_cutoff(runtimes: &[f64], factor: f64) -> f64 {
+    let mut clean: Vec<f64> = runtimes.iter().copied().filter(|r| r.is_finite()).collect();
+    if clean.len() < STRAGGLER_MIN_SAMPLES {
+        return f64::INFINITY;
+    }
+    clean.sort_by(f64::total_cmp);
+    clean[clean.len() / 2] * factor.max(1.0)
+}
+
 /// Deterministic fault roll for `(seed, configuration, attempt)` —
 /// independent of the worker and of thread scheduling.
 fn fault_roll(seed: u64, cfg: &Configuration, attempt: usize) -> f64 {
@@ -668,22 +682,18 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
                 let mut straggler_cutoff = f64::INFINITY;
                 let mut cancelled_ids: BTreeSet<usize> = BTreeSet::new();
                 if let Some(factor) = setup.straggler_factor {
-                    let mut runtimes: Vec<f64> = resolved
+                    let runtimes: Vec<f64> = resolved
                         .iter()
                         .filter_map(|r| match r {
                             Resolved::Done(_, d) if !d.timed_out => Some(d.charged_runtime_s),
                             _ => None,
                         })
                         .collect();
-                    if runtimes.len() >= STRAGGLER_MIN_SAMPLES {
-                        runtimes.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                        let median = runtimes[runtimes.len() / 2];
-                        straggler_cutoff = median * factor.max(1.0);
-                        for r in &resolved {
-                            if let Resolved::Done(j, d) = r {
-                                if !d.timed_out && d.charged_runtime_s > straggler_cutoff {
-                                    cancelled_ids.insert(j.eval_id);
-                                }
+                    straggler_cutoff = batch_straggler_cutoff(&runtimes, factor);
+                    for r in &resolved {
+                        if let Resolved::Done(j, d) = r {
+                            if !d.timed_out && d.charged_runtime_s > straggler_cutoff {
+                                cancelled_ids.insert(j.eval_id);
                             }
                         }
                     }
@@ -751,7 +761,7 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
                     stats.serial_equivalent_s += span;
                     // earliest-free worker takes the next job
                     let w = (0..workers)
-                        .min_by(|&a, &b| worker_free[a].partial_cmp(&worker_free[b]).unwrap())
+                        .min_by(|&a, &b| worker_free[a].total_cmp(&worker_free[b]))
                         .unwrap();
                     worker_free[w] += span;
                     let completion = wallclock + worker_free[w];
@@ -934,6 +944,52 @@ mod tests {
 
     fn run(s: &TuneSetup) -> TuneResult {
         autotune_ensemble(s, Arc::new(Scorer::fallback())).unwrap()
+    }
+
+    /// Regression: a faulted evaluation's NaN runtime used to panic the
+    /// batch-median sort inside the straggler policy, killing the whole
+    /// run instead of costing one evaluation. The cutoff now excludes
+    /// non-finite samples and orders totally.
+    #[test]
+    fn straggler_cutoff_survives_planted_nan_runtime() {
+        // NaN planted mid-batch: filtered out, median over the rest
+        let runtimes = [40.0, f64::NAN, 42.0, 44.0, 46.0];
+        let cutoff = batch_straggler_cutoff(&runtimes, 1.5);
+        assert!((cutoff - 44.0 * 1.5).abs() < 1e-12, "cutoff {cutoff}");
+        // infinities (timeout-charged) are excluded the same way
+        let cutoff = batch_straggler_cutoff(&[40.0, f64::INFINITY, 42.0, 44.0, 46.0], 2.0);
+        assert!(cutoff.is_finite());
+        // dropping below the minimum clean-sample floor disarms the policy
+        assert_eq!(
+            batch_straggler_cutoff(&[40.0, f64::NAN, 42.0, 44.0], 1.0),
+            f64::INFINITY
+        );
+        // factors below 1.0 clamp (a sub-median cutoff would cancel half
+        // of every batch)
+        let cutoff = batch_straggler_cutoff(&[1.0, 2.0, 3.0, 4.0], 0.5);
+        assert!((cutoff - 3.0).abs() < 1e-12);
+    }
+
+    /// Fault-injected runs exercise the straggler policy end-to-end on
+    /// the generational cycle: faulted evaluations resolve as penalty
+    /// records with non-finite runtimes, and the cutoff must digest that
+    /// batch without panicking while still cancelling honest stragglers.
+    #[test]
+    fn generational_straggler_policy_survives_faulted_batches() {
+        let mut s = setup(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+        s.manager_cycle = ManagerCycle::Generational;
+        s.straggler_factor = Some(1.05);
+        s.fault_rate = 0.35;
+        s.max_retries = 0; // faults become abandoned (non-finite) records
+        s.max_evals = 24;
+        s.ensemble_workers = 8;
+        let r = run(&s);
+        assert_eq!(r.evaluations, 24);
+        let es = r.ensemble.as_ref().unwrap();
+        assert!(es.faults > 0, "no faults at 35% over 24 evals");
+        assert!(es.failed_evals > 0, "retries=0 must abandon at least one eval");
+        // abandoned evals carry non-finite runtimes through the batch
+        assert!(r.db.records.iter().any(|rec| !rec.measured.runtime_s.is_finite()));
     }
 
     #[test]

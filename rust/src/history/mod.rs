@@ -391,7 +391,7 @@ pub fn nearest_scale<'a>(records: &[&'a RunRecord], target_nodes: u64) -> Vec<&'
     let best = records
         .iter()
         .map(|r| r.nodes)
-        .min_by(|&a, &b| dist(a).partial_cmp(&dist(b)).unwrap().then(a.cmp(&b)));
+        .min_by(|&a, &b| dist(a).total_cmp(&dist(b)).then(a.cmp(&b)));
     match best {
         Some(nodes) => records.iter().copied().filter(|r| r.nodes == nodes).collect(),
         None => Vec::new(),
@@ -416,7 +416,7 @@ pub fn top_k_elites(records: &[&RunRecord], k: usize) -> Vec<(Configuration, f64
         }
     }
     let mut pool: Vec<(String, f64)> = best.into_iter().collect();
-    pool.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0)));
+    pool.sort_by(|a, b| a.1.total_cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
     // parse *before* taking k: an unparseable key from a damaged record
     // must not consume an elite slot (it would silently shrink — or
     // empty — the prior while valid elites sit further down the pool)
@@ -595,7 +595,7 @@ mod tests {
                 .fold(f64::INFINITY, f64::min),
             best_config_key: evals
                 .iter()
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(&b.1))
                 .map(|(k, _)| k.to_string())
                 .unwrap_or_default(),
             wallclock_s: 120.0,

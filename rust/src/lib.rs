@@ -21,6 +21,7 @@ pub mod bench_support;
 pub mod cliargs;
 pub mod codegen;
 pub mod coordinator;
+pub mod drift;
 pub mod ensemble;
 pub mod history;
 pub mod lint;

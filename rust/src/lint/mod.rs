@@ -52,6 +52,10 @@ pub enum Rule {
     RngSource,
     /// Fork-join float accumulation outside the blessed blocked scorer.
     ParFloatAccum,
+    /// `partial_cmp` orderings in the core: one NaN objective (a faulted
+    /// evaluation) panics the whole campaign mid-run; order floats with
+    /// the total `f64::total_cmp` instead.
+    NanOrder,
     /// A `TuneSetup`/`CampaignSpec` field missing from
     /// `checkpoint::fingerprint`.
     FingerprintCoverage,
@@ -66,11 +70,12 @@ pub enum Rule {
 impl Rule {
     /// The rules an allow directive may name (everything but
     /// `allow-syntax`, which guards the directives themselves).
-    pub const ALLOWABLE: [Rule; 7] = [
+    pub const ALLOWABLE: [Rule; 8] = [
         Rule::HashOrder,
         Rule::WallClock,
         Rule::RngSource,
         Rule::ParFloatAccum,
+        Rule::NanOrder,
         Rule::FingerprintCoverage,
         Rule::DeprecatedApi,
         Rule::DaemonUnwrap,
@@ -82,6 +87,7 @@ impl Rule {
             Rule::WallClock => "wall-clock",
             Rule::RngSource => "rng-source",
             Rule::ParFloatAccum => "par-float-accum",
+            Rule::NanOrder => "nan-order",
             Rule::FingerprintCoverage => "fingerprint-coverage",
             Rule::DeprecatedApi => "deprecated-api",
             Rule::DaemonUnwrap => "daemon-unwrap",

@@ -17,6 +17,7 @@ use super::{Diagnostic, Rule, SourceFile};
 /// clock and the sockets.
 pub const CORE_SCOPE: &[&str] = &[
     "coordinator/",
+    "drift/",
     "ensemble/",
     "history/",
     // in core deliberately: the observability layer must stay off the
@@ -64,6 +65,12 @@ const CORE_RULES: &[NeedleSpec] = &[
         needles: &["Instant::now", "SystemTime::now", "thread::current"],
         hint: "the core runs on simulated time; wall-clock and thread identity belong to the \
                daemon and overhead layers (annotate overhead-stat and blocking-wait uses)",
+    },
+    NeedleSpec {
+        rule: Rule::NanOrder,
+        needles: &["partial_cmp"],
+        hint: "a NaN objective (faulted evaluation) makes `partial_cmp().unwrap()` panic \
+               mid-campaign; order floats with f64::total_cmp (annotate provably-finite uses)",
     },
     NeedleSpec {
         rule: Rule::RngSource,
@@ -272,6 +279,7 @@ mod tests {
     #[test]
     fn scope_covers_the_core_and_spares_the_edges() {
         assert!(in_core("search/bo.rs"));
+        assert!(in_core("drift/mod.rs"));
         assert!(in_core("ensemble/federation.rs"));
         assert!(in_core("service/scheduler.rs"));
         assert!(in_core("obs/mod.rs"));

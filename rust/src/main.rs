@@ -65,6 +65,11 @@ fn spec() -> CliSpec {
         .opt("federation-shards", Some("0"), "manager shards (0 = single manager; K>=1 federates)")
         .opt("elite-exchange-every", Some("8"), "completions per shard between elite exchanges")
         .opt("federation-elites", Some("3"), "top-N history entries broadcast per exchange")
+        .opt("decay-half-life", Some("16"), "controller: surrogate recency half-life (observations)")
+        .opt("drift-threshold", Some("8"), "controller: residual CUSUM threshold for a window reset")
+        .opt("max-delta", Some("1"), "controller: max ordinal steps one apply may move one param")
+        .opt("drift-at", None, "simulate a substrate drift at this evaluation index")
+        .opt("drift-magnitude", Some("0"), "simulated drift penalty magnitude (0 disables)")
         .opt("liar", Some("cl-min"), "pending-point lie: cl-min | cl-mean | cl-max | kriging")
         .opt("fault-rate", Some("0"), "injected transient-failure probability")
         .opt("retries", Some("2"), "retries (with worker exclusion) per failed evaluation")
@@ -83,6 +88,7 @@ fn spec() -> CliSpec {
         .opt("interval-ms", Some("500"), "stats --follow / top: poll interval")
         .opt("frames", Some("0"), "top: stop after this many repaints (0 = run until source ends)")
         .opt("src", None, "lint: source root to check (default: this crate's src/)")
+        .flag("controller", "tune: continuous-controller mode (online re-tuning under drift)")
         .flag("no-warm-start", "submit: opt out of the daemon's shared-history warm start")
         .flag("stats", "tune: record live observability (SIGUSR1 or exit dumps the snapshot)")
         .flag("follow", "stats: keep tailing the event ring until the campaign ends")
@@ -118,6 +124,13 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     let mut fed_shards = args.usize_in("federation-shards", 0, ytopt::ensemble::federation::MAX_SHARDS)?;
     let mut exchange_every = args.usize_in("elite-exchange-every", 1, 1_000_000)?;
     let mut fed_elites = args.usize_in("federation-elites", 0, 64)?;
+    // continuous controller + drifting-substrate simulation
+    let mut controller = args.has_flag("controller");
+    let mut decay_half_life = args.float("decay-half-life").unwrap_or(16.0);
+    let mut drift_threshold = args.float("drift-threshold").unwrap_or(8.0);
+    let mut max_delta = args.usize_in("max-delta", 1, 1_000_000)?;
+    let mut drift_at = args.usize("drift-at");
+    let mut drift_magnitude = args.float("drift-magnitude").unwrap_or(0.0);
     let mut liar = args.get_or("liar", "cl-min").to_string();
     let mut fault_rate = args.float("fault-rate").unwrap_or(0.0);
     let mut retries = args.usize("retries").unwrap_or(2);
@@ -151,6 +164,14 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
         fed_shards = doc.usize_or("federation", "shards", fed_shards);
         exchange_every = doc.usize_or("federation", "exchange_every", exchange_every);
         fed_elites = doc.usize_or("federation", "elites", fed_elites);
+        controller = doc.bool_or("controller", "enabled", controller);
+        decay_half_life = doc.float_or("controller", "decay_half_life", decay_half_life);
+        drift_threshold = doc.float_or("controller", "drift_threshold", drift_threshold);
+        max_delta = doc.usize_or("controller", "max_delta", max_delta);
+        if let Some(at) = doc.get("drift", "at_eval").and_then(|v| v.as_int()) {
+            drift_at = Some(at.max(0) as usize);
+        }
+        drift_magnitude = doc.float_or("drift", "magnitude", drift_magnitude);
         if let Some(d) = doc.get("history", "dir").and_then(|v| v.as_str()) {
             history_dir = Some(std::path::PathBuf::from(d));
         }
@@ -190,6 +211,23 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     setup.history_dir = history_dir;
     setup.warm_start_from = warm_start_from;
     setup.warm_start_elites = warm_elites;
+    setup.controller = controller;
+    setup.decay_half_life = decay_half_life;
+    setup.drift_threshold = drift_threshold;
+    setup.max_delta = max_delta;
+    setup.drift_at_eval = drift_at;
+    setup.drift_magnitude = drift_magnitude;
+    if setup.controller {
+        anyhow::ensure!(
+            setup.manager_cycle == ManagerCycle::Continuous && setup.ensemble_workers >= 1,
+            "--controller needs the continuous ensemble manager (--ensemble-workers >= 1)"
+        );
+        anyhow::ensure!(
+            setup.federation_shards <= 1,
+            "--controller drives a single manager (got {} federation shards)",
+            setup.federation_shards
+        );
+    }
     Ok(setup)
 }
 
@@ -388,6 +426,9 @@ fn render_ring_event(e: &ytopt::obs::RingEvent) -> String {
         ),
         StragglerKilled { eval_id, shard } => {
             format!("straggler eval {eval_id} killed (shard {shard})")
+        }
+        DriftDetected { eval_id, shard } => {
+            format!("drift detected at eval {eval_id} (shard {shard}); window reset")
         }
         EliteExchange { round, shard, absorbed } => {
             format!("elite exchange round {round}: shard {shard} absorbed {absorbed}")

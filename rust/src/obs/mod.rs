@@ -58,6 +58,10 @@ pub enum ObsEvent {
     Completed { eval_id: u64, shard: u32, objective: f64, best_so_far: f64, sim_wallclock_s: f64 },
     /// The straggler policy cancelled this in-flight evaluation.
     StragglerKilled { eval_id: u64, shard: u32 },
+    /// The continuous controller's residual CUSUM fired while applying
+    /// this evaluation: the observed objectives have shifted away from
+    /// the surrogate's predictions and the search window was reset.
+    DriftDetected { eval_id: u64, shard: u32 },
     /// One federation elite-exchange absorption at a round boundary.
     EliteExchange { round: u64, shard: u32, absorbed: u64 },
     /// The surrogate epoch cache answered a model use: a hit reuses the
@@ -73,6 +77,7 @@ impl ObsEvent {
             ObsEvent::Dispatched { .. } => "dispatched",
             ObsEvent::Completed { .. } => "completed",
             ObsEvent::StragglerKilled { .. } => "straggler_killed",
+            ObsEvent::DriftDetected { .. } => "drift_detected",
             ObsEvent::EliteExchange { .. } => "elite_exchange",
             ObsEvent::SurrogateFit { .. } => "surrogate_fit",
         }
@@ -104,6 +109,11 @@ impl ObsEvent {
             }
             ObsEvent::StragglerKilled { eval_id, shard } => Json::obj(vec![
                 t("straggler_killed"),
+                ("eval_id", (*eval_id).into()),
+                ("shard", (*shard as u64).into()),
+            ]),
+            ObsEvent::DriftDetected { eval_id, shard } => Json::obj(vec![
+                t("drift_detected"),
                 ("eval_id", (*eval_id).into()),
                 ("shard", (*shard as u64).into()),
             ]),
@@ -139,6 +149,7 @@ impl ObsEvent {
                 sim_wallclock_s: get_f(v, "sim_wallclock_s"),
             }),
             "straggler_killed" => Some(ObsEvent::StragglerKilled { eval_id, shard }),
+            "drift_detected" => Some(ObsEvent::DriftDetected { eval_id, shard }),
             "elite_exchange" => Some(ObsEvent::EliteExchange {
                 round: get_u(v, "round"),
                 shard,
@@ -313,6 +324,8 @@ pub struct StatsSnapshot {
     pub dispatches: u64,
     pub completions: u64,
     pub straggler_kills: u64,
+    /// Continuous-controller drift detections (CUSUM fires).
+    pub drift_detections: u64,
     pub exchange_rounds: u64,
     /// Surrogate fits actually paid (epoch-cache misses).
     pub surrogate_fits: u64,
@@ -359,6 +372,7 @@ impl StatsSnapshot {
             ("dispatches", self.dispatches.into()),
             ("completions", self.completions.into()),
             ("straggler_kills", self.straggler_kills.into()),
+            ("drift_detections", self.drift_detections.into()),
             ("exchange_rounds", self.exchange_rounds.into()),
             ("surrogate_fits", self.surrogate_fits.into()),
             ("surrogate_cache_hits", self.surrogate_cache_hits.into()),
@@ -377,6 +391,7 @@ impl StatsSnapshot {
             dispatches: get_u(v, "dispatches"),
             completions: get_u(v, "completions"),
             straggler_kills: get_u(v, "straggler_kills"),
+            drift_detections: get_u(v, "drift_detections"),
             exchange_rounds: get_u(v, "exchange_rounds"),
             surrogate_fits: get_u(v, "surrogate_fits"),
             surrogate_cache_hits: get_u(v, "surrogate_cache_hits"),
@@ -405,6 +420,7 @@ pub struct ObsSink {
     dispatches: AtomicU64,
     completions: AtomicU64,
     straggler_kills: AtomicU64,
+    drift_detections: AtomicU64,
     exchange_rounds: AtomicU64,
     surrogate_fits: AtomicU64,
     surrogate_cache_hits: AtomicU64,
@@ -435,6 +451,7 @@ impl ObsSink {
             dispatches: AtomicU64::new(0),
             completions: AtomicU64::new(0),
             straggler_kills: AtomicU64::new(0),
+            drift_detections: AtomicU64::new(0),
             exchange_rounds: AtomicU64::new(0),
             surrogate_fits: AtomicU64::new(0),
             surrogate_cache_hits: AtomicU64::new(0),
@@ -472,6 +489,9 @@ impl ObsSink {
             }
             ObsEvent::StragglerKilled { .. } => {
                 self.straggler_kills.fetch_add(1, Ordering::Relaxed);
+            }
+            ObsEvent::DriftDetected { .. } => {
+                self.drift_detections.fetch_add(1, Ordering::Relaxed);
             }
             ObsEvent::EliteExchange { .. } => {
                 self.exchange_rounds.fetch_add(1, Ordering::Relaxed);
@@ -519,6 +539,7 @@ impl ObsSink {
             dispatches: self.dispatches.load(Ordering::Relaxed),
             completions: self.completions.load(Ordering::Relaxed),
             straggler_kills: self.straggler_kills.load(Ordering::Relaxed),
+            drift_detections: self.drift_detections.load(Ordering::Relaxed),
             exchange_rounds: self.exchange_rounds.load(Ordering::Relaxed),
             surrogate_fits: self.surrogate_fits.load(Ordering::Relaxed),
             surrogate_cache_hits: self.surrogate_cache_hits.load(Ordering::Relaxed),
@@ -654,19 +675,21 @@ mod tests {
             sim_wallclock_s: 6.0,
         });
         sink.record(ObsEvent::StragglerKilled { eval_id: 1, shard: 0 });
+        sink.record(ObsEvent::DriftDetected { eval_id: 1, shard: 0 });
         sink.record(ObsEvent::EliteExchange { round: 1, shard: 0, absorbed: 2 });
         let snap = sink.snapshot();
         assert_eq!(snap.proposals, 1);
         assert_eq!(snap.dispatches, 1);
         assert_eq!(snap.completions, 2);
         assert_eq!(snap.straggler_kills, 1);
+        assert_eq!(snap.drift_detections, 1);
         assert_eq!(snap.exchange_rounds, 1);
         assert_eq!(snap.surrogate_fits, 1);
         assert_eq!(snap.surrogate_cache_hits, 1);
         assert_eq!(snap.search_us_total, 120);
         assert_eq!(snap.fit_us_total, 900);
         assert_eq!(snap.best_objective, 12.5);
-        assert_eq!(snap.ring_next, 8);
+        assert_eq!(snap.ring_next, 9);
         assert_eq!(snap.cache_hit_rate(), 0.5);
         assert_eq!(snap.overhead_us_per_completion(), 510.0);
     }

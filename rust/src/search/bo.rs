@@ -200,6 +200,16 @@ pub struct BayesianOptimizer {
     /// the bit-identical "cold" pipeline the epoch cache is pinned and
     /// benchmarked against.
     cache_enabled: bool,
+    /// Recency half-life (observations) for the continuous controller's
+    /// decayed standardization; `None` (the default) keeps the
+    /// stationary all-history pipeline bit-identical to before the
+    /// controller existed.
+    decay: Option<f64>,
+    /// First observation index the surrogate trusts. 0 until a drift
+    /// reset slides the window forward; observations before it stay
+    /// recorded (indices never shift under pending amendments) but no
+    /// longer enter the fit, the standardization, or the incumbents.
+    window_start: usize,
     /// Running Σy / Σy² / count over the finite observations
     /// (standardization accumulators; non-finite entries are skipped so
     /// a penalty path can never poison them).
@@ -243,6 +253,8 @@ impl BayesianOptimizer {
             epoch_seeds: None,
             cache: None,
             cache_enabled: true,
+            decay: None,
+            window_start: 0,
             sum_y: 0.0,
             sum_sq_y: 0.0,
             finite_ys: 0,
@@ -297,6 +309,45 @@ impl BayesianOptimizer {
         self.cache_enabled
     }
 
+    /// Enable the continuous controller's recency decay: the objective
+    /// standardization weights each windowed observation by
+    /// `0.5^(age / half_life)` (age in observations, newest = 0). The
+    /// weights are a pure function of the window, so cached and
+    /// uncached fits stay bit-identical; with decay unset the
+    /// stationary pipeline is untouched.
+    pub fn set_decay(&mut self, half_life: f64) {
+        if half_life.is_finite() && half_life > 0.0 {
+            self.decay = Some(half_life);
+            self.epoch += 1;
+            self.cache = None;
+        }
+    }
+
+    pub fn decay_half_life(&self) -> Option<f64> {
+        self.decay
+    }
+
+    /// Slide the trust window past everything observed so far (drift
+    /// detected: the old landscape is no longer evidence). Recorded
+    /// observations keep their indices — pending amendments still land
+    /// in their own slots — but the surrogate refits, restandardizes,
+    /// and picks incumbents from post-reset observations only.
+    pub fn reset_window(&mut self) {
+        self.window_start = self.ys.len();
+        self.epoch += 1;
+        self.cache = None;
+    }
+
+    /// First observation index inside the trust window.
+    pub fn window_start(&self) -> usize {
+        self.window_start
+    }
+
+    /// Observations currently inside the trust window.
+    pub fn windowed_len(&self) -> usize {
+        self.ys.len() - self.window_start
+    }
+
     /// Record one observation: history, accumulators, incremental design
     /// matrix, epoch bump. (Shared by `observe` and `preload`; only
     /// `observe` marks the configuration seen.)
@@ -339,6 +390,37 @@ impl BayesianOptimizer {
         let n = self.finite_ys.max(1) as f64;
         let mean = self.sum_y / n;
         let var = (self.sum_sq_y / n - mean * mean).max(0.0);
+        (mean, var.sqrt().max(1e-12))
+    }
+
+    /// Controller-mode standardization: recency-weighted mean/scale over
+    /// the *windowed* finite objectives, weight `0.5^(age / half_life)`
+    /// (uniform weights when only the window — not decay — is active).
+    /// A deterministic O(window) fold per fit; part of the cache
+    /// identity through the epoch, so cached reuse stays exact.
+    fn windowed_standardization(&self) -> (f64, f64) {
+        let ys = &self.ys[self.window_start..];
+        let n = ys.len();
+        let mut sw = 0.0f64;
+        let mut swy = 0.0f64;
+        let mut swyy = 0.0f64;
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let w = match self.decay {
+                Some(hl) => 0.5f64.powf((n - 1 - i) as f64 / hl),
+                None => 1.0,
+            };
+            sw += w;
+            swy += w * y;
+            swyy += w * y * y;
+        }
+        if sw <= 0.0 {
+            return (0.0, 1e-12);
+        }
+        let mean = swy / sw;
+        let var = (swyy / sw - mean * mean).max(0.0);
         (mean, var.sqrt().max(1e-12))
     }
 
@@ -510,18 +592,29 @@ impl BayesianOptimizer {
         }
         // detlint: allow(wall-clock) -- fit-overhead stat (last_fit_s) only; simulated time drives the trajectory
         let t0 = std::time::Instant::now();
-        let (mean, scale) = self.standardization();
+        // controller mode (a live window reset or a decay half-life)
+        // standardizes over the trust window with recency weights; the
+        // stationary default keeps the accumulator-backed constants, so
+        // pre-controller trajectories are bit-identical
+        let (mean, scale) = if self.window_start > 0 || self.decay.is_some() {
+            self.windowed_standardization()
+        } else {
+            self.standardization()
+        };
         let dim = self.space.dim();
         let mut y_std = std::mem::take(&mut self.y_std);
         y_std.clear();
-        y_std.extend(self.ys.iter().map(|v| ((v - mean) / scale) as f32));
+        y_std.extend(self.ys[self.window_start..].iter().map(|v| ((v - mean) / scale) as f32));
+        // the trees fit on the windowed slice of the incremental design
+        // matrix (the whole matrix while the window sits at 0)
+        let xs_fit = &self.xs_enc[self.window_start * dim..];
         let fshape = self.scorer.manifest().forest.clone();
         let seeds = &self.epoch_seeds.as_ref().expect("seeds assigned above").1;
         let model = match self.cfg.surrogate {
             SurrogateKind::RandomForest => {
                 let fc = ForestConfig { n_trees: fshape.trees, ..Default::default() };
                 SurrogateModel::Forest(RandomForest::fit_with_seeds(
-                    &self.xs_enc,
+                    xs_fit,
                     &y_std,
                     dim,
                     &fc,
@@ -531,7 +624,7 @@ impl BayesianOptimizer {
             SurrogateKind::ExtraTrees => {
                 let fc = ForestConfig { n_trees: fshape.trees, ..ForestConfig::extra_trees() };
                 SurrogateModel::Forest(RandomForest::fit_with_seeds(
-                    &self.xs_enc,
+                    xs_fit,
                     &y_std,
                     dim,
                     &fc,
@@ -539,7 +632,7 @@ impl BayesianOptimizer {
                 ))
             }
             SurrogateKind::Gbrt => SurrogateModel::Gbrt(GbrtLite::fit_with_seeds(
-                &self.xs_enc,
+                xs_fit,
                 &y_std,
                 dim,
                 GBRT_STAGES,
@@ -576,7 +669,7 @@ impl BayesianOptimizer {
     /// per-completion path this makes the believer O(tree depth) instead
     /// of O(refit the forest).
     pub fn predict_mean(&mut self, cfg: &Configuration, rng: &mut Pcg32) -> Option<f64> {
-        if self.ys.len() < 2 {
+        if self.windowed_len() < 2 {
             return None;
         }
         self.ensure_surrogate(rng);
@@ -592,6 +685,38 @@ impl BayesianOptimizer {
         let out = m as f64 * cache.scale + cache.mean;
         self.row_buf = row;
         Some(out)
+    }
+
+    /// Posterior mean at `cfg` from the *last fitted* surrogate —
+    /// whatever epoch it belongs to — in objective units. The drift
+    /// detector's residual source: predicted-before-observed must come
+    /// from the model that proposed the point, not from a model that
+    /// has already absorbed its measurement. Consumes nothing from any
+    /// RNG stream and never fits; `None` until a model use has fitted
+    /// at least once.
+    pub fn predict_mean_stale(&mut self, cfg: &Configuration) -> Option<f64> {
+        if self.cache.is_none() {
+            return None;
+        }
+        let dim = self.space.dim();
+        let mut row = std::mem::take(&mut self.row_buf);
+        row.resize(dim, 0.0);
+        self.space.encode_into(cfg, &mut row);
+        let cache = self.cache.as_ref().expect("checked above");
+        let m = match &cache.model {
+            SurrogateModel::Forest(rf) => rf.predict_one(&row).0,
+            SurrogateModel::Gbrt(g) => g.predict_one(&row).0,
+        };
+        let out = m as f64 * cache.scale + cache.mean;
+        self.row_buf = row;
+        Some(out)
+    }
+
+    /// The last fitted surrogate's standardization scale (objective
+    /// units) — the drift detector's residual normalizer. `None` until
+    /// a fit exists.
+    pub fn stale_scale(&self) -> Option<f64> {
+        self.cache.as_ref().map(|c| c.scale)
     }
 
     /// Pre-load observations (transfer-learning warm start, §VIII).
@@ -651,10 +776,12 @@ impl BayesianOptimizer {
                 break;
             }
         }
-        // incumbents: indices of the best observations. `total_cmp`
-        // orders NaN objectives last instead of panicking — a failed
-        // evaluation's penalty path must never poison the ordering.
-        let mut order: Vec<usize> = (0..self.ys.len()).collect();
+        // incumbents: indices of the best observations inside the trust
+        // window (the whole history while the window sits at 0).
+        // `total_cmp` orders NaN objectives last instead of panicking —
+        // a failed evaluation's penalty path must never poison the
+        // ordering.
+        let mut order: Vec<usize> = (self.window_start..self.ys.len()).collect();
         order.sort_by(|&a, &b| self.ys[a].total_cmp(&self.ys[b]));
         let top: Vec<&Configuration> = order.iter().take(5).map(|&i| &self.xs[i]).collect();
         if !top.is_empty() {
@@ -727,7 +854,7 @@ impl BayesianOptimizer {
         self.last_score_s = t1.elapsed().as_secs_f64();
         self.cand_rows = rows;
 
-        let fmin = self.ys.iter().cloned().fold(f64::INFINITY, f64::min);
+        let fmin = self.ys[self.window_start..].iter().cloned().fold(f64::INFINITY, f64::min);
         let fmin_norm = (fmin - mu) / sc;
         let scores = self.cfg.acquisition.score(&mean_v, &std_v, fmin_norm);
         let best = crate::util::stats::argmin(&scores).unwrap_or(0);
@@ -737,7 +864,11 @@ impl BayesianOptimizer {
 
 impl SearchStrategy for BayesianOptimizer {
     fn propose(&mut self, rng: &mut Pcg32) -> Configuration {
-        let c = if self.ys.len() < self.cfg.n_init || self.ys.len() < 2 {
+        // the init gate counts windowed observations: after a drift
+        // reset the search re-seeds the fresh landscape with random
+        // draws exactly as it bootstrapped the original one
+        let n = self.windowed_len();
+        let c = if n < self.cfg.n_init || n < 2 {
             self.random_unseen(rng)
         } else {
             self.propose_by_model(rng)
@@ -1178,5 +1309,120 @@ mod tests {
         assert_eq!(bo.surrogate_epoch(), epoch + 1);
         let _ = bo.predict_mean(&c, &mut rng);
         assert_ne!(rng.state(), s0, "stale epoch must draw fresh fit seeds");
+    }
+
+    /// Controller-mode determinism pin: with a decay half-life set, the
+    /// epoch-cached pipeline must still equal the uncached one float for
+    /// float — the recency weights are part of the fit's pure identity,
+    /// never a cache side-channel.
+    #[test]
+    fn decay_mode_cached_pipeline_matches_uncached_bit_for_bit() {
+        let space = toy_space();
+        let build = |cached: bool| {
+            let scorer = if cached { Scorer::fallback() } else { Scorer::fallback_scalar() };
+            let mut bo = BayesianOptimizer::new(
+                space.clone(),
+                BoConfig { n_candidates: 128, n_init: 4, ..Default::default() },
+                Arc::new(scorer),
+            );
+            bo.set_surrogate_cache(cached);
+            bo.set_decay(6.0);
+            bo
+        };
+        let mut a = build(true);
+        let mut b = build(false);
+        assert_eq!(a.decay_half_life(), Some(6.0));
+        let mut ra = Pcg32::seeded(135);
+        let mut rb = Pcg32::seeded(135);
+        for i in 0..20usize {
+            let ca = a.propose(&mut ra);
+            let cb = b.propose(&mut rb);
+            assert_eq!(ca, cb, "decay-mode proposal {i} diverged");
+            let y = objective(&space, &ca);
+            a.observe(&ca, y);
+            b.observe(&cb, y);
+            // a mid-run window reset must stay in lockstep too
+            if i == 12 {
+                a.reset_window();
+                b.reset_window();
+            }
+        }
+        assert_eq!(ra.state(), rb.state(), "RNG streams desynced under decay");
+        let probe = space.config_at(33);
+        let (ma, mb) = (a.predict_mean(&probe, &mut ra), b.predict_mean(&probe, &mut rb));
+        assert_eq!(ma.unwrap().to_bits(), mb.unwrap().to_bits());
+    }
+
+    /// A window reset forgets the stale landscape: the init gate
+    /// re-opens (random re-seeding), incumbents come from post-reset
+    /// observations only, and pending lies planted before the reset
+    /// still amend their own (now untrusted) slots.
+    #[test]
+    fn window_reset_restarts_the_search_on_fresh_observations() {
+        let space = toy_space();
+        let mut bo = BayesianOptimizer::new(
+            space.clone(),
+            BoConfig { n_candidates: 128, n_init: 4, ..Default::default() },
+            Arc::new(Scorer::fallback()),
+        );
+        let mut rng = Pcg32::seeded(61);
+        for _ in 0..10 {
+            let c = bo.propose(&mut rng);
+            bo.observe(&c, objective(&space, &c));
+        }
+        let pre = bo.propose(&mut rng);
+        bo.observe_pending(99, &pre, 50.0);
+        assert_eq!(bo.windowed_len(), 11);
+        bo.reset_window();
+        assert_eq!(bo.window_start(), 11);
+        assert_eq!(bo.windowed_len(), 0);
+        assert_eq!(bo.observations(), 11, "reset must not discard recorded history");
+        // the pre-reset pending lie still lands in its own slot
+        assert!(bo.resolve_pending(99, 42.0));
+        assert_eq!(bo.objectives()[10], 42.0);
+        // post-reset proposals random-seed the fresh window, then the
+        // model path takes over once n_init windowed observations exist
+        for _ in 0..6 {
+            let c = bo.propose(&mut rng);
+            bo.observe(&c, objective(&space, &c) + 1000.0); // shifted world
+        }
+        assert!(bo.windowed_len() >= 4);
+        let probe = space.config_at(7);
+        let m = bo.predict_mean(&probe, &mut rng).unwrap();
+        assert!(m > 500.0, "post-reset surrogate still averages the old world: {m}");
+    }
+
+    /// The drift detector's residual source: `predict_mean_stale` reuses
+    /// the last fitted surrogate without fitting, without touching any
+    /// RNG stream, and without seeing observations recorded after that
+    /// fit.
+    #[test]
+    fn predict_mean_stale_reuses_the_last_fit_without_stream_draws() {
+        let space = toy_space();
+        let mut bo = BayesianOptimizer::new(
+            space.clone(),
+            BoConfig { n_candidates: 128, ..Default::default() },
+            Arc::new(Scorer::fallback()),
+        );
+        assert!(bo.predict_mean_stale(&space.config_at(3)).is_none(), "no fit yet");
+        assert!(bo.stale_scale().is_none());
+        let mut rng = Pcg32::seeded(71);
+        for _ in 0..10 {
+            let c = bo.propose(&mut rng);
+            bo.observe(&c, objective(&space, &c));
+        }
+        let c = bo.propose(&mut rng); // fits this epoch's surrogate
+        let probe = space.config_at(17);
+        let fresh = bo.predict_mean(&probe, &mut rng).unwrap();
+        let s0 = rng.state();
+        let stale = bo.predict_mean_stale(&probe).unwrap();
+        assert_eq!(rng.state(), s0, "stale predictor has no RNG stream to draw from");
+        assert_eq!(stale.to_bits(), fresh.to_bits(), "same epoch: stale == fresh");
+        assert!(bo.stale_scale().unwrap() > 0.0);
+        // new observations do NOT move the stale prediction (that is the
+        // point: predicted-before-observed)
+        bo.observe(&c, objective(&space, &c) + 500.0);
+        let still = bo.predict_mean_stale(&probe).unwrap();
+        assert_eq!(still.to_bits(), stale.to_bits(), "stale predictor refit behind our back");
     }
 }

@@ -30,10 +30,15 @@ pub fn max(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile, `q` in [0, 100]. Sorts a copy.
+///
+/// Total over all inputs: NaNs order after +inf (`f64::total_cmp`), so
+/// a NaN in the sample can surface in high percentiles but can never
+/// panic the caller — the hot paths feed this from fault-injected
+/// runtimes. Finite-only inputs behave exactly as before.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = (q / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -186,6 +191,19 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_tolerates_planted_nan() {
+        // regression: a NaN input used to panic the partial_cmp sort.
+        // NaNs order last, so low percentiles stay finite and correct
+        // while the top of the distribution reports the contamination.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // median transitively: all-but-one finite keeps its meaning
+        assert!((median(&[5.0, f64::NAN, 4.0]) - 5.0).abs() < 1e-12);
     }
 
     #[test]

@@ -122,6 +122,31 @@ fn par_float_accum_fires_in_the_core_but_not_in_the_blessed_scorer() {
 }
 
 // ---------------------------------------------------------------------------
+// nan-order
+
+#[test]
+fn nan_order_fires_on_partial_cmp_in_the_core() {
+    let diags = check_files(&[fx(
+        "ensemble/fixture.rs",
+        "fn f(xs: &mut [f64]) {\n    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n",
+    )]);
+    assert_eq!(hits(&diags), vec![(2, Rule::NanOrder)], "{}", render(&diags));
+    assert!(diags[0].message.contains("total_cmp"), "{}", render(&diags));
+}
+
+#[test]
+fn nan_order_spares_non_core_files_and_honors_allows() {
+    let body = "fn f(xs: &mut [f64]) {\n    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+    let outside = check_files(&[fx("util/fixture.rs", body)]);
+    assert!(outside.is_empty(), "{}", render(&outside));
+    let allowed = check_files(&[fx(
+        "search/fixture.rs",
+        "fn f(xs: &mut [f64]) {\n    // detlint: allow(nan-order) -- inputs pre-filtered to finite\n    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n",
+    )]);
+    assert!(allowed.is_empty(), "{}", render(&allowed));
+}
+
+// ---------------------------------------------------------------------------
 // daemon-unwrap
 
 #[test]

@@ -1,0 +1,271 @@
+//! Continuous-controller e2e tests (ISSUE 9 acceptance):
+//!
+//! * Controller trajectories on the drifting substrate are a pure
+//!   function of `(setup, seed)` — bit-identical across repeats.
+//! * The CUSUM detector fires at/after the planted phase shift, and the
+//!   fire is observable (stats counter + ring event).
+//! * The authority limit is never exceeded: across the whole event log,
+//!   consecutive dispatched configurations differ by at most
+//!   `max_delta` ordinal steps on at most one parameter.
+//! * Kill/resume in controller mode replays bit-identically through the
+//!   v3 checkpoint (CUSUM accumulators, drift resets, deployed config).
+//! * Attaching the stats sink perturbs nothing in controller mode.
+//! * The recovery duel: after the drift, the controller's best tracks
+//!   an oracle re-tuned from scratch on the post-drift landscape to
+//!   within 5%, while the stationary tuner — its incumbents and `fmin`
+//!   anchored to a world that no longer exists — does not.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use ytopt::apps::AppKind;
+use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
+use ytopt::drift::AuthorityLimiter;
+use ytopt::ensemble::checkpoint::config_from_key;
+use ytopt::metrics::Metric;
+use ytopt::obs::{ObsEvent, ObsSink};
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+
+fn run(setup: &TuneSetup) -> TuneResult {
+    autotune_with_scorer(setup, Arc::new(Scorer::fallback())).unwrap()
+}
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ytopt-drift-{tag}-{}.json", std::process::id()))
+}
+
+/// The host-timing-free digest of a run's history (the `ensemble_e2e`
+/// convention): everything that must be bit-identical across
+/// deterministic replays.
+fn history(r: &TuneResult) -> Vec<(usize, String, u64, u64, u64, bool, bool)> {
+    r.db.records
+        .iter()
+        .map(|x| {
+            (
+                x.id,
+                x.config_key.clone(),
+                x.objective.to_bits(),
+                x.measured.runtime_s.to_bits(),
+                x.best_so_far.to_bits(),
+                x.timed_out,
+                x.cancelled,
+            )
+        })
+        .collect()
+}
+
+/// A controller campaign on the drifting substrate: XSBench on Theta,
+/// landscape phase-shifts at `drift_at`.
+fn drift_setup(seed: u64, max_evals: usize, workers: usize, drift_at: usize) -> TuneSetup {
+    let mut s = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+    s.max_evals = max_evals;
+    s.wallclock_budget_s = 1e9;
+    s.seed = seed;
+    s.n_init = 4;
+    s.ensemble_workers = workers;
+    s.controller = true;
+    s.decay_half_life = 8.0;
+    s.drift_threshold = 3.0;
+    s.max_delta = 2;
+    s.drift_at_eval = Some(drift_at);
+    s.drift_magnitude = 3.0;
+    s
+}
+
+/// Best finite objective among evaluations measured on the drifted
+/// landscape (evaluation ids at or past the planted shift).
+fn best_from(r: &TuneResult, from_id: usize) -> f64 {
+    r.db.records
+        .iter()
+        .filter(|x| x.id >= from_id && !x.timed_out && !x.cancelled && x.objective.is_finite())
+        .map(|x| x.objective)
+        .fold(f64::INFINITY, f64::min)
+}
+
+#[test]
+fn controller_trajectories_are_deterministic_on_the_drifting_substrate() {
+    let s = drift_setup(101, 28, 3, 9);
+    let a = run(&s);
+    let b = run(&s);
+    assert_eq!(a.evaluations, 28);
+    assert_eq!(
+        history(&a),
+        history(&b),
+        "controller mode must stay a pure function of (setup, seed)"
+    );
+    assert_eq!(a.best_objective.to_bits(), b.best_objective.to_bits());
+}
+
+#[test]
+fn drift_fires_after_the_planted_shift_and_is_observable() {
+    let mut s = drift_setup(7, 40, 2, 12);
+    let sink = Arc::new(ObsSink::default());
+    s.obs = Some(sink.clone());
+    let r = run(&s);
+    assert_eq!(r.evaluations, 40);
+
+    let snap = sink.snapshot();
+    assert!(
+        snap.drift_detections >= 1,
+        "a 3x phase shift at eval 12 must trip the CUSUM (got {} fires)",
+        snap.drift_detections
+    );
+    let (events, _) = sink.tail(0);
+    let fires: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match &e.ev {
+            ObsEvent::DriftDetected { eval_id, .. } => Some(*eval_id),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        fires.len() as u64,
+        snap.drift_detections,
+        "counter and ring must agree on the number of fires"
+    );
+    assert!(
+        fires.iter().any(|&id| id >= 12),
+        "no fire at/after the planted shift (fires at {fires:?})"
+    );
+}
+
+/// The acceptance invariant: across the whole event log, no apply may
+/// exceed the actuation authority. Consecutive dispatched
+/// configurations (evaluation-id order is dispatch order) differ by at
+/// most `max_delta` ordinal steps summed over axes — which at
+/// `max_delta = 1` also pins "at most one parameter moved".
+#[test]
+fn no_apply_exceeds_the_authority_limit() {
+    let mut s = drift_setup(31, 36, 3, 12);
+    s.max_delta = 1;
+    let r = run(&s);
+
+    let mut trail: Vec<(usize, String)> =
+        r.db.records.iter().map(|x| (x.id, x.config_key.clone())).collect();
+    trail.sort();
+    assert_eq!(trail.len(), 36);
+    let configs: Vec<_> = trail.iter().map(|(_, k)| config_from_key(k).unwrap()).collect();
+    let mut moved = 0usize;
+    for w in configs.windows(2) {
+        let d = AuthorityLimiter::step_distance(&w[0], &w[1]);
+        assert!(
+            d <= 1,
+            "an apply moved {d} ordinal steps under max-delta 1: {:?} -> {:?}",
+            w[0].indices(),
+            w[1].indices()
+        );
+        moved += d;
+    }
+    assert!(moved >= 5, "the governed walk never went anywhere ({moved} total steps)");
+}
+
+#[test]
+fn controller_kill_resume_replays_bit_identically() {
+    let ckpt = tmpfile("resume");
+    let _ = std::fs::remove_file(&ckpt);
+    // kill past the drift point, so the checkpoint carries mid-stream
+    // CUSUM accumulators (and, with a 3x shift, a logged drift reset)
+    let s = drift_setup(11, 26, 2, 8);
+    let full = run(&s);
+    assert_eq!(full.evaluations, 26);
+
+    let mut killed = s.clone();
+    killed.checkpoint_path = Some(ckpt.clone());
+    killed.kill_after_evals = Some(16);
+    let partial = run(&killed);
+    assert_eq!(partial.evaluations, 16);
+
+    let mut resumed = s.clone();
+    resumed.checkpoint_path = Some(ckpt.clone());
+    let r = run(&resumed);
+    assert_eq!(r.evaluations, 26);
+    assert_eq!(
+        history(&full),
+        history(&r),
+        "controller kill/resume must replay the uninterrupted trajectory"
+    );
+    assert_eq!(full.best_objective.to_bits(), r.best_objective.to_bits());
+    std::fs::remove_file(&ckpt).unwrap();
+}
+
+#[test]
+fn stats_sink_is_bit_transparent_in_controller_mode() {
+    let mut s = drift_setup(13, 32, 4, 10);
+    let off = run(&s);
+    let sink = Arc::new(ObsSink::default());
+    s.obs = Some(sink.clone());
+    let on = run(&s);
+    assert_eq!(
+        history(&off),
+        history(&on),
+        "attaching the stats sink perturbed a controller trajectory"
+    );
+    assert_eq!(off.best_objective.to_bits(), on.best_objective.to_bits());
+    let snap = sink.snapshot();
+    assert_eq!(snap.completions, 32);
+    assert!(snap.drift_detections >= 1, "the watched run must also have seen the drift");
+}
+
+/// The recovery duel. One landscape, one seed, three tuners:
+///
+/// * `oracle` — a fresh stationary tuner whose entire budget lives on
+///   the post-drift landscape (`drift_at = 0`): the re-tuned optimum
+///   the acceptance criterion measures against.
+/// * `controller` — tunes through the shift; must land within 5% of
+///   the oracle on post-drift evaluations.
+/// * `stationary` — tunes through the shift with the controller off;
+///   its surrogate averages two worlds and its incumbents/`fmin` stay
+///   anchored to pre-drift measurements nothing can match any more, so
+///   it must NOT get within 5%.
+#[test]
+fn controller_recovers_from_drift_where_the_stationary_tuner_does_not() {
+    const DRIFT_AT: usize = 24;
+    const EVALS: usize = 96;
+
+    let mut ctl = drift_setup(4242, EVALS, 2, DRIFT_AT);
+    ctl.drift_magnitude = 4.0;
+    ctl.drift_threshold = 4.0;
+    ctl.decay_half_life = 6.0;
+    // authority still moves one parameter per apply, but far enough to
+    // correct a whole axis — re-tuning is governed, not hobbled
+    ctl.max_delta = 12;
+    let sink = Arc::new(ObsSink::default());
+    ctl.obs = Some(sink.clone());
+    let ctl_run = run(&ctl);
+
+    let mut stationary = ctl.clone();
+    stationary.controller = false;
+    stationary.obs = None;
+    let stat_run = run(&stationary);
+
+    let mut oracle = ctl.clone();
+    oracle.controller = false;
+    oracle.obs = None;
+    oracle.max_evals = EVALS - DRIFT_AT;
+    oracle.drift_at_eval = Some(0);
+    let oracle_run = run(&oracle);
+
+    assert!(
+        sink.snapshot().drift_detections >= 1,
+        "the controller never noticed a 4x phase shift"
+    );
+
+    let oracle_best = best_from(&oracle_run, 0);
+    let ctl_best = best_from(&ctl_run, DRIFT_AT);
+    let stat_best = best_from(&stat_run, DRIFT_AT);
+    assert!(oracle_best.is_finite() && oracle_best > 0.0, "oracle found nothing");
+    assert!(
+        ctl_best <= 1.05 * oracle_best,
+        "controller failed to re-tune: post-drift best {ctl_best} vs oracle {oracle_best}"
+    );
+    assert!(
+        stat_best > 1.05 * oracle_best,
+        "the stationary tuner recovered anyway ({stat_best} vs oracle {oracle_best}) — \
+         the duel no longer separates the modes"
+    );
+    assert!(
+        ctl_best < stat_best,
+        "controller ({ctl_best}) must beat the stationary tuner ({stat_best}) after the shift"
+    );
+}
