@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
                 checkpoint_dir: None,
                 warm_start_elites: 8,
             },
+            chaos: None,
         },
         scorer,
     )?;

@@ -19,6 +19,11 @@
 //!                controller off vs on; emits BENCH_drift.json and
 //!                (with --gate) enforces the near-free controller
 //!                overhead bound. `--drift-only` runs just this.
+//!   chaos duel — the identical continuous-manager campaign with the
+//!                failpoint plan absent vs armed-but-silent (every
+//!                rate zero); emits BENCH_chaos.json and (with --gate)
+//!                enforces the zero-cost-when-disabled bound.
+//!                `--chaos-only` runs just this.
 //!   substrate  — space sampling/encoding throughput
 //!   ablations  — kappa sweep, surrogate family, sequential vs parallel
 //!                evaluation, BO vs random vs grid
@@ -433,6 +438,85 @@ fn drift_duel(quick: bool, gate: bool) {
     }
 }
 
+/// One continuous-manager campaign with the chaos failpoint layer
+/// absent (`chaos: None`, the production default) or armed but silent
+/// (a plan with every site at rate zero — the pointer is threaded
+/// through every I/O boundary, but no fault ever fires). Min-of-`reps`
+/// wall time divided by the eval count: seconds per applied completion.
+fn chaos_campaign_s(armed: bool, evals: usize, reps: usize) -> f64 {
+    let scorer = Arc::new(Scorer::fallback());
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let mut s = TuneSetup::new(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+        s.max_evals = evals;
+        s.wallclock_budget_s = 1e9;
+        s.seed = 83;
+        s.n_init = 4;
+        s.ensemble_workers = 4;
+        if armed {
+            s.chaos = Some(Arc::new(ytopt::chaos::FaultPlan::new(123)));
+        }
+        let t = Instant::now();
+        let r = autotune_with_scorer(&s, scorer.clone()).unwrap();
+        let dt = t.elapsed().as_secs_f64();
+        std::hint::black_box(&r);
+        best = best.min(dt);
+    }
+    best / evals as f64
+}
+
+/// Chaos duel: the same seed-83 continuous campaign with the failpoint
+/// plan absent vs armed-but-silent. The disabled fast path is one
+/// pointer test per site consult, so the armed plan must be free to
+/// within measurement noise. Emits `BENCH_chaos.json`; with `gate`,
+/// enforces the ISSUE-10 acceptance bound (chaos-armed <= 1.01x
+/// chaos-off per completion).
+fn chaos_duel(quick: bool, gate: bool) {
+    section("chaos duel: failpoint plan absent vs armed-but-silent (continuous manager)");
+    let evals = if quick { 24 } else { 64 };
+    let reps = if quick { 2 } else { 5 };
+    let off_s = chaos_campaign_s(false, evals, reps);
+    let on_s = chaos_campaign_s(true, evals, reps);
+    let overhead = on_s / off_s - 1.0;
+    println!(
+        "chaos-off {:.3} ms/completion | chaos-armed {:.3} ms/completion | overhead {:+.2}%",
+        off_s * 1e3,
+        on_s * 1e3,
+        overhead * 100.0
+    );
+
+    let doc = Json::obj(vec![
+        (
+            "shape",
+            Json::obj(vec![
+                ("evals", (evals as u64).into()),
+                ("workers", 4u64.into()),
+                ("reps", (reps as u64).into()),
+            ]),
+        ),
+        ("chaos_off_s", Json::Num(off_s)),
+        ("chaos_armed_s", Json::Num(on_s)),
+        ("overhead_frac", Json::Num(overhead)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_chaos.json");
+    std::fs::write(&path, doc.to_string()).expect("writing BENCH_chaos.json");
+    println!("wrote {}", path.display());
+
+    if gate {
+        assert!(
+            on_s <= 1.01 * off_s,
+            "CI gate: an armed-but-silent fault plan must cost <= 1.01x the chaos-off \
+             campaign per completion (got {:.3} ms vs {:.3} ms)",
+            on_s * 1e3,
+            off_s * 1e3
+        );
+        println!(
+            "chaos gate passed: {:+.2}% overhead with the silent plan armed",
+            overhead * 100.0
+        );
+    }
+}
+
 fn substrate(quick: bool) {
     section("substrate: space sampling / encoding");
     let samples = if quick { 10 } else { 30 };
@@ -529,6 +613,7 @@ fn main() {
     let scorer_only = args.iter().any(|a| a == "--scorer-only");
     let stats_only = args.iter().any(|a| a == "--stats-only");
     let drift_only = args.iter().any(|a| a == "--drift-only");
+    let chaos_only = args.iter().any(|a| a == "--chaos-only");
     if scorer_only {
         scorer_duel(quick, gate);
         return;
@@ -541,6 +626,10 @@ fn main() {
         drift_duel(quick, gate);
         return;
     }
+    if chaos_only {
+        chaos_duel(quick, gate);
+        return;
+    }
     let scorer = Arc::new(Scorer::auto(&ytopt::runtime::default_artifacts_dir()));
     println!(
         "scorer backend: {}",
@@ -551,6 +640,7 @@ fn main() {
     scorer_duel(quick, gate);
     stats_duel(quick, gate);
     drift_duel(quick, gate);
+    chaos_duel(quick, gate);
     substrate(quick);
     ablations(&scorer, quick);
 }

@@ -1,0 +1,251 @@
+//! The blessed atomic file-install helper — the single module in the
+//! deterministic core allowed to call `std::fs::write` / `fs::rename`
+//! directly (enforced by the `io-atomic` lint rule).
+//!
+//! Every durable install in the core flows through here so the
+//! discipline can never drift per call site:
+//!
+//! 1. write a sibling `<name>.tmp`,
+//! 2. read it back and compare — a torn write (crash, ENOSPC, injected
+//!    [`Fault::TornWrite`]) is caught *before* it can be renamed over
+//!    good data,
+//! 3. rename over the final name (atomic on POSIX),
+//!
+//! all driven through the plan's retry budget with deterministic
+//! backoff. The write step doubles as the chaos failpoint for the file
+//! sites ([`Site::CkptWrite`] / [`Site::HistoryWrite`] /
+//! [`Site::StatsWrite`]).
+//!
+//! Orphan recovery: a crash between steps 1 and 3 leaves a `*.tmp`
+//! sibling behind. [`clean_orphan_tmp`] (single-writer artifacts:
+//! checkpoints, manifests, stats snapshots) and [`sweep_orphan_tmps`]
+//! (multi-writer stores: history) detect, warn about, and remove them
+//! on the next open/load instead of leaking them forever or mistaking
+//! them for corruption.
+
+use std::path::{Path, PathBuf};
+
+use super::{with_retries, Fault, FaultPlan, Site};
+use anyhow::{Context, Result};
+
+/// Sibling temp name for `path`: `<file-name>.tmp` in the same
+/// directory (same filesystem, so the final rename stays atomic).
+pub fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Write `bytes` to `path`, injecting the plan's file faults: a
+/// [`Fault::TornWrite`] lands a prefix of the bytes and reports
+/// success (the audit step exists to catch exactly this); a
+/// [`Fault::Enospc`] lands a half-file and fails loudly.
+pub fn write_file(path: &Path, bytes: &[u8], plan: Option<&FaultPlan>, site: Site) -> Result<()> {
+    match plan.and_then(|p| p.fire(site)) {
+        Some(Fault::TornWrite { frac }) => {
+            let keep = ((bytes.len() as f64 * frac) as usize).min(bytes.len().saturating_sub(1));
+            std::fs::write(path, &bytes[..keep])
+                .with_context(|| format!("writing {}", path.display()))?;
+            log::warn!(
+                "chaos[{}]: torn write injected at {} ({keep}/{} bytes)",
+                site.name(),
+                path.display(),
+                bytes.len()
+            );
+            Ok(())
+        }
+        Some(Fault::Enospc) => {
+            let _ = std::fs::write(path, &bytes[..bytes.len() / 2]);
+            log::warn!("chaos[{}]: ENOSPC injected at {}", site.name(), path.display());
+            anyhow::bail!(
+                "no space left on device (chaos-injected ENOSPC at `{}`)",
+                site.name()
+            )
+        }
+        // socket/worker faults never reach the file helper
+        Some(_) | None => std::fs::write(path, bytes)
+            .with_context(|| format!("writing {}", path.display())),
+    }
+}
+
+/// Atomically install `bytes` at `path` (write sibling temp, audit,
+/// rename), retrying transient failures — injected or real — through
+/// the plan's budget with deterministic backoff. On exhaustion the
+/// error chain carries a typed [`super::RetryExhausted`] marker and no
+/// temp file is left behind.
+pub fn install_atomic(
+    path: &Path,
+    bytes: &[u8],
+    plan: Option<&FaultPlan>,
+    site: Site,
+) -> Result<()> {
+    let tmp = tmp_sibling(path);
+    let out = with_retries(plan, site.name(), |_attempt| {
+        write_file(&tmp, bytes, plan, site)?;
+        // audit before install: a torn temp must never be renamed over
+        // good data
+        let back = std::fs::read(&tmp)
+            .with_context(|| format!("auditing temp file {}", tmp.display()))?;
+        anyhow::ensure!(
+            back == bytes,
+            "torn write detected at {} ({} of {} bytes landed)",
+            tmp.display(),
+            back.len(),
+            bytes.len()
+        );
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("installing {}", path.display()))?;
+        Ok(())
+    });
+    if out.is_err() {
+        // never leak the torn temp on final failure
+        let _ = std::fs::remove_file(&tmp);
+    }
+    out.with_context(|| format!("atomic install of {}", path.display()))
+}
+
+/// Remove the orphaned temp sibling of a single-writer artifact
+/// (checkpoint, federation manifest, stats snapshot) left by a crash
+/// mid-install. Returns true when an orphan was found and removed.
+/// Safe because exactly one writer ever owns such a path — by the time
+/// a loader runs, any existing temp is a dead write, not a live one.
+pub fn clean_orphan_tmp(path: &Path) -> bool {
+    let tmp = tmp_sibling(path);
+    if tmp.exists() {
+        log::warn!(
+            "removing orphaned temp file {} (crash mid-install; the installed {} is \
+             authoritative)",
+            tmp.display(),
+            path.display()
+        );
+        std::fs::remove_file(&tmp).is_ok()
+    } else {
+        false
+    }
+}
+
+/// Sweep a multi-writer store directory for orphaned `*.tmp` files.
+/// Temp names in such stores embed their writer's process id
+/// (`<stem>.<pid>-<seq>.tmp`); a temp belonging to another process is
+/// a dead write from a crashed writer and is removed with a warning,
+/// while temps of the *current* process are left alone (a sibling
+/// thread may still be mid-append). Returns how many were removed.
+pub fn sweep_orphan_tmps(dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    let me = std::process::id();
+    let mut removed = 0;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if !name.ends_with(".tmp") || !path.is_file() {
+            continue;
+        }
+        // `<stem>.<pid>-<seq>.tmp` — an unparseable name is not one of
+        // ours getting written right now, so it is safe to sweep
+        let owner: Option<u32> = name
+            .trim_end_matches(".tmp")
+            .rsplit('.')
+            .next()
+            .and_then(|tail| tail.split('-').next())
+            .and_then(|pid| pid.parse().ok());
+        if owner == Some(me) {
+            continue;
+        }
+        log::warn!(
+            "sweeping orphaned temp file {} (crashed writer{})",
+            path.display(),
+            owner.map(|p| format!(", pid {p}")).unwrap_or_default()
+        );
+        if std::fs::remove_file(&path).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ytopt-fsx-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn install_atomic_lands_bytes_and_no_temp() {
+        let dir = tmpdir("plain");
+        let path = dir.join("artifact.json");
+        install_atomic(&path, b"{\"ok\":true}", None, Site::CkptWrite).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"ok\":true}");
+        assert!(!tmp_sibling(&path).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Torn writes and ENOSPC both retry away once the schedule clears;
+    /// the installed bytes are exact and no temp litter survives.
+    #[test]
+    fn injected_file_faults_retry_away() {
+        let dir = tmpdir("faults");
+        for seed in 0..6u64 {
+            let plan = FaultPlan::parse(&format!(
+                "seed={seed};ckpt-write=1x3;retries=5;base-ms=0;cap-ms=0"
+            ))
+            .unwrap();
+            let path = dir.join(format!("ck-{seed}.json"));
+            install_atomic(&path, b"payload-bytes", Some(&plan), Site::CkptWrite).unwrap();
+            assert_eq!(std::fs::read(&path).unwrap(), b"payload-bytes", "seed {seed}");
+            assert!(!tmp_sibling(&path).exists(), "seed {seed}");
+            assert_eq!(plan.fired(Site::CkptWrite), 3, "seed {seed}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn exhausted_budget_is_typed_and_leaves_no_temp() {
+        let dir = tmpdir("exhaust");
+        let plan =
+            FaultPlan::parse("seed=3;ckpt-write=1;retries=2;base-ms=0;cap-ms=0").unwrap();
+        let path = dir.join("doomed.json");
+        let err =
+            install_atomic(&path, b"payload", Some(&plan), Site::CkptWrite).unwrap_err();
+        assert!(super::super::is_retry_exhausted(&err), "{err:#}");
+        assert!(!path.exists());
+        assert!(!tmp_sibling(&path).exists(), "failed install leaked its temp");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn orphan_tmp_cleanup_single_writer() {
+        let dir = tmpdir("orphan");
+        let path = dir.join("campaign-1.json");
+        std::fs::write(tmp_sibling(&path), b"torn half-writ").unwrap();
+        assert!(clean_orphan_tmp(&path));
+        assert!(!tmp_sibling(&path).exists());
+        assert!(!clean_orphan_tmp(&path), "second sweep finds nothing");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn orphan_sweep_spares_the_current_process() {
+        let dir = tmpdir("sweep");
+        // a dead writer's temp (pid 1 is never us) and a foreign one
+        std::fs::write(dir.join("run-abc.1-0.tmp"), b"dead").unwrap();
+        std::fs::write(dir.join("stray.tmp"), b"???").unwrap();
+        // our own live temp must survive
+        let mine = dir.join(format!("run-def.{}-3.tmp", std::process::id()));
+        std::fs::write(&mine, b"live").unwrap();
+        // and final-name records are untouched
+        std::fs::write(dir.join("run-abc.json"), b"{}").unwrap();
+        assert_eq!(sweep_orphan_tmps(&dir), 2);
+        assert!(mine.exists(), "swept a live temp of the current process");
+        assert!(dir.join("run-abc.json").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,540 @@
+//! Deterministic chaos: seeded failpoints at the system's I/O
+//! boundaries, plus the retry machinery that lets the rest of the stack
+//! survive what the failpoints inject.
+//!
+//! A [`FaultPlan`] is a schedule of injected faults keyed by `(seed,
+//! site, occurrence)`: the `occurrence`-th time a named [`Site`] asks
+//! the plan whether to fail, the answer is a pure function of the
+//! plan's seed — independent of wall clock, thread identity, or any
+//! other ambient state. A disabled plan is `None` everywhere it is
+//! threaded (`Option<Arc<FaultPlan>>`), so the production fast path is
+//! one pointer test and no allocation; like the observability sink, the
+//! plan is deliberately *outside* the checkpoint fingerprint (injected
+//! faults either get retried away or end the campaign in `Degraded` —
+//! they never change what a completed record means).
+//!
+//! The supervision half lives next door: [`Backoff`] computes capped
+//! exponential delays with seeded jitter (deterministic: same seed and
+//! attempt, same delay), [`with_retries`] drives an I/O closure through
+//! the retry budget, and [`RetryExhausted`] is the typed marker the
+//! service layer downcasts to turn an exhausted budget into a terminal
+//! `Degraded` campaign state instead of a panic or a hang. The blessed
+//! atomic file-install helper — the only module in the deterministic
+//! core allowed to call `std::fs::write`/`fs::rename` directly (lint
+//! rule `io-atomic`) — is [`fsx`].
+
+pub mod fsx;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::Pcg32;
+use anyhow::{Context, Result};
+
+/// Named failpoints. Each site owns an occurrence counter inside the
+/// plan, so two sites never perturb each other's schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Checkpoint temp-file install (ensemble/federation checkpoints
+    /// and the federation manifest).
+    CkptWrite,
+    /// `HistoryStore::append`'s temp-file write.
+    HistoryWrite,
+    /// The CLI's stats-snapshot install.
+    StatsWrite,
+    /// Daemon-side socket reads (connection reset, stalled peer).
+    SockRead,
+    /// Daemon-side socket writes (torn frame, reset, stall).
+    SockWrite,
+    /// Worker threads: hard crash (panic), not just a failed eval.
+    WorkerCrash,
+}
+
+impl Site {
+    pub const ALL: [Site; 6] = [
+        Site::CkptWrite,
+        Site::HistoryWrite,
+        Site::StatsWrite,
+        Site::SockRead,
+        Site::SockWrite,
+        Site::WorkerCrash,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Site::CkptWrite => "ckpt-write",
+            Site::HistoryWrite => "history-write",
+            Site::StatsWrite => "stats-write",
+            Site::SockRead => "sock-read",
+            Site::SockWrite => "sock-write",
+            Site::WorkerCrash => "worker-crash",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Site> {
+        Site::ALL.iter().copied().find(|site| site.name() == s)
+    }
+}
+
+/// One injected fault, parameterized by the occurrence's own RNG draw.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Silent short write: only `frac` of the bytes land, no error is
+    /// reported — the torn-temp-file case a post-write audit must catch.
+    TornWrite { frac: f64 },
+    /// The write fails loudly (no space left on device), possibly after
+    /// landing a partial file.
+    Enospc,
+    /// The peer connection is reset immediately.
+    SockReset,
+    /// The peer stalls for `ms` before the operation proceeds.
+    SockStall { ms: u64 },
+    /// A frame is torn mid-stream: `frac` of its bytes are written,
+    /// then the connection resets (small fractions tear mid-header,
+    /// larger ones mid-payload).
+    SockTorn { frac: f64 },
+    /// The worker thread panics outright.
+    WorkerCrash,
+}
+
+/// Per-site schedule knobs.
+#[derive(Debug, Clone, Copy)]
+struct SiteCfg {
+    /// Probability that a given occurrence fires, rolled from
+    /// `(seed, site, occurrence)`.
+    rate: f64,
+    /// Stop injecting after this many fires (0 = unlimited). This is
+    /// how "the fault clears" is expressed deterministically.
+    max_fires: u64,
+}
+
+const SITE_OFF: SiteCfg = SiteCfg { rate: 0.0, max_fires: 0 };
+
+/// Default retry budget for retryable I/O (attempts after the first).
+pub const DEFAULT_RETRY_BUDGET: u32 = 5;
+/// Default backoff base / cap in milliseconds.
+pub const DEFAULT_BACKOFF_BASE_MS: u64 = 5;
+pub const DEFAULT_BACKOFF_CAP_MS: u64 = 200;
+
+/// A seeded failpoint schedule. Shared per campaign via
+/// `Option<Arc<FaultPlan>>`; cloning the `TuneSetup` shares the plan
+/// (and its occurrence counters), so one campaign sees one schedule.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    sites: [SiteCfg; Site::ALL.len()],
+    occ: [AtomicU64; Site::ALL.len()],
+    fired: [AtomicU64; Site::ALL.len()],
+    /// Retry budget the recovery paths run under (attempts after the
+    /// first try).
+    pub retry_budget: u32,
+    pub backoff_base_ms: u64,
+    pub backoff_cap_ms: u64,
+}
+
+impl FaultPlan {
+    /// A plan with every site disabled.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            sites: [SITE_OFF; Site::ALL.len()],
+            occ: Default::default(),
+            fired: Default::default(),
+            retry_budget: DEFAULT_RETRY_BUDGET,
+            backoff_base_ms: DEFAULT_BACKOFF_BASE_MS,
+            backoff_cap_ms: DEFAULT_BACKOFF_CAP_MS,
+        }
+    }
+
+    /// Arm one site: fire with probability `rate` per occurrence, at
+    /// most `max_fires` times (0 = unlimited).
+    pub fn with_site(mut self, site: Site, rate: f64, max_fires: u64) -> FaultPlan {
+        self.sites[site as usize] = SiteCfg { rate: rate.clamp(0.0, 1.0), max_fires };
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// How many times `site` has actually fired so far.
+    pub fn fired(&self, site: Site) -> u64 {
+        self.fired[site as usize].load(Ordering::Relaxed)
+    }
+
+    /// How many times `site` has been consulted so far.
+    pub fn occurrences(&self, site: Site) -> u64 {
+        self.occ[site as usize].load(Ordering::Relaxed)
+    }
+
+    /// Ask the plan whether this occurrence of `site` fails, and how.
+    /// The decision is a pure function of `(seed, site, occurrence)`;
+    /// the occurrence index is this call's position in the site's own
+    /// sequence.
+    pub fn fire(&self, site: Site) -> Option<Fault> {
+        let idx = site as usize;
+        let cfg = self.sites[idx];
+        if cfg.rate <= 0.0 {
+            return None;
+        }
+        let occ = self.occ[idx].fetch_add(1, Ordering::Relaxed);
+        if cfg.max_fires > 0 && self.fired[idx].load(Ordering::Relaxed) >= cfg.max_fires {
+            return None;
+        }
+        let mut rng = Pcg32::new(
+            self.seed ^ (idx as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            occ ^ 0xc4a0_55aa,
+        );
+        if rng.f64() >= cfg.rate {
+            return None;
+        }
+        self.fired[idx].fetch_add(1, Ordering::Relaxed);
+        Some(match site {
+            Site::CkptWrite | Site::HistoryWrite | Site::StatsWrite => {
+                if rng.bool(0.5) {
+                    Fault::TornWrite { frac: rng.f64() }
+                } else {
+                    Fault::Enospc
+                }
+            }
+            Site::SockRead => {
+                if rng.bool(0.5) {
+                    Fault::SockReset
+                } else {
+                    Fault::SockStall { ms: 1 + rng.gen_range(30) }
+                }
+            }
+            Site::SockWrite => match rng.gen_range(3) {
+                0 => Fault::SockTorn { frac: rng.f64() },
+                1 => Fault::SockReset,
+                _ => Fault::SockStall { ms: 1 + rng.gen_range(30) },
+            },
+            Site::WorkerCrash => Fault::WorkerCrash,
+        })
+    }
+
+    /// Parse a plan from its spec string: `;`-separated entries of
+    /// `seed=N`, `retries=N`, `base-ms=N`, `cap-ms=N`, and
+    /// `<site>=<rate>[xN]` (rate in `[0,1]`, optional `xN` fire cap) —
+    /// e.g. `seed=42;ckpt-write=1.0x2;sock-read=0.25;worker-crash=0.3`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut entries: Vec<(&str, &str)> = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .with_context(|| format!("chaos spec entry `{part}` is not `key=value`"))?;
+            if key.trim() == "seed" {
+                seed = val
+                    .trim()
+                    .parse::<u64>()
+                    .with_context(|| format!("chaos seed `{val}` is not a u64"))?;
+            } else {
+                entries.push((key.trim(), val.trim()));
+            }
+        }
+        let mut plan = FaultPlan::new(seed);
+        for (key, val) in entries {
+            match key {
+                "retries" => {
+                    plan.retry_budget = val
+                        .parse::<u32>()
+                        .with_context(|| format!("chaos retries `{val}` is not a u32"))?;
+                }
+                "base-ms" => {
+                    plan.backoff_base_ms = val
+                        .parse::<u64>()
+                        .with_context(|| format!("chaos base-ms `{val}` is not a u64"))?;
+                }
+                "cap-ms" => {
+                    plan.backoff_cap_ms = val
+                        .parse::<u64>()
+                        .with_context(|| format!("chaos cap-ms `{val}` is not a u64"))?;
+                }
+                _ => {
+                    let site = Site::parse(key).with_context(|| {
+                        let names: Vec<&str> = Site::ALL.iter().map(Site::name).collect();
+                        format!("unknown chaos site `{key}` (sites: {})", names.join(", "))
+                    })?;
+                    let (rate_s, fires_s) = match val.split_once('x') {
+                        Some((r, f)) => (r, Some(f)),
+                        None => (val, None),
+                    };
+                    let rate = rate_s
+                        .parse::<f64>()
+                        .with_context(|| format!("chaos rate `{rate_s}` is not a number"))?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&rate),
+                        "chaos rate for `{key}` must be in [0,1] (got {rate})"
+                    );
+                    let max_fires = match fires_s {
+                        Some(f) => f
+                            .parse::<u64>()
+                            .with_context(|| format!("chaos fire cap `{f}` is not a u64"))?,
+                        None => 0,
+                    };
+                    plan = plan.with_site(site, rate, max_fires);
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Round-trip spec string (fresh counters on re-parse).
+    pub fn spec(&self) -> String {
+        let mut parts = vec![format!("seed={}", self.seed)];
+        for site in Site::ALL {
+            let cfg = self.sites[site as usize];
+            if cfg.rate > 0.0 {
+                if cfg.max_fires > 0 {
+                    parts.push(format!("{}={}x{}", site.name(), cfg.rate, cfg.max_fires));
+                } else {
+                    parts.push(format!("{}={}", site.name(), cfg.rate));
+                }
+            }
+        }
+        if self.retry_budget != DEFAULT_RETRY_BUDGET {
+            parts.push(format!("retries={}", self.retry_budget));
+        }
+        if self.backoff_base_ms != DEFAULT_BACKOFF_BASE_MS {
+            parts.push(format!("base-ms={}", self.backoff_base_ms));
+        }
+        if self.backoff_cap_ms != DEFAULT_BACKOFF_CAP_MS {
+            parts.push(format!("cap-ms={}", self.backoff_cap_ms));
+        }
+        parts.join(";")
+    }
+
+    /// The deterministic backoff schedule retryable I/O under this plan
+    /// sleeps on.
+    pub fn backoff(&self) -> Backoff {
+        Backoff { base_ms: self.backoff_base_ms, cap_ms: self.backoff_cap_ms, seed: self.seed }
+    }
+}
+
+/// Capped exponential backoff with seeded jitter. `delay_ms(attempt)`
+/// is a pure function of `(seed, attempt)`: base·2^attempt plus up to
+/// 50% jitter, capped — deterministic, so a replayed recovery sleeps
+/// the same schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct Backoff {
+    pub base_ms: u64,
+    pub cap_ms: u64,
+    pub seed: u64,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff { base_ms: DEFAULT_BACKOFF_BASE_MS, cap_ms: DEFAULT_BACKOFF_CAP_MS, seed: 0 }
+    }
+}
+
+impl Backoff {
+    pub fn new(base_ms: u64, cap_ms: u64, seed: u64) -> Backoff {
+        Backoff { base_ms, cap_ms, seed }
+    }
+
+    /// Delay before retry `attempt` (0-based), in milliseconds.
+    pub fn delay_ms(&self, attempt: u32) -> u64 {
+        let exp = self.base_ms.saturating_mul(1u64 << attempt.min(16));
+        let mut rng = Pcg32::new(self.seed ^ 0xbac0_ffee, attempt as u64);
+        let jitter = if exp > 0 { rng.gen_range(exp / 2 + 1) } else { 0 };
+        (exp + jitter).min(self.cap_ms)
+    }
+
+    /// Sleep out the delay for retry `attempt`.
+    pub fn sleep(&self, attempt: u32) {
+        let ms = self.delay_ms(attempt);
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+/// Typed marker for an exhausted retry budget. The service layer
+/// downcasts for it (`err.is::<RetryExhausted>()` sees through anyhow
+/// context layers) and turns the campaign terminal `Degraded` — event
+/// streamed to watchers, daemon stays up — instead of panicking or
+/// wedging.
+#[derive(Debug, Clone)]
+pub struct RetryExhausted {
+    /// The failpoint site (or operation label) that kept failing.
+    pub site: String,
+    /// Total attempts made (first try + retries).
+    pub attempts: u32,
+}
+
+impl std::fmt::Display for RetryExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "retry budget exhausted at `{}` after {} attempts", self.site, self.attempts)
+    }
+}
+
+impl std::error::Error for RetryExhausted {}
+
+/// Drive `op` through the plan's retry budget with deterministic
+/// backoff: attempt 0 runs immediately, each subsequent attempt sleeps
+/// the backoff schedule first. On budget exhaustion the last error is
+/// wrapped in a [`RetryExhausted`] chain.
+pub fn with_retries<T>(
+    plan: Option<&FaultPlan>,
+    label: &str,
+    mut op: impl FnMut(u32) -> Result<T>,
+) -> Result<T> {
+    let budget = plan.map(|p| p.retry_budget).unwrap_or(DEFAULT_RETRY_BUDGET);
+    let backoff = plan.map(|p| p.backoff()).unwrap_or_default();
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..=budget {
+        if attempt > 0 {
+            backoff.sleep(attempt - 1);
+        }
+        match op(attempt) {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                log::warn!("`{label}` attempt {} failed: {e:#}", attempt + 1);
+                last = Some(e);
+            }
+        }
+    }
+    let exhausted = RetryExhausted { site: label.to_string(), attempts: budget + 1 };
+    match last {
+        Some(e) => Err(e.context(exhausted)),
+        None => Err(exhausted.into()),
+    }
+}
+
+/// Does this error chain contain an exhausted retry budget? (The
+/// signal the scheduler maps to `Degraded` rather than `Failed`.)
+pub fn is_retry_exhausted(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.is::<RetryExhausted>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sites_never_fire_and_cost_no_occurrences_roll() {
+        let plan = FaultPlan::new(7);
+        for _ in 0..100 {
+            assert_eq!(plan.fire(Site::CkptWrite), None);
+        }
+        // disabled sites short-circuit before the counter
+        assert_eq!(plan.occurrences(Site::CkptWrite), 0);
+        assert_eq!(plan.fired(Site::CkptWrite), 0);
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_seed_site_occurrence() {
+        let mk = || FaultPlan::new(42).with_site(Site::HistoryWrite, 0.5, 0);
+        let a: Vec<Option<Fault>> = {
+            let p = mk();
+            (0..64).map(|_| p.fire(Site::HistoryWrite)).collect()
+        };
+        let b: Vec<Option<Fault>> = {
+            let p = mk();
+            (0..64).map(|_| p.fire(Site::HistoryWrite)).collect()
+        };
+        assert_eq!(a, b);
+        assert!(a.iter().any(Option::is_some), "rate 0.5 over 64 occurrences must fire");
+        assert!(a.iter().any(Option::is_none));
+        // a different seed reshuffles the schedule
+        let c: Vec<Option<Fault>> = {
+            let p = FaultPlan::new(43).with_site(Site::HistoryWrite, 0.5, 0);
+            (0..64).map(|_| p.fire(Site::HistoryWrite)).collect()
+        };
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sites_have_independent_schedules() {
+        let p = FaultPlan::new(9)
+            .with_site(Site::CkptWrite, 1.0, 0)
+            .with_site(Site::SockRead, 0.0, 0);
+        for _ in 0..8 {
+            assert!(p.fire(Site::CkptWrite).is_some());
+            assert!(p.fire(Site::SockRead).is_none());
+        }
+        assert_eq!(p.occurrences(Site::CkptWrite), 8);
+        assert_eq!(p.fired(Site::CkptWrite), 8);
+    }
+
+    #[test]
+    fn fire_cap_clears_the_fault_deterministically() {
+        let p = FaultPlan::new(1).with_site(Site::CkptWrite, 1.0, 2);
+        assert!(p.fire(Site::CkptWrite).is_some());
+        assert!(p.fire(Site::CkptWrite).is_some());
+        for _ in 0..16 {
+            assert_eq!(p.fire(Site::CkptWrite), None, "the fault must clear after 2 fires");
+        }
+        assert_eq!(p.fired(Site::CkptWrite), 2);
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        let spec = "seed=42;ckpt-write=1x2;sock-read=0.25;worker-crash=0.3;retries=3;base-ms=1;cap-ms=20";
+        let p = FaultPlan::parse(spec).unwrap();
+        assert_eq!(p.seed(), 42);
+        assert_eq!(p.retry_budget, 3);
+        assert_eq!(p.backoff_base_ms, 1);
+        assert_eq!(p.backoff_cap_ms, 20);
+        let again = FaultPlan::parse(&p.spec()).unwrap();
+        assert_eq!(again.spec(), p.spec());
+        // the re-parsed plan replays the same schedule
+        let s1: Vec<Option<Fault>> = (0..32).map(|_| p.fire(Site::SockRead)).collect();
+        let s2: Vec<Option<Fault>> = (0..32).map(|_| again.fire(Site::SockRead)).collect();
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn spec_rejects_malformed_entries() {
+        assert!(FaultPlan::parse("bogus-site=0.5").is_err());
+        assert!(FaultPlan::parse("ckpt-write=1.5").is_err());
+        assert!(FaultPlan::parse("ckpt-write").is_err());
+        assert!(FaultPlan::parse("seed=notanumber").is_err());
+        assert!(FaultPlan::parse("ckpt-write=0.5xfoo").is_err());
+        // empty spec is a valid (fully disabled) plan
+        assert!(FaultPlan::parse("").is_ok());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_monotone_in_expectation() {
+        let b = Backoff::new(10, 500, 7);
+        for attempt in 0..10 {
+            assert_eq!(b.delay_ms(attempt), b.delay_ms(attempt), "attempt {attempt}");
+            assert!(b.delay_ms(attempt) <= 500);
+        }
+        assert!(b.delay_ms(0) >= 10);
+        // deep attempts pin to the cap
+        assert_eq!(b.delay_ms(20), 500);
+        // different seeds jitter differently somewhere in the schedule
+        let c = Backoff::new(10, 500, 8);
+        assert!((0..6).any(|a| b.delay_ms(a) != c.delay_ms(a)));
+    }
+
+    #[test]
+    fn with_retries_recovers_once_the_fault_clears() {
+        let plan = FaultPlan::parse("seed=1;base-ms=0;cap-ms=0;retries=4").unwrap();
+        let mut calls = 0;
+        let out = with_retries(Some(&plan), "test-op", |attempt| {
+            calls += 1;
+            anyhow::ensure!(attempt >= 2, "injected");
+            Ok(attempt)
+        })
+        .unwrap();
+        assert_eq!(out, 2);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn with_retries_exhaustion_is_typed_and_detectable() {
+        let plan = FaultPlan::parse("seed=1;base-ms=0;cap-ms=0;retries=2").unwrap();
+        let err = with_retries::<()>(Some(&plan), "doomed-op", |_| anyhow::bail!("injected"))
+            .unwrap_err();
+        assert!(is_retry_exhausted(&err), "{err:#}");
+        // context layering on top must not hide the marker
+        let wrapped = err.context("saving checkpoint campaign-3.json");
+        assert!(is_retry_exhausted(&wrapped));
+        // ...and ordinary errors are not misclassified
+        assert!(!is_retry_exhausted(&anyhow::anyhow!("plain failure")));
+    }
+}

@@ -154,6 +154,16 @@ pub struct TuneSetup {
     /// off, so it must stay outside the checkpoint fingerprint.
     // detlint: allow(fingerprint-coverage) -- write-only telemetry sink; trajectories are pinned bit-identical with stats on vs. off
     pub obs: Option<std::sync::Arc<crate::obs::ObsSink>>,
+    /// Chaos failpoint plan (`--chaos`): seeded fault injection at the
+    /// I/O boundaries (checkpoint/history/stats installs, worker
+    /// threads; the daemon carries its own plan for sockets). The
+    /// recovery machinery it exercises — audited atomic installs,
+    /// deterministic backoff, worker respawn with same-attempt re-queue
+    /// — keeps trajectories bit-identical with the plan on or off, and
+    /// the soak tests pin that, so the plan stays outside the
+    /// checkpoint fingerprint exactly like `obs`.
+    // detlint: allow(fingerprint-coverage) -- fault schedule, not run identity; recovery is pinned trajectory-neutral by chaos_soak
+    pub chaos: Option<std::sync::Arc<crate::chaos::FaultPlan>>,
     /// Continuous-controller mode (`--controller`): the tuner never
     /// stops — it watches predicted-vs-observed residuals through a
     /// CUSUM detector, resets the surrogate's trust window when the
@@ -219,6 +229,7 @@ impl TuneSetup {
             baseline_memo: None,
             kill_after_evals: None,
             obs: None,
+            chaos: None,
             controller: false,
             decay_half_life: 16.0,
             drift_threshold: 8.0,
@@ -473,6 +484,10 @@ pub fn autotune_with_scorer(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tu
         // best-effort bookkeeping: a completed campaign must never be
         // discarded over an unwritable store (full disk, vanished mount)
         let appended = crate::history::HistoryStore::open(dir)
+            .map(|store| match &setup.chaos {
+                Some(plan) => store.with_chaos(plan.clone()),
+                None => store,
+            })
             .and_then(|store| store.append(&crate::history::RunRecord::from_result(&result)));
         match appended {
             Ok(path) => log::info!("tuning history appended to {}", path.display()),
@@ -778,7 +793,7 @@ impl TuneResult {
         s.push_str(&format!("max ytopt overhead: {:.1} s\n", self.db.max_overhead_s()));
         if let Some(es) = &self.ensemble {
             s.push_str(&format!(
-                "ensemble: {} workers | {} cycle | batch {} | liar {} | {} cycles | faults {} (retries {}, abandoned {}) | timeouts {} | stragglers cancelled {} | barrier idle {:.0} s | resumed {}\n",
+                "ensemble: {} workers | {} cycle | batch {} | liar {} | {} cycles | faults {} (retries {}, abandoned {}) | crashes {} | timeouts {} | stragglers cancelled {} | barrier idle {:.0} s | resumed {}\n",
                 es.workers,
                 es.cycle.name(),
                 es.batch,
@@ -787,6 +802,7 @@ impl TuneResult {
                 es.faults,
                 es.retries,
                 es.failed_evals,
+                es.worker_crashes,
                 es.timeouts,
                 es.stragglers_cancelled,
                 es.worker_idle_s,

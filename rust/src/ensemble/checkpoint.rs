@@ -329,8 +329,11 @@ fn parts_to_json(
     Json::obj(pairs)
 }
 
-/// Atomic save from borrowed parts: write a sibling temp file, then
-/// rename over `path`.
+/// Atomic save from borrowed parts, through the blessed helper: write a
+/// sibling temp file, audit it back, then rename over `path` — retried
+/// under the chaos plan's budget (`plan` is also the `ckpt-write`
+/// failpoint; `None` injects nothing and retries real I/O errors under
+/// the default budget).
 pub fn save_parts(
     path: &Path,
     fingerprint: &str,
@@ -338,16 +341,11 @@ pub fn save_parts(
     records: &[EvalRecord],
     in_flight: &[InFlightEval],
     proposal: Option<ProposalParts<'_>>,
+    plan: Option<&crate::chaos::FaultPlan>,
 ) -> Result<()> {
-    let tmp = path.with_extension("json.tmp");
-    std::fs::write(
-        &tmp,
-        parts_to_json(fingerprint, wallclock_s, records, in_flight, proposal).to_string(),
-    )
-    .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
-    std::fs::rename(&tmp, path)
-        .with_context(|| format!("installing checkpoint {}", path.display()))?;
-    Ok(())
+    let text = parts_to_json(fingerprint, wallclock_s, records, in_flight, proposal).to_string();
+    crate::chaos::fsx::install_atomic(path, text.as_bytes(), plan, crate::chaos::Site::CkptWrite)
+        .with_context(|| format!("saving checkpoint {}", path.display()))
 }
 
 impl Checkpoint {
@@ -414,8 +412,12 @@ impl Checkpoint {
         Ok(Checkpoint { fingerprint, wallclock_s, records, in_flight, proposal })
     }
 
-    /// Load from `path`; `Ok(None)` when no checkpoint exists yet.
+    /// Load from `path`; `Ok(None)` when no checkpoint exists yet. A
+    /// crash mid-install leaves an orphaned temp sibling behind — it is
+    /// swept (with a warning) before the authoritative file is read, so
+    /// it can neither leak forever nor be mistaken for corruption.
     pub fn load(path: &Path) -> Result<Option<Checkpoint>> {
+        crate::chaos::fsx::clean_orphan_tmp(path);
         if !path.exists() {
             return Ok(None);
         }
@@ -424,7 +426,7 @@ impl Checkpoint {
         Ok(Some(Self::parse(&text)?))
     }
 
-    /// Atomic save: write a sibling temp file, then rename over `path`.
+    /// Atomic save: write a sibling temp file, audit, rename over `path`.
     pub fn save(&self, path: &Path) -> Result<()> {
         save_parts(
             path,
@@ -438,6 +440,7 @@ impl Checkpoint {
                 log: p.log.as_slice(),
                 cusum: p.cusum,
             }),
+            None,
         )
     }
 }
@@ -463,6 +466,38 @@ mod tests {
             timed_out: false,
             cancelled: false,
         }
+    }
+
+    /// A crash between temp-write and rename leaves `<name>.json.tmp`
+    /// behind; the next load must sweep it and read the authoritative
+    /// checkpoint (or report a clean "none yet") instead of leaking the
+    /// orphan or tripping over it.
+    #[test]
+    fn load_sweeps_orphaned_temp_siblings() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ytopt-ckpt-orphan-{}.json", std::process::id()));
+        let tmp = crate::chaos::fsx::tmp_sibling(&path);
+        let _ = std::fs::remove_file(&path);
+        // orphan with NO installed checkpoint: load reports none, sweeps
+        // detlint: allow(io-atomic) -- planted orphan temp, not a real install
+        std::fs::write(&tmp, b"{ torn half-writ").unwrap();
+        assert!(Checkpoint::load(&path).unwrap().is_none());
+        assert!(!tmp.exists(), "orphan survived a none-yet load");
+        // orphan next to a good checkpoint: the installed file wins
+        let cp = Checkpoint {
+            fingerprint: "fp".into(),
+            wallclock_s: 1.0,
+            records: vec![rec(0)],
+            in_flight: vec![],
+            proposal: None,
+        };
+        cp.save(&path).unwrap();
+        // detlint: allow(io-atomic) -- planted orphan temp, not a real install
+        std::fs::write(&tmp, b"{ torn half-writ").unwrap();
+        let back = Checkpoint::load(&path).unwrap().expect("checkpoint exists");
+        assert_eq!(back.fingerprint, "fp");
+        assert!(!tmp.exists(), "orphan survived a load");
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

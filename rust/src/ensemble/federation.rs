@@ -185,8 +185,11 @@ impl FederationManifest {
         Ok(FederationManifest { fingerprint, shards })
     }
 
-    /// Load from `path`; `Ok(None)` when no manifest exists yet.
+    /// Load from `path`; `Ok(None)` when no manifest exists yet. Sweeps
+    /// any orphaned temp sibling first: a crash between temp write and
+    /// rename must not leave litter behind.
     pub fn load(path: &Path) -> Result<Option<FederationManifest>> {
+        crate::chaos::fsx::clean_orphan_tmp(path);
         if !path.exists() {
             return Ok(None);
         }
@@ -195,20 +198,17 @@ impl FederationManifest {
         Ok(Some(Self::parse(&text)?))
     }
 
-    /// Atomic save: write a sibling temp file, then rename over `path`.
-    /// The temp name appends to the full file name so manifests at
-    /// `run.v2` and `run.v3` never race on one temp file.
+    /// Atomic save through the blessed writer: sibling temp, read-back
+    /// audit, rename. The temp name appends to the full file name so
+    /// manifests at `run.v2` and `run.v3` never race on one temp file.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let tmp = {
-            let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
-            name.push(".manifest.tmp");
-            path.with_file_name(name)
-        };
-        std::fs::write(&tmp, self.to_json().to_string())
-            .with_context(|| format!("writing federation manifest {}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("installing federation manifest {}", path.display()))?;
-        Ok(())
+        crate::chaos::fsx::install_atomic(
+            path,
+            self.to_json().to_string().as_bytes(),
+            None,
+            crate::chaos::Site::CkptWrite,
+        )
+        .with_context(|| format!("installing federation manifest {}", path.display()))
     }
 }
 
@@ -612,11 +612,20 @@ impl ContinuousShard {
                 if job.excluded.contains(&worker) {
                     return EvalOutcome { job, worker, kind: OutcomeKind::Bounced };
                 }
+                if let Some(plan) = &setup.chaos {
+                    if plan.fire(crate::chaos::Site::WorkerCrash).is_some() {
+                        panic!("chaos: injected worker crash on ensemble-worker-{worker}");
+                    }
+                }
                 evaluate_one(&setup, &space, &scorer, model.as_ref(), worker, job)
             }
         };
-        let pool: super::WorkerPool<EvalJob, EvalOutcome> =
-            super::WorkerPool::new(workers, workers.max(batch_target) * 2, eval_fn);
+        let pool: super::WorkerPool<EvalJob, EvalOutcome> = super::WorkerPool::new_supervised(
+            workers,
+            workers.max(batch_target) * 2,
+            eval_fn,
+            |worker, job| EvalOutcome { job, worker, kind: OutcomeKind::Crashed },
+        );
 
         // node-hour budgets split evenly across the federation's shards
         let allocation = setup.node_hours_budget.map(|nh| {
@@ -668,6 +677,7 @@ impl ContinuousShard {
                     eval_id: *id,
                     attempt: 0,
                     bounces: 0,
+                    crashes: 0,
                     excluded: Vec::new(),
                     cfg: cfg.clone(),
                     search_s: 0.0,
@@ -849,6 +859,7 @@ impl ContinuousShard {
                     eval_id: self.next_id,
                     attempt: 0,
                     bounces: 0,
+                    crashes: 0,
                     excluded: Vec::new(),
                     cfg,
                     search_s,
@@ -1076,6 +1087,7 @@ impl ContinuousShard {
                 &self.db,
                 &self.inflight,
                 proposal,
+                self.setup.chaos.as_deref(),
             )?;
         }
         Ok(())
@@ -1273,6 +1285,11 @@ pub(crate) fn autotune_continuous(setup: &TuneSetup, scorer: Arc<Scorer>) -> Res
         CampaignOutcome::Interrupted { .. } => {
             anyhow::bail!("continuous manager interrupted without a cancel request")
         }
+        // the classic blocking dispatch has no degraded mode: exhausting
+        // an I/O retry budget is a hard error for the solo CLI path
+        CampaignOutcome::Degraded { applied, message } => {
+            anyhow::bail!("campaign degraded after {applied} applied completions: {message}")
+        }
     }
 }
 
@@ -1398,6 +1415,7 @@ pub fn autotune_federation(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<Tun
         agg.batches += run.stats.batches;
         agg.faults += run.stats.faults;
         agg.retries += run.stats.retries;
+        agg.worker_crashes += run.stats.worker_crashes;
         agg.failed_evals += run.stats.failed_evals;
         agg.timeouts += run.stats.timeouts;
         agg.stragglers_cancelled += run.stats.stragglers_cancelled;
@@ -1558,6 +1576,7 @@ mod tests {
         m.save(&path).unwrap();
         assert_eq!(FederationManifest::load(&path).unwrap().unwrap(), m);
         // a plain shard checkpoint is not a manifest
+        // detlint: allow(io-atomic) -- planted imposter file, not a real install
         std::fs::write(&path, "{\"fingerprint\":\"fp\",\"records\":[]}").unwrap();
         assert!(FederationManifest::load(&path).is_err());
         std::fs::remove_file(&path).unwrap();

@@ -150,6 +150,9 @@ pub struct EnsembleStats {
     pub timeouts: usize,
     /// In-flight runs cancelled by the straggler policy.
     pub stragglers_cancelled: usize,
+    /// Hard worker crashes survived (thread respawned, in-flight eval
+    /// re-queued at the same attempt through the exclusion path).
+    pub worker_crashes: usize,
     /// Completed evaluations restored from the checkpoint (not re-run).
     pub resumed_evals: usize,
     /// What the recorded evaluations would have cost back-to-back — the
@@ -178,6 +181,7 @@ impl EnsembleStats {
             failed_evals: 0,
             timeouts: 0,
             stragglers_cancelled: 0,
+            worker_crashes: 0,
             resumed_evals: 0,
             serial_equivalent_s: 0.0,
             worker_idle_s: 0.0,
@@ -185,11 +189,19 @@ impl EnsembleStats {
     }
 }
 
-/// One unit of work handed to the pool.
+/// One unit of work handed to the pool. `Clone` so the supervised pool
+/// can save a copy before the job enters the (possibly crashing)
+/// evaluation closure.
+#[derive(Clone)]
 struct EvalJob {
     eval_id: usize,
     attempt: usize,
     bounces: usize,
+    /// Hard worker crashes this job has already survived (counted
+    /// separately from `attempt`: a crash re-queues at the *same*
+    /// attempt, so the eventual outcome stays a pure function of
+    /// `(seed, configuration, attempt)` — trajectory-neutral).
+    crashes: usize,
     /// Workers excluded by retry-with-exclusion.
     excluded: Vec<usize>,
     cfg: Configuration,
@@ -216,6 +228,10 @@ enum OutcomeKind {
     Fault,
     /// The polling worker was excluded for this job; resubmit.
     Bounced,
+    /// The worker thread died to a hard crash mid-evaluation (chaos
+    /// injection or a real panic); the supervised pool converted the
+    /// in-flight job into this report and respawned the worker.
+    Crashed,
     /// Launch-line generation failed (invalid placement).
     LaunchFailed(String),
     /// Measurement pipeline error — fatal, mirrors the serial `?`.
@@ -392,6 +408,33 @@ fn handle_outcome(
             // workers stay busy
             std::thread::sleep(Duration::from_millis(1));
             anyhow::ensure!(pool.submit(job), "ensemble worker pool rejected a retry");
+            Ok(None)
+        }
+        OutcomeKind::Crashed => {
+            stats.worker_crashes += 1;
+            let mut job = out.job;
+            job.crashes += 1;
+            if job.crashes > max_retries + 1 {
+                // a job that keeps killing workers is abandoned like an
+                // exhausted-fault job rather than crash-looping the pool
+                log::warn!(
+                    "evaluation {} abandoned after {} worker crashes",
+                    job.eval_id,
+                    job.crashes
+                );
+                return Ok(Some(Resolved::Failed(job)));
+            }
+            // placement policy only: re-queue at the SAME attempt (the
+            // outcome stays a pure function of (seed, configuration,
+            // attempt) — a crash must not bend the trajectory), kept off
+            // the worker that just died under it
+            if !job.excluded.contains(&out.worker) {
+                job.excluded.push(out.worker);
+            }
+            if job.excluded.len() >= workers {
+                job.excluded.clear();
+            }
+            anyhow::ensure!(pool.submit(job), "ensemble worker pool rejected a crash re-queue");
             Ok(None)
         }
         OutcomeKind::Fault => {
@@ -598,11 +641,23 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
             if job.excluded.contains(&worker) {
                 return EvalOutcome { job, worker, kind: OutcomeKind::Bounced };
             }
+            // chaos failpoint: a hard worker crash, not a failed eval —
+            // the supervised pool catches the panic, reports the job as
+            // Crashed, and respawns the thread
+            if let Some(plan) = &setup.chaos {
+                if plan.fire(crate::chaos::Site::WorkerCrash).is_some() {
+                    panic!("chaos: injected worker crash on ensemble-worker-{worker}");
+                }
+            }
             evaluate_one(&setup, &space, &scorer, model.as_ref(), worker, job)
         }
     };
-    let mut pool: WorkerPool<EvalJob, EvalOutcome> =
-        WorkerPool::new(workers, workers.max(batch_target) * 2, eval_fn);
+    let mut pool: WorkerPool<EvalJob, EvalOutcome> = WorkerPool::new_supervised(
+        workers,
+        workers.max(batch_target) * 2,
+        eval_fn,
+        |worker, job| EvalOutcome { job, worker, kind: OutcomeKind::Crashed },
+    );
 
     let mut allocation = setup.node_hours_budget.map(|nh| {
         crate::platform::scheduler::Allocation::new(setup.platform, "ytopt-repro", nh)
@@ -652,6 +707,7 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
                         eval_id: eval_id + b,
                         attempt: 0,
                         bounces: 0,
+                        crashes: 0,
                         excluded: Vec::new(),
                         cfg,
                         search_s: 0.0,
@@ -841,13 +897,29 @@ pub fn autotune_ensemble(setup: &TuneSetup, scorer: Arc<Scorer>) -> Result<TuneR
                         if let Some(path) = &setup.checkpoint_path {
                             // the generational oracle does not persist
                             // proposal state (no mid-batch resume exists)
-                            save_checkpoint(path, &fp, wallclock, &db, &no_inflight, None)?;
+                            save_checkpoint(
+                                path,
+                                &fp,
+                                wallclock,
+                                &db,
+                                &no_inflight,
+                                None,
+                                setup.chaos.as_deref(),
+                            )?;
                         }
                         break 'outer;
                     }
                 }
                 if let Some(path) = &setup.checkpoint_path {
-                    save_checkpoint(path, &fp, wallclock, &db, &no_inflight, None)?;
+                    save_checkpoint(
+                        path,
+                        &fp,
+                        wallclock,
+                        &db,
+                        &no_inflight,
+                        None,
+                        setup.chaos.as_deref(),
+                    )?;
                 }
             }
         }
@@ -915,6 +987,7 @@ fn save_checkpoint(
     db: &PerfDatabase,
     in_flight: &BTreeMap<usize, Configuration>,
     proposal: Option<checkpoint::ProposalParts<'_>>,
+    plan: Option<&crate::chaos::FaultPlan>,
 ) -> Result<()> {
     // serialize by reference: the continuous cycle saves per completion,
     // so this path must not clone the full record vec each time (only
@@ -923,7 +996,7 @@ fn save_checkpoint(
         .iter()
         .map(|(id, cfg)| InFlightEval { eval_id: *id, config_key: cfg.key() })
         .collect();
-    checkpoint::save_parts(path, fingerprint, wallclock_s, &db.records, &in_flight, proposal)
+    checkpoint::save_parts(path, fingerprint, wallclock_s, &db.records, &in_flight, proposal, plan)
 }
 
 #[cfg(test)]
@@ -1189,6 +1262,38 @@ mod tests {
             assert_eq!(r.db.records[id].objective, full.db.records[id].objective);
         }
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// Chaos contract: hard worker crashes are a *placement* event, not
+    /// a trajectory event — the supervised pool respawns the thread and
+    /// the job re-runs at the same attempt, so a crash-riddled campaign
+    /// stays bit-identical to a clean one (both manager cycles).
+    #[test]
+    fn injected_worker_crashes_do_not_bend_the_trajectory() {
+        for cycle in [ManagerCycle::Continuous, ManagerCycle::Generational] {
+            let mut s = setup(AppKind::XSBenchHistory, PlatformKind::Theta, 1, Metric::Runtime);
+            s.manager_cycle = cycle;
+            let clean = run(&s);
+            let mut chaotic = s.clone();
+            // the first three executions crash deterministically, then
+            // the fault clears; every crashed job re-queues and completes
+            chaotic.chaos = Some(Arc::new(
+                crate::chaos::FaultPlan::parse("seed=5;worker-crash=1x3").unwrap(),
+            ));
+            let r = run(&chaotic);
+            let es = r.ensemble.as_ref().unwrap();
+            assert_eq!(es.worker_crashes, 3, "{cycle:?}");
+            assert_eq!(r.evaluations, clean.evaluations, "{cycle:?}");
+            assert_eq!(r.best_objective, clean.best_objective, "{cycle:?}");
+            let keys = |r: &TuneResult| {
+                r.db.records.iter().map(|x| x.config_key.clone()).collect::<Vec<_>>()
+            };
+            assert_eq!(keys(&r), keys(&clean), "{cycle:?}");
+            let objs = |r: &TuneResult| {
+                r.db.records.iter().map(|x| x.objective.to_bits()).collect::<Vec<_>>()
+            };
+            assert_eq!(objs(&r), objs(&clean), "{cycle:?}");
+        }
     }
 
     #[test]

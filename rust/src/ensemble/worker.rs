@@ -14,6 +14,17 @@
 //!
 //! The pool is generic over job and result types; the ensemble manager
 //! instantiates it with the five-step evaluation closure.
+//!
+//! **Self-healing** (chaos-harness requirement): a pool built with
+//! [`WorkerPool::new_supervised`] survives a *hard worker crash* — a
+//! panic inside the job closure, not just a failed evaluation. The
+//! dying worker converts its in-flight job into a crash result (so the
+//! manager's receive loop learns of the loss immediately and can
+//! re-queue the evaluation through the retry-with-exclusion path),
+//! flags its own worker id for respawn, and exits; the pool respawns a
+//! replacement thread under the same worker id on the next
+//! `submit`/`recv_timeout`. Plain [`WorkerPool::new`] pools keep the
+//! original fail-fast behaviour.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -26,6 +37,10 @@ struct State<J, R> {
     shutdown: bool,
     /// Workers currently executing a job (not counting queued jobs).
     busy: usize,
+    /// Worker ids whose threads died to a crash, awaiting respawn.
+    dead: Vec<usize>,
+    /// Total hard crashes survived so far.
+    crashes: usize,
 }
 
 struct Shared<J, R> {
@@ -36,14 +51,39 @@ struct Shared<J, R> {
     capacity: usize,
 }
 
+/// Respawn material for a supervised pool: the job closure and the
+/// crash adapter, kept so replacement threads run the same work.
+struct Supervisor<J, R> {
+    f: Arc<dyn Fn(usize, J) -> R + Send + Sync>,
+    on_crash: Arc<dyn Fn(usize, J) -> R + Send + Sync>,
+}
+
 /// A fixed-size pool of `std::thread` workers running one closure.
 pub struct WorkerPool<J: Send + 'static, R: Send + 'static> {
     shared: Arc<Shared<J, R>>,
-    handles: Vec<JoinHandle<()>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
     n_workers: usize,
+    supervisor: Option<Supervisor<J, R>>,
 }
 
 impl<J: Send + 'static, R: Send + 'static> WorkerPool<J, R> {
+    fn new_shared(capacity: usize) -> Arc<Shared<J, R>> {
+        Arc::new(Shared {
+            state: Mutex::new(State {
+                jobs: VecDeque::new(),
+                results: VecDeque::new(),
+                shutdown: false,
+                busy: 0,
+                dead: Vec::new(),
+                crashes: 0,
+            }),
+            job_ready: Condvar::new(),
+            slot_free: Condvar::new(),
+            result_ready: Condvar::new(),
+            capacity,
+        })
+    }
+
     /// Spawn `n_workers` threads running `f(worker_id, job) -> result`
     /// over a bounded queue of `capacity` waiting jobs.
     pub fn new<F>(n_workers: usize, capacity: usize, f: F) -> Self
@@ -52,18 +92,7 @@ impl<J: Send + 'static, R: Send + 'static> WorkerPool<J, R> {
     {
         assert!(n_workers >= 1, "pool needs at least one worker");
         assert!(capacity >= 1, "queue capacity must be at least 1");
-        let shared = Arc::new(Shared {
-            state: Mutex::new(State {
-                jobs: VecDeque::new(),
-                results: VecDeque::new(),
-                shutdown: false,
-                busy: 0,
-            }),
-            job_ready: Condvar::new(),
-            slot_free: Condvar::new(),
-            result_ready: Condvar::new(),
-            capacity,
-        });
+        let shared = Self::new_shared(capacity);
         let f = Arc::new(f);
         let handles = (0..n_workers)
             .map(|wid| {
@@ -75,16 +104,80 @@ impl<J: Send + 'static, R: Send + 'static> WorkerPool<J, R> {
                     .expect("failed to spawn ensemble worker thread")
             })
             .collect();
-        WorkerPool { shared, handles, n_workers }
+        WorkerPool { shared, handles: Mutex::new(handles), n_workers, supervisor: None }
+    }
+
+    /// Supervised variant: a panic inside `f` kills only its worker
+    /// thread. The in-flight job (pre-cloned) is converted through
+    /// `on_crash(worker_id, job)` into an ordinary result the manager's
+    /// receive loop sees immediately, and the dead worker id is
+    /// respawned on the next pool interaction.
+    pub fn new_supervised<F, C>(n_workers: usize, capacity: usize, f: F, on_crash: C) -> Self
+    where
+        J: Clone,
+        F: Fn(usize, J) -> R + Send + Sync + 'static,
+        C: Fn(usize, J) -> R + Send + Sync + 'static,
+    {
+        assert!(n_workers >= 1, "pool needs at least one worker");
+        assert!(capacity >= 1, "queue capacity must be at least 1");
+        let shared = Self::new_shared(capacity);
+        let sup = Supervisor {
+            f: Arc::new(f) as Arc<dyn Fn(usize, J) -> R + Send + Sync>,
+            on_crash: Arc::new(on_crash) as Arc<dyn Fn(usize, J) -> R + Send + Sync>,
+        };
+        let handles = (0..n_workers)
+            .map(|wid| {
+                let shared = shared.clone();
+                let f = sup.f.clone();
+                let oc = sup.on_crash.clone();
+                std::thread::Builder::new()
+                    .name(format!("ensemble-worker-{wid}"))
+                    .spawn(move || supervised_loop(wid, &shared, &*f, &*oc))
+                    .expect("failed to spawn ensemble worker thread")
+            })
+            .collect();
+        WorkerPool { shared, handles: Mutex::new(handles), n_workers, supervisor: Some(sup) }
     }
 
     pub fn workers(&self) -> usize {
         self.n_workers
     }
 
+    /// Total hard worker crashes survived so far.
+    pub fn crashes(&self) -> usize {
+        self.shared.state.lock().unwrap().crashes
+    }
+
+    /// Respawn any workers that died to a crash (supervised pools only;
+    /// a no-op otherwise). Called from every pool interaction so a dead
+    /// worker is replaced the moment the manager touches the pool again.
+    fn respawn_dead(&self) {
+        let dead: Vec<usize> = {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.dead.is_empty() || st.shutdown {
+                return;
+            }
+            std::mem::take(&mut st.dead)
+        };
+        let Some(sup) = &self.supervisor else { return };
+        let mut handles = self.handles.lock().unwrap();
+        for wid in dead {
+            let shared = self.shared.clone();
+            let f = sup.f.clone();
+            let oc = sup.on_crash.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("ensemble-worker-{wid}"))
+                .spawn(move || supervised_loop(wid, &shared, &*f, &*oc))
+                .expect("failed to respawn ensemble worker thread");
+            handles.push(h);
+            log::info!("respawned crashed ensemble-worker-{wid}");
+        }
+    }
+
     /// Enqueue a job, blocking while the bounded queue is full. Returns
     /// false (job dropped) if the pool has been shut down.
     pub fn submit(&self, job: J) -> bool {
+        self.respawn_dead();
         let mut st = self.shared.state.lock().unwrap();
         while st.jobs.len() >= self.shared.capacity && !st.shutdown {
             st = self.shared.slot_free.wait(st).unwrap();
@@ -100,6 +193,7 @@ impl<J: Send + 'static, R: Send + 'static> WorkerPool<J, R> {
 
     /// Next completed result, blocking up to `timeout`. `None` on timeout.
     pub fn recv_timeout(&self, timeout: Duration) -> Option<R> {
+        self.respawn_dead();
         // real-time blocking wait only: arrival order never reaches the
         // trajectory (the manager re-sorts results by eval id)
         let deadline = Instant::now() + timeout; // detlint: allow(wall-clock) -- condvar deadline, not trajectory state
@@ -133,7 +227,11 @@ impl<J: Send + 'static, R: Send + 'static> WorkerPool<J, R> {
         }
         self.shared.job_ready.notify_all();
         self.shared.slot_free.notify_all();
-        for h in self.handles.drain(..) {
+        let handles: Vec<JoinHandle<()>> = {
+            let mut guard = self.handles.lock().unwrap();
+            guard.drain(..).collect()
+        };
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -168,6 +266,56 @@ fn worker_loop<J, R>(wid: usize, shared: &Shared<J, R>, f: &(dyn Fn(usize, J) ->
             st.results.push_back(r);
         }
         shared.result_ready.notify_one();
+    }
+}
+
+/// Supervised worker loop: a panic inside `f` is caught *outside* any
+/// lock (the state mutex is never poisoned by it), converted through
+/// `on_crash` into a result the manager sees immediately, and the
+/// thread exits after flagging its worker id for respawn — a hard
+/// crash, survived.
+fn supervised_loop<J: Clone, R>(
+    wid: usize,
+    shared: &Shared<J, R>,
+    f: &(dyn Fn(usize, J) -> R),
+    on_crash: &(dyn Fn(usize, J) -> R),
+) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    st.busy += 1;
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.job_ready.wait(st).unwrap();
+            }
+        };
+        shared.slot_free.notify_one();
+        let saved = job.clone();
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(wid, job))) {
+            Ok(r) => {
+                let mut st = shared.state.lock().unwrap();
+                st.busy -= 1;
+                st.results.push_back(r);
+                drop(st);
+                shared.result_ready.notify_one();
+            }
+            Err(_) => {
+                log::warn!("ensemble-worker-{wid} crashed; converting in-flight job and exiting");
+                let mut st = shared.state.lock().unwrap();
+                st.busy -= 1;
+                st.crashes += 1;
+                st.dead.push(wid);
+                st.results.push_back(on_crash(wid, saved));
+                drop(st);
+                shared.result_ready.notify_one();
+                return;
+            }
+        }
     }
 }
 
@@ -235,6 +383,42 @@ mod tests {
             pool.submit(j);
         }
         drop(pool); // Drop path must terminate
+    }
+
+    /// Chaos contract: a panic inside the job closure kills only its
+    /// worker. The in-flight job comes back through the crash adapter,
+    /// the pool respawns the dead worker, and every other job still
+    /// completes — across more crashes than the pool has workers.
+    #[test]
+    fn supervised_pool_survives_hard_worker_crashes() {
+        let pool: WorkerPool<u64, Result<u64, u64>> = WorkerPool::new_supervised(
+            2,
+            4,
+            |_wid, j| {
+                if j % 5 == 0 {
+                    panic!("chaos: injected worker crash");
+                }
+                Ok(j)
+            },
+            |_wid, j| Err(j),
+        );
+        for j in 1..=20u64 {
+            assert!(pool.submit(j));
+        }
+        let mut ok = Vec::new();
+        let mut crashed = Vec::new();
+        for _ in 0..20 {
+            match pool.recv_timeout(TICK).expect("result or crash report") {
+                Ok(j) => ok.push(j),
+                Err(j) => crashed.push(j),
+            }
+        }
+        ok.sort_unstable();
+        crashed.sort_unstable();
+        assert_eq!(crashed, vec![5, 10, 15, 20], "every crashed job must be reported");
+        assert_eq!(ok, (1..=20).filter(|j| j % 5 != 0).collect::<Vec<_>>());
+        assert_eq!(pool.crashes(), 4);
+        assert_eq!(pool.outstanding(), 0);
     }
 
     #[test]

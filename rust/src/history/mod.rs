@@ -218,14 +218,26 @@ impl RunRecord {
 #[derive(Debug, Clone)]
 pub struct HistoryStore {
     dir: PathBuf,
+    /// Chaos failpoint plan armed on the append path (tests and the
+    /// chaos soak; production opens leave this unset).
+    chaos: Option<std::sync::Arc<crate::chaos::FaultPlan>>,
 }
 
 impl HistoryStore {
     /// Open (creating if needed) the store directory — the append path.
+    /// Sweeps temp files orphaned by writers that crashed mid-append
+    /// (the embedded-pid naming spares live writers' temps).
     pub fn open(dir: &Path) -> Result<HistoryStore> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating history store {}", dir.display()))?;
-        Ok(HistoryStore { dir: dir.to_path_buf() })
+        crate::chaos::fsx::sweep_orphan_tmps(dir);
+        Ok(HistoryStore { dir: dir.to_path_buf(), chaos: None })
+    }
+
+    /// Arm the append path with a chaos failpoint plan.
+    pub fn with_chaos(mut self, plan: std::sync::Arc<crate::chaos::FaultPlan>) -> HistoryStore {
+        self.chaos = Some(plan);
+        self
     }
 
     /// Open an existing store without creating anything: the read-only
@@ -238,7 +250,7 @@ impl HistoryStore {
             "history store {} does not exist (check the warm-start path)",
             dir.display()
         );
-        Ok(HistoryStore { dir: dir.to_path_buf() })
+        Ok(HistoryStore { dir: dir.to_path_buf(), chaos: None })
     }
 
     pub fn dir(&self) -> &Path {
@@ -270,9 +282,30 @@ impl HistoryStore {
             std::process::id(),
             TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
         ));
-        std::fs::write(&tmp, &text)
-            .with_context(|| format!("writing run record {}", tmp.display()))?;
-        let outcome = self.install(&tmp, &text, &id);
+        // the temp write is audited *before* install: a short write
+        // (torn page, injected ENOSPC) must never reach a final name,
+        // and transient faults retry under capped deterministic backoff
+        let plan = self.chaos.as_deref();
+        let written =
+            crate::chaos::with_retries(plan, crate::chaos::Site::HistoryWrite.name(), |_| {
+                crate::chaos::fsx::write_file(
+                    &tmp,
+                    text.as_bytes(),
+                    plan,
+                    crate::chaos::Site::HistoryWrite,
+                )?;
+                let back = std::fs::read(&tmp)
+                    .with_context(|| format!("auditing run-record temp {}", tmp.display()))?;
+                anyhow::ensure!(
+                    back == text.as_bytes(),
+                    "run-record temp {} is short ({} of {} bytes) — rejected before install",
+                    tmp.display(),
+                    back.len(),
+                    text.len()
+                );
+                Ok(())
+            });
+        let outcome = written.and_then(|()| self.install(&tmp, &text, &id));
         // the temp file never outlives the append: `install` only links
         // it under final names, so success and failure both drop it here
         let _ = std::fs::remove_file(&tmp);
@@ -652,15 +685,90 @@ mod tests {
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
+    fn tmp_count(dir: &Path) -> usize {
+        std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().map(|x| x == "tmp").unwrap_or(false))
+            .count()
+    }
+
+    /// Satellite: injected short writes and ENOSPC on the append path
+    /// are caught by the pre-install audit — a partial record never
+    /// reaches a final name — and retried away under the deterministic
+    /// backoff once the fault clears (the `x4` fire cap).
+    #[test]
+    fn injected_append_faults_retry_and_never_install_partials() {
+        let dir = tmpdir("chaos-append");
+        let plan = std::sync::Arc::new(
+            crate::chaos::FaultPlan::parse("seed=7;history-write=1x4;base-ms=0;cap-ms=0")
+                .unwrap(),
+        );
+        let store = HistoryStore::open(&dir).unwrap().with_chaos(plan.clone());
+        let rec = record(64, 1, &[("0,0", 3.0), ("1,2", 2.0)]);
+        let p = store.append(&rec).unwrap();
+        assert_eq!(
+            plan.fired(crate::chaos::Site::HistoryWrite),
+            4,
+            "every scheduled fault must fire before the append clears"
+        );
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), rec.to_json().to_string());
+        assert_eq!(store.load_all().unwrap(), vec![rec]);
+        assert_eq!(tmp_count(&dir), 0, "faulted appends left temp files behind");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// An unlimited write fault outlasting the retry budget surfaces as
+    /// the typed [`crate::chaos::RetryExhausted`] marker (what the
+    /// scheduler maps to `Degraded`), installs nothing, litters nothing.
+    #[test]
+    fn exhausted_append_budget_is_typed_and_installs_nothing() {
+        let dir = tmpdir("chaos-append-exhaust");
+        let plan = std::sync::Arc::new(
+            crate::chaos::FaultPlan::parse("seed=3;history-write=1;retries=2;base-ms=0;cap-ms=0")
+                .unwrap(),
+        );
+        let store = HistoryStore::open(&dir).unwrap().with_chaos(plan);
+        let err = store.append(&record(64, 1, &[("0,0", 3.0)])).unwrap_err();
+        assert!(crate::chaos::is_retry_exhausted(&err), "{err:#}");
+        assert!(store.load_all().unwrap().is_empty(), "no partial record under a final name");
+        assert_eq!(tmp_count(&dir), 0, "exhausted append left temp litter");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Satellite: temps orphaned by a writer that crashed mid-append are
+    /// swept (with a warning) on the next open; the embedded-pid naming
+    /// spares a live writer's in-progress temps.
+    #[test]
+    fn open_sweeps_dead_writers_temp_files() {
+        let dir = tmpdir("orphan-sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        // a dead writer's temp (pid 1 is init, never this test) plus an
+        // unparseable stray
+        // detlint: allow(io-atomic) -- planted orphan fixture, not a real install
+        std::fs::write(dir.join("run-abcd.1-0.tmp"), "partial").unwrap();
+        // detlint: allow(io-atomic) -- planted orphan fixture, not a real install
+        std::fs::write(dir.join("stray.tmp"), "junk").unwrap();
+        let store = HistoryStore::open(&dir).unwrap();
+        assert_eq!(tmp_count(&dir), 0, "open must sweep orphaned temps");
+        assert!(store.load_all().unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
     /// Satellite: many campaigns finishing at once in one daemon must
     /// not lose, duplicate, or corrupt records. 8 threads × 5 rounds all
     /// appending the same 4 distinct records — maximal same-name racing
     /// on every final file, both same-content (idempotence) and
-    /// cross-content (distinct ids) traffic.
+    /// cross-content (distinct ids) traffic — with the first few temp
+    /// writes faulted, so retries interleave with the races too.
     #[test]
     fn concurrent_appends_lose_nothing() {
         let dir = tmpdir("concurrent-append");
-        let store = HistoryStore::open(&dir).unwrap();
+        let plan = std::sync::Arc::new(
+            crate::chaos::FaultPlan::parse("seed=11;history-write=1x4;base-ms=0;cap-ms=0")
+                .unwrap(),
+        );
+        let store = HistoryStore::open(&dir).unwrap().with_chaos(plan.clone());
         let recs: Vec<RunRecord> = (0..4)
             .map(|i| record(64 << i, i as u64 + 1, &[("0,0", 3.0 + i as f64), ("1,1", 9.0)]))
             .collect();
@@ -683,6 +791,11 @@ mod tests {
         for r in &recs {
             assert!(all.contains(r), "record for seed {} lost in the race", r.seed);
         }
+        assert_eq!(
+            plan.fired(crate::chaos::Site::HistoryWrite),
+            4,
+            "the scheduled write faults must all have fired (and been retried away)"
+        );
         let leftovers: Vec<_> = std::fs::read_dir(&dir)
             .unwrap()
             .filter_map(|e| e.ok())
@@ -702,6 +815,7 @@ mod tests {
         let rec = record(64, 1, &[("0,0", 3.0)]);
         let id = rec.run_id();
         let imposter = "imposter: not the appended record";
+        // detlint: allow(io-atomic) -- planted imposter fixture, not a real install
         std::fs::write(dir.join(format!("run-{id}.json")), imposter).unwrap();
         let p = store.append(&rec).unwrap();
         assert_eq!(
@@ -728,9 +842,12 @@ mod tests {
         store.append(&record(64, 1, &[("0,0", 3.0)])).unwrap();
         store.append(&record(256, 2, &[("1,1", 4.0)])).unwrap();
         // a truncated record and outright garbage, both under final names
+        // detlint: allow(io-atomic) -- planted corrupt fixture
         std::fs::write(dir.join("run-truncated.json"), "{\"kind\":\"run-rec").unwrap();
+        // detlint: allow(io-atomic) -- planted corrupt fixture
         std::fs::write(dir.join("run-garbage.json"), "not json at all").unwrap();
         // and a foreign-but-valid JSON file (wrong kind)
+        // detlint: allow(io-atomic) -- planted corrupt fixture
         std::fs::write(dir.join("run-foreign.json"), "{\"fingerprint\":\"fp\"}").unwrap();
         let all = store.load_all().unwrap();
         assert_eq!(all.len(), 2, "exactly the two good records survive the scan");

@@ -18,6 +18,7 @@
 pub mod acquisition;
 pub mod apps;
 pub mod bench_support;
+pub mod chaos;
 pub mod cliargs;
 pub mod codegen;
 pub mod coordinator;

@@ -63,6 +63,12 @@ pub enum Rule {
     DeprecatedApi,
     /// `unwrap()`/`.expect(` on the daemon's connection-handling path.
     DaemonUnwrap,
+    /// A bare `std::fs::write`/`fs::rename`/`File::create` in the
+    /// deterministic core: a crash mid-write leaves a torn file a
+    /// resume would read. Installs go through `chaos::fsx`, the one
+    /// blessed atomic write-audit-rename helper (which is also where
+    /// the failpoints live).
+    IoAtomic,
     /// A malformed `detlint:` directive; never suppressible.
     AllowSyntax,
 }
@@ -70,7 +76,7 @@ pub enum Rule {
 impl Rule {
     /// The rules an allow directive may name (everything but
     /// `allow-syntax`, which guards the directives themselves).
-    pub const ALLOWABLE: [Rule; 8] = [
+    pub const ALLOWABLE: [Rule; 9] = [
         Rule::HashOrder,
         Rule::WallClock,
         Rule::RngSource,
@@ -79,6 +85,7 @@ impl Rule {
         Rule::FingerprintCoverage,
         Rule::DeprecatedApi,
         Rule::DaemonUnwrap,
+        Rule::IoAtomic,
     ];
 
     pub fn name(self) -> &'static str {
@@ -91,6 +98,7 @@ impl Rule {
             Rule::FingerprintCoverage => "fingerprint-coverage",
             Rule::DeprecatedApi => "deprecated-api",
             Rule::DaemonUnwrap => "daemon-unwrap",
+            Rule::IoAtomic => "io-atomic",
             Rule::AllowSyntax => "allow-syntax",
         }
     }

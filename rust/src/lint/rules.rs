@@ -16,6 +16,10 @@ use super::{Diagnostic, Rule, SourceFile};
 /// `service/client.rs` are deliberately outside — they own the wall
 /// clock and the sockets.
 pub const CORE_SCOPE: &[&str] = &[
+    // in core: the failpoint schedule is seeded and occurrence-keyed,
+    // and fsx is the blessed atomic installer the io-atomic rule
+    // funnels everyone else through
+    "chaos/",
     "coordinator/",
     "drift/",
     "ensemble/",
@@ -37,6 +41,12 @@ pub const CORE_SCOPE: &[&str] = &[
 /// the `blocked_matches_scalar_oracle` tests, so its sum order is fixed
 /// regardless of thread count.
 pub const BLESSED_PARALLEL_SCORER: &str = "runtime/batch.rs";
+
+/// The one module blessed to touch the filesystem non-atomically: it IS
+/// the write-audit-rename helper (plus its failpoints), and every other
+/// core install goes through it so a crash can only ever leave a
+/// `*.tmp` sibling, never a torn final file.
+pub const BLESSED_ATOMIC_WRITER: &str = "chaos/fsx.rs";
 
 /// Is `path` (root-relative, `/`-separated) inside the deterministic
 /// core?
@@ -97,6 +107,15 @@ const PAR_FLOAT: NeedleSpec = NeedleSpec {
     needles: &["thread::scope", "rayon", "par_iter", "par_chunks"],
     hint: "parallel float accumulation reorders rounding; only the blocked scorer in \
            runtime/batch.rs (pinned to its scalar oracle) may reduce across threads",
+};
+
+/// Non-atomic filesystem installs; enforced over the core minus the
+/// blessed writer.
+const IO_ATOMIC: NeedleSpec = NeedleSpec {
+    rule: Rule::IoAtomic,
+    needles: &["fs::write", "fs::rename", "File::create"],
+    hint: "a crash mid-write leaves a torn file a resume would read; install through \
+           chaos::fsx::install_atomic / write_file (annotate planted test fixtures)",
 };
 
 /// Panic-on-hostile-input markers; enforced over `service/daemon.rs`
@@ -203,6 +222,9 @@ pub fn check_needles(path: &str, scan: &Scan) -> Vec<Diagnostic> {
         if path != BLESSED_PARALLEL_SCORER {
             emit(&mut out, path, scan, &PAR_FLOAT);
         }
+        if path != BLESSED_ATOMIC_WRITER {
+            emit(&mut out, path, scan, &IO_ATOMIC);
+        }
     }
     if path == "service/daemon.rs" {
         emit(&mut out, path, scan, &DAEMON_RULE);
@@ -284,9 +306,34 @@ mod tests {
         assert!(in_core("service/scheduler.rs"));
         assert!(in_core("obs/mod.rs"));
         assert!(in_core("obs/monitor.rs"));
+        assert!(in_core("chaos/mod.rs"));
+        assert!(in_core("chaos/fsx.rs"));
         assert!(!in_core("service/daemon.rs"));
         assert!(!in_core("power/rapl.rs"));
         assert!(!in_core("util/rng.rs"));
+    }
+
+    #[test]
+    fn bare_installs_fire_everywhere_in_core_but_the_blessed_writer() {
+        let src = "std::fs::write(&path, bytes).unwrap();\n\
+                   std::fs::rename(&tmp, &path).unwrap();\n\
+                   let f = std::fs::File::create(&path);\n\
+                   crate::chaos::fsx::write_file(&path, bytes, None, site);\n";
+        let scan = lexer::scan(src);
+        let diags = check_needles("history/mod.rs", &scan);
+        let io: Vec<usize> = diags
+            .iter()
+            .filter(|d| d.rule == Rule::IoAtomic)
+            .map(|d| d.line)
+            .collect();
+        // the blessed helper call on line 4 must not trip the rule
+        assert_eq!(io, vec![1, 2, 3], "{diags:?}");
+        assert!(check_needles(BLESSED_ATOMIC_WRITER, &scan)
+            .iter()
+            .all(|d| d.rule != Rule::IoAtomic));
+        assert!(check_needles("power/rapl.rs", &scan)
+            .iter()
+            .all(|d| d.rule != Rule::IoAtomic));
     }
 
     #[test]

@@ -27,8 +27,8 @@ use ytopt::platform::PlatformKind;
 use ytopt::runtime::Scorer;
 use ytopt::search::{StrategyKind, SurrogateKind};
 use ytopt::service::{
-    self, CampaignHandle, CampaignOutcome, CampaignSpec, Client, Daemon, ServeConfig,
-    ServiceConfig,
+    self, CampaignHandle, CampaignOutcome, CampaignSpec, Client, Daemon, ResilientClient,
+    ServeConfig, ServiceConfig,
 };
 use ytopt::space::paper;
 use ytopt::util::Table;
@@ -87,6 +87,7 @@ fn spec() -> CliSpec {
         .opt("stats-file", None, "tune: refresh a stats snapshot JSON here; top: monitor it")
         .opt("interval-ms", Some("500"), "stats --follow / top: poll interval")
         .opt("frames", Some("0"), "top: stop after this many repaints (0 = run until source ends)")
+        .opt("chaos", None, "tune/submit/serve: failpoint schedule, e.g. seed=7;ckpt-write=0.5x2;retries=5")
         .opt("src", None, "lint: source root to check (default: this crate's src/)")
         .flag("controller", "tune: continuous-controller mode (online re-tuning under drift)")
         .flag("no-warm-start", "submit: opt out of the daemon's shared-history warm start")
@@ -217,6 +218,11 @@ fn setup_from_args(args: &Args) -> anyhow::Result<TuneSetup> {
     setup.max_delta = max_delta;
     setup.drift_at_eval = drift_at;
     setup.drift_magnitude = drift_magnitude;
+    if let Some(spec) = args.get("chaos") {
+        let plan = ytopt::chaos::FaultPlan::parse(spec)
+            .map_err(|e| anyhow::anyhow!("invalid --chaos spec `{spec}`: {e:#}"))?;
+        setup.chaos = Some(Arc::new(plan));
+    }
     if setup.controller {
         anyhow::ensure!(
             setup.manager_cycle == ManagerCycle::Continuous && setup.ensemble_workers >= 1,
@@ -283,6 +289,9 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
         CampaignOutcome::Interrupted { .. } => {
             anyhow::bail!("one-shot campaign interrupted without a cancel request")
         }
+        CampaignOutcome::Degraded { applied, message } => {
+            anyhow::bail!("campaign degraded after {applied} applied evals: {message}")
+        }
     };
     println!("{}", result.summary());
     if let Some(sink) = &obs {
@@ -324,6 +333,14 @@ fn serve_config_from_args(args: &Args) -> anyhow::Result<ServeConfig> {
         warm_elites = doc.usize_or("service", "warm_elites", warm_elites);
     }
     anyhow::ensure!(max_active >= 1, "max-active must be >= 1");
+    // `serve --chaos` arms the daemon's socket failpoints (sock-read /
+    // sock-write sites); campaign-side faults ride in per-campaign specs
+    let chaos = match args.get("chaos") {
+        Some(spec) => Some(Arc::new(ytopt::chaos::FaultPlan::parse(spec).map_err(|e| {
+            anyhow::anyhow!("invalid --chaos spec `{spec}`: {e:#}")
+        })?)),
+        None => None,
+    };
     Ok(ServeConfig {
         listen,
         service: ServiceConfig {
@@ -332,6 +349,7 @@ fn serve_config_from_args(args: &Args) -> anyhow::Result<ServeConfig> {
             checkpoint_dir,
             warm_start_elites: warm_elites,
         },
+        chaos,
     })
 }
 
@@ -399,6 +417,9 @@ fn render_event(ev: &service::Event) -> String {
             "campaign {campaign}: INTERRUPTED by daemon shutdown after {applied} applied evals{}",
             if *checkpointed { " (checkpoint on disk; resumable)" } else { "" }
         ),
+        Degraded { campaign, applied, message } => format!(
+            "campaign {campaign}: DEGRADED after {applied} applied evals — {message}"
+        ),
         Failed { campaign, message } => format!("campaign {campaign}: FAILED — {message}"),
     }
 }
@@ -408,7 +429,10 @@ fn cmd_watch(args: &Args) -> anyhow::Result<()> {
         .int("campaign")
         .ok_or_else(|| anyhow::anyhow!("watch needs --campaign <id>"))? as u64;
     let from = args.int("from").unwrap_or(0).max(0) as u64;
-    let mut client = Client::connect(args.get_or("addr", "127.0.0.1:7459"))?;
+    // the resilient client survives daemon connection drops: it redials
+    // with capped deterministic backoff and reattaches the stream at
+    // the next unseen event index — nothing double-prints, nothing drops
+    let mut client = ResilientClient::new(args.get_or("addr", "127.0.0.1:7459"));
     client.watch(campaign, from, &mut |ev| println!("{}", render_event(ev)))?;
     Ok(())
 }
@@ -453,7 +477,10 @@ fn cmd_stats(args: &Args) -> anyhow::Result<()> {
     let mut from = args.int("from").unwrap_or(0).max(0) as u64;
     let interval = args.int("interval-ms").unwrap_or(500).max(50) as u64;
     let addr = args.get_or("addr", "127.0.0.1:7459");
-    let mut client = Client::connect(addr)?;
+    // resilient: `--follow` may outlive many daemon connections; the
+    // ring cursor is absolute, so a poll retried on a fresh connection
+    // resumes exactly where the dead one stopped
+    let mut client = ResilientClient::new(addr);
     let (snap, events, next) = client.stats(campaign, from)?;
     print_stats_frame(&format!("campaign {campaign} @ {addr}"), &snap);
     for e in &events {
@@ -472,7 +499,10 @@ fn cmd_stats(args: &Args) -> anyhow::Result<()> {
             .find(|c| c.id == campaign)
             .map(|c| c.state)
             .unwrap_or_default();
-        let terminal = matches!(state.as_str(), "done" | "cancelled" | "interrupted" | "failed");
+        let terminal = matches!(
+            state.as_str(),
+            "done" | "cancelled" | "interrupted" | "degraded" | "failed"
+        );
         let (_, events, next) = client.stats(campaign, from)?;
         for e in &events {
             println!("{}", render_ring_event(e));

@@ -14,6 +14,27 @@ use super::protocol::{
     encode_frame, CampaignSpec, CampaignStatusInfo, Decoder, Event, Message, Request, Response,
 };
 
+/// The daemon answered with a protocol-level refusal (`Response::Error`).
+/// The connection itself is healthy, so reconnect-and-retry cannot help;
+/// [`ResilientClient`] surfaces these immediately instead of burning its
+/// reconnect budget on them.
+#[derive(Debug)]
+pub struct Refused(pub String);
+
+impl std::fmt::Display for Refused {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "daemon refused: {}", self.0)
+    }
+}
+
+impl std::error::Error for Refused {}
+
+/// Is this a daemon refusal (anywhere in the chain) rather than a
+/// transport failure?
+pub fn is_refusal(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.is::<Refused>())
+}
+
 pub struct Client {
     stream: TcpStream,
     dec: Decoder,
@@ -65,7 +86,7 @@ impl Client {
         self.send(req)?;
         match self.next_message()? {
             Message::Response(Response::Error { message }) => {
-                anyhow::bail!("daemon refused: {message}")
+                Err(anyhow::Error::new(Refused(message)))
             }
             Message::Response(r) => Ok(r),
             other => anyhow::bail!("expected a response frame, got {other:?}"),
@@ -144,9 +165,166 @@ impl Client {
                     }
                 }
                 Message::Response(Response::Error { message }) => {
-                    anyhow::bail!("daemon refused watch: {message}")
+                    return Err(anyhow::Error::new(Refused(message)))
+                        .context("daemon refused watch")
                 }
                 other => anyhow::bail!("expected an event frame, got {other:?}"),
+            }
+        }
+    }
+}
+
+/// A client that survives connection loss: every operation redials on
+/// failure with capped deterministic backoff ([`crate::chaos::Backoff`]),
+/// and the stream cursors are absolute — the daemon's per-campaign event
+/// log index for `watch`, the ring logical clock for `stats` — so a
+/// retry on a fresh connection resumes exactly where the dead one
+/// stopped. No event is double-printed and none is lost.
+///
+/// Daemon refusals ([`Refused`]) are NOT retried: the connection that
+/// carried them is healthy, so redialing cannot change the answer.
+pub struct ResilientClient {
+    addr: String,
+    client: Option<Client>,
+    backoff: crate::chaos::Backoff,
+    max_attempts: u32,
+}
+
+impl ResilientClient {
+    /// Defaults: 8 reconnect attempts, 50ms doubling to a 2s cap, with
+    /// seed-0 deterministic jitter.
+    pub fn new(addr: &str) -> ResilientClient {
+        ResilientClient {
+            addr: addr.to_string(),
+            client: None,
+            backoff: crate::chaos::Backoff::new(50, 2_000, 0),
+            max_attempts: 8,
+        }
+    }
+
+    /// Override the reconnect policy (tests tighten it so chaotic soak
+    /// runs fail fast instead of sleeping through the budget).
+    pub fn with_policy(
+        mut self,
+        max_attempts: u32,
+        backoff: crate::chaos::Backoff,
+    ) -> ResilientClient {
+        self.max_attempts = max_attempts;
+        self.backoff = backoff;
+        self
+    }
+
+    fn connected(&mut self) -> Result<&mut Client> {
+        if self.client.is_none() {
+            self.client = Some(Client::connect(&self.addr)?);
+        }
+        Ok(self.client.as_mut().expect("just connected"))
+    }
+
+    /// Run one operation, redialing between attempts. The connection is
+    /// dropped after every failure, so a half-decoded frame can never
+    /// leak into the retry.
+    fn with_retry<T>(
+        &mut self,
+        label: &str,
+        mut op: impl FnMut(&mut Client) -> Result<T>,
+    ) -> Result<T> {
+        let mut attempt: u32 = 0;
+        loop {
+            match self.connected().and_then(|c| op(c)) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    self.client = None;
+                    if is_refusal(&e) || attempt >= self.max_attempts {
+                        return Err(e.context(format!(
+                            "{label} gave up after {} attempt(s)",
+                            attempt + 1
+                        )));
+                    }
+                    log::warn!("{label} failed ({e:#}); redialing {}", self.addr);
+                    self.backoff.sleep(attempt);
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    /// Submission is NOT idempotent — once the request frame may have
+    /// reached the daemon, a retry could queue the campaign twice. Only
+    /// the dial retries; a failure after that surfaces to the caller.
+    pub fn submit(&mut self, spec: CampaignSpec) -> Result<u64> {
+        let mut attempt: u32 = 0;
+        loop {
+            match self.connected() {
+                Ok(_) => break,
+                Err(e) => {
+                    if attempt >= self.max_attempts {
+                        return Err(e.context("submit could not reach the daemon"));
+                    }
+                    log::warn!("dial for submit failed ({e:#}); redialing {}", self.addr);
+                    self.backoff.sleep(attempt);
+                    attempt += 1;
+                }
+            }
+        }
+        let out = self.client.as_mut().expect("just connected").submit(spec);
+        if out.is_err() {
+            self.client = None;
+        }
+        out
+    }
+
+    pub fn status(&mut self) -> Result<Vec<CampaignStatusInfo>> {
+        self.with_retry("status poll", |c| c.status())
+    }
+
+    pub fn stats(
+        &mut self,
+        campaign: u64,
+        from: u64,
+    ) -> Result<(crate::obs::StatsSnapshot, Vec<crate::obs::RingEvent>, u64)> {
+        self.with_retry("stats poll", |c| c.stats(campaign, from))
+    }
+
+    /// Stream a campaign's events from index `from` until the terminal
+    /// event, surviving connection loss: when the stream breaks
+    /// mid-flight the watch reattaches at the next unseen index, and
+    /// delivered progress resets the reconnect budget.
+    pub fn watch(
+        &mut self,
+        campaign: u64,
+        from: u64,
+        on_event: &mut dyn FnMut(&Event),
+    ) -> Result<Event> {
+        let mut next = from;
+        let mut attempt: u32 = 0;
+        loop {
+            let before = next;
+            let run = self.connected().and_then(|client| {
+                client.watch(campaign, next, &mut |ev| {
+                    next += 1;
+                    on_event(ev);
+                })
+            });
+            match run {
+                Ok(terminal) => return Ok(terminal),
+                Err(e) => {
+                    self.client = None;
+                    if next > before {
+                        attempt = 0; // progress resets the reconnect budget
+                    }
+                    if is_refusal(&e) || attempt >= self.max_attempts {
+                        return Err(e.context(format!(
+                            "watch of campaign {campaign} gave up at event index {next}"
+                        )));
+                    }
+                    log::warn!(
+                        "watch stream broke at event index {next} ({e:#}); \
+                         reattaching from there"
+                    );
+                    self.backoff.sleep(attempt);
+                    attempt += 1;
+                }
             }
         }
     }

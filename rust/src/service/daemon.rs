@@ -39,11 +39,19 @@ pub struct ServeConfig {
     /// e2e harness uses this).
     pub listen: String,
     pub service: ServiceConfig,
+    /// Socket failpoints (`sock-read` / `sock-write` sites): `None` in
+    /// production. The plan is shared by every connection thread, so
+    /// occurrence counters span the daemon, not one peer.
+    pub chaos: Option<Arc<crate::chaos::FaultPlan>>,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { listen: "127.0.0.1:7459".into(), service: ServiceConfig::default() }
+        ServeConfig {
+            listen: "127.0.0.1:7459".into(),
+            service: ServiceConfig::default(),
+            chaos: None,
+        }
     }
 }
 
@@ -132,6 +140,7 @@ impl Daemon {
         let accept_stop = stop.clone();
         let accept_sched = scheduler.clone();
         let accept_conns = conns.clone();
+        let accept_chaos = cfg.chaos.clone();
         let accept_thread = std::thread::Builder::new()
             .name("ytopt-serve-accept".into())
             .spawn(move || loop {
@@ -147,9 +156,10 @@ impl Daemon {
                         log::debug!("service connection from {peer}");
                         let sched = accept_sched.clone();
                         let stop = accept_stop.clone();
+                        let chaos = accept_chaos.clone();
                         match std::thread::Builder::new()
                             .name("ytopt-serve-conn".into())
-                            .spawn(move || serve_connection(stream, sched, stop))
+                            .spawn(move || serve_connection(stream, sched, stop, chaos))
                         {
                             Ok(handle) => accept_conns
                                 .lock()
@@ -232,7 +242,18 @@ const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(5);
 /// daemon stops. Watch streams run on their own threads and are joined
 /// on the way out — by then their campaigns are terminal (shutdown
 /// interrupts them) or their writes have failed/stalled out.
-fn serve_connection(mut stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<AtomicBool>) {
+///
+/// Under an armed `chaos` plan the `sock-read` site fires after each
+/// successful read (reset → drop this connection; stall → park the
+/// request path) and the `sock-write` site fires inside [`write_msg`]
+/// (torn frame, reset, stall). Every fault costs only this peer — the
+/// accept loop, scheduler, and sibling connections never see it.
+fn serve_connection(
+    mut stream: TcpStream,
+    sched: Arc<Scheduler>,
+    stop: Arc<AtomicBool>,
+    chaos: Option<Arc<crate::chaos::FaultPlan>>,
+) {
     if stream.set_read_timeout(Some(Duration::from_millis(250))).is_err() {
         return;
     }
@@ -250,6 +271,19 @@ fn serve_connection(mut stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<Atom
         match stream.read(&mut buf) {
             Ok(0) => break, // peer closed
             Ok(n) => {
+                if let Some(plan) = chaos.as_deref() {
+                    match plan.fire(crate::chaos::Site::SockRead) {
+                        Some(crate::chaos::Fault::SockReset) => {
+                            log::warn!("chaos: dropping the connection after a read");
+                            break;
+                        }
+                        Some(crate::chaos::Fault::SockStall { ms }) => {
+                            log::warn!("chaos: stalling the request path for {ms}ms");
+                            std::thread::sleep(Duration::from_millis(ms));
+                        }
+                        Some(_) | None => {}
+                    }
+                }
                 let msgs = match dec.push(&buf[..n]) {
                     Ok(m) => m,
                     Err(e) => {
@@ -257,12 +291,13 @@ fn serve_connection(mut stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<Atom
                         let _ = write_msg(
                             &writer,
                             &Message::Response(Response::Error { message: e.to_string() }),
+                            chaos.as_deref(),
                         );
                         break;
                     }
                 };
                 for msg in msgs {
-                    if !handle_message(&writer, &sched, &stop, &mut watchers, msg) {
+                    if !handle_message(&writer, &sched, &stop, &mut watchers, &chaos, msg) {
                         break 'serve;
                     }
                 }
@@ -295,8 +330,10 @@ fn handle_message(
     sched: &Arc<Scheduler>,
     stop: &Arc<AtomicBool>,
     watchers: &mut Vec<JoinHandle<()>>,
+    chaos: &Option<Arc<crate::chaos::FaultPlan>>,
     msg: Message,
 ) -> bool {
+    let plan = chaos.as_deref();
     let req = match msg {
         Message::Request(r) => r,
         _ => {
@@ -305,28 +342,31 @@ fn handle_message(
                 &Message::Response(Response::Error {
                     message: "clients send request frames".into(),
                 }),
+                plan,
             );
             return false;
         }
     };
     match req {
-        Request::Ping => write_msg(writer, &Message::Response(Response::Pong)),
+        Request::Ping => write_msg(writer, &Message::Response(Response::Pong), plan),
         Request::Submit { spec } => {
             let resp = match sched.submit(spec) {
                 Ok(campaign) => Response::Accepted { campaign },
                 Err(e) => Response::Error { message: format!("{e:#}") },
             };
-            write_msg(writer, &Message::Response(resp))
+            write_msg(writer, &Message::Response(resp), plan)
         }
-        Request::Status => {
-            write_msg(writer, &Message::Response(Response::Status { campaigns: sched.status() }))
-        }
+        Request::Status => write_msg(
+            writer,
+            &Message::Response(Response::Status { campaigns: sched.status() }),
+            plan,
+        ),
         Request::Cancel { campaign } => {
             let resp = match sched.cancel(campaign) {
                 Ok(()) => Response::Cancelling { campaign },
                 Err(e) => Response::Error { message: format!("{e:#}") },
             };
-            write_msg(writer, &Message::Response(resp))
+            write_msg(writer, &Message::Response(resp), plan)
         }
         Request::Stats { campaign, from } => {
             let resp = match sched.stats(campaign, from) {
@@ -335,10 +375,10 @@ fn handle_message(
                 }
                 Err(e) => Response::Error { message: format!("{e:#}") },
             };
-            write_msg(writer, &Message::Response(resp))
+            write_msg(writer, &Message::Response(resp), plan)
         }
         Request::Shutdown => {
-            let ok = write_msg(writer, &Message::Response(Response::ShuttingDown));
+            let ok = write_msg(writer, &Message::Response(Response::ShuttingDown), plan);
             if !stop.swap(true, Ordering::SeqCst) {
                 log::info!("shutdown requested over the wire");
                 sched.interrupt_all();
@@ -353,10 +393,12 @@ fn handle_message(
             // campaign went terminal
             let watch_sched = sched.clone();
             let watch_writer = writer.clone();
+            let watch_chaos = chaos.clone();
             match std::thread::Builder::new()
                 .name("ytopt-serve-watch".into())
-                .spawn(move || stream_watch(&watch_writer, &watch_sched, campaign, from))
-            {
+                .spawn(move || {
+                    stream_watch(&watch_writer, &watch_sched, campaign, from, watch_chaos)
+                }) {
                 Ok(handle) => {
                     watchers.push(handle);
                     true
@@ -366,6 +408,7 @@ fn handle_message(
                     &Message::Response(Response::Error {
                         message: format!("could not start a watch stream: {e}"),
                     }),
+                    plan,
                 ),
             }
         }
@@ -380,7 +423,14 @@ fn handle_message(
 /// remainder of the log, exactly once.
 ///
 /// [`WatchChunk::complete`]: super::scheduler::WatchChunk
-fn stream_watch(writer: &SharedWriter, sched: &Arc<Scheduler>, campaign: u64, from: u64) {
+fn stream_watch(
+    writer: &SharedWriter,
+    sched: &Arc<Scheduler>,
+    campaign: u64,
+    from: u64,
+    chaos: Option<Arc<crate::chaos::FaultPlan>>,
+) {
+    let plan = chaos.as_deref();
     let mut idx = from as usize;
     loop {
         let chunk = match sched.wait_events(campaign, idx, Duration::from_secs(1)) {
@@ -389,13 +439,14 @@ fn stream_watch(writer: &SharedWriter, sched: &Arc<Scheduler>, campaign: u64, fr
                 let _ = write_msg(
                     writer,
                     &Message::Response(Response::Error { message: format!("{e:#}") }),
+                    plan,
                 );
                 return;
             }
         };
         idx += chunk.events.len();
         for ev in chunk.events {
-            if !write_msg(writer, &Message::Event(ev)) {
+            if !write_msg(writer, &Message::Event(ev), plan) {
                 return; // peer gone, or a write stalled past the timeout
             }
         }
@@ -405,7 +456,40 @@ fn stream_watch(writer: &SharedWriter, sched: &Arc<Scheduler>, campaign: u64, fr
     }
 }
 
-fn write_msg(writer: &SharedWriter, msg: &Message) -> bool {
+/// Write one frame atomically on the shared socket. Under an armed plan
+/// the `sock-write` site can tear the frame (a strict prefix reaches
+/// the wire, then the socket is shut down — the client's decoder sees
+/// EOF mid-frame), reset the connection before any bytes move, or stall
+/// the write. Torn/reset report failure so the caller winds the
+/// connection (or just its watch stream) down, exactly as it would for
+/// a genuinely broken peer.
+fn write_msg(writer: &SharedWriter, msg: &Message, chaos: Option<&crate::chaos::FaultPlan>) -> bool {
+    let frame = encode_frame(msg);
+    if let Some(plan) = chaos {
+        match plan.fire(crate::chaos::Site::SockWrite) {
+            Some(crate::chaos::Fault::SockTorn { frac }) => {
+                let keep =
+                    (((frame.len() as f64) * frac) as usize).min(frame.len().saturating_sub(1));
+                log::warn!("chaos: tearing a frame at {keep} of {} bytes", frame.len());
+                let mut stream =
+                    writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                let _ = stream.write_all(&frame[..keep]).and_then(|_| stream.flush());
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+                return false;
+            }
+            Some(crate::chaos::Fault::SockReset) => {
+                log::warn!("chaos: resetting the connection before a frame write");
+                let stream = writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+                return false;
+            }
+            Some(crate::chaos::Fault::SockStall { ms }) => {
+                log::warn!("chaos: stalling a frame write for {ms}ms");
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            Some(_) | None => {}
+        }
+    }
     let mut stream = writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
-    stream.write_all(&encode_frame(msg)).and_then(|_| stream.flush()).is_ok()
+    stream.write_all(&frame).and_then(|_| stream.flush()).is_ok()
 }

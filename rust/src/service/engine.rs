@@ -71,6 +71,12 @@ pub enum CampaignOutcome {
     /// checkpoint path — on disk via the v3 checkpoint written with
     /// every apply, ready for a later resume.
     Interrupted { applied: usize, checkpointed: bool },
+    /// A retry budget was exhausted at an I/O boundary
+    /// ([`crate::chaos::RetryExhausted`] in the error chain): the
+    /// applied prefix stands, the campaign is terminal, and — crucially
+    /// — the driver returns `Ok`, so a daemon hosting many campaigns
+    /// degrades exactly one of them instead of dying.
+    Degraded { applied: usize, message: String },
 }
 
 /// Does this setup run on the stepped continuous engine? (The dispatch
@@ -118,7 +124,18 @@ pub fn drive_continuous(
         }
         let proposed_before = shard.proposed();
         let applied_before = shard.applied();
-        let n = shard.run_for(1)?;
+        let n = match shard.run_for(1) {
+            Ok(n) => n,
+            Err(e) if crate::chaos::is_retry_exhausted(&e) => {
+                let applied = shard.applied();
+                log::warn!(
+                    "campaign degraded after {applied} applied completions: {e:#}"
+                );
+                shard.finish(); // shuts the worker pool down
+                return Ok(CampaignOutcome::Degraded { applied, message: format!("{e:#}") });
+            }
+            Err(e) => return Err(e),
+        };
         for id in proposed_before..shard.proposed() {
             sink(CampaignEvent::Proposed { eval_id: id as u64 });
         }
@@ -231,11 +248,14 @@ impl CampaignHandle {
                     // (interrupted campaigns are NOT completed runs)
                     if let CampaignOutcome::Finished(result) = &outcome {
                         if let (Some(dir), None) = (&setup.history_dir, setup.kill_after_evals) {
-                            let appended = crate::history::HistoryStore::open(dir).and_then(
-                                |store| {
+                            let appended = crate::history::HistoryStore::open(dir)
+                                .map(|store| match &setup.chaos {
+                                    Some(plan) => store.with_chaos(plan.clone()),
+                                    None => store,
+                                })
+                                .and_then(|store| {
                                     store.append(&crate::history::RunRecord::from_result(result))
-                                },
-                            );
+                                });
                             match appended {
                                 Ok(path) => {
                                     log::info!("tuning history appended to {}", path.display())

@@ -29,7 +29,7 @@ pub mod engine;
 pub mod protocol;
 pub mod scheduler;
 
-pub use client::Client;
+pub use client::{Client, ResilientClient};
 pub use daemon::{Daemon, ServeConfig};
 pub use engine::{CampaignEvent, CampaignHandle, CampaignOutcome};
 pub use protocol::{CampaignSpec, Decoder, Event, Message, Request, Response};

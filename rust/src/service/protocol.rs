@@ -114,6 +114,12 @@ pub struct CampaignSpec {
     pub eval_timeout_s: Option<f64>,
     /// Opt out of the daemon's automatic shared-history warm start.
     pub warm_start: bool,
+    /// Chaos failpoint spec (`FaultPlan::parse` grammar), `None` in
+    /// production. Excluded from run identity exactly like the obs sink:
+    /// injected faults are retried away or end the campaign `Degraded` —
+    /// they never change what a completed record means.
+    // detlint: allow(fingerprint-coverage) -- fault schedule, not run identity; recovery is pinned trajectory-neutral by chaos_soak
+    pub chaos: Option<String>,
 }
 
 impl Default for CampaignSpec {
@@ -138,6 +144,7 @@ impl Default for CampaignSpec {
             straggler_factor: None,
             eval_timeout_s: None,
             warm_start: true,
+            chaos: None,
         }
     }
 }
@@ -209,6 +216,10 @@ impl CampaignSpec {
             ("straggler_factor", opt_num(self.straggler_factor)),
             ("eval_timeout_s", opt_num(self.eval_timeout_s)),
             ("warm_start", self.warm_start.into()),
+            (
+                "chaos",
+                self.chaos.as_deref().map(|s| Json::Str(s.to_string())).unwrap_or(Json::Null),
+            ),
         ])
     }
 
@@ -238,6 +249,7 @@ impl CampaignSpec {
             straggler_factor: v.get("straggler_factor").and_then(Json::as_f64),
             eval_timeout_s: v.get("eval_timeout_s").and_then(Json::as_f64),
             warm_start: get_b(v, "warm_start", d.warm_start),
+            chaos: v.get("chaos").and_then(Json::as_str).map(str::to_string),
         }
     }
 
@@ -298,6 +310,11 @@ impl CampaignSpec {
         setup.max_retries = self.max_retries;
         setup.straggler_factor = self.straggler_factor;
         setup.eval_timeout_s = self.eval_timeout_s;
+        if let Some(spec) = &self.chaos {
+            let plan = crate::chaos::FaultPlan::parse(spec)
+                .map_err(|e| anyhow::anyhow!("invalid chaos spec `{spec}`: {e:#}"))?;
+            setup.chaos = Some(std::sync::Arc::new(plan));
+        }
         Ok(setup)
     }
 
@@ -347,6 +364,7 @@ impl CampaignSpec {
             straggler_factor: setup.straggler_factor,
             eval_timeout_s: setup.eval_timeout_s,
             warm_start: true,
+            chaos: setup.chaos.as_ref().map(|p| p.spec()),
         })
     }
 }
@@ -390,7 +408,7 @@ impl CampaignSummary {
 #[derive(Debug, Clone, PartialEq)]
 pub struct CampaignStatusInfo {
     pub id: u64,
-    /// `queued | running | done | cancelled | interrupted | failed`.
+    /// `queued | running | done | cancelled | interrupted | degraded | failed`.
     pub state: String,
     pub app: String,
     pub seed: u64,
@@ -469,7 +487,8 @@ pub enum Response {
 }
 
 /// Daemon → client, streamed to watchers. `Done`, `Cancelled`,
-/// `Interrupted`, and `Failed` are terminal: nothing follows them.
+/// `Interrupted`, `Degraded`, and `Failed` are terminal: nothing
+/// follows them.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
     Started { campaign: u64, evals_planned: u64 },
@@ -495,6 +514,11 @@ pub enum Event {
     /// checkpointed (when the daemon runs with a checkpoint dir) and the
     /// campaign can resume in a later daemon life.
     Interrupted { campaign: u64, applied: u64, checkpointed: bool },
+    /// Terminal: an I/O retry budget was exhausted mid-campaign
+    /// (`chaos::RetryExhausted` in the engine's error chain). The
+    /// applied prefix stands; the daemon and its other campaigns are
+    /// unaffected.
+    Degraded { campaign: u64, applied: u64, message: String },
     Failed { campaign: u64, message: String },
 }
 
@@ -506,6 +530,7 @@ impl Event {
             Event::Done { .. }
                 | Event::Cancelled { .. }
                 | Event::Interrupted { .. }
+                | Event::Degraded { .. }
                 | Event::Failed { .. }
         )
     }
@@ -522,6 +547,7 @@ impl Event {
             | Event::Done { campaign, .. }
             | Event::Cancelled { campaign, .. }
             | Event::Interrupted { campaign, .. }
+            | Event::Degraded { campaign, .. }
             | Event::Failed { campaign, .. } => *campaign,
         }
     }
@@ -724,6 +750,14 @@ impl Event {
                     ("checkpointed", (*checkpointed).into()),
                 ],
             ),
+            Event::Degraded { campaign, applied, message } => tagged(
+                "degraded",
+                vec![
+                    c(*campaign),
+                    ("applied", (*applied).into()),
+                    ("message", message.as_str().into()),
+                ],
+            ),
             Event::Failed { campaign, message } => {
                 tagged("failed", vec![c(*campaign), ("message", message.as_str().into())])
             }
@@ -770,6 +804,11 @@ impl Event {
                 campaign,
                 applied: get_u(v, "applied", 0),
                 checkpointed: get_b(v, "checkpointed", false),
+            }),
+            "degraded" => Ok(Event::Degraded {
+                campaign,
+                applied: get_u(v, "applied", 0),
+                message: get_s(v, "message", ""),
             }),
             "failed" => Ok(Event::Failed { campaign, message: get_s(v, "message", "") }),
             other => Err(ProtocolError::Malformed(format!("unknown event type `{other}`"))),
@@ -932,6 +971,11 @@ mod tests {
                 best_so_far: 12.75,
                 timed_out: true,
                 cancelled: false,
+            }),
+            Message::Event(Event::Degraded {
+                campaign: 4,
+                applied: 7,
+                message: "retry budget exhausted at `ckpt-write` after 6 attempts".into(),
             }),
             Message::Event(Event::Done {
                 campaign: 2,

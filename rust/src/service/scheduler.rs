@@ -65,6 +65,9 @@ enum Phase {
     Done,
     Cancelled,
     Interrupted,
+    /// Terminal: an I/O retry budget was exhausted; the applied prefix
+    /// stands and the daemon stays up.
+    Degraded,
     Failed,
 }
 
@@ -76,12 +79,20 @@ impl Phase {
             Phase::Done => "done",
             Phase::Cancelled => "cancelled",
             Phase::Interrupted => "interrupted",
+            Phase::Degraded => "degraded",
             Phase::Failed => "failed",
         }
     }
 
     fn is_terminal(self) -> bool {
-        matches!(self, Phase::Done | Phase::Cancelled | Phase::Interrupted | Phase::Failed)
+        matches!(
+            self,
+            Phase::Done
+                | Phase::Cancelled
+                | Phase::Interrupted
+                | Phase::Degraded
+                | Phase::Failed
+        )
     }
 }
 
@@ -299,6 +310,22 @@ impl Scheduler {
                         (Phase::Cancelled, Event::Cancelled { campaign: id, applied: applied as u64 })
                     }
                 }
+                Ok(CampaignOutcome::Degraded { applied, message }) => (
+                    Phase::Degraded,
+                    Event::Degraded { campaign: id, applied: applied as u64, message },
+                ),
+                // the non-steppable engines (serial, generational,
+                // federated) surface an exhausted retry budget as a
+                // plain error; the typed marker in the chain still maps
+                // it to Degraded, not Failed
+                Err(e) if crate::chaos::is_retry_exhausted(&e) => (
+                    Phase::Degraded,
+                    Event::Degraded {
+                        campaign: id,
+                        applied: c.evaluations,
+                        message: format!("{e:#}"),
+                    },
+                ),
                 Err(e) => (Phase::Failed, Event::Failed { campaign: id, message: format!("{e:#}") }),
             };
             c.phase = phase;

@@ -1,0 +1,798 @@
+//! Chaos soak (ISSUE 10 acceptance): the whole stack driven under
+//! seeded fault schedules at every I/O boundary.
+//!
+//! * A sweep of 8 fault schedules — worker crashes, torn/ENOSPC
+//!   checkpoint installs, history-append faults, mixed-site combos, a
+//!   federated and a controller campaign — each bit-identical to its
+//!   fault-free reference: injected faults are retried away (or logged
+//!   away, for best-effort history) and never bend a trajectory.
+//! * A daemon hosting a chaotic campaign next to a clean one: the clean
+//!   campaign stays bit-identical to its solo run, the chaotic one to
+//!   its own fault-free reference.
+//! * An exhausted retry budget turns exactly one campaign terminal
+//!   `Degraded` — the daemon keeps answering, siblings finish `Done`.
+//! * Kill/resume under injected checkpoint faults: a checkpoint whose
+//!   install needed the retry budget is still a sound resume point.
+//! * Socket chaos (torn frames, resets, stalls) against the resilient
+//!   client: `watch` reattaches from its absolute cursor and delivers
+//!   every event exactly once; `stats` cursors never run backwards.
+//!
+//! The `#[ignore]`d wide soak sweeps a larger schedule grid plus a
+//! mixed daemon run (clean + chaotic + doomed co-resident, under socket
+//! chaos) — the release-profile CI job runs it via `--include-ignored`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ytopt::apps::AppKind;
+use ytopt::chaos::{Backoff, FaultPlan, Site};
+use ytopt::coordinator::{autotune_with_scorer, TuneResult, TuneSetup};
+use ytopt::metrics::Metric;
+use ytopt::platform::PlatformKind;
+use ytopt::runtime::Scorer;
+use ytopt::service::{
+    CampaignHandle, CampaignOutcome, CampaignSpec, Client, Daemon, Event, ResilientClient,
+    ServeConfig, ServiceConfig,
+};
+
+fn run(setup: &TuneSetup) -> TuneResult {
+    autotune_with_scorer(setup, Arc::new(Scorer::fallback())).unwrap()
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ytopt-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The host-timing-free digest of a trajectory (the `service_e2e`
+/// convention): everything that must be bit-identical across replays,
+/// whether it arrived over the wire or from an in-process run.
+type Digest = Vec<(u64, String, u64, u64, u64, bool, bool)>;
+
+fn digest_result(r: &TuneResult) -> Digest {
+    r.db.records
+        .iter()
+        .map(|x| {
+            (
+                x.id as u64,
+                x.config_key.clone(),
+                x.objective.to_bits(),
+                x.measured.runtime_s.to_bits(),
+                x.best_so_far.to_bits(),
+                x.timed_out,
+                x.cancelled,
+            )
+        })
+        .collect()
+}
+
+fn digest_events(events: &[Event]) -> Digest {
+    events
+        .iter()
+        .filter_map(|ev| match ev {
+            Event::EvalCompleted {
+                eval_id,
+                config_key,
+                objective,
+                runtime_s,
+                best_so_far,
+                timed_out,
+                cancelled,
+                ..
+            } => Some((
+                *eval_id,
+                config_key.clone(),
+                objective.to_bits(),
+                runtime_s.to_bits(),
+                best_so_far.to_bits(),
+                *timed_out,
+                *cancelled,
+            )),
+            _ => None,
+        })
+        .collect()
+}
+
+fn watch_all(client: &mut Client, campaign: u64) -> (Vec<Event>, Event) {
+    let mut log = Vec::new();
+    let terminal = client
+        .watch(campaign, 0, &mut |ev| log.push(ev.clone()))
+        .expect("watch stream must end in a terminal event");
+    (log, terminal)
+}
+
+fn history_record_count(dir: &PathBuf) -> usize {
+    std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            name.starts_with("run-") && name.ends_with(".json")
+        })
+        .count()
+}
+
+/// One entry in the schedule sweep. `fired` lists the exact fire counts
+/// expected for rate-1.0 capped sites (anything probabilistic is left
+/// unasserted — the schedule is still deterministic, but the expected
+/// count is not statically known).
+struct Schedule {
+    tag: &'static str,
+    spec: &'static str,
+    shards: usize,
+    controller: bool,
+    fired: &'static [(Site, u64)],
+    /// Expected run-record count in the chaotic run's history store,
+    /// for schedules that target the history site.
+    history_records: Option<usize>,
+}
+
+const SCHEDULES: &[Schedule] = &[
+    // the first three executions crash deterministically; the supervised
+    // pool respawns the workers and re-queues each job at the same attempt
+    Schedule {
+        tag: "crash",
+        spec: "seed=101;worker-crash=1x3",
+        shards: 0,
+        controller: false,
+        fired: &[(Site::WorkerCrash, 3)],
+        history_records: None,
+    },
+    // the first checkpoint install fails twice (torn or ENOSPC) and
+    // succeeds on the third attempt, inside the default retry budget
+    Schedule {
+        tag: "ckpt",
+        spec: "seed=102;ckpt-write=1x2;base-ms=0;cap-ms=1",
+        shards: 0,
+        controller: false,
+        fired: &[(Site::CkptWrite, 2)],
+        history_records: None,
+    },
+    // the history append survives four injected failures and still
+    // lands exactly one audited record
+    Schedule {
+        tag: "history",
+        spec: "seed=103;history-write=1x4;base-ms=0;cap-ms=1",
+        shards: 0,
+        controller: false,
+        fired: &[(Site::HistoryWrite, 4)],
+        history_records: Some(1),
+    },
+    // probabilistic mixed-site pressure: crashes and checkpoint faults
+    // interleave, every one retried away (fire caps < retry budget)
+    Schedule {
+        tag: "mixed",
+        spec: "seed=104;worker-crash=0.5x4;ckpt-write=0.6x3;base-ms=0;cap-ms=1",
+        shards: 0,
+        controller: false,
+        fired: &[],
+        history_records: None,
+    },
+    // an unclearing history fault exhausts its (tightened) retry budget:
+    // the append is best-effort, so the run still completes and simply
+    // records nothing
+    Schedule {
+        tag: "hist-exhaust",
+        spec: "seed=105;history-write=1;retries=2;base-ms=0;cap-ms=1",
+        shards: 0,
+        controller: false,
+        fired: &[(Site::HistoryWrite, 3)],
+        history_records: Some(0),
+    },
+    // the brink: five consecutive install failures against a budget of
+    // six — the last allowed attempt lands the checkpoint
+    Schedule {
+        tag: "ckpt-brink",
+        spec: "seed=106;ckpt-write=1x5;retries=6;base-ms=0;cap-ms=1",
+        shards: 0,
+        controller: false,
+        fired: &[(Site::CkptWrite, 5)],
+        history_records: None,
+    },
+    // a 3-shard federation: crashes and checkpoint/manifest faults land
+    // on whichever shard consults the plan first (racy placement,
+    // deterministic recovery)
+    Schedule {
+        tag: "federated",
+        spec: "seed=107;worker-crash=1x4;ckpt-write=1x3;base-ms=0;cap-ms=1",
+        shards: 3,
+        controller: false,
+        fired: &[(Site::WorkerCrash, 4), (Site::CkptWrite, 3)],
+        history_records: None,
+    },
+    // the continuous controller under crash chaos
+    Schedule {
+        tag: "controller",
+        spec: "seed=108;worker-crash=1x2",
+        shards: 0,
+        controller: true,
+        fired: &[(Site::WorkerCrash, 2)],
+        history_records: None,
+    },
+];
+
+fn sweep_setup(sched: &Schedule, seed: u64) -> TuneSetup {
+    let mut s = TuneSetup::new(AppKind::Swfft, PlatformKind::Theta, 64, Metric::Runtime);
+    s.max_evals = 12;
+    s.wallclock_budget_s = 1e9;
+    s.seed = seed;
+    s.n_init = 4;
+    // crash caps in the sweep reach 4: keep every re-queued job below
+    // the abandonment threshold (crashes > max_retries + 1)
+    s.max_retries = 4;
+    if sched.shards > 0 {
+        s.ensemble_workers = 2;
+        s.federation_shards = sched.shards;
+        s.elite_exchange_every = 2;
+        s.federation_elites = 2;
+    } else {
+        s.ensemble_workers = 3;
+    }
+    s.controller = sched.controller;
+    s
+}
+
+#[test]
+fn swept_fault_schedules_leave_trajectories_bit_identical() {
+    for (i, sched) in SCHEDULES.iter().enumerate() {
+        let dir = tmpdir(&format!("sweep-{}", sched.tag));
+        let needs_ckpt = sched.spec.contains("ckpt-write");
+        let needs_hist = sched.spec.contains("history-write");
+
+        // the fault-free reference, with the same storage shape (its own
+        // fresh paths) so the only difference is the fault plan
+        let mut clean = sweep_setup(sched, 9000 + i as u64);
+        if needs_ckpt {
+            clean.checkpoint_path = Some(dir.join("clean-ckpt.json"));
+        }
+        if needs_hist {
+            let d = dir.join("clean-hist");
+            std::fs::create_dir_all(&d).unwrap();
+            clean.history_dir = Some(d);
+        }
+        let reference = run(&clean);
+        assert_eq!(reference.evaluations, 12, "schedule `{}`", sched.tag);
+
+        let mut chaotic = clean.clone();
+        if needs_ckpt {
+            chaotic.checkpoint_path = Some(dir.join("chaos-ckpt.json"));
+        }
+        if needs_hist {
+            let d = dir.join("chaos-hist");
+            std::fs::create_dir_all(&d).unwrap();
+            chaotic.history_dir = Some(d);
+        }
+        let plan = Arc::new(FaultPlan::parse(sched.spec).unwrap());
+        chaotic.chaos = Some(plan.clone());
+        let r = run(&chaotic);
+
+        assert_eq!(r.evaluations, 12, "schedule `{}`", sched.tag);
+        assert_eq!(
+            digest_result(&r),
+            digest_result(&reference),
+            "schedule `{}` ({}) bent the trajectory",
+            sched.tag,
+            sched.spec
+        );
+        for &(site, want) in sched.fired {
+            assert_eq!(
+                plan.fired(site),
+                want,
+                "schedule `{}`: site `{}` fire count",
+                sched.tag,
+                site.name()
+            );
+        }
+        if sched.tag == "crash" {
+            assert_eq!(r.ensemble.as_ref().unwrap().worker_crashes, 3);
+        }
+        if let Some(want) = sched.history_records {
+            assert_eq!(
+                history_record_count(chaotic.history_dir.as_ref().unwrap()),
+                want,
+                "schedule `{}`: history record count",
+                sched.tag
+            );
+        }
+        if let Some(ckpt) = &chaotic.checkpoint_path {
+            assert!(
+                ckpt.exists(),
+                "schedule `{}`: the retried checkpoint install must land ({})",
+                sched.tag,
+                ckpt.display()
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn chaotic_and_clean_campaigns_coexist_on_one_daemon() {
+    let hist = tmpdir("co-hist");
+    let ckpt = tmpdir("co-ckpt");
+    let daemon = Daemon::start(
+        ServeConfig {
+            listen: "127.0.0.1:0".into(),
+            service: ServiceConfig {
+                max_active: 4,
+                history_dir: Some(hist.clone()),
+                checkpoint_dir: Some(ckpt.clone()),
+                warm_start_elites: 8,
+            },
+            chaos: None,
+        },
+        Arc::new(Scorer::fallback()),
+    )
+    .unwrap();
+    let addr = daemon.addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+
+    let clean_spec = CampaignSpec {
+        seed: 1111,
+        workers: 2,
+        max_evals: 12,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        ..CampaignSpec::default()
+    };
+    let chaotic_spec = CampaignSpec {
+        seed: 2222,
+        workers: 3,
+        max_evals: 12,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        max_retries: 4,
+        chaos: Some("seed=21;worker-crash=1x3;ckpt-write=1x2;base-ms=0;cap-ms=1".into()),
+        ..CampaignSpec::default()
+    };
+    let clean_id = client.submit(clean_spec.clone()).unwrap();
+    let chaotic_id = client.submit(chaotic_spec.clone()).unwrap();
+
+    let (clean_log, clean_terminal) = watch_all(&mut client, clean_id);
+    let (chaotic_log, chaotic_terminal) = watch_all(&mut client, chaotic_id);
+    assert!(matches!(clean_terminal, Event::Done { .. }), "clean: {clean_terminal:?}");
+    assert!(matches!(chaotic_terminal, Event::Done { .. }), "chaotic: {chaotic_terminal:?}");
+
+    // the clean campaign is bit-identical to its solo run — a chaotic
+    // neighbour on the same substrate perturbs nothing
+    let clean_solo = autotune_with_scorer(
+        &clean_spec.to_setup().unwrap(),
+        Arc::new(Scorer::fallback()),
+    )
+    .unwrap();
+    assert_eq!(
+        digest_events(&clean_log),
+        digest_result(&clean_solo),
+        "clean campaign diverged from its solo run"
+    );
+
+    // and the chaotic campaign is bit-identical to its own FAULT-FREE
+    // reference: the injected crashes and checkpoint faults were
+    // absorbed by supervision, not by the trajectory
+    let fault_free = CampaignSpec { chaos: None, ..chaotic_spec };
+    let chaotic_ref = autotune_with_scorer(
+        &fault_free.to_setup().unwrap(),
+        Arc::new(Scorer::fallback()),
+    )
+    .unwrap();
+    assert_eq!(
+        digest_events(&chaotic_log),
+        digest_result(&chaotic_ref),
+        "the chaotic campaign's trajectory must match its fault-free reference"
+    );
+
+    // both completed campaigns appended to the shared store
+    assert_eq!(history_record_count(&hist), 2);
+
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&hist);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn an_exhausted_retry_budget_degrades_one_campaign_and_spares_the_daemon() {
+    let hist = tmpdir("deg-hist");
+    let ckpt = tmpdir("deg-ckpt");
+    let daemon = Daemon::start(
+        ServeConfig {
+            listen: "127.0.0.1:0".into(),
+            service: ServiceConfig {
+                max_active: 2,
+                history_dir: Some(hist.clone()),
+                checkpoint_dir: Some(ckpt.clone()),
+                warm_start_elites: 8,
+            },
+            chaos: None,
+        },
+        Arc::new(Scorer::fallback()),
+    )
+    .unwrap();
+    let addr = daemon.addr().to_string();
+    let scheduler = daemon.scheduler();
+    let mut client = Client::connect(&addr).unwrap();
+
+    // an unclearing checkpoint fault against a budget of one retry:
+    // the first save exhausts it and the campaign turns Degraded
+    let doomed = CampaignSpec {
+        seed: 3001,
+        workers: 2,
+        max_evals: 200,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        chaos: Some("seed=31;ckpt-write=1;retries=1;base-ms=0;cap-ms=1".into()),
+        ..CampaignSpec::default()
+    };
+    let doomed_id = client.submit(doomed).unwrap();
+    let (doomed_log, doomed_terminal) = watch_all(&mut client, doomed_id);
+    match doomed_terminal {
+        Event::Degraded { campaign, applied, message } => {
+            assert_eq!(campaign, doomed_id);
+            assert!(applied < 200, "the campaign must not have run its budget out");
+            assert!(
+                message.contains("ckpt-write"),
+                "the degradation message names the failing site: {message}"
+            );
+            assert!(
+                message.contains("retry budget exhausted"),
+                "the degradation message carries the typed marker: {message}"
+            );
+        }
+        other => panic!("doomed campaign ended with {other:?}"),
+    }
+    assert!(
+        !doomed_log.iter().any(|e| matches!(e, Event::Done { .. })),
+        "a degraded campaign must not report Done"
+    );
+
+    // the daemon is unharmed: it answers, accepts new work, and runs
+    // the sibling campaign to a clean finish
+    client.ping().unwrap();
+    let ok_spec = CampaignSpec {
+        seed: 3002,
+        workers: 2,
+        max_evals: 10,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        ..CampaignSpec::default()
+    };
+    let ok_id = client.submit(ok_spec).unwrap();
+    let (_, ok_terminal) = watch_all(&mut client, ok_id);
+    assert!(matches!(ok_terminal, Event::Done { .. }), "sibling: {ok_terminal:?}");
+
+    assert_eq!(
+        scheduler.status().iter().find(|r| r.id == doomed_id).unwrap().state,
+        "degraded"
+    );
+    // a degraded campaign is not a completed run: only the sibling
+    // appended to the store
+    assert_eq!(history_record_count(&hist), 1);
+
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&hist);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn kill_resume_stays_bit_identical_when_checkpoint_installs_fault() {
+    let dir = tmpdir("killres");
+    let ckpt = dir.join("manifest.json");
+
+    let mut base = TuneSetup::new(AppKind::Swfft, PlatformKind::Theta, 64, Metric::Runtime);
+    base.max_evals = 18;
+    base.wallclock_budget_s = 1e9;
+    base.seed = 53;
+    base.n_init = 4;
+    base.ensemble_workers = 2;
+    base.max_retries = 4;
+    base.federation_shards = 3;
+    base.elite_exchange_every = 2;
+    base.federation_elites = 2;
+
+    // the uninterrupted fault-free reference: no checkpointing at all
+    let full = run(&base);
+    assert_eq!(full.evaluations, 18);
+
+    // the killed campaign: every shard dies after its 3rd checkpointed
+    // apply, and the first two checkpoint installs fail (torn/ENOSPC)
+    // before the retry budget lands them
+    let mut killed = base.clone();
+    killed.checkpoint_path = Some(ckpt.clone());
+    killed.kill_after_evals = Some(3);
+    let killed_plan = Arc::new(FaultPlan::parse("seed=41;ckpt-write=1x2;base-ms=0;cap-ms=1").unwrap());
+    killed.chaos = Some(killed_plan.clone());
+    let partial = run(&killed);
+    assert_eq!(partial.evaluations, 9, "3 shards x 3 applies before the kill");
+    assert_eq!(
+        killed_plan.fired(Site::CkptWrite),
+        2,
+        "both injected install faults must actually fire before the kill"
+    );
+    assert!(ckpt.exists(), "the federation manifest survived the faulted installs");
+
+    // resume under fresh checkpoint faults: a checkpoint whose install
+    // needed the retry budget is still a sound resume point, and the
+    // resumed trajectory is the uninterrupted one, bit for bit
+    let mut resumed = base.clone();
+    resumed.checkpoint_path = Some(ckpt.clone());
+    resumed.chaos =
+        Some(Arc::new(FaultPlan::parse("seed=42;ckpt-write=1x2;base-ms=0;cap-ms=1").unwrap()));
+    let r = run(&resumed);
+    assert_eq!(r.evaluations, 18);
+    assert_eq!(r.ensemble.as_ref().unwrap().resumed_evals, 9);
+    assert_eq!(
+        digest_result(&full),
+        digest_result(&r),
+        "kill/resume under checkpoint faults must be bit-identical"
+    );
+    assert_eq!(full.best_objective.to_bits(), r.best_objective.to_bits());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn the_stepped_engine_reports_degraded_not_error() {
+    let dir = tmpdir("deg-solo");
+    let mut setup = CampaignSpec {
+        seed: 61,
+        workers: 2,
+        max_evals: 50,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        ..CampaignSpec::default()
+    }
+    .to_setup()
+    .unwrap();
+    setup.checkpoint_path = Some(dir.join("ckpt.json"));
+    setup.chaos =
+        Some(Arc::new(FaultPlan::parse("seed=61;ckpt-write=1;retries=1;base-ms=0;cap-ms=1").unwrap()));
+
+    let mut handle = CampaignHandle::start(setup, Arc::new(Scorer::fallback()));
+    match handle.join().expect("degradation is Ok(...), not Err — the driver survives") {
+        CampaignOutcome::Degraded { message, .. } => {
+            assert!(message.contains("ckpt-write"), "site named: {message}");
+            assert!(message.contains("retry budget exhausted"), "typed marker: {message}");
+        }
+        other => panic!("expected Degraded, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Submit under socket chaos. Submission is not idempotent and either
+/// leg can die: the request may be dropped before the daemon decodes it
+/// (nothing queued) or the acceptance frame may be torn after the
+/// campaign was queued. Status — which IS idempotent — disambiguates.
+fn submit_chaotic(rc: &mut ResilientClient, spec: &CampaignSpec, known: &[u64]) -> u64 {
+    for _ in 0..20 {
+        match rc.submit(spec.clone()) {
+            Ok(id) => return id,
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(100));
+                let rows = rc.status().expect("status must survive socket chaos");
+                // the newest id we did not place earlier is this spec's
+                // campaign (ids are monotonically assigned)
+                if let Some(id) =
+                    rows.iter().map(|r| r.id).filter(|id| !known.contains(id)).max()
+                {
+                    return id;
+                }
+            }
+        }
+    }
+    panic!("could not place a campaign through the socket chaos");
+}
+
+#[test]
+fn resilient_watch_survives_socket_chaos_exactly_once() {
+    let daemon = Daemon::start(
+        ServeConfig {
+            listen: "127.0.0.1:0".into(),
+            service: ServiceConfig {
+                max_active: 4,
+                history_dir: None,
+                checkpoint_dir: None,
+                warm_start_elites: 8,
+            },
+            // daemon-wide socket chaos: torn frames, resets, and stalls
+            // on writes, plus read-side drops — shared occurrence
+            // counters across every connection thread
+            chaos: Some(Arc::new(
+                FaultPlan::parse("seed=99;sock-write=0.7x6;sock-read=0.4x3").unwrap(),
+            )),
+        },
+        Arc::new(Scorer::fallback()),
+    )
+    .unwrap();
+    let addr = daemon.addr().to_string();
+    let mut rc = ResilientClient::new(&addr).with_policy(30, Backoff::new(1, 20, 0));
+
+    let spec = CampaignSpec {
+        seed: 7171,
+        workers: 2,
+        max_evals: 12,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        ..CampaignSpec::default()
+    };
+    let id = submit_chaotic(&mut rc, &spec, &[]);
+
+    // the resilient watch: absolute event-log cursors make every redial
+    // resume exactly where the dead connection stopped
+    let mut log: Vec<Event> = Vec::new();
+    let terminal = rc
+        .watch(id, 0, &mut |ev| log.push(ev.clone()))
+        .expect("the watch must outlive the fault schedule");
+    assert!(matches!(terminal, Event::Done { .. }), "terminal: {terminal:?}");
+    assert_eq!(
+        log.iter().filter(|e| matches!(e, Event::Started { .. })).count(),
+        1,
+        "reattaching from the cursor must not replay the stream head"
+    );
+
+    let solo =
+        autotune_with_scorer(&spec.to_setup().unwrap(), Arc::new(Scorer::fallback())).unwrap();
+    assert_eq!(
+        digest_events(&log),
+        digest_result(&solo),
+        "socket chaos lost or duplicated an event"
+    );
+
+    // `stats --follow` semantics: the ring's logical clock is the
+    // cursor, so reconnects never re-print and never skip
+    let mut cur = 0u64;
+    for _ in 0..5 {
+        let (_snapshot, _events, next) =
+            rc.stats(id, cur).expect("stats must survive socket chaos");
+        assert!(next >= cur, "ring cursor ran backwards: {next} < {cur}");
+        cur = next;
+    }
+
+    daemon.shutdown();
+}
+
+/// The release-profile wide soak (CI runs this with `--include-ignored`
+/// in the `chaos-soak-release` job): a larger solo schedule grid, then
+/// a daemon hosting clean, chaotic, and doomed campaigns at once under
+/// daemon-wide socket chaos — no panic, every campaign terminates, and
+/// the clean campaign stays bit-identical to its solo run.
+#[test]
+#[ignore = "release-profile soak; run via --include-ignored"]
+fn wide_soak_terminates_every_campaign_across_swept_schedules() {
+    // part 1: a 12-point solo grid cycling site mixes over seeds, every
+    // run compared against its fault-free reference
+    for round in 0u64..12 {
+        let spec = match round % 4 {
+            0 => format!("seed={};worker-crash=1x3", 500 + round),
+            1 => format!("seed={};ckpt-write=1x2;base-ms=0;cap-ms=1", 500 + round),
+            2 => format!("seed={};history-write=1x3;base-ms=0;cap-ms=1", 500 + round),
+            _ => format!(
+                "seed={};worker-crash=0.5x4;ckpt-write=0.5x2;base-ms=0;cap-ms=1",
+                500 + round
+            ),
+        };
+        let sched = Schedule {
+            tag: "wide",
+            spec: "",
+            shards: if round % 6 == 0 { 3 } else { 0 },
+            controller: false,
+            fired: &[],
+            history_records: None,
+        };
+        let dir = tmpdir(&format!("wide-{round}"));
+        let mut clean = sweep_setup(&sched, 600 + round);
+        clean.max_evals = 10;
+        if spec.contains("ckpt-write") {
+            clean.checkpoint_path = Some(dir.join("clean-ckpt.json"));
+        }
+        if spec.contains("history-write") {
+            let d = dir.join("clean-hist");
+            std::fs::create_dir_all(&d).unwrap();
+            clean.history_dir = Some(d);
+        }
+        let reference = run(&clean);
+
+        let mut chaotic = clean.clone();
+        if spec.contains("ckpt-write") {
+            chaotic.checkpoint_path = Some(dir.join("chaos-ckpt.json"));
+        }
+        if spec.contains("history-write") {
+            let d = dir.join("chaos-hist");
+            std::fs::create_dir_all(&d).unwrap();
+            chaotic.history_dir = Some(d);
+        }
+        chaotic.chaos = Some(Arc::new(FaultPlan::parse(&spec).unwrap()));
+        let r = run(&chaotic);
+        assert_eq!(
+            digest_result(&r),
+            digest_result(&reference),
+            "wide round {round} ({spec}) bent the trajectory"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // part 2: a mixed daemon soak — clean + chaotic + doomed campaigns
+    // co-resident, the wire itself under fault pressure
+    let hist = tmpdir("wide-hist");
+    let ckpt = tmpdir("wide-ckpt");
+    let daemon = Daemon::start(
+        ServeConfig {
+            listen: "127.0.0.1:0".into(),
+            service: ServiceConfig {
+                max_active: 4,
+                history_dir: Some(hist.clone()),
+                checkpoint_dir: Some(ckpt.clone()),
+                warm_start_elites: 8,
+            },
+            chaos: Some(Arc::new(
+                FaultPlan::parse("seed=700;sock-write=0.5x8;sock-read=0.3x4").unwrap(),
+            )),
+        },
+        Arc::new(Scorer::fallback()),
+    )
+    .unwrap();
+    let addr = daemon.addr().to_string();
+    let mut rc = ResilientClient::new(&addr).with_policy(40, Backoff::new(1, 20, 0));
+
+    let clean_spec = CampaignSpec {
+        seed: 8001,
+        workers: 2,
+        max_evals: 12,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        ..CampaignSpec::default()
+    };
+    let chaotic_spec = CampaignSpec {
+        seed: 8002,
+        workers: 2,
+        max_evals: 12,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        max_retries: 4,
+        chaos: Some("seed=71;worker-crash=1x3;ckpt-write=1x2;base-ms=0;cap-ms=1".into()),
+        ..CampaignSpec::default()
+    };
+    let doomed_spec = CampaignSpec {
+        seed: 8003,
+        workers: 2,
+        max_evals: 200,
+        wallclock_budget_s: 1e9,
+        warm_start: false,
+        chaos: Some("seed=72;ckpt-write=1;retries=1;base-ms=0;cap-ms=1".into()),
+        ..CampaignSpec::default()
+    };
+    let clean_id = submit_chaotic(&mut rc, &clean_spec, &[]);
+    let chaotic_id = submit_chaotic(&mut rc, &chaotic_spec, &[clean_id]);
+    let doomed_id = submit_chaotic(&mut rc, &doomed_spec, &[clean_id, chaotic_id]);
+
+    let mut clean_log: Vec<Event> = Vec::new();
+    let clean_terminal = rc.watch(clean_id, 0, &mut |ev| clean_log.push(ev.clone())).unwrap();
+    assert!(matches!(clean_terminal, Event::Done { .. }));
+    let chaotic_terminal = rc.watch(chaotic_id, 0, &mut |_| {}).unwrap();
+    assert!(matches!(chaotic_terminal, Event::Done { .. }), "{chaotic_terminal:?}");
+    let doomed_terminal = rc.watch(doomed_id, 0, &mut |_| {}).unwrap();
+    assert!(matches!(doomed_terminal, Event::Degraded { .. }), "{doomed_terminal:?}");
+
+    let clean_solo = autotune_with_scorer(
+        &clean_spec.to_setup().unwrap(),
+        Arc::new(Scorer::fallback()),
+    )
+    .unwrap();
+    assert_eq!(
+        digest_events(&clean_log),
+        digest_result(&clean_solo),
+        "the clean campaign must shrug off both neighbours and the wire chaos"
+    );
+
+    // the daemon survived the whole soak
+    let mut probe = Client::connect(&addr).unwrap();
+    while probe.ping().is_err() {
+        probe = Client::connect(&addr).unwrap();
+    }
+
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&hist);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}

@@ -159,6 +159,50 @@ fn daemon_unwrap_fires_only_in_the_daemon() {
 }
 
 // ---------------------------------------------------------------------------
+// io-atomic
+
+#[test]
+fn io_atomic_fires_on_bare_installs_in_the_core() {
+    let diags = check_files(&[fx(
+        "history/fixture.rs",
+        "fn f(path: &std::path::Path, bytes: &[u8]) {\n    std::fs::write(path, bytes).unwrap();\n    let _ = std::fs::File::create(path);\n    std::fs::rename(path, path).unwrap();\n}\n",
+    )]);
+    assert_eq!(
+        hits(&diags),
+        vec![(2, Rule::IoAtomic), (3, Rule::IoAtomic), (4, Rule::IoAtomic)],
+        "{}",
+        render(&diags)
+    );
+    assert!(diags[0].message.contains("install_atomic"), "{}", render(&diags));
+}
+
+#[test]
+fn io_atomic_spares_the_blessed_writer_and_the_edges() {
+    let body = "fn f(path: &std::path::Path) {\n    std::fs::write(path, b\"x\").unwrap();\n}\n";
+    // chaos/fsx.rs IS the atomic installer — the rule exempts it
+    let blessed = check_files(&[fx("chaos/fsx.rs", body)]);
+    assert!(blessed.is_empty(), "{}", render(&blessed));
+    // outside the core the rule does not apply at all
+    let outside = check_files(&[fx("power/fixture.rs", body)]);
+    assert!(outside.is_empty(), "{}", render(&outside));
+    // planted test fixtures escape with a reasoned allow
+    let allowed = check_files(&[fx(
+        "ensemble/fixture.rs",
+        "fn f(path: &std::path::Path) {\n    // detlint: allow(io-atomic) -- planted fixture for a torn-file test\n    std::fs::write(path, b\"x\").unwrap();\n}\n",
+    )]);
+    assert!(allowed.is_empty(), "{}", render(&allowed));
+}
+
+#[test]
+fn io_atomic_does_not_flag_the_blessed_helper_calls() {
+    let diags = check_files(&[fx(
+        "ensemble/fixture.rs",
+        "fn f(path: &std::path::Path, b: &[u8]) -> anyhow::Result<()> {\n    crate::chaos::fsx::write_file(path, b, None, crate::chaos::Site::CkptWrite)?;\n    crate::chaos::fsx::install_atomic(path, b, None, crate::chaos::Site::CkptWrite)\n}\n",
+    )]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+}
+
+// ---------------------------------------------------------------------------
 // deprecated-api
 
 #[test]

@@ -230,6 +230,7 @@ fn start_daemon() -> Daemon {
                 checkpoint_dir: None,
                 warm_start_elites: 0,
             },
+            chaos: None,
         },
         Arc::new(Scorer::fallback()),
     )

@@ -133,6 +133,7 @@ fn concurrent_daemon_campaigns_match_solo_runs_cancel_and_warm_start() {
                 checkpoint_dir: Some(ckpt.clone()),
                 warm_start_elites: 8,
             },
+            chaos: None,
         },
         Arc::new(Scorer::fallback()),
     )
@@ -285,6 +286,7 @@ fn graceful_shutdown_interrupts_checkpoints_and_refuses_new_work() {
                 checkpoint_dir: Some(ckpt.clone()),
                 warm_start_elites: 8,
             },
+            chaos: None,
         },
         Arc::new(Scorer::fallback()),
     )
